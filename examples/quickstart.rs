@@ -1,0 +1,70 @@
+//! Quickstart: quantize a weight matrix with ICQuant, inspect the
+//! storage breakdown, round-trip through the on-disk artifact, and run a
+//! mat-vec off the quantized runtime plane.
+//!
+//!     cargo run --release --example quickstart
+
+use icquant::icq::{lemma1_bound, optimal_b};
+use icquant::icquant::{packed, IcqConfig, IcqMatrix};
+use icquant::quant::{self, QuantizerKind};
+use icquant::synthzoo;
+use icquant::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A heavy-tailed weight matrix (one synthetic output layer; swap in
+    //    your own `Matrix` here).
+    let (rows, cols) = (512, 2048);
+    let w = synthzoo::demo_matrix(rows, cols, 42);
+    println!("weights: {}x{} f32 ({})", rows, cols, human_bytes((rows * cols * 4) as u64));
+
+    // 2. Pick the operating point: 2-bit codes, 5 % outliers, Lemma-1
+    //    optimal gap width.
+    let gamma = 0.05;
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: gamma,
+        gap_bits: 0, // 0 = auto (argmin of the Lemma 1 bound)
+        quantizer: QuantizerKind::Rtn,
+    };
+    println!(
+        "\nLemma 1: optimal b at γ={:.0}% is {} (bound {:.3} bits/weight)",
+        gamma * 100.0,
+        optimal_b(gamma),
+        lemma1_bound(gamma, optimal_b(gamma))
+    );
+
+    // 3. Quantize.
+    let q = IcqMatrix::quantize(&w, None, &cfg)?;
+    println!("\nstorage breakdown (bits/weight):");
+    println!("  codes          : {:.3}", q.bits as f64);
+    println!("  outlier indices: {:.3}  ← the paper's ≈0.31-bit index code", q.index_bits_per_weight());
+    println!("  codebooks      : {:.3}", q.codebook_bits_per_weight());
+    println!("  total          : {:.3}", q.avg_bits_per_weight_full());
+
+    // 4. Compare against the alternatives at the same base bits.
+    let rec = q.dequantize();
+    let vanilla2 = quant::quantize_per_row(&w, None, QuantizerKind::Rtn, 2).dequantize();
+    let vanilla3 = quant::quantize_per_row(&w, None, QuantizerKind::Rtn, 3).dequantize();
+    println!("\nreconstruction MSE:");
+    println!("  vanilla RTN 2-bit      : {:.3e}", w.mse(&vanilla2));
+    println!("  ICQuant 2-bit ({:.2}b)  : {:.3e}", q.avg_bits_per_weight(), w.mse(&rec));
+    println!("  vanilla RTN 3-bit      : {:.3e}  ← ICQuant matches this", w.mse(&vanilla3));
+
+    // 5. Serialize → load → decode to the runtime plane → matvec.
+    let path = std::env::temp_dir().join("quickstart.icqm");
+    packed::save(&q, &path)?;
+    println!(
+        "\nartifact: {} ({} = {:.2} bits/weight on disk)",
+        path.display(),
+        human_bytes(std::fs::metadata(&path)?.len()),
+        std::fs::metadata(&path)?.len() as f64 * 8.0 / (rows * cols) as f64
+    );
+    let loaded = packed::load(&path)?;
+    let rt = loaded.to_runtime();
+    let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.01).sin()).collect();
+    let mut y = vec![0.0f32; rows];
+    rt.matvec(&x, &mut y);
+    println!("matvec off the quantized plane: y[0..4] = {:?}", &y[..4]);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT lowering: JAX model variants → HLO *text* artifacts for the Rust
+runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Entries lowered (shapes static per artifact; the serving router picks a
+batch bucket):
+  forward_loss_b{B}      (tokens, targets, *params) -> mean NLL
+  token_nll_b{B}         (tokens, targets, *params) -> per-token NLL
+  logits_b{B}            (tokens, *params)          -> logits
+  prefill_b{B}           (tokens, *params)          -> (last_logits, k, v)
+  decode_b{B}            (token, pos, k, v, *params)-> (logits, k', v')
+  forward_q{bits}_b{B}   (tokens, targets, *qparams)-> mean NLL via the
+                         L1 Pallas dequant-matmul kernel
+
+`aot_manifest.json` records every entry's input/output specs — the ABI
+the Rust `runtime` module loads.
+
+Run: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    decode_step,
+    forward_loss,
+    forward_logits,
+    forward_q_loss,
+    forward_token_nll,
+    param_spec,
+    prefill,
+    quantized_param_spec,
+)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_struct(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+def lower_entry(fn, arg_specs):
+    args = [spec_struct(s, d) for s, d in arg_specs]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="1,2,4,8")
+    ap.add_argument("--eval-batch", type=int, default=4)
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--q-bits", default="2,3,4")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    buckets = [int(b) for b in args.buckets.split(",")]
+    q_bits = [int(b) for b in args.q_bits.split(",")]
+    S = cfg.max_seq
+    SP = args.prefill_len
+    EB = args.eval_batch
+
+    fp_params = [(tuple(shape), "f32") for _, shape in param_spec(cfg)]
+    entries = []
+
+    def emit(name, fn, arg_specs, outputs):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_entry(fn, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [{"shape": list(s), "dtype": d} for s, d in arg_specs],
+                "outputs": outputs,
+            }
+        )
+        print(f"lowered {name} ({len(text)} chars)")
+
+    # --- eval entries ------------------------------------------------------
+    emit(
+        f"forward_loss_b{EB}",
+        lambda tokens, targets, *p: forward_loss(cfg, p, tokens, targets),
+        [((EB, S), "i32"), ((EB, S), "i32")] + fp_params,
+        [{"shape": [], "dtype": "f32"}],
+    )
+    emit(
+        f"token_nll_b{EB}",
+        lambda tokens, targets, *p: forward_token_nll(cfg, p, tokens, targets),
+        [((EB, S), "i32"), ((EB, S), "i32")] + fp_params,
+        [{"shape": [EB, S], "dtype": "f32"}],
+    )
+    emit(
+        f"logits_b{EB}",
+        lambda tokens, *p: forward_logits(cfg, p, tokens),
+        [((EB, S), "i32")] + fp_params,
+        [{"shape": [EB, S, cfg.vocab], "dtype": "f32"}],
+    )
+
+    # --- serving entries ---------------------------------------------------
+    cache_shape = [cfg.n_layers, 0, cfg.n_heads, cfg.max_seq, cfg.head_dim]
+    for b in buckets:
+        cs = list(cache_shape)
+        cs[1] = b
+        emit(
+            f"prefill_b{b}",
+            lambda tokens, *p: prefill(cfg, p, tokens),
+            [((b, SP), "i32")] + fp_params,
+            [
+                {"shape": [b, cfg.vocab], "dtype": "f32"},
+                {"shape": cs, "dtype": "f32"},
+                {"shape": cs, "dtype": "f32"},
+            ],
+        )
+        emit(
+            f"decode_b{b}",
+            lambda token, pos, k, v, *p: decode_step(cfg, p, token, pos, k, v),
+            [((b,), "i32"), ((), "i32"), (tuple(cs), "f32"), (tuple(cs), "f32")]
+            + fp_params,
+            [
+                {"shape": [b, cfg.vocab], "dtype": "f32"},
+                {"shape": cs, "dtype": "f32"},
+                {"shape": cs, "dtype": "f32"},
+            ],
+        )
+
+    # --- quantized-path entries (L1 kernel inside the graph) ---------------
+    for bits in q_bits:
+        qspec = quantized_param_spec(cfg, bits)
+        qparams = [(tuple(shape), dt) for _, shape, dt in qspec]
+        emit(
+            f"forward_q{bits}_b{EB}",
+            (lambda bb: lambda tokens, targets, *p: forward_q_loss(
+                cfg, bb, p, tokens, targets
+            ))(bits),
+            [((EB, S), "i32"), ((EB, S), "i32")] + qparams,
+            [{"shape": [], "dtype": "f32"}],
+        )
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "eval_batch": EB,
+        "prefill_len": SP,
+        "buckets": buckets,
+        "q_bits": q_bits,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "aot_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote aot_manifest.json with {len(entries)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Synthetic byte-level corpus generator (WikiText-2/C4 stand-in).
+
+The paper evaluates perplexity on WikiText-2 and C4; this box has neither,
+so we synthesize a corpus with enough hierarchical structure (characters →
+syllables → Zipf-distributed words → clause templates) that a small
+transformer has something real to learn: its loss falls from ln(256) ≈ 5.5
+to well under 2 bits/byte, and quantization-induced degradation behaves
+like it does on natural text (DESIGN.md §2).
+
+Run as a module to write `artifacts/corpus_{train,val,test}.bin`:
+
+    python -m compile.corpus --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+VOCAB_SIZE = 256  # byte-level
+
+_CONSONANTS = list("bcdfghjklmnprstvwz")
+_VOWELS = list("aeiou")
+
+
+def _make_lexicon(rng: np.random.Generator, n_words: int = 2000) -> list[str]:
+    """Deterministic word list built from CV syllables."""
+    syllables = [c + v for c in _CONSONANTS for v in _VOWELS]
+    words = []
+    seen = set()
+    while len(words) < n_words:
+        n_syl = int(rng.integers(1, 4))
+        w = "".join(rng.choice(syllables) for _ in range(n_syl))
+        if w not in seen:
+            seen.add(w)
+            words.append(w)
+    return words
+
+
+def _zipf_probs(n: int, s: float = 1.05) -> np.ndarray:
+    p = 1.0 / np.arange(1, n + 1) ** s
+    return p / p.sum()
+
+
+def generate_text(seed: int, n_bytes: int) -> bytes:
+    """Generate ~n_bytes of structured pseudo-text."""
+    rng = np.random.default_rng(seed)
+    lex = _make_lexicon(rng)
+    probs = _zipf_probs(len(lex))
+    # Bigram flavor: each word biases the next toward a fixed successor
+    # set, giving the model exploitable context beyond unigram stats.
+    succ = rng.integers(0, len(lex), size=(len(lex), 16))
+
+    out = bytearray()
+    prev = int(rng.integers(0, len(lex)))
+    sentence_len = 0
+    while len(out) < n_bytes:
+        if rng.random() < 0.7:
+            idx = int(succ[prev, int(rng.integers(0, 16))])
+        else:
+            idx = int(rng.choice(len(lex), p=probs))
+        word = lex[idx]
+        if sentence_len == 0:
+            word = word.capitalize()
+        out.extend(word.encode("ascii"))
+        sentence_len += 1
+        if sentence_len >= int(rng.integers(5, 14)):
+            out.extend(b". ")
+            sentence_len = 0
+        else:
+            out.extend(b" ")
+        prev = idx
+    return bytes(out[:n_bytes])
+
+
+def splits(seed: int = 1234, train_mb: float = 1.0):
+    """Return (train, val, test) byte arrays."""
+    n_train = int(train_mb * 1024 * 1024)
+    train = generate_text(seed, n_bytes=n_train)
+    val = generate_text(seed + 1, n_bytes=128 * 1024)
+    test = generate_text(seed + 2, n_bytes=128 * 1024)
+    return train, val, test
+
+
+def tokens_from_bytes(data: bytes) -> np.ndarray:
+    return np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--train-mb", type=float, default=1.0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    train, val, test = splits(args.seed, args.train_mb)
+    for name, blob in [("train", train), ("val", val), ("test", test)]:
+        path = os.path.join(args.out_dir, f"corpus_{name}.bin")
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"wrote {path} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

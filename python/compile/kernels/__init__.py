@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into HLO by aot.py).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode lowers them to plain HLO
+ops that run anywhere. Real-TPU performance is *estimated* structurally
+(VMEM footprint + MXU utilization of the BlockSpec schedule) in
+DESIGN.md §8 — interpret-mode wallclock is not a TPU proxy.
+"""
+
+from .dequant_matmul import dequant_matmul, dequant_matmul_jnp
+from .rtn_quant import rtn_quant

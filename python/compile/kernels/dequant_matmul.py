@@ -1,0 +1,101 @@
+"""Fused dequantize-matmul Pallas kernel — the deployment hot-spot.
+
+Weight-only quantization wins at inference because the weight fetch is
+the bottleneck: keeping W quantized in HBM and dequantizing tile-by-tile
+in VMEM turns a 16-bit stream into a ~(n+1)-bit one. The paper's CUDA
+framing (per-channel codebook gather + GEMM, as in SqueezeLLM/QuIP#
+kernels) maps to TPU as (DESIGN.md §8 Hardware-Adaptation):
+
+* CUDA threadblock tile      → Pallas BlockSpec tile
+* shared-memory codebook     → codebook slab resident in VMEM
+* warp bit-unpack            → byte-aligned fused codes, pre-expanded at
+  load by the Rust coordinator (TPU's VPU has no per-lane variable
+  shift; 8-bit aligned codes trade n+1→8 bits of HBM for a gather-only
+  inner loop)
+* tensor-core WMMA           → MXU via jnp.dot(..., f32 accumulation)
+
+VMEM budget at (bm, bk, bn) = (128, 128, 128), n=3:
+x tile 64 KiB + codes tile 16 KiB + dequant tile 64 KiB + acc 64 KiB +
+codebook slab 2^(n+1)*4*bn = 8 KiB  ⇒  ~216 KiB ≪ 16 MiB. The gather adds
+bk·bn lane-ops per 2·bm·bk·bn MXU FLOPs — a 1/(2·bm) ≈ 0.4 % tax, so the
+kernel stays HBM-bound and the weight-size reduction translates ≈linearly
+into decode throughput, which is the paper's deployment claim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(x_ref, codes_ref, cb_ref, o_ref, *, n_k_tiles: int):
+    """One (bm × bn) output tile; grid axis 2 walks the K dimension."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Gather-dequantize the weight tile in VMEM: per-row codebook lookup.
+    codes = codes_ref[...]  # [bn, bk] int32
+    cb = cb_ref[...]  # [bn, C]  f32
+    w_tile = jnp.take_along_axis(cb, codes, axis=1)  # [bn, bk]
+    # MXU-shaped contraction with f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_tile.T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def dequant_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    codebook: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """y[B, N] = x[B, K] @ dequant(codes, codebook)[N, K]^T.
+
+    x        f32 [B, K]
+    codes    i32 [N, K]   fused (bits+1)-bit runtime codes (byte-aligned)
+    codebook f32 [N, C]   per-row fused codebook, C = 2^(bits+1)
+
+    Block sizes are clamped to the problem size; dims must be divisible
+    by the (clamped) blocks — the model dims used here are powers of two.
+    """
+    b, k = x.shape
+    n, k2 = codes.shape
+    assert k == k2, f"K mismatch: x {k} vs codes {k2}"
+    c = codebook.shape[1]
+    bm = min(bm, b)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert b % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"dims ({b},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    grid = (b // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k_tiles=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            # Codebook slab: resident across the K loop (index ignores kk).
+            pl.BlockSpec((bn, c), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, codes, codebook)
+
+
+def dequant_matmul_jnp(x, codes, codebook):
+    """Reference path (used by the L2 model when shapes don't tile)."""
+    return ref.dequant_matmul_ref(x, codes, codebook)

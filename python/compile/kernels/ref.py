@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these
+references to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_ref(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct W[n, k] = codebook[n, codes[n, k]].
+
+    codes:    int32 [N, K]   fused (bits+1)-bit ICQuant runtime codes
+    codebook: f32   [N, C]   per-row fused codebook (C = 2^(bits+1))
+    returns:  f32   [N, K]
+    """
+    return jnp.take_along_axis(codebook, codes, axis=1)
+
+
+def dequant_matmul_ref(
+    x: jnp.ndarray, codes: jnp.ndarray, codebook: jnp.ndarray
+) -> jnp.ndarray:
+    """y[B, N] = x[B, K] @ dequant(codes, codebook)[N, K]^T."""
+    w = dequant_ref(codes, codebook)
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def rtn_quant_ref(x: jnp.ndarray, lo: jnp.ndarray, step: jnp.ndarray, n_levels: int):
+    """Row-wise RTN: codes = clip(round((x - lo)/step), 0, n_levels-1).
+
+    x: f32 [N, K]; lo, step: f32 [N, 1]. Returns (codes i32, dequant f32).
+    """
+    codes = jnp.clip(jnp.round((x - lo) / step), 0, n_levels - 1).astype(jnp.int32)
+    deq = lo + codes.astype(jnp.float32) * step
+    return codes, deq

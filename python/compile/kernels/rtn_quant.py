@@ -1,0 +1,63 @@
+"""Row-wise RTN quantize kernel.
+
+Build-time utility kernel: quantizes a weight tile to codes given
+per-row (lo, step) affine parameters. Used to validate the Rust RTN
+implementation bit-for-bit from the Python side and as the quantize half
+of the pytest roundtrip suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, lo_ref, step_ref, codes_ref, deq_ref, *, n_levels: int):
+    x = x_ref[...]
+    lo = lo_ref[...]  # [bn, 1]
+    step = step_ref[...]  # [bn, 1]
+    codes = jnp.clip(jnp.round((x - lo) / step), 0, n_levels - 1).astype(jnp.int32)
+    codes_ref[...] = codes
+    deq_ref[...] = lo + codes.astype(jnp.float32) * step
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "bn", "bk"))
+def rtn_quant(
+    x: jnp.ndarray,
+    lo: jnp.ndarray,
+    step: jnp.ndarray,
+    *,
+    n_levels: int,
+    bn: int = 128,
+    bk: int = 256,
+):
+    """Quantize x[N, K] row-wise: returns (codes i32 [N,K], dequant f32).
+
+    lo, step: f32 [N, 1] per-row affine parameters (step > 0).
+    """
+    n, k = x.shape
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert n % bn == 0 and k % bk == 0, f"({n},{k}) vs blocks ({bn},{bk})"
+    grid = (n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_levels=n_levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+        ],
+        interpret=True,
+    )(x, lo, step)

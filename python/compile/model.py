@@ -1,0 +1,333 @@
+"""Layer-2: Llama-mini — a real Llama-architecture transformer in JAX.
+
+RMSNorm → RoPE multi-head attention → RMSNorm → SwiGLU MLP, byte-level
+vocab. All weights are *function arguments* (a flat, ordered list defined
+by `param_spec`), so the Rust coordinator can feed either FP32 weights or
+ICQuant-dequantized planes into the same AOT-compiled HLO.
+
+Variants lowered by aot.py:
+  * forward_loss   — mean next-token NLL over a token block (ppl eval)
+  * forward_logits — full logits (scoring / zero-shot tasks)
+  * prefill        — prompt pass returning last-position logits + KV cache
+  * decode_step    — single-token step with KV cache (the serving path)
+  * forward_q      — logits with every projection running through the L1
+                     fused dequant-matmul Pallas kernel (codes+codebooks
+                     as arguments): the quantized plane composing into
+                     the full model inside one HLO graph.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dequant_matmul import dequant_matmul
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# The seven quantizable projections per block, in spec order. Weight
+# layout is [out_features, in_features] (rows = output channels), matching
+# the Rust `Matrix` convention and the paper's per-row granularity.
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the ABI between Python and Rust."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    spec: list[tuple[str, tuple[int, ...]]] = [("tok_emb", (v, d))]
+    for i in range(cfg.n_layers):
+        spec.append((f"l{i}.attn_norm", (d,)))
+        spec.append((f"l{i}.wq", (d, d)))
+        spec.append((f"l{i}.wk", (d, d)))
+        spec.append((f"l{i}.wv", (d, d)))
+        spec.append((f"l{i}.wo", (d, d)))
+        spec.append((f"l{i}.mlp_norm", (d,)))
+        spec.append((f"l{i}.w_gate", (ff, d)))
+        spec.append((f"l{i}.w_up", (ff, d)))
+        spec.append((f"l{i}.w_down", (d, ff)))
+    spec.append(("final_norm", (d,)))
+    spec.append(("lm_head", (v, d)))
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> list[jnp.ndarray]:
+    """Glorot-style init matching the spec order."""
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-1]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat: list[jnp.ndarray]) -> dict:
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), f"got {len(flat)} params, want {len(spec)}"
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def _rope_angles(cfg: ModelConfig, positions: jnp.ndarray) -> tuple:
+    """cos/sin tables for given positions: [..., head_dim/2]."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, S, hd]; cos/sin: [S, hd/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg, q, k, v, mask):
+    """q,k,v: [B, H, S, hd]; mask: [S, T] additive."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def _split_heads(cfg, x):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(cfg, x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _block(cfg, p, i, x, cos, sin, mask, linear):
+    """One transformer block; `linear(name, x2d) -> y2d` abstracts the
+    matmul so the FP and quantized paths share all of this code."""
+    b, s, d = x.shape
+
+    def lin(name, t):
+        t2 = t.reshape(-1, t.shape[-1])
+        return linear(f"l{i}.{name}", t2).reshape(b, s, -1)
+
+    h = rmsnorm(x, p[f"l{i}.attn_norm"], cfg.norm_eps)
+    q = _split_heads(cfg, lin("wq", h))
+    k = _split_heads(cfg, lin("wk", h))
+    v = _split_heads(cfg, lin("wv", h))
+    q = _apply_rope(q, cos, sin)
+    k = _apply_rope(k, cos, sin)
+    attn = _merge_heads(cfg, _attention(cfg, q, k, v, mask))
+    x = x + lin("wo", attn)
+
+    h = rmsnorm(x, p[f"l{i}.mlp_norm"], cfg.norm_eps)
+    gate = lin("w_gate", h)
+    up = lin("w_up", h)
+    x = x + lin("w_down", jax.nn.silu(gate) * up)
+    return x
+
+
+def _forward_core(cfg, p, tokens, linear):
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens]  # [B, S, d]
+    positions = jnp.arange(s)
+    cos, sin = _rope_angles(cfg, positions)  # [S, hd/2]
+    mask = jnp.where(
+        jnp.arange(s)[:, None] >= jnp.arange(s)[None, :], 0.0, -1e9
+    ).astype(jnp.float32)
+    for i in range(cfg.n_layers):
+        x = _block(cfg, p, i, x, cos, sin, mask, linear)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return x @ p["lm_head"].T  # [B, S, V]
+
+
+def forward_logits(cfg: ModelConfig, flat_params, tokens) -> jnp.ndarray:
+    """FP path: every linear is a plain matmul on a weight argument."""
+    p = _unflatten(cfg, list(flat_params))
+
+    def linear(name, x2d):
+        return x2d @ p[name].T
+
+    return _forward_core(cfg, p, tokens, linear)
+
+
+def forward_loss(cfg: ModelConfig, flat_params, tokens, targets) -> jnp.ndarray:
+    """Mean next-token NLL (nats). ppl = exp(loss)."""
+    logits = forward_logits(cfg, flat_params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def forward_token_nll(cfg: ModelConfig, flat_params, tokens, targets) -> jnp.ndarray:
+    """Per-token NLL [B, S] — zero-shot tasks score answers with this."""
+    logits = forward_logits(cfg, flat_params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Quantized path: projections run through the L1 Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+def quantized_param_spec(cfg: ModelConfig, bits: int):
+    """Spec for forward_q: FP tensors for embeddings/norms/lm_head, plus
+    (codes, codebook) pairs for every projection."""
+    c = 1 << (bits + 1)
+    spec: list[tuple[str, tuple[int, ...], str]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model), "f32")
+    ]
+    shapes = dict(param_spec(cfg))
+    for i in range(cfg.n_layers):
+        spec.append((f"l{i}.attn_norm", (cfg.d_model,), "f32"))
+        for name in LINEAR_NAMES[:4]:
+            n, k = shapes[f"l{i}.{name}"]
+            spec.append((f"l{i}.{name}.codes", (n, k), "i32"))
+            spec.append((f"l{i}.{name}.cb", (n, c), "f32"))
+        spec.append((f"l{i}.mlp_norm", (cfg.d_model,), "f32"))
+        for name in LINEAR_NAMES[4:]:
+            n, k = shapes[f"l{i}.{name}"]
+            spec.append((f"l{i}.{name}.codes", (n, k), "i32"))
+            spec.append((f"l{i}.{name}.cb", (n, c), "f32"))
+    spec.append(("final_norm", (cfg.d_model,), "f32"))
+    spec.append(("lm_head", (cfg.vocab, cfg.d_model), "f32"))
+    return spec
+
+
+def forward_q_logits(cfg: ModelConfig, bits: int, flat_q_params, tokens):
+    """Quantized forward: weights enter the graph as ICQuant runtime codes
+    + fused codebooks; the Pallas kernel dequantizes tile-wise in VMEM."""
+    spec = quantized_param_spec(cfg, bits)
+    assert len(flat_q_params) == len(spec)
+    p = {name: arr for (name, _, _), arr in zip(spec, flat_q_params)}
+
+    def linear(name, x2d):
+        return dequant_matmul(x2d, p[f"{name}.codes"], p[f"{name}.cb"])
+
+    return _forward_core(cfg, p, tokens, linear)
+
+
+def forward_q_loss(cfg, bits, flat_q_params, tokens, targets):
+    logits = forward_q_logits(cfg, bits, flat_q_params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Serving path: prefill + single-token decode with KV cache.
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, flat_params, tokens):
+    """Prompt pass. tokens: [B, S_p]. Returns (last_logits [B, V],
+    k_cache, v_cache [L, B, H, max_seq, hd])."""
+    p = _unflatten(cfg, list(flat_params))
+    b, s = tokens.shape
+
+    def linear(name, x2d):
+        return x2d @ p[name].T
+
+    # Run the standard forward but capture K/V per layer.
+    x = p["tok_emb"][tokens]
+    positions = jnp.arange(s)
+    cos, sin = _rope_angles(cfg, positions)
+    mask = jnp.where(
+        jnp.arange(s)[:, None] >= jnp.arange(s)[None, :], 0.0, -1e9
+    ).astype(jnp.float32)
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{i}.attn_norm"], cfg.norm_eps)
+
+        def lin(name, t):
+            t2 = t.reshape(-1, t.shape[-1])
+            return (t2 @ p[f"l{i}.{name}"].T).reshape(b, s, -1)
+
+        q = _split_heads(cfg, lin("wq", h))
+        k = _split_heads(cfg, lin("wk", h))
+        v = _split_heads(cfg, lin("wv", h))
+        q = _apply_rope(q, cos, sin)
+        k = _apply_rope(k, cos, sin)
+        attn = _merge_heads(cfg, _attention(cfg, q, k, v, mask))
+        x = x + lin("wo", attn)
+        h = rmsnorm(x, p[f"l{i}.mlp_norm"], cfg.norm_eps)
+        x = x + lin("w_down", jax.nn.silu(lin("w_gate", h)) * lin("w_up", h))
+
+        pad = cfg.max_seq - s
+        k_caches.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    last_logits = x[:, -1, :] @ p["lm_head"].T
+    return last_logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(cfg: ModelConfig, flat_params, token, pos, k_cache, v_cache):
+    """One decode step. token: [B] i32; pos: scalar i32 (same position for
+    the whole batch — the batcher aligns decode fronts); caches
+    [L, B, H, max_seq, hd]. Returns (logits [B, V], k_cache', v_cache')."""
+    p = _unflatten(cfg, list(flat_params))
+    b = token.shape[0]
+
+    x = p["tok_emb"][token][:, None, :]  # [B, 1, d]
+    cos, sin = _rope_angles(cfg, pos[None])  # [1, hd/2]
+    # Attend to slots 0..pos inclusive.
+    slot_mask = jnp.where(
+        jnp.arange(cfg.max_seq)[None, :] <= pos, 0.0, -1e9
+    ).astype(jnp.float32)  # [1, max_seq]
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{i}.attn_norm"], cfg.norm_eps)
+
+        def lin(name, t):
+            t2 = t.reshape(-1, t.shape[-1])
+            return (t2 @ p[f"l{i}.{name}"].T).reshape(b, 1, -1)
+
+        q = _split_heads(cfg, lin("wq", h))  # [B, H, 1, hd]
+        k = _split_heads(cfg, lin("wk", h))
+        v = _split_heads(cfg, lin("wv", h))
+        q = _apply_rope(q, cos, sin)
+        k = _apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[i], k, (0, 0, pos, 0)
+        )  # [B, H, max_seq, hd]
+        vc = jax.lax.dynamic_update_slice(v_cache[i], v, (0, 0, pos, 0))
+        attn = _attention(cfg, q, kc, vc, slot_mask)  # [B, H, 1, hd]
+        x = x + lin("wo", _merge_heads(cfg, attn))
+        h = rmsnorm(x, p[f"l{i}.mlp_norm"], cfg.norm_eps)
+        x = x + lin("w_down", jax.nn.silu(lin("w_gate", h)) * lin("w_up", h))
+        new_k.append(kc)
+        new_v.append(vc)
+
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    logits = x[:, 0, :] @ p["lm_head"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

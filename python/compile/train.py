@@ -1,0 +1,192 @@
+"""Build-time training of Llama-mini on the synthetic corpus.
+
+Produces real trained transformer weights — the quantization target for
+every perplexity experiment (DESIGN.md §2: trained weights exhibit the
+Gaussian-bulk + tail structure the paper's statistics rely on) — plus the
+Fisher sensitivity artifact (per-weight grad², the SqueezeLLM/ICQuant^SK
+weighting) and the training loss curve.
+
+Artifacts written to --out-dir:
+  model_weights.bin    flat f32 LE, tensors in param_spec order
+  model_manifest.json  config + tensor table (name/shape/offset) + metrics
+  sensitivity.bin      flat f32 LE, same layout (Fisher diag)
+  loss_curve.csv       step,loss
+
+Run: python -m compile.train --steps 400 --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, forward_loss, init_params, param_spec
+
+
+def batch_iterator(tokens: np.ndarray, batch: int, seq: int, seed: int):
+    """Random contiguous windows; yields (inputs, targets) int32."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[s : s + seq] for s in starts])
+        y = np.stack([tokens[s + 1 : s + seq + 1] for s in starts])
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+def adam_init(params):
+    return (
+        [jnp.zeros_like(p) for p in params],
+        [jnp.zeros_like(p) for p in params],
+    )
+
+
+def make_train_step(cfg: ModelConfig, lr_peak: float, total_steps: int):
+    def lr_at(step):
+        warm = 40.0
+        warmup = jnp.minimum(step / warm, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.minimum(step / total_steps, 1.0)))
+        return lr_peak * warmup * (0.1 + 0.9 * decay)
+
+    @jax.jit
+    def step_fn(params, m, v, step, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_loss(cfg, p, x, y)
+        )(params)
+        # Global-norm clip at 1.0.
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+        lr = lr_at(step)
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        new_params, new_m, new_v = [], [], []
+        t = step + 1.0
+        for p, g, mi, vi in zip(params, grads, m, v):
+            g = g * scale
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            mhat = mi / (1 - b1**t)
+            vhat = vi / (1 - b2**t)
+            new_params.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        # Fisher accumulator: squared raw grads.
+        sq = [g * g for g in grads]
+        return new_params, new_m, new_v, loss, sq
+
+    return step_fn
+
+
+def save_flat(path: str, arrays: list[np.ndarray]) -> list[int]:
+    """Concatenate f32 arrays into one LE blob; return element offsets."""
+    offsets = []
+    off = 0
+    with open(path, "wb") as f:
+        for a in arrays:
+            offsets.append(off)
+            a32 = np.ascontiguousarray(a, dtype="<f4")
+            f.write(a32.tobytes())
+            off += a32.size
+    return offsets
+
+
+def train(
+    cfg: ModelConfig,
+    steps: int,
+    batch: int,
+    lr: float,
+    seed: int,
+    out_dir: str,
+    fisher_steps: int = 50,
+    log_every: int = 20,
+):
+    os.makedirs(out_dir, exist_ok=True)
+    train_bytes, val_bytes, _ = corpus.splits(seed=1234)
+    train_tok = corpus.tokens_from_bytes(train_bytes)
+    val_tok = corpus.tokens_from_bytes(val_bytes)
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    m, v = adam_init(params)
+    step_fn = make_train_step(cfg, lr, steps)
+    it = batch_iterator(train_tok, batch, cfg.max_seq, seed + 7)
+
+    fisher = [np.zeros(p.shape, np.float64) for p in params]
+    n_fisher = 0
+    curve = []
+    t0 = time.time()
+    for step in range(steps):
+        x, y = next(it)
+        params, m, v, loss, sq = step_fn(params, m, v, float(step), x, y)
+        if step >= steps - fisher_steps:
+            for acc, g2 in zip(fisher, sq):
+                acc += np.asarray(g2, np.float64)
+            n_fisher += 1
+        if step % log_every == 0 or step == steps - 1:
+            l = float(loss)
+            curve.append((step, l))
+            print(f"step {step:5d}  loss {l:.4f}  ({time.time()-t0:.1f}s)", flush=True)
+
+    # Validation loss on fixed windows.
+    eval_fn = jax.jit(lambda p, x, y: forward_loss(cfg, p, x, y))
+    n_eval = 16
+    se = 0.0
+    for i in range(n_eval):
+        s = i * (len(val_tok) - cfg.max_seq - 1) // n_eval
+        x = jnp.asarray(val_tok[s : s + cfg.max_seq])[None]
+        y = jnp.asarray(val_tok[s + 1 : s + cfg.max_seq + 1])[None]
+        se += float(eval_fn(params, x, y))
+    val_loss = se / n_eval
+    print(f"val loss {val_loss:.4f}  (ppl {np.exp(val_loss):.3f})")
+
+    # --- artifacts ---------------------------------------------------------
+    np_params = [np.asarray(p) for p in params]
+    offsets = save_flat(os.path.join(out_dir, "model_weights.bin"), np_params)
+    fisher_np = [
+        (acc / max(n_fisher, 1)).astype(np.float32) for acc in fisher
+    ]
+    save_flat(os.path.join(out_dir, "sensitivity.bin"), fisher_np)
+
+    spec = param_spec(cfg)
+    manifest = {
+        "config": cfg.to_dict(),
+        "seed": seed,
+        "steps": steps,
+        "batch": batch,
+        "final_train_loss": curve[-1][1],
+        "val_loss": val_loss,
+        "val_ppl": float(np.exp(val_loss)),
+        "tensors": [
+            {"name": name, "shape": list(shape), "offset": off}
+            for (name, shape), off in zip(spec, offsets)
+        ],
+    }
+    with open(os.path.join(out_dir, "model_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, "loss_curve.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in curve:
+            f.write(f"{s},{l}\n")
+    print(f"artifacts written to {out_dir}")
+    return params, val_loss
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    train(cfg, args.steps, args.batch, args.lr, args.seed, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Corpus generator tests: determinism, structure, split disjointness."""
+
+import numpy as np
+
+from compile import corpus
+
+
+def test_deterministic():
+    a = corpus.generate_text(7, 4096)
+    b = corpus.generate_text(7, 4096)
+    assert a == b
+
+
+def test_different_seeds_differ():
+    assert corpus.generate_text(1, 2048) != corpus.generate_text(2, 2048)
+
+
+def test_ascii_and_size():
+    text = corpus.generate_text(3, 10_000)
+    assert len(text) == 10_000
+    assert all(32 <= b < 127 for b in text)
+
+
+def test_has_learnable_structure():
+    """Bigram entropy must sit well below the uniform 8 bits/byte — the
+    model needs something to learn."""
+    toks = corpus.tokens_from_bytes(corpus.generate_text(11, 200_000))
+    # Conditional entropy H(x_t | x_{t-1}) via bigram counts.
+    counts = np.zeros((256, 256))
+    np.add.at(counts, (toks[:-1], toks[1:]), 1)
+    row = counts.sum(axis=1, keepdims=True)
+    p = counts / np.maximum(row, 1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        h = -np.nansum(p * np.log2(np.where(p > 0, p, 1)), axis=1)
+    cond_entropy = float((h * (row[:, 0] / row.sum())).sum())
+    assert cond_entropy < 4.5, f"bigram entropy {cond_entropy}"
+
+
+def test_splits_shapes():
+    train, val, test = corpus.splits(seed=99, train_mb=0.05)
+    assert len(train) == int(0.05 * 1024 * 1024)
+    assert len(val) == 128 * 1024 and len(test) == 128 * 1024
+    assert train[:1024] != test[:1024]
+
+
+def test_tokens_roundtrip():
+    data = corpus.generate_text(5, 1000)
+    toks = corpus.tokens_from_bytes(data)
+    assert toks.dtype == np.int32
+    assert toks.min() >= 0 and toks.max() < 256
+    assert bytes(toks.astype(np.uint8).tobytes()) == data

@@ -1,0 +1,123 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/bit-widths; assert_allclose against ref.py is
+the core correctness signal for the kernels the AOT graphs embed.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dequant_matmul import dequant_matmul
+from compile.kernels.rtn_quant import rtn_quant
+from compile.kernels import ref
+
+
+def make_inputs(rng, b, n, k, bits):
+    c = 1 << (bits + 1)
+    x = rng.standard_normal((b, k), dtype=np.float32)
+    codes = rng.integers(0, c, size=(n, k)).astype(np.int32)
+    codebook = rng.standard_normal((n, c), dtype=np.float32)
+    return jnp.asarray(x), jnp.asarray(codes), jnp.asarray(codebook)
+
+
+class TestDequantMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 8]),
+        n=st.sampled_from([8, 16, 64, 128]),
+        k=st.sampled_from([8, 32, 128, 256]),
+        bits=st.sampled_from([1, 2, 3, 4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, n, k, bits, seed):
+        rng = np.random.default_rng(seed)
+        x, codes, cb = make_inputs(rng, b, n, k, bits)
+        got = dequant_matmul(x, codes, cb, bm=8, bn=8, bk=8)
+        want = ref.dequant_matmul_ref(x, codes, cb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_multi_tile_k_accumulation(self):
+        # K spans several tiles: accumulation across the grid's K axis.
+        rng = np.random.default_rng(0)
+        x, codes, cb = make_inputs(rng, 4, 16, 512, 2)
+        got = dequant_matmul(x, codes, cb, bm=4, bn=8, bk=128)
+        want = ref.dequant_matmul_ref(x, codes, cb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_model_shapes(self):
+        # The exact shapes the L2 model uses (d=128, ff=512, B*S=512).
+        rng = np.random.default_rng(1)
+        for (b, n, k) in [(512, 128, 128), (512, 512, 128), (512, 128, 512)]:
+            x, codes, cb = make_inputs(rng, b, n, k, 2)
+            got = dequant_matmul(x, codes, cb)
+            want = ref.dequant_matmul_ref(x, codes, cb)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+            )
+
+    def test_rejects_bad_shapes(self):
+        rng = np.random.default_rng(2)
+        x, codes, cb = make_inputs(rng, 4, 16, 24, 2)
+        with pytest.raises(AssertionError):
+            dequant_matmul(x, codes, cb, bm=4, bn=16, bk=16)  # 24 % 16 != 0
+
+    def test_codes_at_extremes(self):
+        # All-zero and all-max codes exercise gather bounds.
+        b, n, k, bits = 2, 8, 16, 3
+        c = 1 << (bits + 1)
+        x = jnp.ones((b, k), jnp.float32)
+        cb = jnp.arange(n * c, dtype=jnp.float32).reshape(n, c)
+        for fill in (0, c - 1):
+            codes = jnp.full((n, k), fill, jnp.int32)
+            got = dequant_matmul(x, codes, cb, bm=2, bn=8, bk=8)
+            want = ref.dequant_matmul_ref(x, codes, cb)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestRtnQuant:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([8, 32, 128]),
+        k=st.sampled_from([16, 64, 256]),
+        bits=st.sampled_from([2, 3, 4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, k, bits, seed):
+        # Construct x strictly inside rounding cells (0.05..0.45 from the
+        # lower level): at exact .5 ties, XLA fusion-order 1-ULP noise can
+        # legitimately flip round() between the two paths.
+        rng = np.random.default_rng(seed)
+        levels = (1 << bits) - 1
+        lo = rng.standard_normal((n, 1), dtype=np.float32)
+        step = (0.1 + rng.random((n, 1), dtype=np.float32)).astype(np.float32)
+        cells = rng.integers(0, levels + 1, size=(n, k)).astype(np.float32)
+        frac = (0.05 + 0.4 * rng.random((n, k), dtype=np.float32)) * np.where(
+            cells < levels, 1.0, -1.0
+        )
+        x = (lo + (cells + frac) * step).astype(np.float32)
+        codes, deq = rtn_quant(
+            jnp.asarray(x), jnp.asarray(lo), jnp.asarray(step),
+            n_levels=1 << bits, bn=8, bk=16,
+        )
+        rcodes, rdeq = ref.rtn_quant_ref(
+            jnp.asarray(x), jnp.asarray(lo), jnp.asarray(step), 1 << bits
+        )
+        np.testing.assert_array_equal(np.asarray(codes), np.asarray(rcodes))
+        # atol absorbs FMA/fusion noise on near-zero reconstructions.
+        np.testing.assert_allclose(
+            np.asarray(deq), np.asarray(rdeq), rtol=1e-5, atol=1e-6
+        )
+
+    def test_quantization_error_bounded_by_half_step(self):
+        rng = np.random.default_rng(3)
+        x = rng.uniform(-1, 1, size=(16, 64)).astype(np.float32)
+        lo = x.min(axis=1, keepdims=True)
+        hi = x.max(axis=1, keepdims=True)
+        step = ((hi - lo) / 7).astype(np.float32)
+        _, deq = rtn_quant(
+            jnp.asarray(x), jnp.asarray(lo), jnp.asarray(step), n_levels=8, bn=16, bk=64
+        )
+        err = np.abs(np.asarray(deq) - x)
+        assert err.max() <= step.max() / 2 + 1e-6

@@ -1,0 +1,146 @@
+"""L2 model tests: shapes, causality, KV-cache consistency, quantized path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    decode_step,
+    forward_logits,
+    forward_loss,
+    forward_q_logits,
+    forward_token_nll,
+    init_params,
+    param_spec,
+    prefill,
+    quantized_param_spec,
+)
+
+CFG = ModelConfig(n_layers=2, max_seq=32)  # small for test speed
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 16)).astype(np.int32))
+
+
+def test_param_spec_shapes(params):
+    spec = param_spec(CFG)
+    assert len(spec) == 1 + CFG.n_layers * 9 + 2
+    for (name, shape), p in zip(spec, params):
+        assert tuple(p.shape) == shape, name
+
+
+def test_logits_shape(params, tokens):
+    logits = forward_logits(CFG, params, tokens)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params, tokens):
+    """Changing a future token must not affect earlier logits."""
+    logits0 = forward_logits(CFG, params, tokens)
+    perturbed = tokens.at[:, 10].set((tokens[:, 10] + 1) % CFG.vocab)
+    logits1 = forward_logits(CFG, params, perturbed)
+    np.testing.assert_allclose(
+        np.asarray(logits0[:, :10]), np.asarray(logits1[:, :10]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits0[:, 10:]), np.asarray(logits1[:, 10:]))
+
+
+def test_loss_at_init_near_uniform(params, tokens):
+    targets = jnp.roll(tokens, -1, axis=1)
+    loss = float(forward_loss(CFG, params, tokens, targets))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_token_nll_matches_loss(params, tokens):
+    targets = jnp.roll(tokens, -1, axis=1)
+    per_tok = forward_token_nll(CFG, params, tokens, targets)
+    assert per_tok.shape == (2, 16)
+    np.testing.assert_allclose(
+        float(per_tok.mean()), float(forward_loss(CFG, params, tokens, targets)),
+        rtol=1e-6,
+    )
+
+
+def test_prefill_matches_forward(params, tokens):
+    last_logits, k, v = prefill(CFG, params, tokens)
+    full = forward_logits(CFG, params, tokens)
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(full[:, -1, :]), rtol=1e-4, atol=1e-4
+    )
+    assert k.shape == (CFG.n_layers, 2, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    assert v.shape == k.shape
+
+
+def test_decode_steps_match_full_forward(params):
+    """prefill + N decode steps must equal the full-context forward."""
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 12)).astype(np.int32))
+    prompt, rest = toks[:, :8], toks[:, 8:]
+    last_logits, k, v = prefill(CFG, params, prompt)
+    full = forward_logits(CFG, params, toks)
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(full[:, 7, :]), rtol=1e-4, atol=1e-4
+    )
+    for i in range(rest.shape[1]):
+        pos = jnp.int32(8 + i)
+        logits, k, v = decode_step(CFG, params, rest[:, i], pos, k, v)
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(full[:, 8 + i, :]),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+
+def _fake_quantize(params, bits):
+    """Nearest-level quantization of every projection with a per-row
+    uniform codebook — builds forward_q inputs whose dequantized values we
+    can also run through the FP path."""
+    spec = param_spec(CFG)
+    by_name = {name: p for (name, _), p in zip(spec, params)}
+    c = 1 << (bits + 1)
+    qparams = []
+    deq_params = []
+    for name, shape in spec:
+        p = by_name[name]
+        is_linear = any(name.endswith(f".{l}") for l in
+                        ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"))
+        if not is_linear:
+            continue
+        lo = p.min(axis=1, keepdims=True)
+        hi = p.max(axis=1, keepdims=True)
+        step = jnp.maximum((hi - lo) / (c - 1), 1e-9)
+        codes = jnp.clip(jnp.round((p - lo) / step), 0, c - 1).astype(jnp.int32)
+        cb = lo + jnp.arange(c, dtype=jnp.float32)[None, :] * step
+        by_name[f"{name}.codes"] = codes
+        by_name[f"{name}.cb"] = cb
+        by_name[f"{name}.deq"] = jnp.take_along_axis(cb, codes, axis=1)
+    for name, _, _ in quantized_param_spec(CFG, bits):
+        qparams.append(by_name[name])
+    for name, _ in spec:
+        deq_params.append(by_name.get(f"{name}.deq", by_name[name]))
+    return qparams, deq_params
+
+
+def test_forward_q_equals_fp_on_dequantized_weights(params):
+    """forward_q(codes, cb) must equal forward(dequant(codes, cb)) — the
+    in-graph Pallas dequant path is exactly the FP path on decoded
+    weights."""
+    rng = np.random.default_rng(9)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 16)).astype(np.int32))
+    bits = 2
+    qparams, deq_params = _fake_quantize(params, bits)
+    ql = forward_q_logits(CFG, bits, qparams, toks)
+    fl = forward_logits(CFG, deq_params, toks)
+    np.testing.assert_allclose(np.asarray(ql), np.asarray(fl), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,85 @@
+//! Dequantization / serving-plane benches — the memory-bound hot path
+//! the paper's deployment argument rests on. The matvec off the
+//! quantized plane is the CPU analogue of the TPU kernel in
+//! python/compile/kernels/dequant_matmul.py (DESIGN.md §8).
+
+use icquant::bench::{bench_throughput, black_box};
+use icquant::bitstream::PackedPlane;
+use icquant::icquant::{IcqConfig, IcqMatrix};
+use icquant::quant::QuantizerKind;
+use icquant::synthzoo;
+use icquant::util::prng::Rng;
+
+fn main() {
+    let (rows, cols) = (512, 2048);
+    let w = synthzoo::demo_matrix(rows, cols, 5);
+    let cfg = IcqConfig { bits: 2, outlier_ratio: 0.05, gap_bits: 6, quantizer: QuantizerKind::Rtn };
+    let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+
+    // Storage plane → byte codes (bulk bit-unpack).
+    let mut rng = Rng::new(1);
+    let codes: Vec<u16> = (0..rows * cols).map(|_| (rng.next_u64() & 3) as u16).collect();
+    let plane = PackedPlane::pack(rows, cols, 2, &codes);
+    let mut out = vec![0u8; rows * cols];
+    let r = bench_throughput(
+        "dequant/unpack_2bit_plane (bytes out)",
+        500,
+        (rows * cols) as u64,
+        || plane.unpack_into_u8(black_box(&mut out)),
+    );
+    println!("{}", r.report());
+
+    // Full storage → runtime decode (unpack + gap streams + fuse).
+    let r = bench_throughput(
+        "dequant/to_runtime (storage→serving plane)",
+        800,
+        (rows * cols) as u64,
+        || {
+            black_box(q.to_runtime());
+        },
+    );
+    println!("{}", r.report());
+
+    // Runtime plane → f32 (the per-layer dequant a naive server would do).
+    let rt = q.to_runtime();
+    let r = bench_throughput(
+        "dequant/runtime_to_f32 (f32 bytes out)",
+        500,
+        (rows * cols * 4) as u64,
+        || {
+            black_box(rt.dequantize());
+        },
+    );
+    println!("{}", r.report());
+
+    // Fused gather+FMA matvec straight off codes — weight bytes touched
+    // per op is rows*cols (1 byte/code): the memory-bound figure of merit.
+    let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut y = vec![0.0f32; rows];
+    let r = bench_throughput(
+        "dequant/matvec_quantized (code bytes)",
+        500,
+        (rows * cols) as u64,
+        || rt.matvec(black_box(&x), black_box(&mut y)),
+    );
+    println!("{}", r.report());
+
+    // FP32 matvec reference: touches 4x the bytes for the same math.
+    let dense = rt.dequantize();
+    let r = bench_throughput(
+        "dequant/matvec_f32_reference (f32 bytes)",
+        500,
+        (rows * cols * 4) as u64,
+        || {
+            for i in 0..rows {
+                let row = dense.row(i);
+                let mut acc = 0.0f32;
+                for (a, b) in row.iter().zip(&x) {
+                    acc += a * b;
+                }
+                y[i] = black_box(acc);
+            }
+        },
+    );
+    println!("{}", r.report());
+}

@@ -1,0 +1,62 @@
+//! Index-coding throughput: the load-path cost of ICQuant's storage
+//! format (paper §3.2 — the overhead must be storage, not compute).
+
+use icquant::bench::{bench_fn, bench_throughput, black_box};
+use icquant::icq::{encode_gaps, RowIndexCode};
+use icquant::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let d = 4096;
+    let gamma = 0.05;
+    let k = (gamma * d as f64) as usize;
+    let b = 6u32;
+
+    // Per-row encode.
+    let positions = rng.sample_indices(d, k);
+    let r = bench_fn("icq/encode_row (d=4096, γ=5%, b=6)", 300, || {
+        black_box(encode_gaps(black_box(&positions), b));
+    });
+    println!("{}", r.report());
+
+    // Per-row packed encode (bit stream).
+    let r = bench_fn("icq/encode_packed_row", 300, || {
+        black_box(RowIndexCode::encode(black_box(&positions), b));
+    });
+    println!("{}", r.report());
+
+    // Decode to positions.
+    let code = RowIndexCode::encode(&positions, b);
+    let r = bench_fn("icq/decode_row", 300, || {
+        black_box(code.decode());
+    });
+    println!("{}", r.report());
+
+    // Decode into mask — the model-load hot path. Throughput counted
+    // against the row's weight count (how fast we can "unlock" weights).
+    let mut mask = vec![false; d];
+    let r = bench_throughput("icq/decode_into_mask (per weight-byte)", 300, d as u64, || {
+        mask.iter_mut().for_each(|m| *m = false);
+        code.decode_into_mask(black_box(&mut mask));
+    });
+    println!("{}", r.report());
+
+    // Full-matrix scale: 4096 rows (a 4096x4096 layer's index plane).
+    let rows: Vec<RowIndexCode> = (0..512)
+        .map(|_| RowIndexCode::encode(&rng.sample_indices(d, k), b))
+        .collect();
+    let total_weights = (512 * d) as u64;
+    let mut mask = vec![false; d];
+    let r = bench_throughput(
+        "icq/decode_layer_512rows (per weight-byte)",
+        500,
+        total_weights,
+        || {
+            for code in &rows {
+                mask.iter_mut().for_each(|m| *m = false);
+                code.decode_into_mask(&mut mask);
+            }
+        },
+    );
+    println!("{}", r.report());
+}

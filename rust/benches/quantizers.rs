@@ -1,0 +1,59 @@
+//! Quantization-time benches: fitting cost of each method per layer —
+//! the PTQ pipeline's build-time budget (paper: ICQuant needs no
+//! fine-tuning and little calibration, so quantization itself is cheap).
+
+use icquant::bench::{bench_fn, black_box};
+use icquant::experiments::methods::Method;
+use icquant::icquant::{IcqConfig, IcqMatrix};
+use icquant::quant::{kmeans, rtn, QuantizerKind};
+use icquant::synthzoo;
+
+fn main() {
+    let w = synthzoo::demo_matrix(256, 1024, 3);
+    let row = w.row(17).to_vec();
+
+    let r = bench_fn("quant/fit_rtn (row d=1024)", 200, || {
+        black_box(rtn::fit_rtn(black_box(&row), 3));
+    });
+    println!("{}", r.report());
+
+    let r = bench_fn("quant/fit_kmeans 8 levels (row d=1024)", 400, || {
+        black_box(kmeans::fit_kmeans(black_box(&row), None, 3, 25));
+    });
+    println!("{}", r.report());
+
+    for (name, cfg) in [
+        (
+            "quant/icq_rtn 2b matrix 256x1024",
+            IcqConfig { bits: 2, outlier_ratio: 0.05, gap_bits: 6, quantizer: QuantizerKind::Rtn },
+        ),
+        (
+            "quant/icq_sk 2b matrix 256x1024",
+            IcqConfig {
+                bits: 2,
+                outlier_ratio: 0.05,
+                gap_bits: 6,
+                quantizer: QuantizerKind::SensitiveKmeans,
+            },
+        ),
+    ] {
+        let r = bench_fn(name, 1500, || {
+            black_box(IcqMatrix::quantize(black_box(&w), None, &cfg).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    // Method-level comparison at 2 bits (one layer each).
+    for m in [
+        Method::Rtn { bits: 2 },
+        Method::RtnGroup { bits: 2, group: 64 },
+        Method::SqueezeLite { bits: 2, ratio: 0.05 },
+        Method::AqlmLite { bits: 2, dim: 2 },
+        Method::IcqSk { bits: 2, ratio: 0.05 },
+    ] {
+        let r = bench_fn(&format!("method/{} 256x1024", m.name()), 2000, || {
+            black_box(m.quantize_matrix(black_box(&w), None, 1));
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,65 @@
+//! Coordinator benches: batching overhead with the mock backend (pure
+//! L3 cost) and, when artifacts exist, the end-to-end PJRT decode step —
+//! the paper-table analogue of tokens/s serving throughput.
+
+use icquant::bench::{bench_fn, black_box};
+use icquant::coordinator::backend::{Backend, MockBackend, PjrtBackend};
+use icquant::coordinator::{ServeConfig, Server};
+use icquant::model::{artifacts_dir, TrainedModel};
+use std::time::Duration;
+
+fn main() {
+    // L3-only: full submit→respond loop over the mock backend measures
+    // pure coordinator overhead per request (queueing, batching,
+    // channels) — target: negligible vs a multi-ms model step.
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        max_new_tokens: 4,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: 16,
+    };
+    let server = Server::start(cfg, MockBackend::new);
+    let prompt: Vec<i32> = (0..16).collect();
+    let r = bench_fn("serving/coordinator_overhead (1 req roundtrip)", 400, || {
+        let (_, rx) = server.submit(black_box(prompt.clone()), 4);
+        black_box(rx.recv().unwrap());
+    });
+    println!("{}", r.report());
+    server.shutdown();
+
+    // End-to-end PJRT decode-step latency per bucket (needs artifacts).
+    if !artifacts_dir().join("aot_manifest.json").exists() {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+        return;
+    }
+    let model = TrainedModel::load(&artifacts_dir()).unwrap();
+    let mut backend = PjrtBackend::new(&artifacts_dir(), &model).unwrap();
+    backend.warmup().unwrap();
+    for bucket in [1usize, 4, 8] {
+        let prompts: Vec<Vec<i32>> = (0..bucket).map(|i| vec![(i as i32) + 65; 64]).collect();
+        let mut state = backend.prefill(&prompts).unwrap();
+        let r = bench_fn(&format!("serving/pjrt_decode_step_b{}", bucket), 2500, || {
+            // Reset pos to keep the KV cache in range across iterations.
+            if state.pos >= 120 {
+                state.pos = 64;
+            }
+            black_box(backend.decode(&mut state).unwrap());
+        });
+        // tokens/s at this bucket = bucket / step-latency.
+        println!(
+            "{}   ({:.1} tokens/s)",
+            r.report(),
+            bucket as f64 / (r.mean_ns * 1e-9)
+        );
+    }
+
+    // Prefill latency per bucket.
+    for bucket in [1usize, 8] {
+        let prompts: Vec<Vec<i32>> = (0..bucket).map(|i| vec![(i as i32) + 65; 64]).collect();
+        let r = bench_fn(&format!("serving/pjrt_prefill_b{}", bucket), 2500, || {
+            black_box(backend.prefill(black_box(&prompts)).unwrap());
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal timing harness (criterion is not in the offline registry).
+//!
+//! [`bench_fn`] runs warmup + timed iterations and reports mean/p50/p99
+//! ns/op plus optional throughput. Used by `rust/benches/*.rs`
+//! (`harness = false`) and the perf pass in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional bytes processed per iteration (→ GB/s in the report).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.mean_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput_gbps() {
+            Some(gbps) => format!("  {:>8.3} GB/s", gbps),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ns/op  p50 {:>12}  p99 {:>12}{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            tp
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.0}", ns)
+    } else if ns < 1e6 {
+        format!("{:.2}k", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}M", ns / 1e6)
+    } else {
+        format!("{:.2}G", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly; auto-calibrates iteration count to ~`budget_ms`.
+pub fn bench_fn<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as u64;
+    let target = budget_ms * 1_000_000;
+    let iters = ((target / once).clamp(5, 100_000)) as usize;
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() as f64 - 1.0) * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pct(0.5),
+        p99_ns: pct(0.99),
+        bytes_per_iter: None,
+    }
+}
+
+/// Like [`bench_fn`] but annotates throughput.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    budget_ms: u64,
+    bytes_per_iter: u64,
+    f: F,
+) -> BenchResult {
+    let mut r = bench_fn(name, budget_ms, f);
+    r.bytes_per_iter = Some(bytes_per_iter);
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut acc = 0u64;
+        let r = bench_fn("noop-ish", 5, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            p50_ns: 1000.0,
+            p99_ns: 1000.0,
+            bytes_per_iter: Some(2000),
+        };
+        // 2000 bytes / 1000 ns = 2 GB/s.
+        assert!((r.throughput_gbps().unwrap() - 2.0).abs() < 1e-9);
+        assert!(r.report().contains("GB/s"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Bit-level packing primitives.
+//!
+//! Everything ICQuant stores — n-bit code planes, b-bit gap streams — is a
+//! dense LSB-first bit stream. [`BitWriter`]/[`BitReader`] are the scalar
+//! codec; [`PackedPlane`] is the bulk fixed-width container used for code
+//! planes with a fast unpack path.
+
+pub mod plane;
+
+pub use plane::PackedPlane;
+
+/// Append-only LSB-first bit writer.
+///
+/// Bits are packed into bytes starting from bit 0 of byte 0; a value
+/// written with `width` w occupies the next w bits.
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the stream.
+    len_bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), len_bits: 0 }
+    }
+
+    /// Write the low `width` bits of `v` (width 1..=57).
+    #[inline]
+    pub fn write(&mut self, v: u64, width: u32) {
+        debug_assert!(width >= 1 && width <= 57, "width {}", width);
+        debug_assert!(width == 64 || v < (1u64 << width), "value {} overflows width {}", v, width);
+        let bit_off = self.len_bits & 7;
+        let need_bytes = (self.len_bits + width as usize).div_ceil(8);
+        self.buf.resize(need_bytes, 0);
+        let byte_idx = self.len_bits >> 3;
+        // Merge into an 8-byte window (width ≤ 57 ⇒ fits with any offset).
+        let mut window = 0u64;
+        let avail = self.buf.len() - byte_idx;
+        let n = avail.min(8);
+        window |= u64_from_le_prefix(&self.buf[byte_idx..byte_idx + n]);
+        window |= v << bit_off;
+        let out = window.to_le_bytes();
+        self.buf[byte_idx..byte_idx + n].copy_from_slice(&out[..n]);
+        self.len_bits += width as usize;
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+#[inline]
+fn u64_from_le_prefix(b: &[u8]) -> u64 {
+    let mut tmp = [0u8; 8];
+    tmp[..b.len()].copy_from_slice(b);
+    u64::from_le_bytes(tmp)
+}
+
+/// LSB-first bit reader over a byte slice.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos_bits: usize,
+    len_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8], len_bits: usize) -> Self {
+        assert!(len_bits <= buf.len() * 8);
+        BitReader { buf, pos_bits: 0, len_bits }
+    }
+
+    /// Read `width` bits (1..=57). Panics past end in debug; returns
+    /// zero-padded bits in release reads past the logical end but within
+    /// the buffer — callers must track counts (the codecs do).
+    #[inline]
+    pub fn read(&mut self, width: u32) -> u64 {
+        debug_assert!(self.pos_bits + width as usize <= self.len_bits, "bitreader overrun");
+        let byte_idx = self.pos_bits >> 3;
+        let bit_off = self.pos_bits & 7;
+        let end = (byte_idx + 8).min(self.buf.len());
+        let window = u64_from_le_prefix(&self.buf[byte_idx..end]);
+        let v = (window >> bit_off) & mask(width);
+        self.pos_bits += width as usize;
+        v
+    }
+
+    #[inline]
+    pub fn remaining_bits(&self) -> usize {
+        self.len_bits - self.pos_bits
+    }
+
+    pub fn pos_bits(&self) -> usize {
+        self.pos_bits
+    }
+
+    /// Jump to an absolute bit offset.
+    pub fn seek(&mut self, bit: usize) {
+        assert!(bit <= self.len_bits);
+        self.pos_bits = bit;
+    }
+}
+
+#[inline]
+pub fn mask(width: u32) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{check, Config};
+
+    #[test]
+    fn single_values() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0b1, 1);
+        w.write(0xFF, 8);
+        assert_eq!(w.len_bits(), 12);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes, 12);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(1), 0b1);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn cross_byte_boundaries() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.write(i % 32, 5);
+        }
+        let n = w.len_bits();
+        let bytes = w.into_bytes();
+        assert_eq!(n, 500);
+        let mut r = BitReader::new(&bytes, n);
+        for i in 0..100u64 {
+            assert_eq!(r.read(5), i % 32, "i={}", i);
+        }
+    }
+
+    #[test]
+    fn wide_values_near_57() {
+        let mut w = BitWriter::new();
+        let vals = [(1u64 << 57) - 1, 0, 0x1234_5678_9ABC_DE, 42];
+        for &v in &vals {
+            w.write(v, 57);
+        }
+        let bytes = w.as_bytes().to_vec();
+        let mut r = BitReader::new(&bytes, w.len_bits());
+        for &v in &vals {
+            assert_eq!(r.read(57), v);
+        }
+    }
+
+    #[test]
+    fn seek_random_access() {
+        let mut w = BitWriter::new();
+        for i in 0..64u64 {
+            w.write(i, 6);
+        }
+        let bytes = w.as_bytes().to_vec();
+        let mut r = BitReader::new(&bytes, w.len_bits());
+        r.seek(6 * 10);
+        assert_eq!(r.read(6), 10);
+        r.seek(0);
+        assert_eq!(r.read(6), 0);
+    }
+
+    #[test]
+    fn prop_roundtrip_mixed_widths() {
+        check(
+            "bitstream-roundtrip",
+            Config::with_cases(128),
+            |rng, size| {
+                let n = 1 + (size * 400.0) as usize;
+                (0..n)
+                    .map(|_| {
+                        let width = rng.range_inclusive(1, 57) as u32;
+                        let v = rng.next_u64() & mask(width);
+                        (v, width)
+                    })
+                    .collect::<Vec<(u64, u32)>>()
+            },
+            |items| {
+                let mut w = BitWriter::new();
+                for &(v, width) in items {
+                    w.write(v, width);
+                }
+                let total: usize = items.iter().map(|&(_, w)| w as usize).sum();
+                crate::prop_assert!(w.len_bits() == total, "len mismatch");
+                let bytes = w.as_bytes();
+                let mut r = BitReader::new(bytes, total);
+                for &(v, width) in items {
+                    let got = r.read(width);
+                    crate::prop_assert!(got == v, "got {} want {} width {}", got, v, width);
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,223 @@
+//! Fixed-width packed code plane.
+//!
+//! The quantized weight matrix is stored as one code per weight at a fixed
+//! bit width (the paper's `n`). [`PackedPlane`] packs those codes densely
+//! (LSB-first, row-major) and provides bulk unpack into `u8`/`u16` — the
+//! load-time hot path that turns the storage plane into the byte-aligned
+//! runtime plane the kernels consume (see DESIGN.md §4/§8).
+
+use super::{mask, BitReader, BitWriter};
+
+/// Densely packed `width`-bit codes (row-major over a `rows × cols` grid).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedPlane {
+    pub rows: usize,
+    pub cols: usize,
+    pub width: u32,
+    bytes: Vec<u8>,
+}
+
+impl PackedPlane {
+    /// Pack `codes` (len == rows*cols, each < 2^width).
+    pub fn pack(rows: usize, cols: usize, width: u32, codes: &[u16]) -> PackedPlane {
+        assert_eq!(codes.len(), rows * cols);
+        assert!(width >= 1 && width <= 16);
+        let mut w = BitWriter::with_capacity_bits(codes.len() * width as usize);
+        for &c in codes {
+            debug_assert!((c as u64) <= mask(width), "code {} overflows width {}", c, width);
+            w.write(c as u64, width);
+        }
+        PackedPlane { rows, cols, width, bytes: w.into_bytes() }
+    }
+
+    /// Total storage in bytes.
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Storage in bits (exact, without byte padding).
+    pub fn storage_bits(&self) -> usize {
+        self.rows * self.cols * self.width as usize
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Rebuild from raw parts (deserialization).
+    pub fn from_bytes(rows: usize, cols: usize, width: u32, bytes: Vec<u8>) -> PackedPlane {
+        assert!(bytes.len() * 8 >= rows * cols * width as usize);
+        PackedPlane { rows, cols, width, bytes }
+    }
+
+    /// Unpack the whole plane into one `u16` code per weight.
+    pub fn unpack(&self) -> Vec<u16> {
+        let n = self.rows * self.cols;
+        let mut out = Vec::with_capacity(n);
+        let mut r = BitReader::new(&self.bytes, self.storage_bits());
+        for _ in 0..n {
+            out.push(r.read(self.width) as u16);
+        }
+        out
+    }
+
+    /// Fast bulk unpack into a caller-provided `u8` buffer (width ≤ 8).
+    ///
+    /// This is the serving load path (§Perf): a 64-bit shift register is
+    /// refilled in 8-byte gulps, emitting ⌊56/width⌋ codes per refill —
+    /// ~3× the per-code two-byte-window walk it replaced (measured in
+    /// `benches/dequant.rs`; before/after in EXPERIMENTS.md §Perf).
+    pub fn unpack_into_u8(&self, out: &mut [u8]) {
+        assert!(self.width <= 8);
+        let n = self.rows * self.cols;
+        assert_eq!(out.len(), n);
+        let width = self.width as usize;
+        let m = mask(self.width) as u8;
+        let bytes = &self.bytes;
+
+        let mut produced = 0usize;
+        let mut byte_idx = 0usize;
+        // Shift register: `avail` valid bits at the bottom of `window`.
+        let mut window = 0u64;
+        let mut avail = 0usize;
+        while produced < n {
+            // Refill: keep ≥ 56 bits when possible (one branch per gulp,
+            // not per code).
+            if avail <= 56 {
+                while avail <= 56 && byte_idx + 8 <= bytes.len() {
+                    // Full 8-byte gulp is only safe when we can consume
+                    // 8 whole bytes; otherwise fall to the byte loop.
+                    if avail == 0 {
+                        window = u64::from_le_bytes(
+                            bytes[byte_idx..byte_idx + 8].try_into().unwrap(),
+                        );
+                        avail = 64;
+                        byte_idx += 8;
+                    } else {
+                        window |= (bytes[byte_idx] as u64) << avail;
+                        avail += 8;
+                        byte_idx += 1;
+                    }
+                }
+                while avail <= 56 && byte_idx < bytes.len() {
+                    window |= (bytes[byte_idx] as u64) << avail;
+                    avail += 8;
+                    byte_idx += 1;
+                }
+            }
+            // Emit as many codes as the window holds (bounded by n).
+            let emit = (avail / width).min(n - produced);
+            let dst = &mut out[produced..produced + emit];
+            for slot in dst.iter_mut() {
+                *slot = (window as u8) & m;
+                window >>= width;
+            }
+            avail -= emit * width;
+            produced += emit;
+        }
+    }
+
+    /// Unpack a single row (width ≤ 8).
+    pub fn unpack_row_u8(&self, row: usize, out: &mut [u8]) {
+        assert!(self.width <= 8 && row < self.rows);
+        assert_eq!(out.len(), self.cols);
+        let width = self.width as usize;
+        let m = mask(self.width);
+        let mut bitpos = row * self.cols * width;
+        for slot in out.iter_mut() {
+            let byte_idx = bitpos >> 3;
+            let bit_off = bitpos & 7;
+            let w0 = self.bytes[byte_idx] as u64;
+            let w1 = *self.bytes.get(byte_idx + 1).unwrap_or(&0) as u64;
+            *slot = (((w0 | (w1 << 8)) >> bit_off) & m) as u8;
+            bitpos += width;
+        }
+    }
+
+    /// Read one code.
+    pub fn get(&self, row: usize, col: usize) -> u16 {
+        let bitpos = (row * self.cols + col) * self.width as usize;
+        let mut r = BitReader::new(&self.bytes, self.bytes.len() * 8);
+        r.seek(bitpos);
+        r.read(self.width) as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{check, Config};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pack_unpack_exact() {
+        let codes: Vec<u16> = (0..24).map(|i| (i % 8) as u16).collect();
+        let p = PackedPlane::pack(4, 6, 3, &codes);
+        assert_eq!(p.storage_bits(), 72);
+        assert_eq!(p.unpack(), codes);
+    }
+
+    #[test]
+    fn u8_bulk_matches_scalar() {
+        let mut rng = Rng::new(5);
+        for width in 1..=8u32 {
+            let (rows, cols) = (17, 129);
+            let codes: Vec<u16> =
+                (0..rows * cols).map(|_| (rng.next_u64() & mask(width)) as u16).collect();
+            let p = PackedPlane::pack(rows, cols, width, &codes);
+            let mut out = vec![0u8; rows * cols];
+            p.unpack_into_u8(&mut out);
+            for (a, b) in out.iter().zip(&codes) {
+                assert_eq!(*a as u16, *b);
+            }
+        }
+    }
+
+    #[test]
+    fn row_unpack_matches() {
+        let mut rng = Rng::new(9);
+        let (rows, cols, width) = (8, 100, 5);
+        let codes: Vec<u16> =
+            (0..rows * cols).map(|_| (rng.next_u64() & mask(width)) as u16).collect();
+        let p = PackedPlane::pack(rows, cols, width, &codes);
+        for r in 0..rows {
+            let mut out = vec![0u8; cols];
+            p.unpack_row_u8(r, &mut out);
+            for c in 0..cols {
+                assert_eq!(out[c] as u16, codes[r * cols + c]);
+                assert_eq!(p.get(r, c), codes[r * cols + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let codes = vec![1u16; 1000];
+        let p = PackedPlane::pack(10, 100, 2, &codes);
+        assert_eq!(p.storage_bits(), 2000);
+        assert_eq!(p.storage_bytes(), 250);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_shape_width() {
+        check(
+            "plane-roundtrip",
+            Config::with_cases(96),
+            |rng, size| {
+                let rows = 1 + (size * 20.0) as usize;
+                let cols = 1 + (rng.below(1 + (size * 300.0) as u64)) as usize;
+                let width = rng.range_inclusive(1, 16) as u32;
+                let codes: Vec<u16> =
+                    (0..rows * cols).map(|_| (rng.next_u64() & mask(width)) as u16).collect();
+                (rows, cols, width, codes)
+            },
+            |(rows, cols, width, codes)| {
+                let p = PackedPlane::pack(*rows, *cols, *width, codes);
+                crate::prop_assert!(p.unpack() == *codes, "unpack mismatch");
+                let p2 = PackedPlane::from_bytes(*rows, *cols, *width, p.bytes().to_vec());
+                crate::prop_assert!(p2.unpack() == *codes, "from_bytes mismatch");
+                Ok(())
+            },
+        );
+    }
+}

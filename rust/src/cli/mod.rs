@@ -1,0 +1,310 @@
+//! Command-line interface (hand-rolled — clap is not in the offline
+//! registry).
+//!
+//! ```text
+//! icquant exp <id|all> [--fast]      regenerate a paper table/figure
+//! icquant quantize [opts]            quantize a tensor → .icqm artifact
+//! icquant stats --family <name>      outlier statistics for a zoo family
+//! icquant bound [--gamma g]          Lemma 1 bound table + optimal b
+//! icquant serve [opts]               run the serving demo
+//! icquant eval [--bits n ...]        perplexity of FP vs ICQuant model
+//! icquant zoo                        list synthetic model families
+//! icquant help
+//! ```
+
+pub mod serve_demo;
+
+use crate::experiments;
+use crate::icquant::{packed, IcqConfig, IcqMatrix};
+use crate::quant::QuantizerKind;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed flag set: positionals + `--key value` + `--flag` booleans.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            Some(v) => v.parse::<f64>().with_context(|| format!("--{} {}", key, v)),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            Some(v) => v.parse::<usize>().with_context(|| format!("--{} {}", key, v)),
+            None => Ok(default),
+        }
+    }
+}
+
+pub fn run() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "quantize" => cmd_quantize(&args),
+        "stats" => cmd_stats(&args),
+        "bound" => cmd_bound(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "zoo" => cmd_zoo(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{}' (try `icquant help`)", other),
+    }
+}
+
+fn print_help() {
+    println!("ICQuant — Index Coding enables Low-bit LLM Quantization");
+    println!();
+    println!("USAGE: icquant <command> [options]");
+    println!();
+    println!("  exp <id|all> [--fast]         regenerate a paper table/figure:");
+    for e in experiments::registry() {
+        println!("      {:<8} {}", e.id, e.paper_artifact);
+    }
+    println!("  quantize [--bits n] [--ratio g] [--quantizer rtn|sk]");
+    println!("           [--rows r --cols c --seed s] [--out file.icqm]");
+    println!("                                quantize a (synthetic) matrix");
+    println!("  stats --family <name>         outlier stats for a zoo family");
+    println!("  bound [--gamma g]             Lemma 1 bound + optimal b");
+    println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
+    println!("                                batched serving demo (PJRT)");
+    println!("  eval [--bits n] [--ratio g]   ppl: FP vs ICQuant^SK");
+    println!("  zoo                           list synthetic model families");
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    experiments::run(id, args.bool_flag("fast"))
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let bits = args.usize_flag("bits", 2)? as u32;
+    let ratio = args.f64_flag("ratio", 0.05)?;
+    let rows = args.usize_flag("rows", 256)?;
+    let cols = args.usize_flag("cols", 1024)?;
+    let seed = args.usize_flag("seed", 7)? as u64;
+    let quantizer = match args.flag("quantizer").unwrap_or("rtn") {
+        "rtn" => QuantizerKind::Rtn,
+        "sk" => QuantizerKind::SensitiveKmeans,
+        q => bail!("unknown quantizer '{}'", q),
+    };
+    let w = crate::synthzoo::demo_matrix(rows, cols, seed);
+    let cfg = IcqConfig { bits, outlier_ratio: ratio, gap_bits: 0, quantizer };
+    let t0 = std::time::Instant::now();
+    let q = IcqMatrix::quantize(&w, None, &cfg)?;
+    let dt = t0.elapsed();
+    let rec = q.dequantize();
+    println!(
+        "quantized {}x{} with {:?} ({} bits, γ={:.2}%)",
+        rows, cols, quantizer, bits, ratio * 100.0
+    );
+    println!("  gap width b          : {} (Lemma-1 optimal)", q.gap_bits);
+    println!("  index overhead B     : {:.4} bits/weight", q.index_bits_per_weight());
+    println!(
+        "  total bits/weight    : {:.3} (+codebooks: {:.3})",
+        q.avg_bits_per_weight(),
+        q.avg_bits_per_weight_full()
+    );
+    println!("  reconstruction MSE   : {:.4e}", w.mse(&rec));
+    println!("  quantization time    : {}", crate::util::human_duration(dt));
+    if let Some(path) = args.flag("out") {
+        packed::save(&q, std::path::Path::new(path))?;
+        let size = std::fs::metadata(path)?.len();
+        println!(
+            "  artifact             : {} ({})",
+            path,
+            crate::util::human_bytes(size)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let name = args.flag("family").unwrap_or("llama2-7b");
+    let f = crate::synthzoo::family(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown family '{}' (see `icquant zoo`)", name))?;
+    println!(
+        "[{}] d_model={} d_ff={} blocks={} (~{} params simulated)",
+        f.name,
+        f.d_model,
+        f.d_ff,
+        f.n_blocks,
+        f.param_count()
+    );
+    println!(
+        "\n{:<12} {:>12} {:>14} {:>16}",
+        "layer", "range@5%", "chi2 reject", "icq B (b=6)"
+    );
+    for lt in crate::synthzoo::LayerType::ALL {
+        let w = f.gen_stat_layer(lt, 0);
+        let range = crate::stats::avg_range_taken(&w, 0.05);
+        let rej = crate::stats::rejection_rate(&w, 0.0625, 256, 0.05);
+        let k = (0.05 * w.cols as f64) as usize;
+        let rows: Vec<Vec<usize>> = (0..w.rows)
+            .map(|r| crate::quant::mixed_precision::top_k_by_magnitude(w.row(r), k))
+            .collect();
+        let b = crate::icq::bound::empirical_overhead(&rows, w.cols, 6);
+        println!(
+            "{:<12} {:>12.3} {:>13.2}% {:>16.4}",
+            lt.name(),
+            range,
+            rej * 100.0,
+            b
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bound(args: &Args) -> Result<()> {
+    let gamma = args.f64_flag("gamma", 0.05)?;
+    println!("Lemma 1 bound at γ={:.2}%:", gamma * 100.0);
+    for b in 3..=10u32 {
+        let bound = crate::icq::lemma1_bound(gamma, b);
+        let marker = if b == crate::icq::optimal_b(gamma) {
+            "  ← optimal"
+        } else {
+            ""
+        };
+        println!("  b={:<2}  B ≤ {:.4} bits/weight{}", b, bound, marker);
+    }
+    let c = crate::icq::bound::storage_comparison(gamma, 50_000);
+    println!("\nvs alternatives (d_in=50k, as §3.2):");
+    println!("  binary mask      : {:.3} bits/weight", c.binary_mask);
+    println!("  absolute indices : {:.3} bits/weight", c.absolute_indices);
+    println!("  ICQuant (b={})    : {:.3} bits/weight", c.icquant_b, c.icquant);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n_requests = args.usize_flag("requests", 16)?;
+    let max_batch = args.usize_flag("batch", 8)?;
+    let tokens = args.usize_flag("tokens", 16)?;
+    serve_demo::run(n_requests, max_batch, tokens, args.bool_flag("quantized"))
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let bits = args.usize_flag("bits", 2)? as u32;
+    let ratio = args.f64_flag("ratio", 0.05)?;
+    let mut ctx = crate::experiments::EvalCtx::load(args.bool_flag("fast"))?;
+    let fp = ctx.ppl_fp()?;
+    let m = crate::experiments::methods::Method::IcqSk { bits, ratio };
+    let (rep, avg_bits) = m.quantize_model(&ctx.model);
+    let q = ctx.ppl_with(&rep)?;
+    println!("FP32 ppl                : {:.3}", fp);
+    println!("{} ({:.2} bits/w): {:.3}", m.name(), avg_bits, q);
+    println!("degradation             : {:+.2}%", (q / fp - 1.0) * 100.0);
+    Ok(())
+}
+
+fn cmd_zoo() -> Result<()> {
+    println!(
+        "{:<14} {:>8} {:>7} {:>8} {:>12}",
+        "family", "d_model", "d_ff", "blocks", "params(sim)"
+    );
+    for f in crate::synthzoo::model_families() {
+        println!(
+            "{:<14} {:>8} {:>7} {:>8} {:>12}",
+            f.name,
+            f.d_model,
+            f.d_ff,
+            f.n_blocks,
+            f.param_count()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = args(&["fig4", "--fast", "--gamma", "0.05"]);
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert!(a.bool_flag("fast"));
+        assert_eq!(a.f64_flag("gamma", 0.1).unwrap(), 0.05);
+        assert_eq!(a.usize_flag("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_flag_value_errors() {
+        let a = args(&["--bits", "notanumber"]);
+        assert!(a.usize_flag("bits", 2).is_err());
+    }
+
+    #[test]
+    fn bound_command_runs() {
+        cmd_bound(&args(&["--gamma", "0.05"])).unwrap();
+    }
+
+    #[test]
+    fn zoo_command_runs() {
+        cmd_zoo().unwrap();
+    }
+
+    #[test]
+    fn quantize_command_runs() {
+        cmd_quantize(&args(&["--rows", "32", "--cols", "256", "--bits", "2"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&["frobnicate".to_string()]).is_err());
+    }
+}

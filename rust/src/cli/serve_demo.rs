@@ -1,0 +1,79 @@
+//! Serving demo: load the trained model (optionally ICQuant-quantized),
+//! start the coordinator, fire a workload of prompts drawn from the test
+//! corpus, and report latency/throughput — the intro's deployment story.
+
+use crate::coordinator::backend::PjrtBackend;
+use crate::coordinator::{ServeConfig, Server};
+use crate::eval::load_corpus_tokens;
+use crate::experiments::methods::Method;
+use crate::model::{artifacts_dir, TrainedModel};
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bool) -> Result<()> {
+    let dir = artifacts_dir();
+    let mut model = TrainedModel::load(&dir)?;
+    let mut storage_note = String::from("FP32 weights");
+    if quantized {
+        let m = Method::IcqSk { bits: 2, ratio: 0.05 };
+        let t0 = Instant::now();
+        let (rep, bits) = m.quantize_model(&model);
+        model = model.with_replaced(&rep);
+        storage_note = format!(
+            "{} ({:.2} bits/weight storage, quantized in {:.1}s)",
+            m.name(),
+            bits,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait: Duration::from_millis(15),
+        max_new_tokens: max_tokens,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: 64,
+    };
+    println!("starting server: {} | max_batch={} max_wait=15ms", storage_note, max_batch);
+
+    let dir2 = dir.clone();
+    let model2 = model.clone();
+    let server = Server::start(cfg, move || {
+        let mut b = PjrtBackend::new(&dir2, &model2).expect("backend init");
+        b.warmup().expect("warmup");
+        b
+    });
+
+    // Workload: prompts sampled from the test corpus.
+    let corpus = load_corpus_tokens(&dir, "test")?;
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let start = (i * 4099) % (corpus.len() - 80);
+        let prompt = corpus[start..start + 48].to_vec();
+        let (_, rx) = server.submit(prompt, max_tokens);
+        rxs.push(rx);
+    }
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+        anyhow::ensure!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        total_tokens += resp.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = server.metrics.snapshot();
+    println!("\n=== serving report ===");
+    println!("requests               : {}", snap.requests);
+    println!("generated tokens       : {}", total_tokens);
+    println!("wall time              : {:.2} s", wall);
+    println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
+    println!("batches                : {} (avg size {:.2}, avg bucket {:.2})",
+        snap.batches, snap.avg_batch_size, snap.avg_bucket);
+    println!("avg queue latency      : {:.1} ms", snap.avg_queue_ms);
+    println!("avg prefill latency    : {:.1} ms", snap.avg_prefill_ms);
+    println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
+    println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Model-executor abstraction for the serving loop.
+//!
+//! [`PjrtBackend`] is the real thing: prefill/decode HLO entries executed
+//! on the PJRT CPU client with resident weight literals. [`MockBackend`]
+//! is a deterministic stand-in for batcher tests and benches.
+
+use crate::model::TrainedModel;
+use crate::runtime::{Engine, HostTensor};
+use anyhow::{Context, Result};
+
+/// In-flight generation state for one batch.
+pub struct DecodeState {
+    pub bucket: usize,
+    pub pos: usize,
+    /// Last emitted token per sequence (input to the next decode step).
+    pub last_tokens: Vec<i32>,
+    /// Backend-specific cache payload (PJRT: k/v literals).
+    pub kv: Option<(xla::Literal, xla::Literal)>,
+}
+
+/// The serving contract: batch prefill, then repeated single-token decode.
+///
+/// Deliberately *not* `Send`: PJRT handles are thread-local, so the
+/// backend is constructed inside the worker thread (the factory closure
+/// is what crosses the thread boundary — see [`super::Server::start`]).
+pub trait Backend {
+    /// Run the prompt pass for a bucket-sized batch of equal-length
+    /// prompts; returns the decode state primed with the first sampled
+    /// token per sequence.
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState>;
+
+    /// One greedy decode step: returns the next token per sequence and
+    /// advances the state.
+    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Real backend: compiled prefill_b{B}/decode_b{B} entries + weights.
+///
+/// Weights are uploaded to the device **once** at construction
+/// (`upload_all`) and borrowed by every prefill/decode call — the
+/// coordinator never re-copies the model (§Perf: 4.5× faster decode
+/// steps vs the literal path).
+pub struct PjrtBackend {
+    engine: Engine,
+    weights: Vec<crate::runtime::ResidentBuffer>,
+    max_seq: usize,
+    prefill_len: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &std::path::Path, model: &TrainedModel) -> Result<PjrtBackend> {
+        let engine = Engine::new(artifacts_dir)?;
+        let weight_lits = crate::eval::weight_literals(model)?;
+        let weights = engine.upload_all(weight_lits)?;
+        let prefill_len = engine.manifest().prefill_len;
+        Ok(PjrtBackend { engine, weights, max_seq: model.config.max_seq, prefill_len })
+    }
+
+    /// Pre-compile all serving buckets (avoids first-request latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        for b in self.engine.manifest().buckets.clone() {
+            self.engine.prepare(&format!("prefill_b{}", b))?;
+            self.engine.prepare(&format!("decode_b{}", b))?;
+        }
+        Ok(())
+    }
+
+    fn argmax_rows(logits: &[f32], rows: usize) -> Vec<i32> {
+        let cols = logits.len() / rows;
+        (0..rows)
+            .map(|r| {
+                let row = &logits[r * cols..(r + 1) * cols];
+                let mut best = (f32::NEG_INFINITY, 0usize);
+                for (i, &v) in row.iter().enumerate() {
+                    if v > best.0 {
+                        best = (v, i);
+                    }
+                }
+                best.1 as i32
+            })
+            .collect()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
+        let bucket = prompts.len();
+        let entry = format!("prefill_b{}", bucket);
+        self.engine.prepare(&entry)?; // compile before async uploads
+        let s = self.prefill_len;
+        let mut toks = Vec::with_capacity(bucket * s);
+        for p in prompts {
+            anyhow::ensure!(p.len() == s, "prompt not normalized to {}", s);
+            toks.extend_from_slice(p);
+        }
+        let data = [self
+            .engine
+            .upload(HostTensor::I32(toks, vec![bucket, s]).to_literal()?)?];
+        let args: Vec<&crate::runtime::ResidentBuffer> = data.iter().chain(self.weights.iter()).collect();
+        let mut out = self.engine.execute_buffers(&entry, &args)?;
+        anyhow::ensure!(out.len() == 3, "prefill returns (logits, k, v)");
+        let v = out.pop().context("v")?;
+        let k = out.pop().context("k")?;
+        let logits = Engine::literal_f32(&out[0])?;
+        let last_tokens = Self::argmax_rows(&logits, bucket);
+        Ok(DecodeState { bucket, pos: s, last_tokens, kv: Some((k, v)) })
+    }
+
+    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
+        anyhow::ensure!(state.pos < self.max_seq, "KV cache exhausted");
+        let entry = format!("decode_b{}", state.bucket);
+        self.engine.prepare(&entry)?; // compile before async uploads
+        let (k, v) = state.kv.take().context("kv state missing")?;
+        let data = [
+            self.engine.upload(
+                HostTensor::I32(state.last_tokens.clone(), vec![state.bucket])
+                    .to_literal()?,
+            )?,
+            self.engine
+                .upload(HostTensor::scalar_i32(state.pos as i32).to_literal()?)?,
+            self.engine.upload(k)?,
+            self.engine.upload(v)?,
+        ];
+        let args: Vec<&crate::runtime::ResidentBuffer> =
+            data.iter().chain(self.weights.iter()).collect();
+        let mut out = self.engine.execute_buffers(&entry, &args)?;
+        anyhow::ensure!(out.len() == 3, "decode returns (logits, k, v)");
+        let nv = out.pop().context("v")?;
+        let nk = out.pop().context("k")?;
+        let logits = Engine::literal_f32(&out[0])?;
+        let next = Self::argmax_rows(&logits, state.bucket);
+        state.last_tokens = next.clone();
+        state.kv = Some((nk, nv));
+        state.pos += 1;
+        // The emitted token is the one the *previous* position predicted;
+        // greedy generation returns it directly.
+        Ok(next)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend (tests/benches)
+// ---------------------------------------------------------------------------
+
+/// Deterministic mock: token stream derived from a per-sequence hash of
+/// the prompt. Decode latency is zero — batcher behaviour only.
+pub struct MockBackend {
+    hashes: Vec<u64>,
+}
+
+impl MockBackend {
+    pub fn new() -> MockBackend {
+        MockBackend { hashes: Vec::new() }
+    }
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for MockBackend {
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
+        self.hashes = prompts
+            .iter()
+            .map(|p| {
+                let mut h = 0xcbf29ce484222325u64;
+                for &t in p {
+                    h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+                }
+                h
+            })
+            .collect();
+        let last_tokens = self.hashes.iter().map(|&h| (h % 256) as i32).collect();
+        Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: None })
+    }
+
+    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
+        let step = state.pos as u64;
+        let next: Vec<i32> = self
+            .hashes
+            .iter()
+            .map(|&h| ((h.rotate_left((step % 63) as u32 + 1) ^ step) % 256) as i32)
+            .collect();
+        state.pos += 1;
+        state.last_tokens = next.clone();
+        Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let mut b1 = MockBackend::new();
+        let mut b2 = MockBackend::new();
+        let prompts = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let mut s1 = b1.prefill(&prompts).unwrap();
+        let mut s2 = b2.prefill(&prompts).unwrap();
+        for _ in 0..5 {
+            assert_eq!(b1.decode(&mut s1).unwrap(), b2.decode(&mut s2).unwrap());
+        }
+    }
+
+    #[test]
+    fn mock_differs_across_prompts() {
+        let mut b = MockBackend::new();
+        let mut s = b.prefill(&vec![vec![1], vec![2]]).unwrap();
+        let toks = b.decode(&mut s).unwrap();
+        assert_ne!(toks[0], toks[1]);
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let logits = vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0];
+        assert_eq!(PjrtBackend::argmax_rows(&logits, 2), vec![1, 0]);
+    }
+}

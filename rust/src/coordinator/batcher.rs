@@ -1,0 +1,144 @@
+//! Pure batching policy + prompt normalization — the logic the property
+//! tests pin down independently of any backend.
+
+use super::{GenerateRequest, GenerateResponse};
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// A queued request with its response channel and arrival time.
+pub struct PendingRequest {
+    pub req: GenerateRequest,
+    pub tx: Sender<GenerateResponse>,
+    pub arrived: Instant,
+}
+
+/// Flush policy: emit the batch when it is full or the oldest member has
+/// waited long enough. Classic size-or-deadline dynamic batching.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn should_flush(&self, batch_len: usize, oldest_wait: Duration) -> bool {
+        batch_len >= self.max_batch || oldest_wait >= self.max_wait
+    }
+}
+
+/// Smallest compiled bucket that fits `n` requests.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+/// Fit a prompt into the fixed prefill window: left-truncate if too long
+/// (keep the generation-relevant suffix), left-pad with spaces if short.
+pub fn fit_prompt(prompt: &[i32], window: usize) -> Vec<i32> {
+    if prompt.len() >= window {
+        prompt[prompt.len() - window..].to_vec()
+    } else {
+        let mut out = vec![b' ' as i32; window - prompt.len()];
+        out.extend_from_slice(prompt);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{check, Config};
+
+    #[test]
+    fn policy_flushes_on_size() {
+        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) };
+        assert!(!p.should_flush(3, Duration::ZERO));
+        assert!(p.should_flush(4, Duration::ZERO));
+        assert!(p.should_flush(5, Duration::ZERO));
+    }
+
+    #[test]
+    fn policy_flushes_on_deadline() {
+        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(10) };
+        assert!(!p.should_flush(1, Duration::from_millis(9)));
+        assert!(p.should_flush(1, Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [1usize, 2, 4, 8];
+        assert_eq!(pick_bucket(&buckets, 1), Some(1));
+        assert_eq!(pick_bucket(&buckets, 3), Some(4));
+        assert_eq!(pick_bucket(&buckets, 8), Some(8));
+        assert_eq!(pick_bucket(&buckets, 9), None);
+    }
+
+    #[test]
+    fn fit_prompt_window() {
+        assert_eq!(fit_prompt(&[1, 2, 3], 2), vec![2, 3]);
+        let padded = fit_prompt(&[7], 4);
+        assert_eq!(padded.len(), 4);
+        assert_eq!(padded[3], 7);
+        assert_eq!(padded[0], b' ' as i32);
+        assert_eq!(fit_prompt(&[1, 2], 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn prop_fit_prompt_invariants() {
+        check(
+            "fit-prompt",
+            Config::with_cases(128),
+            |rng, size| {
+                let plen = (size * 300.0) as usize + 1;
+                let window = 1 + rng.below(128) as usize;
+                let prompt: Vec<i32> =
+                    (0..plen).map(|_| rng.below(256) as i32).collect();
+                (prompt, window)
+            },
+            |(prompt, window)| {
+                let out = fit_prompt(prompt, *window);
+                crate::prop_assert!(out.len() == *window, "length");
+                // The suffix of the prompt is always preserved.
+                let keep = prompt.len().min(*window);
+                crate::prop_assert!(
+                    out[*window - keep..] == prompt[prompt.len() - keep..],
+                    "suffix preserved"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_bucket_is_minimal_and_sufficient() {
+        check(
+            "pick-bucket",
+            Config::with_cases(128),
+            |rng, _| {
+                let mut buckets: Vec<usize> =
+                    (0..4).map(|_| 1 + rng.below(16) as usize).collect();
+                buckets.sort_unstable();
+                buckets.dedup();
+                let n = 1 + rng.below(20) as usize;
+                (buckets, n)
+            },
+            |(buckets, n)| {
+                match pick_bucket(buckets, *n) {
+                    Some(b) => {
+                        crate::prop_assert!(b >= *n, "bucket too small");
+                        crate::prop_assert!(
+                            buckets.iter().all(|&x| x >= *n || x < b),
+                            "not minimal"
+                        );
+                    }
+                    None => {
+                        crate::prop_assert!(
+                            buckets.iter().all(|&x| x < *n),
+                            "bucket existed but not found"
+                        );
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! Serving metrics: per-request timing + aggregate counters, lock-shared
+//! between the worker and observers.
+
+use std::sync::Mutex;
+
+/// Timing of one request's lifecycle.
+#[derive(Clone, Debug, Default)]
+pub struct RequestTiming {
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub tokens: usize,
+    pub error: Option<String>,
+}
+
+impl RequestTiming {
+    pub fn failed(msg: String) -> RequestTiming {
+        RequestTiming { error: Some(msg), ..Default::default() }
+    }
+
+    /// End-to-end latency.
+    pub fn total_ms(&self) -> f64 {
+        self.queue_ms + self.prefill_ms + self.decode_ms
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    bucket_sum: u64,
+    tokens: u64,
+    queue_ms_sum: f64,
+    prefill_ms_sum: f64,
+    decode_ms_sum: f64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Aggregate serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub avg_batch_size: f64,
+    pub avg_bucket: f64,
+    pub tokens: u64,
+    pub avg_queue_ms: f64,
+    pub avg_prefill_ms: f64,
+    pub avg_decode_ms_per_token: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, bucket: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_size_sum += size as u64;
+        m.bucket_sum += bucket as u64;
+    }
+
+    pub fn record_request(&self, t: &RequestTiming) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.tokens += t.tokens as u64;
+        m.queue_ms_sum += t.queue_ms;
+        m.prefill_ms_sum += t.prefill_ms;
+        m.decode_ms_sum += t.decode_ms;
+        m.latencies_ms.push(t.total_ms());
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lat = m.latencies_ms.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[((lat.len() as f64 - 1.0) * p) as usize]
+            }
+        };
+        Snapshot {
+            requests: m.requests,
+            batches: m.batches,
+            avg_batch_size: m.batch_size_sum as f64 / m.batches.max(1) as f64,
+            avg_bucket: m.bucket_sum as f64 / m.batches.max(1) as f64,
+            tokens: m.tokens,
+            avg_queue_ms: m.queue_ms_sum / m.requests.max(1) as f64,
+            avg_prefill_ms: m.prefill_ms_sum / m.requests.max(1) as f64,
+            avg_decode_ms_per_token: m.decode_ms_sum / m.tokens.max(1) as f64,
+            p50_latency_ms: pct(0.5),
+            p99_latency_ms: pct(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_correctly() {
+        let m = Metrics::default();
+        m.record_batch(3, 4);
+        m.record_batch(1, 1);
+        for i in 0..4 {
+            m.record_request(&RequestTiming {
+                queue_ms: 1.0,
+                prefill_ms: 2.0,
+                decode_ms: 10.0,
+                tokens: 5,
+                error: None,
+            });
+            let _ = i;
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert!((s.avg_batch_size - 2.0).abs() < 1e-9);
+        assert_eq!(s.tokens, 20);
+        // 4 × 10 ms decode over 20 tokens = 2 ms/token.
+        assert!((s.avg_decode_ms_per_token - 2.0).abs() < 1e-9);
+        assert!((s.p50_latency_ms - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_latency_ms, 0.0);
+    }
+}

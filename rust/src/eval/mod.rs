@@ -1,0 +1,114 @@
+//! Evaluation harnesses: perplexity over the held-out corpus and the
+//! synthetic zero-shot task suite — the measurement side of every table
+//! in §4.
+//!
+//! Both run through the PJRT engine on AOT-lowered HLO: the same code
+//! path a deployment would use, with weights passed positionally
+//! (FP or dequantized-from-ICQuant — the quantization methods only differ
+//! in what weight values they produce).
+
+pub mod tasks;
+
+use crate::model::TrainedModel;
+use crate::runtime::{Engine, HostTensor};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Build the positional weight literals for the FP entries once;
+/// reusable across every execute call.
+pub fn weight_literals(model: &TrainedModel) -> Result<Vec<xla::Literal>> {
+    model
+        .tensors
+        .iter()
+        .map(|t| HostTensor::F32(t.data.clone(), t.shape.clone()).to_literal())
+        .collect()
+}
+
+/// Upload a model's weights to the device once (§Perf: every eval window
+/// then borrows the resident buffers instead of re-copying ~4 MiB).
+pub fn upload_weights(engine: &Engine, model: &TrainedModel) -> Result<Vec<crate::runtime::ResidentBuffer>> {
+    engine.upload_all(weight_literals(model)?)
+}
+
+/// Load a corpus split as i32 tokens.
+pub fn load_corpus_tokens(dir: &Path, split: &str) -> Result<Vec<i32>> {
+    let path = dir.join(format!("corpus_{}.bin", split));
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+    Ok(bytes.into_iter().map(|b| b as i32).collect())
+}
+
+/// Perplexity of a model (given as weight literals) over token windows.
+///
+/// Uses the `forward_loss_b{B}` entry: `windows` batches of B sequences of
+/// length S are drawn at a fixed stride from `tokens` (deterministic —
+/// every method sees the same data).
+pub fn perplexity(
+    engine: &mut Engine,
+    weights: Vec<xla::Literal>,
+    tokens: &[i32],
+    windows: usize,
+) -> Result<f64> {
+    let bufs = engine.upload_all(weights)?;
+    perplexity_resident(engine, &bufs, tokens, windows)
+}
+
+/// Perplexity with device-resident weight buffers (see
+/// [`upload_weights`]).
+pub fn perplexity_resident(
+    engine: &mut Engine,
+    weights: &[crate::runtime::ResidentBuffer],
+    tokens: &[i32],
+    windows: usize,
+) -> Result<f64> {
+    let b = engine.manifest().eval_batch;
+    let s = engine
+        .manifest()
+        .entries
+        .get(&format!("forward_loss_b{}", b))
+        .context("forward_loss entry missing")?
+        .inputs[0]
+        .shape[1];
+    let entry = format!("forward_loss_b{}", b);
+    engine.prepare(&entry)?; // compile before async data uploads begin
+
+    let needed = b * (s + 1);
+    let max_start = tokens.len().saturating_sub(needed + 1);
+    anyhow::ensure!(max_start > 0, "eval corpus too small");
+    let stride = (max_start / windows.max(1)).max(1);
+
+    let mut total_nll = 0.0f64;
+    for w in 0..windows {
+        let base = w * stride;
+        let mut toks = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        for seq in 0..b {
+            let start = base + seq * (s + 1);
+            toks.extend_from_slice(&tokens[start..start + s]);
+            targets.extend_from_slice(&tokens[start + 1..start + s + 1]);
+        }
+        let data = [
+            engine.upload(HostTensor::I32(toks, vec![b, s]).to_literal()?)?,
+            engine.upload(HostTensor::I32(targets, vec![b, s]).to_literal()?)?,
+        ];
+        let args: Vec<&crate::runtime::ResidentBuffer> = data.iter().chain(weights.iter()).collect();
+        let out = engine.execute_buffers(&entry, &args)?;
+        total_nll += Engine::scalar_f32(&out[0])? as f64;
+    }
+    Ok((total_nll / windows as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tokens_loader() {
+        let dir = std::env::temp_dir().join("icq_eval_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("corpus_test.bin"), [65u8, 66, 255]).unwrap();
+        let toks = load_corpus_tokens(&dir, "test").unwrap();
+        assert_eq!(toks, vec![65, 66, 255]);
+        assert!(load_corpus_tokens(&dir, "absent").is_err());
+    }
+}

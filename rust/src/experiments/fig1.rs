@@ -1,0 +1,53 @@
+//! Fig 1: (a) normalized range taken by the top-k% outliers, per layer
+//! type, averaged over the model; (b) histogram of one row of weights.
+
+use super::{bar, print_row};
+use crate::stats;
+use crate::synthzoo::{family, LayerType};
+use anyhow::Result;
+
+pub fn run(fast: bool) -> Result<()> {
+    let f = family("llama2-7b").unwrap();
+    let fracs = [0.01, 0.02, 0.03, 0.05, 0.08, 0.10];
+    let blocks = if fast { 2 } else { 4 };
+
+    println!("[llama2-7b-sim] Fig 1(a): range share of top-k% outliers");
+    let widths = [10usize, 8, 8, 8, 8, 8, 8];
+    let mut header = vec!["layer".to_string()];
+    header.extend(fracs.iter().map(|f| format!("{:.0}%", f * 100.0)));
+    print_row(&header, &widths);
+
+    for lt in LayerType::ALL {
+        let mut cells = vec![lt.name().to_string()];
+        for &frac in &fracs {
+            let mut acc = 0.0;
+            for b in 0..blocks {
+                let w = f.gen_stat_layer(lt, b);
+                acc += stats::avg_range_taken(&w, frac);
+            }
+            cells.push(format!("{:.3}", acc / blocks as f64));
+        }
+        print_row(&cells, &widths);
+    }
+    println!("\npaper: top-5% take ≈0.5 of the range across layer types");
+
+    // (b) histogram of one row.
+    println!("\nFig 1(b): histogram of one q_proj row (64 bins)");
+    let w = f.gen_stat_layer(LayerType::QProj, 2);
+    let row = w.row(7);
+    let (edges, counts) = stats::histogram(row, 64);
+    let max = *counts.iter().max().unwrap() as f64;
+    let k = (row.len() as f64 * 0.05) as usize;
+    let outliers = crate::quant::mixed_precision::top_k_by_magnitude(row, k);
+    let thresh = outliers.iter().map(|&c| row[c].abs()).fold(f32::INFINITY, f32::min);
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let mid = 0.5 * (edges[i] + edges[i + 1]);
+        let marker = if (mid.abs() as f32) >= thresh { " ← outlier region" } else { "" };
+        println!("{:>9.4}  {}{}", mid, bar(c as f64 / max, 40), marker);
+    }
+    println!("\n(5% outlier threshold |w| ≥ {:.4})", thresh);
+    Ok(())
+}

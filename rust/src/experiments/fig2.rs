@@ -1,0 +1,49 @@
+//! Fig 2: frequency of outliers in each group of 256 consecutive weights
+//! — visually uniform for q/k/v/up/gate/down, clustered for o_proj.
+
+use super::bar;
+use crate::quant::mixed_precision::top_k_by_magnitude;
+use crate::stats::group_frequency;
+use crate::synthzoo::{family, LayerType};
+use anyhow::Result;
+
+pub fn run(_fast: bool) -> Result<()> {
+    let f = family("llama2-7b").unwrap();
+    for lt in [LayerType::QProj, LayerType::DownProj, LayerType::OProj] {
+        let w = f.gen_stat_layer(lt, 1);
+        let gamma = 0.0625;
+        let k = (w.cols as f64 * gamma) as usize;
+        // Aggregate over rows like the paper's figure.
+        let mut totals = vec![0usize; w.cols / 256];
+        for r in 0..w.rows {
+            let pos = top_k_by_magnitude(w.row(r), k);
+            for (g, c) in group_frequency(&pos, w.cols, 256).into_iter().enumerate() {
+                if g < totals.len() {
+                    totals[g] += c;
+                }
+            }
+        }
+        let expected = (w.rows * k) as f64 / totals.len() as f64;
+        println!(
+            "\n[{}] outliers per 256-group (expected {:.0} under uniform):",
+            lt.name(),
+            expected
+        );
+        let max = *totals.iter().max().unwrap() as f64;
+        for (g, &c) in totals.iter().enumerate() {
+            println!("g{:02} {:>6} {}", g, c, bar(c as f64 / max, 40));
+        }
+        let cv = {
+            let mean = totals.iter().sum::<usize>() as f64 / totals.len() as f64;
+            let var = totals
+                .iter()
+                .map(|&c| (c as f64 - mean).powi(2))
+                .sum::<f64>()
+                / totals.len() as f64;
+            var.sqrt() / mean
+        };
+        println!("coefficient of variation: {:.3}", cv);
+    }
+    println!("\npaper: near-flat for most layers; o_proj shows clustering");
+    Ok(())
+}

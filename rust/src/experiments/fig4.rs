@@ -1,0 +1,75 @@
+//! Fig 4: index-coding overhead B vs gap width b at γ=5 % — Lemma 1
+//! bound, synthetic simulation, and empirical measurement on weights.
+
+use super::print_row;
+use crate::icq::{lemma1_bound, optimal_b, simulate_overhead};
+use crate::icq::coding::encoded_symbol_count;
+use crate::model::{artifacts_dir, TrainedModel};
+use crate::quant::mixed_precision::top_k_by_magnitude;
+use crate::synthzoo::{family, LayerType};
+use anyhow::Result;
+
+pub fn run(fast: bool) -> Result<()> {
+    let gamma = 0.05;
+    let d = 2048;
+    let trials = if fast { 100 } else { 400 };
+
+    // Empirical positions: trained projections if available, else zoo.
+    let rows: Vec<Vec<usize>> = match TrainedModel::load(&artifacts_dir()) {
+        Ok(m) => {
+            let mut rows = Vec::new();
+            for t in m.projections().into_iter().take(8) {
+                let w = t.as_matrix();
+                let k = (gamma * w.cols as f64) as usize;
+                for r in 0..w.rows {
+                    rows.push(top_k_by_magnitude(w.row(r), k));
+                }
+            }
+            rows
+        }
+        Err(_) => {
+            let f = family("llama2-7b").unwrap();
+            let w = f.gen_stat_layer(LayerType::QProj, 0);
+            let k = (gamma * w.cols as f64) as usize;
+            (0..w.rows).map(|r| top_k_by_magnitude(w.row(r), k)).collect()
+        }
+    };
+    let emp_d = if rows.is_empty() { d } else { rows[0].len().max(1) };
+    let _ = emp_d;
+
+    println!("γ = 5%:  B (bits/weight) per gap width b");
+    let widths = [4usize, 12, 12, 12];
+    print_row(
+        &["b".into(), "Lemma 1".into(), "synthetic".into(), "empirical".into()],
+        &widths,
+    );
+    for b in 3..=10u32 {
+        let bound = lemma1_bound(gamma, b);
+        let sim = simulate_overhead(d, gamma, b, trials, 42);
+        // Empirical over the model rows (re-derive d per row).
+        let (mut bits, mut weights) = (0usize, 0usize);
+        for pos in &rows {
+            // Row width: recover from the trained model's projection cols
+            // is not retained here; positions were computed per-row with
+            // the row's true width, so track via stored max+1 ≈ width.
+            // We instead re-measure with the actual storage accounting:
+            bits += encoded_symbol_count(pos, b) * b as usize;
+            weights += (pos.len() as f64 / gamma).round() as usize;
+        }
+        let emp = bits as f64 / weights.max(1) as f64;
+        print_row(
+            &[
+                b.to_string(),
+                format!("{:.4}", bound),
+                format!("{:.4}", sim),
+                format!("{:.4}", emp),
+            ],
+            &widths,
+        );
+    }
+    println!(
+        "\noptimal b at γ=5%: {} (paper: b=6, B ≈ 0.31 bits/weight)",
+        optimal_b(gamma)
+    );
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Fig 8 (+ Appendix D): index storage cost B across outlier ratios γ for
+//! each gap width b, showing the flexible trade-off space.
+
+use super::print_row;
+use crate::icq::{lemma1_bound, optimal_b};
+use anyhow::Result;
+
+pub fn run(_fast: bool) -> Result<()> {
+    let gammas = [0.01, 0.02, 0.03, 0.05, 0.0825, 0.10, 0.125];
+    let bs = [4u32, 5, 6, 7, 8];
+    let widths = [8usize, 9, 9, 9, 9, 9, 11];
+    let mut header = vec!["γ".to_string()];
+    header.extend(bs.iter().map(|b| format!("b={}", b)));
+    header.push("optimal".into());
+    print_row(&header, &widths);
+    for &g in &gammas {
+        let mut cells = vec![format!("{:.2}%", g * 100.0)];
+        for &b in &bs {
+            cells.push(format!("{:.4}", lemma1_bound(g, b)));
+        }
+        let ob = optimal_b(g);
+        cells.push(format!("b={} ({:.3})", ob, lemma1_bound(g, ob)));
+        print_row(&cells, &widths);
+    }
+    println!("\npaper: B ≈ 0.31 bits at γ=5%; ≈0.47 at 8.25% — the knob the");
+    println!("2-bit ICQuant^SK-8.25% row of Table 3/4 turns.");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Fig 9 (Appendix G.1): weight value vs Fisher sensitivity — tails are
+//! *less* sensitive, which is why quantizing outliers coarsely while
+//! refining inliers (larger γ) can help.
+
+use super::bar;
+use crate::model::{artifacts_dir, TrainedModel};
+use anyhow::Result;
+
+pub fn run(_fast: bool) -> Result<()> {
+    let m = TrainedModel::load(&artifacts_dir())?;
+    // Bucket weights by |w| percentile; report mean sensitivity per bucket
+    // over a representative projection.
+    for name in ["l1.wq", "l2.w_down"] {
+        let (Some(w), Some(s)) = (m.get(name), m.sensitivity_of(name)) else {
+            continue;
+        };
+        let mut pairs: Vec<(f32, f32)> = w
+            .data
+            .iter()
+            .zip(&s.data)
+            .map(|(&w, &s)| (w.abs(), s))
+            .collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let n = pairs.len();
+        println!("\n[{}] mean Fisher sensitivity by |w| percentile:", name);
+        let n_buckets = 10;
+        let mut means = Vec::new();
+        for b in 0..n_buckets {
+            let lo = b * n / n_buckets;
+            let hi = (b + 1) * n / n_buckets;
+            let mean =
+                pairs[lo..hi].iter().map(|p| p.1 as f64).sum::<f64>() / (hi - lo) as f64;
+            means.push(mean);
+        }
+        let max = means.iter().cloned().fold(f64::MIN, f64::max);
+        for (b, mean) in means.iter().enumerate() {
+            let label = if b == n_buckets - 1 { " ← outlier decile" } else { "" };
+            println!(
+                "p{:>2}-{:<3} {:.3e} {}{}",
+                b * 10,
+                (b + 1) * 10,
+                mean,
+                bar(mean / max, 36),
+                label
+            );
+        }
+        let center = means[..8].iter().sum::<f64>() / 8.0;
+        let tail = means[9];
+        println!("center/tail sensitivity ratio: {:.2}", center / tail);
+    }
+    println!("\npaper Fig 9: distribution tails have markedly lower sensitivity");
+    Ok(())
+}

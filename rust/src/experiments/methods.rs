@@ -1,0 +1,238 @@
+//! The quantization methods compared across §4's tables, as a single
+//! enum so every experiment applies them uniformly to a trained model.
+
+use crate::icquant::{IcqConfig, IcqMatrix};
+use crate::model::TrainedModel;
+use crate::quant::{
+    self, clipping, gptq, grouping, mixed_precision, vq, QuantizerKind,
+};
+use crate::util::tensor::Matrix;
+use std::collections::HashMap;
+
+/// A quantization method at a specific operating point.
+#[derive(Clone, Copy, Debug)]
+pub enum Method {
+    /// FP16 reference (weights untouched; 16 bits/weight).
+    Fp16,
+    /// Vanilla per-row RTN.
+    Rtn { bits: u32 },
+    /// Grouped RTN (the "Grouping" suppression baseline).
+    RtnGroup { bits: u32, group: usize },
+    /// OmniQuant-lite: grouped RTN with grid-searched clipping.
+    OmniLite { bits: u32, group: usize },
+    /// SqueezeLLM-lite: FP16 outliers + sensitivity K-means inliers.
+    SqueezeLite { bits: u32, ratio: f64 },
+    /// QuIP-lite: incoherence processing + GPTQ adaptive rounding.
+    QuipLite { bits: u32 },
+    /// AQLM-lite: d-dim vector quantization.
+    AqlmLite { bits: u32, dim: usize },
+    /// QuIP#-lite / QTIP-lite: incoherence + VQ.
+    QuipSharpLite { bits: u32, dim: usize },
+    /// ICQuant on RTN.
+    IcqRtn { bits: u32, ratio: f64 },
+    /// ICQuant on sensitivity K-means (the paper's ICQuant^SK).
+    IcqSk { bits: u32, ratio: f64 },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match *self {
+            Method::Fp16 => "FP16".into(),
+            Method::Rtn { bits } => format!("RTN-{}b", bits),
+            Method::RtnGroup { bits, group } => format!("RTN-{}b-g{}", bits, group),
+            Method::OmniLite { bits, group } => format!("OmniQuant~-{}b-g{}", bits, group),
+            Method::SqueezeLite { bits, ratio } => {
+                format!("SqueezeLLM~-{}b-{:.2}%", bits, ratio * 100.0)
+            }
+            Method::QuipLite { bits } => format!("QuIP~-{}b", bits),
+            Method::AqlmLite { bits, dim } => format!("AQLM~-{}b-d{}", bits, dim),
+            Method::QuipSharpLite { bits, dim } => format!("QuIP#~-{}b-d{}", bits, dim),
+            Method::IcqRtn { bits, ratio } => {
+                format!("ICQuant^RTN-{}b-{:.0}%", bits, ratio * 100.0)
+            }
+            Method::IcqSk { bits, ratio } => {
+                format!("ICQuant^SK-{}b-{:.2}%", bits, ratio * 100.0)
+            }
+        }
+    }
+
+    /// Quantize one matrix; returns (reconstruction, avg bits/weight).
+    pub fn quantize_matrix(
+        &self,
+        w: &Matrix,
+        sens: Option<&Matrix>,
+        seed: u64,
+    ) -> (Matrix, f64) {
+        match *self {
+            Method::Fp16 => {
+                let data = w
+                    .data
+                    .iter()
+                    .map(|&x| crate::util::f16::to_f16_precision(x))
+                    .collect();
+                (Matrix::from_vec(w.rows, w.cols, data), 16.0)
+            }
+            Method::Rtn { bits } => {
+                let q = quant::quantize_per_row(w, None, QuantizerKind::Rtn, bits);
+                let b = q.avg_bits_per_weight(QuantizerKind::Rtn);
+                (q.dequantize(), b)
+            }
+            Method::RtnGroup { bits, group } => {
+                let q = grouping::quantize_grouped(w, None, QuantizerKind::Rtn, bits, group);
+                let b = q.avg_bits_per_weight();
+                (q.dequantize(), b)
+            }
+            Method::OmniLite { bits, group } => {
+                let q = clipping::quantize_clipped_grouped(w, bits, group);
+                let b = q.avg_bits_per_weight();
+                (q.dequantize(), b)
+            }
+            Method::SqueezeLite { bits, ratio } => {
+                let q = mixed_precision::quantize_mixed(
+                    w,
+                    sens,
+                    QuantizerKind::SensitiveKmeans,
+                    bits,
+                    ratio,
+                );
+                let b = q.avg_bits_per_weight();
+                (q.dequantize(), b)
+            }
+            Method::QuipLite { bits } => {
+                // Diagonal Hessian proxy from sensitivity column means
+                // (activations are not exported; documented in DESIGN.md).
+                let h = diag_hessian(w, sens);
+                let rec = gptq::quantize_quip_lite(w, &h, bits, seed);
+                (rec, bits as f64 + 32.0 / w.cols as f64)
+            }
+            Method::AqlmLite { bits, dim } => {
+                let q = vq::quantize_vq(w, sens, dim, bits, seed);
+                let b = q.avg_bits_per_weight();
+                (q.dequantize(), b)
+            }
+            Method::QuipSharpLite { bits, dim } => {
+                vq::quantize_quip_sharp_lite(w, dim, bits, seed)
+            }
+            Method::IcqRtn { bits, ratio } => {
+                let cfg = IcqConfig {
+                    bits,
+                    outlier_ratio: ratio,
+                    gap_bits: 0,
+                    quantizer: QuantizerKind::Rtn,
+                };
+                let q = IcqMatrix::quantize(w, None, &cfg).unwrap();
+                let b = q.avg_bits_per_weight();
+                (q.dequantize(), b)
+            }
+            Method::IcqSk { bits, ratio } => {
+                let cfg = IcqConfig {
+                    bits,
+                    outlier_ratio: ratio,
+                    gap_bits: 0,
+                    quantizer: QuantizerKind::SensitiveKmeans,
+                };
+                let q = IcqMatrix::quantize(w, sens, &cfg).unwrap();
+                let b = q.avg_bits_per_weight();
+                (q.dequantize(), b)
+            }
+        }
+    }
+
+    /// Quantize every projection of a trained model. Returns the
+    /// replacement map and the parameter-weighted average bits/weight.
+    pub fn quantize_model(
+        &self,
+        model: &TrainedModel,
+    ) -> (HashMap<String, Matrix>, f64) {
+        let mut replacements = HashMap::new();
+        let mut bit_sum = 0.0f64;
+        let mut params = 0usize;
+        for (i, t) in model.tensors.iter().enumerate() {
+            if !t.is_projection() {
+                continue;
+            }
+            let w = t.as_matrix();
+            let sens = model.sensitivity_of(&t.name).map(|s| s.as_matrix());
+            let (rec, bits) = self.quantize_matrix(&w, sens.as_ref(), 0xC0FFEE ^ i as u64);
+            bit_sum += bits * t.numel() as f64;
+            params += t.numel();
+            replacements.insert(t.name.clone(), rec);
+        }
+        (replacements, bit_sum / params.max(1) as f64)
+    }
+}
+
+/// Diagonal Hessian proxy for GPTQ from sensitivity (column means),
+/// damped; identity when no sensitivity is available.
+pub fn diag_hessian(w: &Matrix, sens: Option<&Matrix>) -> Vec<f64> {
+    let d = w.cols;
+    let mut h = vec![0.0f64; d * d];
+    match sens {
+        Some(s) => {
+            for c in 0..d {
+                let mut acc = 0.0f64;
+                for r in 0..s.rows {
+                    acc += s.get(r, c) as f64;
+                }
+                h[c * d + c] = acc / s.rows as f64;
+            }
+            let mean = (0..d).map(|c| h[c * d + c]).sum::<f64>() / d as f64;
+            for c in 0..d {
+                h[c * d + c] += 0.05 * mean.max(1e-12);
+            }
+        }
+        None => {
+            for c in 0..d {
+                h[c * d + c] = 1.0;
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synthzoo;
+
+    #[test]
+    fn every_method_runs_on_a_matrix() {
+        let w = synthzoo::demo_matrix(16, 128, 3);
+        let methods = [
+            Method::Fp16,
+            Method::Rtn { bits: 3 },
+            Method::RtnGroup { bits: 3, group: 64 },
+            Method::OmniLite { bits: 3, group: 64 },
+            Method::SqueezeLite { bits: 3, ratio: 0.05 },
+            Method::QuipLite { bits: 3 },
+            Method::AqlmLite { bits: 3, dim: 2 },
+            Method::QuipSharpLite { bits: 3, dim: 2 },
+            Method::IcqRtn { bits: 3, ratio: 0.05 },
+            Method::IcqSk { bits: 3, ratio: 0.05 },
+        ];
+        for m in methods {
+            let (rec, bits) = m.quantize_matrix(&w, None, 1);
+            assert_eq!((rec.rows, rec.cols), (16, 128), "{}", m.name());
+            assert!(rec.data.iter().all(|x| x.is_finite()), "{}", m.name());
+            assert!(bits > 0.0 && bits <= 16.0, "{} bits {}", m.name(), bits);
+        }
+    }
+
+    #[test]
+    fn icq_beats_vanilla_at_equal_base_bits() {
+        let w = synthzoo::demo_matrix(32, 512, 5);
+        let (rtn, _) = Method::Rtn { bits: 3 }.quantize_matrix(&w, None, 1);
+        let (icq, icq_bits) =
+            Method::IcqRtn { bits: 3, ratio: 0.05 }.quantize_matrix(&w, None, 1);
+        assert!(w.mse(&icq) < w.mse(&rtn));
+        assert!(icq_bits < 3.5);
+    }
+
+    #[test]
+    fn fp16_is_nearly_lossless() {
+        let w = synthzoo::demo_matrix(8, 64, 7);
+        let (rec, bits) = Method::Fp16.quantize_matrix(&w, None, 1);
+        assert_eq!(bits, 16.0);
+        assert!(w.mse(&rec) < 1e-8);
+    }
+}

@@ -1,0 +1,123 @@
+//! Experiment harnesses — one per table/figure in the paper (DESIGN.md §5
+//! maps each id to the paper artifact it regenerates).
+//!
+//! Run via `icquant exp <id>` (or `icquant exp all`). Each harness prints
+//! paper-style rows; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod methods;
+
+mod fig1;
+mod fig2;
+mod fig3;
+mod fig4;
+mod fig5;
+mod fig8;
+mod fig9;
+mod fig10;
+mod lemma1;
+mod table1;
+mod table2;
+mod table34;
+
+use anyhow::{bail, Result};
+
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_artifact: &'static str,
+    pub run: fn(fast: bool) -> Result<()>,
+}
+
+/// The registry: every paper table/figure and its harness.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig1", paper_artifact: "Fig 1(a,b): outlier range share per layer type", run: fig1::run },
+        Experiment { id: "fig2", paper_artifact: "Fig 2: outlier frequency per 256-group", run: fig2::run },
+        Experiment { id: "table1", paper_artifact: "Table 1 + Table 5: chi-square rejection rates", run: table1::run },
+        Experiment { id: "fig3", paper_artifact: "Fig 3(a,c): 2-bit ICQuant vs 3-bit vanilla RTN", run: fig3::run },
+        Experiment { id: "fig4", paper_artifact: "Fig 4: overhead B vs b (bound/synthetic/empirical)", run: fig4::run },
+        Experiment { id: "fig5", paper_artifact: "Fig 5(a,b): suppression techniques, ppl + MSE", run: fig5::run },
+        Experiment { id: "table2", paper_artifact: "Table 2: 2-bit scalar quantization comparison", run: table2::run },
+        Experiment { id: "table3", paper_artifact: "Table 3/4 + 6/7/8: VQ SoTA grid, ppl + zero-shot", run: table34::run },
+        Experiment { id: "fig8", paper_artifact: "Fig 8: index storage vs outlier ratio", run: fig8::run },
+        Experiment { id: "fig9", paper_artifact: "Fig 9: weight value vs sensitivity", run: fig9::run },
+        Experiment { id: "fig10", paper_artifact: "Fig 10/11: incoherence processing examples", run: fig10::run },
+        Experiment { id: "lemma1", paper_artifact: "Lemma 1: bound vs measurement", run: lemma1::run },
+    ]
+}
+
+pub fn run(id: &str, fast: bool) -> Result<()> {
+    if id == "all" {
+        for e in registry() {
+            println!("\n================================================================");
+            println!("== {}  ({})", e.id, e.paper_artifact);
+            println!("================================================================");
+            (e.run)(fast)?;
+        }
+        return Ok(());
+    }
+    match registry().into_iter().find(|e| e.id == id) {
+        Some(e) => (e.run)(fast),
+        None => bail!(
+            "unknown experiment '{}'; available: {} (or 'all')",
+            id,
+            registry().iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+use crate::eval::{load_corpus_tokens, perplexity, weight_literals};
+use crate::model::{artifacts_dir, TrainedModel};
+use crate::runtime::Engine;
+
+/// Evaluation context for experiments that need the trained model.
+pub struct EvalCtx {
+    pub model: TrainedModel,
+    pub engine: Engine,
+    pub test_tokens: Vec<i32>,
+    pub windows: usize,
+}
+
+impl EvalCtx {
+    pub fn load(fast: bool) -> Result<EvalCtx> {
+        let dir = artifacts_dir();
+        let model = TrainedModel::load(&dir)?;
+        model.validate()?;
+        let engine = Engine::new(&dir)?;
+        let test_tokens = load_corpus_tokens(&dir, "test")?;
+        Ok(EvalCtx { model, engine, test_tokens, windows: if fast { 3 } else { 8 } })
+    }
+
+    /// Perplexity of the model with `replacements` applied.
+    pub fn ppl_with(
+        &mut self,
+        replacements: &std::collections::HashMap<String, crate::util::tensor::Matrix>,
+    ) -> Result<f64> {
+        let m = self.model.with_replaced(replacements);
+        let w = weight_literals(&m)?;
+        perplexity(&mut self.engine, w, &self.test_tokens, self.windows)
+    }
+
+    pub fn ppl_fp(&mut self) -> Result<f64> {
+        let w = weight_literals(&self.model)?;
+        perplexity(&mut self.engine, w, &self.test_tokens, self.windows)
+    }
+}
+
+/// Simple fixed-width table printer.
+pub fn print_row(cells: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        line.push_str(&format!("{:<width$}  ", c, width = w));
+    }
+    println!("{}", line.trim_end());
+}
+
+/// An ASCII bar for quick-scan figures.
+pub fn bar(frac: f64, width: usize) -> String {
+    let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    format!("{}{}", "█".repeat(n), "·".repeat(width - n))
+}

@@ -1,0 +1,65 @@
+//! Table 2: the 2-bit regime with *scalar* quantization algorithms —
+//! SqueezeLLM-lite, OmniQuant-lite(g64), QuIP-lite, ICQuant^SK-5 % —
+//! perplexity on the trained model plus MSE on the zoo scales.
+
+use super::methods::Method;
+use super::{print_row, EvalCtx};
+use crate::synthzoo::{family, LayerType};
+use anyhow::Result;
+
+pub fn run(fast: bool) -> Result<()> {
+    let methods = [
+        Method::Fp16,
+        Method::SqueezeLite { bits: 2, ratio: 0.0045 },
+        Method::OmniLite { bits: 2, group: 64 },
+        Method::QuipLite { bits: 2 },
+        Method::IcqSk { bits: 2, ratio: 0.05 },
+    ];
+
+    // --- perplexity on the trained model (the paper's ppl column) -------
+    let mut ctx = EvalCtx::load(fast)?;
+    println!("[trained Llama-mini] test perplexity, 2-bit scalar methods");
+    let widths = [26usize, 9, 10];
+    print_row(&["method".into(), "bits/w".into(), "ppl".into()], &widths);
+    for m in methods {
+        let (rep, bits) = m.quantize_model(&ctx.model);
+        let ppl = ctx.ppl_with(&rep)?;
+        print_row(
+            &[m.name(), format!("{:.2}", bits), format!("{:.3}", ppl)],
+            &widths,
+        );
+    }
+    println!("\npaper Table 2 (Llama2-7B): FP16 5.47 | SqueezeLLM 10.79 |");
+    println!("OmniQuant-g64 9.62 | QuIP n/a | ICQuant^SK-5% 7.21 — ICQuant wins");
+
+    // --- MSE on the zoo scales (7B/13B/70B shapes) -----------------------
+    println!("\n[synthzoo] weighted quantization error (MSE), 2-bit methods");
+    let fams = if fast {
+        vec!["llama2-7b"]
+    } else {
+        vec!["llama2-7b", "llama2-13b", "llama2-70b"]
+    };
+    let mut header = vec!["method".to_string()];
+    header.extend(fams.iter().map(|f| f.to_string()));
+    let w2 = [26usize, 12, 12, 12][..1 + fams.len()].to_vec();
+    print_row(&header, &w2);
+    for m in methods {
+        let mut cells = vec![m.name()];
+        for fam in &fams {
+            let f = family(fam).unwrap();
+            let mut err = 0.0;
+            let mut n = 0usize;
+            for lt in [LayerType::QProj, LayerType::UpProj] {
+                let w = f.gen_layer(lt, 0);
+                let s = f.gen_sensitivity(&w, 1);
+                let (rec, _) = m.quantize_matrix(&w, Some(&s), 11);
+                err += w.sq_err(&rec);
+                n += w.numel();
+            }
+            cells.push(format!("{:.3e}", err / n as f64));
+        }
+        print_row(&cells, &w2);
+    }
+    println!("\n(shape check: ICQuant^SK lowest error at every scale)");
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Lemma 1: expected index-coding overhead under uniform outlier positions,
+//! the optimal-`b` search it enables, and the Monte-Carlo simulation used
+//! to validate it (paper Fig 4 / Fig 8 / Appendix D).
+
+use super::coding::encoded_symbol_count;
+use crate::util::prng::Rng;
+
+/// Lemma 1 upper bound on the expected overhead `E(B)` in bits/weight:
+///
+/// `E(B) ≤ γ·b·(1 + 1/(e^{γ(2^b−1)} − 1))`
+pub fn lemma1_bound(gamma: f64, b: u32) -> f64 {
+    assert!(gamma > 0.0 && gamma < 1.0);
+    let m = (1u64 << b) as f64 - 1.0;
+    let denom = (gamma * m).exp() - 1.0;
+    gamma * b as f64 * (1.0 + 1.0 / denom)
+}
+
+/// Choose the gap width `b` minimizing the Lemma 1 bound for a given
+/// outlier ratio. This is how ICQuant picks b=6 at γ=5 %.
+pub fn optimal_b(gamma: f64) -> u32 {
+    (1..=15u32)
+        .min_by(|&a, &b| {
+            lemma1_bound(gamma, a)
+                .partial_cmp(&lemma1_bound(gamma, b))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// Monte-Carlo estimate of the true `E(B)` with uniformly placed outliers
+/// (the "synthetic" curve in Fig 4). Returns bits/weight averaged over
+/// `trials` rows of width `d`.
+pub fn simulate_overhead(d: usize, gamma: f64, b: u32, trials: usize, seed: u64) -> f64 {
+    let p = (gamma * d as f64).floor() as usize;
+    assert!(p >= 1, "no outliers at gamma={} d={}", gamma, d);
+    let mut rng = Rng::new(seed);
+    let mut total_bits = 0usize;
+    for _ in 0..trials {
+        let positions = rng.sample_indices(d, p);
+        total_bits += encoded_symbol_count(&positions, b) * b as usize;
+    }
+    total_bits as f64 / (trials * d) as f64
+}
+
+/// Empirical overhead of coding a *given* set of per-row outlier positions
+/// (the "empirical" curve in Fig 4, fed with model weights).
+pub fn empirical_overhead(rows: &[Vec<usize>], d: usize, b: u32) -> f64 {
+    let total_bits: usize = rows
+        .iter()
+        .map(|pos| encoded_symbol_count(pos, b) * b as usize)
+        .sum();
+    total_bits as f64 / (rows.len() * d) as f64
+}
+
+/// Storage comparison table (paper §3.2): bits/weight for the three
+/// strategies at ratio γ and row width d.
+pub struct StorageComparison {
+    pub binary_mask: f64,
+    pub absolute_indices: f64,
+    pub icquant: f64,
+    pub icquant_b: u32,
+}
+
+pub fn storage_comparison(gamma: f64, d: usize) -> StorageComparison {
+    let idx_bits = (usize::BITS - (d - 1).leading_zeros()).max(1) as f64;
+    // Absolute indices are byte/half-aligned in practice (paper: 16 bits).
+    let idx_bits_practical = if idx_bits <= 16.0 { 16.0 } else { 32.0 };
+    let b = optimal_b(gamma);
+    StorageComparison {
+        binary_mask: 1.0,
+        absolute_indices: gamma * idx_bits_practical,
+        icquant: lemma1_bound(gamma, b),
+        icquant_b: b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_numbers() {
+        // Paper: γ=5 %, b=6 ⇒ B ≈ 0.31 bits/weight.
+        let bound = lemma1_bound(0.05, 6);
+        assert!((bound - 0.31).abs() < 0.02, "bound={}", bound);
+        // And the optimal b at 5 % is 6 (Fig 4 minimum).
+        assert_eq!(optimal_b(0.05), 6);
+    }
+
+    #[test]
+    fn bound_convex_in_b_around_optimum() {
+        // Fig 4 shows a convex trade-off: large b wastes base bits, small b
+        // pays escape-flag accumulation.
+        let g = 0.05;
+        let b_opt = optimal_b(g);
+        let at = |b| lemma1_bound(g, b);
+        assert!(at(b_opt) < at(b_opt - 2));
+        assert!(at(b_opt) < at(b_opt + 3));
+    }
+
+    #[test]
+    fn simulation_below_bound_and_close() {
+        // Fig 4: bound, synthetic simulation, and empirical curves almost
+        // coincide. Simulated E(B) must not exceed the bound, and should be
+        // within 10 % of it at the operating point.
+        let (d, gamma) = (4096, 0.05);
+        for b in 4..=8 {
+            let bound = lemma1_bound(gamma, b);
+            let sim = simulate_overhead(d, gamma, b, 200, 42);
+            assert!(sim <= bound * 1.005, "b={} sim {} > bound {}", b, sim, bound);
+            assert!(sim >= bound * 0.80, "b={} sim {} far below bound {}", b, sim, bound);
+        }
+    }
+
+    #[test]
+    fn overhead_beats_alternatives() {
+        // §3.2: mask costs 1 bit, absolute indices ≈0.8 bits (γ=5 %,
+        // 16-bit ids), ICQuant ≈0.31.
+        let c = storage_comparison(0.05, 50_000);
+        assert_eq!(c.binary_mask, 1.0);
+        assert!((c.absolute_indices - 0.8).abs() < 1e-9);
+        assert!(c.icquant < 0.35);
+        assert_eq!(c.icquant_b, 6);
+    }
+
+    #[test]
+    fn empirical_matches_simulation_for_uniform() {
+        let mut rng = Rng::new(7);
+        let (d, gamma, b) = (2048, 0.05, 6);
+        let p = (gamma * d as f64) as usize;
+        let rows: Vec<Vec<usize>> =
+            (0..100).map(|_| rng.sample_indices(d, p)).collect();
+        let emp = empirical_overhead(&rows, d, b);
+        let sim = simulate_overhead(d, gamma, b, 200, 99);
+        assert!((emp - sim).abs() / sim < 0.05, "emp {} sim {}", emp, sim);
+    }
+
+    #[test]
+    fn prop_lemma1_holds_in_expectation() {
+        // Property: across random (d, γ, b), average measured overhead over
+        // many uniform rows stays ≤ the Lemma 1 bound (with MC slack).
+        use crate::util::miniprop::{check, Config};
+        check(
+            "lemma1-bound-holds",
+            Config::with_cases(40),
+            |rng, size| {
+                let d = 256 + (size * 4096.0) as usize;
+                let gamma = 0.01 + rng.f64() * 0.12;
+                let b = rng.range_inclusive(3, 10) as u32;
+                let seed = rng.next_u64();
+                (d, gamma, b, seed)
+            },
+            |&(d, gamma, b, seed)| {
+                if (gamma * d as f64) < 1.0 {
+                    return Ok(()); // no outliers — vacuous
+                }
+                let sim = simulate_overhead(d, gamma, b, 64, seed);
+                let bound = lemma1_bound(gamma, b);
+                crate::prop_assert!(
+                    sim <= bound * 1.02 + 1e-6,
+                    "sim {} > bound {} (d={} γ={} b={})",
+                    sim, bound, d, gamma, b
+                );
+                Ok(())
+            },
+        );
+    }
+}

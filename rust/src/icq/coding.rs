@@ -1,0 +1,288 @@
+//! Gap encoder/decoder for outlier positions (paper §3.2, Fig 3(b)).
+//!
+//! # Scheme
+//!
+//! Positions are 0-based column indices within one row. Define gaps
+//! `x_0 = i_0 + 1` and `x_k = i_k − i_{k−1}` (all ≥ 1). Each gap is emitted
+//! as a sequence of b-bit symbols: symbol values `0..=2^b−2` encode the gap
+//! values `1..=2^b−1` directly; the all-ones symbol `2^b−1` (the paper's
+//! "value 2^b" flag) means *empty interval* — advance `2^b − 1` positions
+//! and keep accumulating. A gap `x` therefore costs
+//! `⌊(x−1)/(2^b−1)⌋ + 1` symbols.
+//!
+//! The paper's Appendix A stores `x mod (2^b−1)` after the flags, which is
+//! ambiguous when `x ≡ 0 (mod 2^b−1)`; we resolve it by accumulating while
+//! the *remaining* gap exceeds `2^b − 1`, which is bijective and matches
+//! the paper's storage count for all other `x`. Documented here because it
+//! is load-bearing for decode correctness.
+
+use crate::bitstream::{BitReader, BitWriter};
+
+/// Encode 0-based, strictly-increasing outlier positions into b-bit
+/// symbols. Returns the raw symbol sequence (unpacked).
+pub fn encode_gaps(positions: &[usize], b: u32) -> Vec<u16> {
+    assert!((1..=15).contains(&b), "gap width b must be in 1..=15, got {}", b);
+    let flag = (1u32 << b) - 1; // all-ones symbol = empty-interval escape
+    let span = flag as usize; // 2^b − 1 positions per escape
+    let mut symbols = Vec::with_capacity(positions.len() + positions.len() / 4);
+    let mut prev: isize = -1;
+    for (k, &pos) in positions.iter().enumerate() {
+        let gap = pos as isize - prev;
+        assert!(gap >= 1, "positions must be strictly increasing (at entry {})", k);
+        let mut gap = gap as usize;
+        while gap > span {
+            symbols.push(flag as u16);
+            gap -= span;
+        }
+        // gap ∈ 1..=span → symbol gap−1 ∈ 0..=flag−1
+        symbols.push((gap - 1) as u16);
+        prev = pos as isize;
+    }
+    symbols
+}
+
+/// Decode b-bit symbols back to 0-based positions.
+pub fn decode_gaps(symbols: &[u16], b: u32) -> Vec<usize> {
+    let flag = (1u16 << b) - 1;
+    let span = flag as usize;
+    let mut positions = Vec::new();
+    let mut cursor: usize = 0; // number of positions consumed so far
+    for &s in symbols {
+        if s == flag {
+            cursor += span;
+        } else {
+            cursor += s as usize + 1;
+            positions.push(cursor - 1);
+        }
+    }
+    positions
+}
+
+/// Number of symbols `encode_gaps` will emit (without allocating).
+pub fn encoded_symbol_count(positions: &[usize], b: u32) -> usize {
+    let span = (1usize << b) - 1;
+    let mut count = 0;
+    let mut prev: isize = -1;
+    for &pos in positions {
+        let gap = (pos as isize - prev) as usize;
+        count += (gap - 1) / span + 1;
+        prev = pos as isize;
+    }
+    count
+}
+
+/// A packed per-row index code: the bit stream plus enough metadata to
+/// decode without external context.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowIndexCode {
+    pub b: u32,
+    pub n_symbols: u32,
+    pub n_outliers: u32,
+    bytes: Vec<u8>,
+}
+
+impl RowIndexCode {
+    /// Encode and pack positions for one row.
+    pub fn encode(positions: &[usize], b: u32) -> RowIndexCode {
+        let symbols = encode_gaps(positions, b);
+        let mut w = BitWriter::with_capacity_bits(symbols.len() * b as usize);
+        for &s in &symbols {
+            w.write(s as u64, b);
+        }
+        RowIndexCode {
+            b,
+            n_symbols: symbols.len() as u32,
+            n_outliers: positions.len() as u32,
+            bytes: w.into_bytes(),
+        }
+    }
+
+    /// Decode back to positions.
+    pub fn decode(&self) -> Vec<usize> {
+        let mut r = BitReader::new(&self.bytes, self.n_symbols as usize * self.b as usize);
+        let flag = (1u64 << self.b) - 1;
+        let span = flag as usize;
+        let mut positions = Vec::with_capacity(self.n_outliers as usize);
+        let mut cursor = 0usize;
+        for _ in 0..self.n_symbols {
+            let s = r.read(self.b);
+            if s == flag {
+                cursor += span;
+            } else {
+                cursor += s as usize + 1;
+                positions.push(cursor - 1);
+            }
+        }
+        debug_assert_eq!(positions.len(), self.n_outliers as usize);
+        positions
+    }
+
+    /// Decode directly into a boolean outlier mask of length `cols`
+    /// (the load-time hot path — no intermediate Vec).
+    pub fn decode_into_mask(&self, mask: &mut [bool]) {
+        let mut r = BitReader::new(&self.bytes, self.n_symbols as usize * self.b as usize);
+        let flag = (1u64 << self.b) - 1;
+        let span = flag as usize;
+        let mut cursor = 0usize;
+        for _ in 0..self.n_symbols {
+            let s = r.read(self.b);
+            if s == flag {
+                cursor += span;
+            } else {
+                cursor += s as usize + 1;
+                mask[cursor - 1] = true;
+            }
+        }
+    }
+
+    /// Exact storage cost in bits (stream only; see
+    /// [`crate::icquant`] for full artifact accounting).
+    pub fn storage_bits(&self) -> usize {
+        self.n_symbols as usize * self.b as usize
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn from_parts(b: u32, n_symbols: u32, n_outliers: u32, bytes: Vec<u8>) -> RowIndexCode {
+        RowIndexCode { b, n_symbols, n_outliers, bytes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{check, Config};
+
+    #[test]
+    fn paper_example_small_gaps() {
+        // γ=5 %, all gaps ≤ 2^b−1 ⇒ one symbol per outlier.
+        let positions = [4usize, 10, 17, 30, 31];
+        let b = 5;
+        let symbols = encode_gaps(&positions, b);
+        assert_eq!(symbols.len(), positions.len());
+        assert_eq!(decode_gaps(&symbols, b), positions);
+        // Gap values round-trip: first gap is i0+1 = 5 → symbol 4.
+        assert_eq!(symbols[0], 4);
+    }
+
+    #[test]
+    fn escape_flag_for_large_gap() {
+        // Gap of 100 with b=5 (span 31): 100 = 31+31+31+7 ⇒ 3 flags + one.
+        let positions = [99usize];
+        let symbols = encode_gaps(&positions, 5);
+        assert_eq!(symbols, vec![31, 31, 31, 6]); // 31 is the flag (2^5−1)
+        assert_eq!(decode_gaps(&symbols, 5), positions);
+    }
+
+    #[test]
+    fn gap_exact_multiple_of_span() {
+        // The ambiguous case the paper's appendix glosses: x = k·(2^b−1).
+        // x = 62 = 2·31 with b=5 ⇒ one flag then symbol 30 (gap 31).
+        let positions = [61usize];
+        let symbols = encode_gaps(&positions, 5);
+        assert_eq!(symbols, vec![31, 30]);
+        assert_eq!(decode_gaps(&symbols, 5), positions);
+    }
+
+    #[test]
+    fn adjacent_outliers_gap_one() {
+        let positions = [0usize, 1, 2, 3];
+        let symbols = encode_gaps(&positions, 3);
+        assert_eq!(symbols, vec![0, 0, 0, 0]);
+        assert_eq!(decode_gaps(&symbols, 3), positions);
+    }
+
+    #[test]
+    fn empty_positions() {
+        assert!(encode_gaps(&[], 6).is_empty());
+        assert!(decode_gaps(&[], 6).is_empty());
+        let code = RowIndexCode::encode(&[], 6);
+        assert_eq!(code.storage_bits(), 0);
+        assert!(code.decode().is_empty());
+    }
+
+    #[test]
+    fn symbol_count_formula() {
+        let positions = [99usize, 161, 162];
+        for b in 2..=10 {
+            assert_eq!(
+                encoded_symbol_count(&positions, b),
+                encode_gaps(&positions, b).len(),
+                "b={}",
+                b
+            );
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_and_mask() {
+        let positions = [3usize, 64, 65, 500, 1023];
+        let code = RowIndexCode::encode(&positions, 6);
+        assert_eq!(code.decode(), positions);
+        let mut mask = vec![false; 1024];
+        code.decode_into_mask(&mut mask);
+        for (i, &m) in mask.iter().enumerate() {
+            assert_eq!(m, positions.contains(&i), "i={}", i);
+        }
+        // Serialization roundtrip.
+        let code2 = RowIndexCode::from_parts(
+            code.b,
+            code.n_symbols,
+            code.n_outliers,
+            code.bytes().to_vec(),
+        );
+        assert_eq!(code2.decode(), positions);
+    }
+
+    #[test]
+    fn prop_roundtrip_uniform_positions() {
+        check(
+            "icq-gap-roundtrip",
+            Config::with_cases(200),
+            |rng, size| {
+                let d = 16 + (size * 8000.0) as usize;
+                let gamma = 0.002 + rng.f64() * 0.15;
+                let p = ((gamma * d as f64) as usize).min(d);
+                let b = rng.range_inclusive(1, 12) as u32;
+                let positions = rng.sample_indices(d, p);
+                (positions, b)
+            },
+            |(positions, b)| {
+                let code = RowIndexCode::encode(positions, *b);
+                let back = code.decode();
+                crate::prop_assert!(back == *positions, "roundtrip mismatch b={}", b);
+                crate::prop_assert!(
+                    code.storage_bits() == encoded_symbol_count(positions, *b) * *b as usize,
+                    "storage accounting mismatch"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip_clustered_positions() {
+        // Worst-case non-uniform (o_proj-like) clustering must still be
+        // decoded exactly — the scheme's correctness is distribution-free.
+        check(
+            "icq-gap-roundtrip-clustered",
+            Config::with_cases(100),
+            |rng, size| {
+                let d = 64 + (size * 4000.0) as usize;
+                let b = rng.range_inclusive(2, 8) as u32;
+                // Cluster positions at the end of the row.
+                let k = 1 + (size * 40.0) as usize;
+                let start = d - k.min(d);
+                let positions: Vec<usize> = (start..d).collect();
+                (positions, b, d)
+            },
+            |(positions, b, _d)| {
+                let code = RowIndexCode::encode(positions, *b);
+                crate::prop_assert!(code.decode() == *positions, "clustered roundtrip");
+                Ok(())
+            },
+        );
+    }
+}

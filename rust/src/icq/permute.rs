@@ -1,0 +1,192 @@
+//! Random input-channel permutation (paper §2 Observation + Appendix
+//! C.2): when outlier positions are *not* naturally uniform (o_proj
+//! layers), a one-time random permutation of the columns enforces
+//! uniformity without changing the model function — `W P Pᵀ X = W X`,
+//! and `P` folds into the adjacent layers so only the seed is stored.
+//!
+//! This makes ICQuant's Lemma-1 overhead guarantee *unconditional*: apply
+//! [`ColumnPermutation`] before quantization whenever the chi-square test
+//! rejects, and the gap statistics revert to the uniform case.
+
+use crate::util::prng::Rng;
+use crate::util::tensor::Matrix;
+
+/// A seeded column permutation and its inverse.
+#[derive(Clone, Debug)]
+pub struct ColumnPermutation {
+    /// `perm[new_col] = old_col`.
+    pub perm: Vec<u32>,
+    inv: Vec<u32>,
+}
+
+impl ColumnPermutation {
+    pub fn new(cols: usize, seed: u64) -> ColumnPermutation {
+        let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+        let mut perm: Vec<u32> = (0..cols as u32).collect();
+        rng.shuffle(&mut perm);
+        let mut inv = vec![0u32; cols];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old as usize] = new as u32;
+        }
+        ColumnPermutation { perm, inv }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// `W ↦ W P` (shuffle columns).
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        assert_eq!(w.cols, self.cols());
+        let mut out = Matrix::zeros(w.rows, w.cols);
+        for r in 0..w.rows {
+            let src = w.row(r);
+            let dst = out.row_mut(r);
+            for (new, &old) in self.perm.iter().enumerate() {
+                dst[new] = src[old as usize];
+            }
+        }
+        out
+    }
+
+    /// `W' ↦ W' Pᵀ` (undo).
+    pub fn invert(&self, w: &Matrix) -> Matrix {
+        assert_eq!(w.cols, self.cols());
+        let mut out = Matrix::zeros(w.rows, w.cols);
+        for r in 0..w.rows {
+            let src = w.row(r);
+            let dst = out.row_mut(r);
+            for (new, &old) in self.inv.iter().enumerate() {
+                dst[new] = src[old as usize];
+            }
+        }
+        out
+    }
+
+    /// Permute an activation vector the way `Pᵀ X` requires (so that
+    /// `(W P)(Pᵀ x) = W x`): the value feeding old column `c` must land
+    /// at the new position of `c`.
+    pub fn apply_to_input(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols());
+        let mut out = vec![0.0f32; x.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            out[new] = x[old as usize];
+        }
+        out
+    }
+}
+
+/// Decide-and-permute helper: returns a permutation only when the
+/// layer's outlier positions fail the uniformity test (the paper's
+/// conditional application — most layers don't need it).
+pub fn permutation_if_needed(
+    w: &Matrix,
+    gamma: f64,
+    group_size: usize,
+    alpha: f64,
+    reject_threshold: f64,
+    seed: u64,
+) -> Option<ColumnPermutation> {
+    let rate = crate::stats::rejection_rate(w, gamma, group_size, alpha);
+    if rate > reject_threshold {
+        Some(ColumnPermutation::new(w.cols, seed))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rejection_rate;
+    use crate::synthzoo::{family, LayerType};
+    use crate::util::miniprop::{check, Config};
+
+    #[test]
+    fn permutation_roundtrip() {
+        let w = crate::synthzoo::demo_matrix(8, 100, 3);
+        let p = ColumnPermutation::new(100, 7);
+        assert!(p.invert(&p.apply(&w)).mse(&w) < 1e-12);
+    }
+
+    #[test]
+    fn model_function_preserved() {
+        // (W P)(Pᵀ x) must equal W x — the Appendix C.2 identity.
+        let w = crate::synthzoo::demo_matrix(16, 64, 5);
+        let p = ColumnPermutation::new(64, 11);
+        let wp = p.apply(&w);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.3).cos()).collect();
+        let xp = p.apply_to_input(&x);
+        for r in 0..16 {
+            let orig: f32 = w.row(r).iter().zip(&x).map(|(a, b)| a * b).sum();
+            let perm: f32 = wp.row(r).iter().zip(&xp).map(|(a, b)| a * b).sum();
+            assert!((orig - perm).abs() < 1e-4, "row {}: {} vs {}", r, orig, perm);
+        }
+    }
+
+    #[test]
+    fn permutation_enforces_uniformity_on_oproj() {
+        // The headline: o_proj rejects at 60-95 %; after a random column
+        // permutation the rejection rate falls to the 5 % floor.
+        let f = family("llama3-8b").unwrap();
+        let w = f.gen_stat_layer(LayerType::OProj, 0);
+        let before = rejection_rate(&w, 0.0625, 256, 0.05);
+        let p = ColumnPermutation::new(w.cols, 13);
+        let after = rejection_rate(&p.apply(&w), 0.0625, 256, 0.05);
+        assert!(before > 0.5, "before {}", before);
+        assert!(after < 0.15, "after {}", after);
+    }
+
+    #[test]
+    fn permutation_restores_lemma1_overhead() {
+        // Clustered outliers inflate the gap-code cost past the bound;
+        // permuting restores it to ≈ the Lemma 1 value.
+        use crate::icq::bound::{empirical_overhead, lemma1_bound};
+        use crate::quant::mixed_precision::top_k_by_magnitude;
+        let f = family("llama3-8b").unwrap();
+        let w = f.gen_stat_layer(LayerType::OProj, 0);
+        let gamma = 0.05;
+        let k = (gamma * w.cols as f64) as usize;
+        let b = 6;
+        let collect = |m: &Matrix| -> Vec<Vec<usize>> {
+            (0..m.rows).map(|r| top_k_by_magnitude(m.row(r), k)).collect()
+        };
+        let before = empirical_overhead(&collect(&w), w.cols, b);
+        let p = ColumnPermutation::new(w.cols, 17);
+        let after = empirical_overhead(&collect(&p.apply(&w)), w.cols, b);
+        let bound = lemma1_bound(gamma, b);
+        assert!(after <= bound * 1.01, "after {} vs bound {}", after, bound);
+        assert!(after <= before + 1e-9);
+    }
+
+    #[test]
+    fn conditional_application() {
+        let f = family("llama3-8b").unwrap();
+        let q = f.gen_stat_layer(LayerType::QProj, 0);
+        let o = f.gen_stat_layer(LayerType::OProj, 0);
+        assert!(permutation_if_needed(&q, 0.0625, 256, 0.05, 0.3, 1).is_none());
+        assert!(permutation_if_needed(&o, 0.0625, 256, 0.05, 0.3, 1).is_some());
+    }
+
+    #[test]
+    fn prop_permutation_is_bijective() {
+        check(
+            "column-permutation-bijection",
+            Config::with_cases(64),
+            |rng, size| {
+                let cols = 2 + (size * 400.0) as usize;
+                (cols, rng.next_u64())
+            },
+            |&(cols, seed)| {
+                let p = ColumnPermutation::new(cols, seed);
+                let mut seen = vec![false; cols];
+                for &c in &p.perm {
+                    crate::prop_assert!(!seen[c as usize], "duplicate {}", c);
+                    seen[c as usize] = true;
+                }
+                crate::prop_assert!(seen.iter().all(|&x| x), "not surjective");
+                Ok(())
+            },
+        );
+    }
+}

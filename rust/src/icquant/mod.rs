@@ -1,0 +1,376 @@
+//! The ICQuant framework (§3): outlier partitioning + index coding + dual
+//! codebooks, applicable on top of any scalar quantizer.
+//!
+//! Pipeline per output channel (row):
+//! 1. **Partition** — the top-γ weights by |w| are outliers
+//!    ([`crate::quant::mixed_precision::top_k_by_magnitude`]).
+//! 2. **Index-code** — outlier positions become a b-bit gap stream
+//!    ([`crate::icq::RowIndexCode`]), ≈0.31 bits/weight at γ=5 %.
+//! 3. **Dual quantization** — inliers and outliers are quantized
+//!    *separately* with the same bit-width n; each group spans ≈half the
+//!    range, so n-bit ICQuant matches (n+1)-bit vanilla resolution.
+//!
+//! Both groups' codes share one dense n-bit plane (a weight is either an
+//! inlier or an outlier, and the index stream disambiguates), so storage
+//! is `n + B + codebooks` bits/weight.
+//!
+//! [`runtime`] holds the load-time decode into the fused (n+1)-bit plane
+//! the serving kernels consume; [`packed`] the on-disk serialization.
+
+pub mod packed;
+pub mod runtime;
+
+use crate::bitstream::PackedPlane;
+use crate::icq::{optimal_b, RowIndexCode};
+use crate::quant::mixed_precision::top_k_by_magnitude;
+use crate::quant::{rtn, Codebook, QuantizerKind};
+use crate::util::tensor::Matrix;
+use anyhow::{ensure, Result};
+
+/// Configuration for ICQuant quantization of one matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct IcqConfig {
+    /// Base bit-width n for both inlier and outlier codes.
+    pub bits: u32,
+    /// Outlier ratio γ (fraction of each row, e.g. 0.05).
+    pub outlier_ratio: f64,
+    /// Gap width b; 0 = pick the Lemma-1-optimal b for γ.
+    pub gap_bits: u32,
+    /// Base quantizer applied to each partition.
+    pub quantizer: QuantizerKind,
+}
+
+impl Default for IcqConfig {
+    fn default() -> Self {
+        IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 0,
+            quantizer: QuantizerKind::Rtn,
+        }
+    }
+}
+
+impl IcqConfig {
+    pub fn resolved_gap_bits(&self) -> u32 {
+        if self.gap_bits != 0 {
+            self.gap_bits
+        } else if self.outlier_ratio > 0.0 {
+            optimal_b(self.outlier_ratio)
+        } else {
+            // γ = 0 emits no index stream; any width is vacuous.
+            6
+        }
+    }
+}
+
+/// An ICQuant-quantized matrix: the complete storage artifact.
+#[derive(Clone, Debug)]
+pub struct IcqMatrix {
+    pub bits: u32,
+    pub gap_bits: u32,
+    pub outlier_ratio: f64,
+    pub quantizer: QuantizerKind,
+    pub rows: usize,
+    pub cols: usize,
+    /// Dense n-bit code plane (inlier or outlier code per weight).
+    pub code_plane: PackedPlane,
+    /// Per-row gap-coded outlier positions.
+    pub index_codes: Vec<RowIndexCode>,
+    /// Per-row inlier codebooks (2^n levels).
+    pub inlier_cbs: Vec<Codebook>,
+    /// Per-row outlier codebooks (2^n levels).
+    pub outlier_cbs: Vec<Codebook>,
+}
+
+impl IcqMatrix {
+    /// Quantize `w` (optionally sensitivity-weighted) under `cfg`.
+    pub fn quantize(w: &Matrix, sens: Option<&Matrix>, cfg: &IcqConfig) -> Result<IcqMatrix> {
+        ensure!(cfg.bits >= 1 && cfg.bits <= 8, "bits must be 1..=8");
+        ensure!(
+            cfg.outlier_ratio >= 0.0 && cfg.outlier_ratio < 0.5,
+            "outlier ratio must be in [0, 0.5)"
+        );
+        if let Some(s) = sens {
+            ensure!((s.rows, s.cols) == (w.rows, w.cols), "sensitivity shape mismatch");
+        }
+        let b = cfg.resolved_gap_bits();
+        let k = ((cfg.outlier_ratio * w.cols as f64).floor() as usize).min(w.cols);
+
+        let mut codes = vec![0u16; w.numel()];
+        let mut index_codes = Vec::with_capacity(w.rows);
+        let mut inlier_cbs = Vec::with_capacity(w.rows);
+        let mut outlier_cbs = Vec::with_capacity(w.rows);
+        let mut is_outlier = vec![false; w.cols];
+        let mut inlier_vals: Vec<f32> = Vec::with_capacity(w.cols);
+        let mut inlier_sens: Vec<f32> = Vec::with_capacity(w.cols);
+        let mut outlier_vals: Vec<f32> = Vec::with_capacity(k.max(1));
+        let mut outlier_sens: Vec<f32> = Vec::with_capacity(k.max(1));
+
+        for r in 0..w.rows {
+            let row = w.row(r);
+            let srow = sens.map(|s| s.row(r));
+
+            let positions = top_k_by_magnitude(row, k);
+            is_outlier.iter_mut().for_each(|x| *x = false);
+            for &c in &positions {
+                is_outlier[c] = true;
+            }
+
+            inlier_vals.clear();
+            inlier_sens.clear();
+            outlier_vals.clear();
+            outlier_sens.clear();
+            for c in 0..w.cols {
+                if is_outlier[c] {
+                    outlier_vals.push(row[c]);
+                    if let Some(s) = srow {
+                        outlier_sens.push(s[c]);
+                    }
+                } else {
+                    inlier_vals.push(row[c]);
+                    if let Some(s) = srow {
+                        inlier_sens.push(s[c]);
+                    }
+                }
+            }
+
+            let in_cb = cfg.quantizer.fit(
+                &inlier_vals,
+                srow.map(|_| inlier_sens.as_slice()),
+                cfg.bits,
+            );
+            // Outlier codebook: RTN uses the paper's two-sided layout
+            // (Appendix E.1: 1 sign bit + (n−1)-bit per tail); K-means
+            // handles the bimodal tails natively.
+            let out_cb = if outlier_vals.is_empty() {
+                Codebook { levels: vec![0.0; 1 << cfg.bits] }
+            } else {
+                match cfg.quantizer {
+                    QuantizerKind::Rtn if cfg.bits >= 2 => {
+                        rtn::fit_rtn_two_sided(&outlier_vals, cfg.bits)
+                    }
+                    _ => cfg.quantizer.fit(
+                        &outlier_vals,
+                        srow.map(|_| outlier_sens.as_slice()),
+                        cfg.bits,
+                    ),
+                }
+            };
+
+            for c in 0..w.cols {
+                let cb = if is_outlier[c] { &out_cb } else { &in_cb };
+                codes[r * w.cols + c] = cb.encode(row[c]);
+            }
+            index_codes.push(RowIndexCode::encode(&positions, b));
+            inlier_cbs.push(in_cb);
+            outlier_cbs.push(out_cb);
+        }
+
+        Ok(IcqMatrix {
+            bits: cfg.bits,
+            gap_bits: b,
+            outlier_ratio: cfg.outlier_ratio,
+            quantizer: cfg.quantizer,
+            rows: w.rows,
+            cols: w.cols,
+            code_plane: PackedPlane::pack(w.rows, w.cols, cfg.bits, &codes),
+            index_codes,
+            inlier_cbs,
+            outlier_cbs,
+        })
+    }
+
+    /// Full dequantization back to f32.
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let mut mask = vec![false; self.cols];
+        let mut row_codes = vec![0u8; self.cols];
+        for r in 0..self.rows {
+            mask.iter_mut().for_each(|x| *x = false);
+            self.index_codes[r].decode_into_mask(&mut mask);
+            self.code_plane.unpack_row_u8(r, &mut row_codes);
+            let in_cb = &self.inlier_cbs[r];
+            let out_cb = &self.outlier_cbs[r];
+            let orow = out.row_mut(r);
+            for c in 0..self.cols {
+                let cb = if mask[c] { out_cb } else { in_cb };
+                orow[c] = cb.decode(row_codes[c] as u16);
+            }
+        }
+        out
+    }
+
+    /// Index-coding overhead B in bits/weight (measured, not the bound).
+    pub fn index_bits_per_weight(&self) -> f64 {
+        let total: usize = self.index_codes.iter().map(|c| c.storage_bits()).sum();
+        total as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Codebook storage in bits/weight (both partitions, f16 entries for
+    /// K-means, scale/zero-equivalent for RTN — matching how the baselines
+    /// are accounted).
+    pub fn codebook_bits_per_weight(&self) -> f64 {
+        // Two codebooks per row (inlier + outlier).
+        2.0 * self.quantizer.param_bits(self.bits) as f64 / self.cols as f64
+    }
+
+    /// Total average bits/weight: n + B + codebooks. The paper's headline
+    /// "2.31 bits" counts n + B (codebooks amortize to ~0 for scalar
+    /// quantizers at LLM widths); [`Self::avg_bits_per_weight_full`] adds
+    /// codebooks.
+    pub fn avg_bits_per_weight(&self) -> f64 {
+        self.bits as f64 + self.index_bits_per_weight()
+    }
+
+    pub fn avg_bits_per_weight_full(&self) -> f64 {
+        self.avg_bits_per_weight() + self.codebook_bits_per_weight()
+    }
+
+    /// Exact serialized size in bytes (storage plane + index streams +
+    /// codebooks + header).
+    pub fn storage_bytes(&self) -> usize {
+        packed::serialized_size(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synthzoo;
+    use crate::util::prng::Rng;
+
+    fn heavy_tailed(rows: usize, cols: usize, seed: u64) -> Matrix {
+        synthzoo::demo_matrix(rows, cols, seed)
+    }
+
+    #[test]
+    fn roundtrip_preserves_shape_and_is_finite() {
+        let w = heavy_tailed(16, 256, 1);
+        let q = IcqMatrix::quantize(&w, None, &IcqConfig::default()).unwrap();
+        let d = q.dequantize();
+        assert_eq!((d.rows, d.cols), (16, 256));
+        assert!(d.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn overhead_near_lemma1_bound() {
+        // γ=5 %, b=6 on uniform-ish outliers ⇒ B ≈ 0.31.
+        let w = heavy_tailed(64, 2048, 3);
+        let cfg = IcqConfig { bits: 2, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
+        let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        let b = q.index_bits_per_weight();
+        assert!(b < 0.33, "B={}", b);
+        assert!(b > 0.25, "B={}", b);
+        assert!((q.avg_bits_per_weight() - (2.0 + b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_gap_bits_matches_optimal() {
+        let cfg = IcqConfig { outlier_ratio: 0.05, gap_bits: 0, ..Default::default() };
+        assert_eq!(cfg.resolved_gap_bits(), 6);
+    }
+
+    #[test]
+    fn icquant_beats_vanilla_same_quantizer() {
+        // Fig 3/Fig 5: n-bit ICQuant ≪ n-bit vanilla on heavy-tailed rows.
+        let w = heavy_tailed(32, 1024, 5);
+        for kind in [QuantizerKind::Rtn, QuantizerKind::SensitiveKmeans] {
+            let cfg = IcqConfig { bits: 3, outlier_ratio: 0.05, gap_bits: 6, quantizer: kind };
+            let icq = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+            let plain = crate::quant::quantize_per_row(&w, None, kind, 3);
+            let icq_mse = w.mse(&icq.dequantize());
+            let plain_mse = w.mse(&plain.dequantize());
+            assert!(
+                icq_mse < plain_mse * 0.6,
+                "{:?}: icq {} vs plain {}",
+                kind,
+                icq_mse,
+                plain_mse
+            );
+        }
+    }
+
+    #[test]
+    fn matches_next_bit_vanilla_rtn() {
+        // The paper's headline resolution claim (Fig 3): 2-bit ICQuant^RTN
+        // ≈ 3-bit vanilla RTN when 5 % of outliers take ~50 % of range.
+        let w = heavy_tailed(32, 2048, 7);
+        let cfg = IcqConfig { bits: 2, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
+        let icq = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        let rtn3 = crate::quant::quantize_per_row(&w, None, QuantizerKind::Rtn, 3);
+        let ratio = w.mse(&icq.dequantize()) / w.mse(&rtn3.dequantize());
+        assert!(ratio < 1.4, "2-bit ICQ / 3-bit RTN mse ratio = {}", ratio);
+    }
+
+    #[test]
+    fn sensitivity_weighted_improves_weighted_error() {
+        let w = heavy_tailed(8, 512, 9);
+        let mut rng = Rng::new(11);
+        let sens = Matrix::from_vec(
+            8,
+            512,
+            (0..8 * 512).map(|_| rng.exponential(1.0) as f32).collect(),
+        );
+        let cfg = IcqConfig {
+            bits: 2,
+            quantizer: QuantizerKind::SensitiveKmeans,
+            ..Default::default()
+        };
+        let with = IcqMatrix::quantize(&w, Some(&sens), &cfg).unwrap();
+        let without = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        let h: Vec<f32> = vec![1.0; 512]; // use sens directly below instead
+        let _ = h;
+        let werr = |m: &Matrix| {
+            let mut acc = 0.0f64;
+            for r in 0..8 {
+                for c in 0..512 {
+                    let d = (w.get(r, c) - m.get(r, c)) as f64;
+                    acc += sens.get(r, c) as f64 * d * d;
+                }
+            }
+            acc
+        };
+        assert!(werr(&with.dequantize()) <= werr(&without.dequantize()) * 1.02);
+    }
+
+    #[test]
+    fn zero_outlier_ratio_reduces_to_plain() {
+        let w = heavy_tailed(4, 256, 13);
+        let cfg = IcqConfig { bits: 3, outlier_ratio: 0.0, gap_bits: 6, ..Default::default() };
+        let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        assert_eq!(q.index_bits_per_weight(), 0.0);
+        let plain = crate::quant::quantize_per_row(&w, None, QuantizerKind::Rtn, 3);
+        assert!(q.dequantize().mse(&plain.dequantize()) < 1e-12);
+    }
+
+    #[test]
+    fn prop_outlier_positions_roundtrip_through_artifact() {
+        use crate::util::miniprop::{check, Config};
+        check(
+            "icq-matrix-outlier-positions",
+            Config::with_cases(24),
+            |rng, size| {
+                let rows = 1 + (size * 8.0) as usize;
+                let cols = 64 + (size * 900.0) as usize;
+                let seed = rng.next_u64();
+                (rows, cols, seed)
+            },
+            |&(rows, cols, seed)| {
+                let w = heavy_tailed(rows, cols, seed);
+                let cfg = IcqConfig { bits: 2, outlier_ratio: 0.05, gap_bits: 5, ..Default::default() };
+                let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+                let k = (0.05 * cols as f64).floor() as usize;
+                for r in 0..rows {
+                    let decoded = q.index_codes[r].decode();
+                    let expected = top_k_by_magnitude(w.row(r), k);
+                    crate::prop_assert!(
+                        decoded == expected,
+                        "row {} positions mismatch", r
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

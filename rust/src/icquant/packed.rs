@@ -1,0 +1,251 @@
+//! On-disk serialization of [`IcqMatrix`] — the deployment artifact whose
+//! size *is* the paper's bits/weight claim, so the format is bit-frugal:
+//! dense n-bit code plane, concatenated b-bit gap streams, f16 codebooks.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   "ICQM"            4 B
+//! version u32               4 B
+//! hlen    u32               4 B
+//! header  JSON              hlen B   (dims, bits, gap_bits, γ, quantizer)
+//! n_symbols  rows × u32              (gap symbols per row)
+//! n_outliers rows × u32
+//! plane_len  u64 + code-plane bytes
+//! gaps_len   u64 + concatenated gap-stream bytes (byte-aligned per row)
+//! codebooks  rows × 2 × 2^bits × u16 (f16 levels: inlier then outlier)
+//! ```
+
+use super::IcqMatrix;
+use crate::bitstream::PackedPlane;
+use crate::icq::RowIndexCode;
+use crate::quant::{Codebook, QuantizerKind};
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ICQM";
+const VERSION: u32 = 1;
+
+fn header_json(m: &IcqMatrix) -> String {
+    Json::obj(vec![
+        ("rows", Json::num(m.rows as f64)),
+        ("cols", Json::num(m.cols as f64)),
+        ("bits", Json::num(m.bits as f64)),
+        ("gap_bits", Json::num(m.gap_bits as f64)),
+        ("outlier_ratio", Json::num(m.outlier_ratio)),
+        (
+            "quantizer",
+            Json::str(match m.quantizer {
+                QuantizerKind::Rtn => "rtn",
+                QuantizerKind::SensitiveKmeans => "sk",
+            }),
+        ),
+    ])
+    .to_string()
+}
+
+/// Exact serialized size in bytes.
+pub fn serialized_size(m: &IcqMatrix) -> usize {
+    let header = header_json(m);
+    let gaps: usize = m.index_codes.iter().map(|c| c.bytes().len()).sum();
+    4 + 4 + 4 + header.len()
+        + m.rows * 8 // n_symbols + n_outliers
+        + 8 + m.code_plane.storage_bytes()
+        + 8 + gaps
+        + m.rows * 2 * (1usize << m.bits) * 2
+}
+
+pub fn save(m: &IcqMatrix, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    let header = header_json(m);
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for code in &m.index_codes {
+        f.write_all(&code.n_symbols.to_le_bytes())?;
+    }
+    for code in &m.index_codes {
+        f.write_all(&code.n_outliers.to_le_bytes())?;
+    }
+    let plane = m.code_plane.bytes();
+    f.write_all(&(plane.len() as u64).to_le_bytes())?;
+    f.write_all(plane)?;
+    let gaps_len: usize = m.index_codes.iter().map(|c| c.bytes().len()).sum();
+    f.write_all(&(gaps_len as u64).to_le_bytes())?;
+    for code in &m.index_codes {
+        f.write_all(code.bytes())?;
+    }
+    for r in 0..m.rows {
+        for cb in [&m.inlier_cbs[r], &m.outlier_cbs[r]] {
+            for &lv in &cb.levels {
+                f.write_all(&f32_to_f16_bits(lv).to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<IcqMatrix> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an ICQM artifact: bad magic");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported ICQM version {}", version);
+    }
+    let hlen = read_u32(&mut f)? as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("header: {}", e))?;
+    let rows = header.req("rows")?.as_usize().context("rows")?;
+    let cols = header.req("cols")?.as_usize().context("cols")?;
+    let bits = header.req("bits")?.as_usize().context("bits")? as u32;
+    let gap_bits = header.req("gap_bits")?.as_usize().context("gap_bits")? as u32;
+    let outlier_ratio = header.req("outlier_ratio")?.as_f64().context("outlier_ratio")?;
+    let quantizer = match header.req("quantizer")?.as_str() {
+        Some("rtn") => QuantizerKind::Rtn,
+        Some("sk") => QuantizerKind::SensitiveKmeans,
+        other => bail!("unknown quantizer {:?}", other),
+    };
+
+    let mut n_symbols = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        n_symbols.push(read_u32(&mut f)?);
+    }
+    let mut n_outliers = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        n_outliers.push(read_u32(&mut f)?);
+    }
+    let plane_len = read_u64(&mut f)? as usize;
+    let mut plane_bytes = vec![0u8; plane_len];
+    f.read_exact(&mut plane_bytes)?;
+    let code_plane = PackedPlane::from_bytes(rows, cols, bits, plane_bytes);
+
+    let gaps_len = read_u64(&mut f)? as usize;
+    let mut gap_bytes = vec![0u8; gaps_len];
+    f.read_exact(&mut gap_bytes)?;
+    let mut index_codes = Vec::with_capacity(rows);
+    let mut off = 0usize;
+    for r in 0..rows {
+        let nbytes = ((n_symbols[r] as usize) * gap_bits as usize).div_ceil(8);
+        index_codes.push(RowIndexCode::from_parts(
+            gap_bits,
+            n_symbols[r],
+            n_outliers[r],
+            gap_bytes[off..off + nbytes].to_vec(),
+        ));
+        off += nbytes;
+    }
+    if off != gaps_len {
+        bail!("gap stream length mismatch: consumed {} of {}", off, gaps_len);
+    }
+
+    let k = 1usize << bits;
+    let mut inlier_cbs = Vec::with_capacity(rows);
+    let mut outlier_cbs = Vec::with_capacity(rows);
+    let mut lv_bytes = vec![0u8; k * 2];
+    for _ in 0..rows {
+        for which in 0..2 {
+            f.read_exact(&mut lv_bytes)?;
+            let levels: Vec<f32> = lv_bytes
+                .chunks_exact(2)
+                .map(|b| f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
+                .collect();
+            if which == 0 {
+                inlier_cbs.push(Codebook { levels });
+            } else {
+                outlier_cbs.push(Codebook { levels });
+            }
+        }
+    }
+
+    Ok(IcqMatrix {
+        bits,
+        gap_bits,
+        outlier_ratio,
+        quantizer,
+        rows,
+        cols,
+        code_plane,
+        index_codes,
+        inlier_cbs,
+        outlier_cbs,
+    })
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::icquant::IcqConfig;
+    use crate::synthzoo;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("icq_packed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn save_load_roundtrip_bitexact() {
+        let w = synthzoo::demo_matrix(12, 300, 21);
+        let cfg = IcqConfig { bits: 3, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
+        let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        let p = tmp("roundtrip.icqm");
+        save(&q, &p).unwrap();
+        let q2 = load(&p).unwrap();
+        // Codebooks are stored at f16; serialize once so q is at f16 too.
+        let d1 = q.dequantize();
+        let d2 = q2.dequantize();
+        // Gap streams and code plane are bit-exact:
+        assert_eq!(q.code_plane.bytes(), q2.code_plane.bytes());
+        for r in 0..q.rows {
+            assert_eq!(q.index_codes[r].decode(), q2.index_codes[r].decode());
+        }
+        // Dequantized values agree to f16 codebook precision.
+        assert!(d1.mse(&d2) < 1e-6, "mse {}", d1.mse(&d2));
+    }
+
+    #[test]
+    fn serialized_size_matches_file() {
+        let w = synthzoo::demo_matrix(8, 512, 23);
+        let q = IcqMatrix::quantize(&w, None, &IcqConfig::default()).unwrap();
+        let p = tmp("size.icqm");
+        save(&q, &p).unwrap();
+        let actual = std::fs::metadata(&p).unwrap().len() as usize;
+        assert_eq!(actual, serialized_size(&q));
+        // File-level bits/weight ≈ n + B + codebooks + small header.
+        let bits_per_weight = actual as f64 * 8.0 / q.code_plane.storage_bits() as f64
+            * q.bits as f64;
+        assert!(bits_per_weight < 4.0, "file bits/weight {}", bits_per_weight);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.icqm");
+        std::fs::write(&p, b"not an artifact").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

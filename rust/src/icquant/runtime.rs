@@ -1,0 +1,165 @@
+//! Load-time decode: storage artifact → runtime plane.
+//!
+//! The gap streams decode **once** at model load into a selector bit that
+//! is fused into the code as its MSB, producing one byte-aligned
+//! (n+1)-bit code per weight plus a fused per-row codebook of `2^(n+1)`
+//! entries (inliers at codes `0..2^n`, outliers at `2^n..2^(n+1)`).
+//! This is the plane the L1 Pallas kernel and the CPU dequant path
+//! consume: a pure gather, no bit twiddling on the request path
+//! (DESIGN.md §4, §8 — on TPU the VPU has no per-lane variable shift, so
+//! byte-aligned codes are the right runtime layout).
+
+use super::IcqMatrix;
+use crate::util::tensor::Matrix;
+
+/// Runtime representation: byte codes + fused codebooks.
+pub struct RuntimePlane {
+    pub rows: usize,
+    pub cols: usize,
+    /// Fused code per weight: `code | (is_outlier << bits)`.
+    pub codes: Vec<u8>,
+    /// Per-row fused codebook, `2^(bits+1)` f32 levels each.
+    pub codebooks: Vec<Vec<f32>>,
+    pub bits: u32,
+}
+
+impl IcqMatrix {
+    /// Decode the storage artifact into the runtime plane.
+    pub fn to_runtime(&self) -> RuntimePlane {
+        let n = self.rows * self.cols;
+        let mut codes = vec![0u8; n];
+        // Unpack the whole n-bit plane first (fast bulk path)…
+        self.code_plane.unpack_into_u8(&mut codes);
+        // …then OR in the outlier selector bit from the gap streams.
+        let sel = 1u8 << self.bits;
+        for r in 0..self.rows {
+            let base = r * self.cols;
+            for &c in &self.index_codes[r].decode() {
+                codes[base + c] |= sel;
+            }
+        }
+        let codebooks: Vec<Vec<f32>> = (0..self.rows)
+            .map(|r| {
+                let mut fused =
+                    Vec::with_capacity(self.inlier_cbs[r].levels.len() * 2);
+                fused.extend_from_slice(&self.inlier_cbs[r].levels);
+                fused.extend_from_slice(&self.outlier_cbs[r].levels);
+                fused
+            })
+            .collect();
+        RuntimePlane { rows: self.rows, cols: self.cols, codes, codebooks, bits: self.bits }
+    }
+}
+
+impl RuntimePlane {
+    /// Dequantize the full plane to f32 (the serving load path; also what
+    /// gets shipped to the PJRT executable as a weight argument).
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let cb = &self.codebooks[r];
+            let src = &self.codes[r * self.cols..(r + 1) * self.cols];
+            let dst = out.row_mut(r);
+            for (d, &c) in dst.iter_mut().zip(src) {
+                *d = cb[c as usize];
+            }
+        }
+        out
+    }
+
+    /// Dequantize one row into a caller buffer (streaming path).
+    pub fn dequantize_row_into(&self, row: usize, out: &mut [f32]) {
+        let cb = &self.codebooks[row];
+        let src = &self.codes[row * self.cols..(row + 1) * self.cols];
+        for (d, &c) in out.iter_mut().zip(src) {
+            *d = cb[c as usize];
+        }
+    }
+
+    /// `y = W x` straight off the quantized plane (gather + FMA per
+    /// element) — the memory-bound deployment kernel shape, used by the
+    /// CPU fallback path and the perf benches.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let cb = &self.codebooks[r];
+            let src = &self.codes[r * self.cols..(r + 1) * self.cols];
+            let mut acc = 0.0f32;
+            for (c, &code) in src.iter().enumerate() {
+                acc += cb[code as usize] * x[c];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Runtime memory footprint in bytes (codes + codebooks) — the number
+    /// that drives memory-fetch latency at inference.
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.len() + self.codebooks.iter().map(|c| c.len() * 4).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::icquant::IcqConfig;
+    use crate::synthzoo;
+
+    #[test]
+    fn runtime_decode_equals_reference_dequant() {
+        // The fused (n+1)-bit plane must reproduce exactly what the
+        // two-codebook reference dequantization produces.
+        let w = synthzoo::demo_matrix(16, 512, 31);
+        for bits in [2u32, 3, 4] {
+            let cfg = IcqConfig { bits, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
+            let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+            let reference = q.dequantize();
+            let rt = q.to_runtime();
+            let fused = rt.dequantize();
+            assert!(reference.mse(&fused) < 1e-12, "bits={}", bits);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let w = synthzoo::demo_matrix(8, 128, 33);
+        let q = IcqMatrix::quantize(&w, None, &IcqConfig::default()).unwrap();
+        let rt = q.to_runtime();
+        let dense = rt.dequantize();
+        let x: Vec<f32> = (0..128).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut y = vec![0.0f32; 8];
+        rt.matvec(&x, &mut y);
+        for r in 0..8 {
+            let want: f32 = dense.row(r).iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((y[r] - want).abs() < 1e-3, "row {}: {} vs {}", r, y[r], want);
+        }
+    }
+
+    #[test]
+    fn selector_bit_set_exactly_on_outliers() {
+        let w = synthzoo::demo_matrix(4, 256, 35);
+        let cfg = IcqConfig { bits: 2, outlier_ratio: 0.05, gap_bits: 5, ..Default::default() };
+        let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        let rt = q.to_runtime();
+        for r in 0..4 {
+            let positions = q.index_codes[r].decode();
+            for c in 0..256 {
+                let has_sel = rt.codes[r * 256 + c] & 0b100 != 0;
+                assert_eq!(has_sel, positions.contains(&c), "r={} c={}", r, c);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_footprint_shrinks_vs_fp16() {
+        let w = synthzoo::demo_matrix(64, 1024, 37);
+        let q = IcqMatrix::quantize(&w, None, &IcqConfig::default()).unwrap();
+        let rt = q.to_runtime();
+        let fp16_bytes = 64 * 1024 * 2;
+        // Runtime plane is byte-aligned (8 bits/weight) — less than fp16
+        // but more than the 2.31-bit storage plane; both are reported.
+        assert!(rt.memory_bytes() < fp16_bytes);
+        assert!(q.storage_bytes() < rt.memory_bytes());
+    }
+}

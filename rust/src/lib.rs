@@ -1,0 +1,37 @@
+//! # ICQuant — Index Coding enables Low-bit LLM Quantization
+//!
+//! A production-grade reproduction of *ICQuant* (Li, Hanna, Fragouli,
+//! Diggavi, 2025): outlier-aware weight-only post-training quantization
+//! where outlier **positions** are stored as b-bit gaps with an escape
+//! flag, costing ≈0.3 bits/weight instead of the ≈1 bit of a binary mask.
+//!
+//! The crate is organized as a three-layer stack (see `DESIGN.md`):
+//!
+//! * **Substrate** — [`util`], [`bitstream`]: PRNG, JSON, f16, special
+//!   functions, bit-level packing. Everything is `std`-only; the offline
+//!   vendored registry carries just the `xla` closure.
+//! * **Core library** — [`icq`] (the paper's index-coding contribution),
+//!   [`quant`] (RTN / weighted K-means / grouping / mixed-precision /
+//!   incoherence / VQ / GPTQ-lite baselines), [`icquant`] (the framework
+//!   gluing partitioning + coding + dual codebooks into a packed artifact),
+//!   [`stats`] (§2 statistics), [`synthzoo`] (synthetic model families).
+//! * **System** — [`model`] (weight/sensitivity artifacts), [`runtime`]
+//!   (PJRT executor for AOT-lowered JAX/Pallas HLO), [`eval`] (perplexity +
+//!   zero-shot tasks), [`coordinator`] (dynamic-batching serving stack),
+//!   [`experiments`] (one harness per paper table/figure), [`bench`]
+//!   (timing harness).
+
+pub mod util;
+pub mod bitstream;
+pub mod icq;
+pub mod quant;
+pub mod icquant;
+pub mod stats;
+pub mod synthzoo;
+pub mod model;
+pub mod runtime;
+pub mod eval;
+pub mod coordinator;
+pub mod experiments;
+pub mod bench;
+pub mod cli;

@@ -1,0 +1,284 @@
+//! Trained-model artifacts: weight manifest + flat f32 blobs produced by
+//! `python/compile/train.py`, plus the Fisher sensitivity plane.
+//!
+//! The manifest's tensor order is the ABI shared with the AOT-lowered HLO
+//! entries (`param_spec` in `python/compile/model.py`): the Rust side
+//! passes weights positionally, so order is load-bearing.
+
+use crate::util::json::Json;
+use crate::util::tensor::{read_f32_at, Matrix};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model architecture config (mirrors python `ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            vocab: j.req("vocab")?.as_usize().context("vocab")?,
+            d_model: j.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: j.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: j.req("n_heads")?.as_usize().context("n_heads")?,
+            d_ff: j.req("d_ff")?.as_usize().context("d_ff")?,
+            max_seq: j.req("max_seq")?.as_usize().context("max_seq")?,
+        })
+    }
+}
+
+/// One named tensor: 1-D (norms) or 2-D (projections/embeddings).
+#[derive(Clone, Debug)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View as a Matrix (2-D tensors only).
+    pub fn as_matrix(&self) -> Matrix {
+        assert_eq!(self.shape.len(), 2, "{} is not 2-D", self.name);
+        Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    /// Is this one of the seven quantizable projections?
+    pub fn is_projection(&self) -> bool {
+        const SUFFIXES: [&str; 7] =
+            [".wq", ".wk", ".wv", ".wo", ".w_gate", ".w_up", ".w_down"];
+        SUFFIXES.iter().any(|s| self.name.ends_with(s))
+    }
+
+    /// Layer-type label for statistics tables (q_proj, ..., down_proj).
+    pub fn layer_type(&self) -> Option<&'static str> {
+        let map = [
+            (".wq", "q_proj"),
+            (".wk", "k_proj"),
+            (".wv", "v_proj"),
+            (".wo", "o_proj"),
+            (".w_gate", "gate_proj"),
+            (".w_up", "up_proj"),
+            (".w_down", "down_proj"),
+        ];
+        map.iter()
+            .find(|(s, _)| self.name.ends_with(s))
+            .map(|(_, l)| *l)
+    }
+}
+
+/// A loaded trained model: config + ordered tensors + sensitivity.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub config: ModelConfig,
+    pub tensors: Vec<NamedTensor>,
+    /// Fisher diag (same order/shapes as tensors); empty if absent.
+    pub sensitivity: Vec<NamedTensor>,
+    pub val_loss: f64,
+    index: HashMap<String, usize>,
+}
+
+impl TrainedModel {
+    /// Load from an artifacts directory (`model_manifest.json` +
+    /// `model_weights.bin` [+ `sensitivity.bin`]).
+    pub fn load(dir: &Path) -> Result<TrainedModel> {
+        let manifest_path = dir.join("model_manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {}", e))?;
+        let config = ModelConfig::from_json(j.req("config")?)?;
+        let val_loss = j.get("val_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+
+        let weights_path = dir.join("model_weights.bin");
+        let sens_path = dir.join("sensitivity.bin");
+        let entries = j.req("tensors")?.as_arr().context("tensors not array")?;
+        let mut tensors = Vec::with_capacity(entries.len());
+        let mut sensitivity = Vec::new();
+        let have_sens = sens_path.exists();
+        for e in entries {
+            let name = e.req("name")?.as_str().context("name")?.to_string();
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|s| s.as_usize().context("shape elem"))
+                .collect::<Result<_>>()?;
+            let offset = e.req("offset")?.as_usize().context("offset")?;
+            let numel: usize = shape.iter().product();
+            let data = read_f32_at(&weights_path, offset, numel)?;
+            if have_sens {
+                let sdata = read_f32_at(&sens_path, offset, numel)?;
+                sensitivity.push(NamedTensor {
+                    name: name.clone(),
+                    shape: shape.clone(),
+                    data: sdata,
+                });
+            }
+            tensors.push(NamedTensor { name, shape, data });
+        }
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        Ok(TrainedModel { config, tensors, sensitivity, val_loss, index })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&NamedTensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn sensitivity_of(&self, name: &str) -> Option<&NamedTensor> {
+        self.index
+            .get(name)
+            .and_then(|&i| self.sensitivity.get(i))
+            .filter(|t| t.name == name)
+    }
+
+    /// All projection tensors (the quantization targets).
+    pub fn projections(&self) -> Vec<&NamedTensor> {
+        self.tensors.iter().filter(|t| t.is_projection()).collect()
+    }
+
+    /// Total projection parameters (what `bits/weight` averages over).
+    pub fn projection_params(&self) -> usize {
+        self.projections().iter().map(|t| t.numel()).sum()
+    }
+
+    /// Clone with some tensors' data replaced (post-quantization weights).
+    pub fn with_replaced(&self, replacements: &HashMap<String, Matrix>) -> TrainedModel {
+        let mut out = self.clone();
+        for t in out.tensors.iter_mut() {
+            if let Some(m) = replacements.get(&t.name) {
+                assert_eq!(
+                    (m.rows, m.cols),
+                    (t.shape[0], t.shape[1]),
+                    "replacement shape mismatch for {}",
+                    t.name
+                );
+                t.data = m.data.clone();
+            }
+        }
+        out
+    }
+
+    /// Validate tensor count/order against the python param_spec layout.
+    pub fn validate(&self) -> Result<()> {
+        let want = 1 + self.config.n_layers * 9 + 2;
+        if self.tensors.len() != want {
+            bail!("expected {} tensors, found {}", want, self.tensors.len());
+        }
+        if self.tensors[0].name != "tok_emb" {
+            bail!("first tensor must be tok_emb");
+        }
+        if self.tensors.last().unwrap().name != "lm_head" {
+            bail!("last tensor must be lm_head");
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory (./artifacts in the CWD, overridable
+/// with ICQ_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ICQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::write_f32_slice;
+
+    /// Build a miniature fake artifact set on disk for IO tests.
+    fn fake_artifacts(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "config": {"vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 2,
+                       "d_ff": 8, "max_seq": 16, "rope_theta": 10000.0,
+                       "norm_eps": 1e-5},
+            "val_loss": 1.5,
+            "tensors": [
+                {"name": "tok_emb", "shape": [8, 4], "offset": 0},
+                {"name": "l0.attn_norm", "shape": [4], "offset": 32},
+                {"name": "l0.wq", "shape": [4, 4], "offset": 36},
+                {"name": "l0.wk", "shape": [4, 4], "offset": 52},
+                {"name": "l0.wv", "shape": [4, 4], "offset": 68},
+                {"name": "l0.wo", "shape": [4, 4], "offset": 84},
+                {"name": "l0.mlp_norm", "shape": [4], "offset": 100},
+                {"name": "l0.w_gate", "shape": [8, 4], "offset": 104},
+                {"name": "l0.w_up", "shape": [8, 4], "offset": 136},
+                {"name": "l0.w_down", "shape": [4, 8], "offset": 168},
+                {"name": "final_norm", "shape": [4], "offset": 200},
+                {"name": "lm_head", "shape": [8, 4], "offset": 204}
+            ]
+        }"#;
+        std::fs::write(dir.join("model_manifest.json"), manifest).unwrap();
+        let total = 204 + 32;
+        let data: Vec<f32> = (0..total).map(|i| i as f32 * 0.01).collect();
+        let mut f = std::fs::File::create(dir.join("model_weights.bin")).unwrap();
+        write_f32_slice(&mut f, &data).unwrap();
+        let sens: Vec<f32> = (0..total).map(|i| (i % 7) as f32).collect();
+        let mut f = std::fs::File::create(dir.join("sensitivity.bin")).unwrap();
+        write_f32_slice(&mut f, &sens).unwrap();
+    }
+
+    #[test]
+    fn load_and_validate() {
+        let dir = std::env::temp_dir().join("icq_model_test");
+        fake_artifacts(&dir);
+        let m = TrainedModel::load(&dir).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.config.d_model, 4);
+        assert_eq!(m.tensors.len(), 12);
+        assert_eq!(m.get("l0.wq").unwrap().shape, vec![4, 4]);
+        // Offsets respected: tok_emb data starts at 0.
+        assert_eq!(m.get("tok_emb").unwrap().data[1], 0.01);
+        // wq at offset 36.
+        assert!((m.get("l0.wq").unwrap().data[0] - 0.36).abs() < 1e-6);
+        assert_eq!(m.val_loss, 1.5);
+    }
+
+    #[test]
+    fn projections_and_sensitivity() {
+        let dir = std::env::temp_dir().join("icq_model_test2");
+        fake_artifacts(&dir);
+        let m = TrainedModel::load(&dir).unwrap();
+        let projs = m.projections();
+        assert_eq!(projs.len(), 7);
+        assert!(m.get("tok_emb").map(|t| !t.is_projection()).unwrap());
+        let s = m.sensitivity_of("l0.wq").unwrap();
+        assert_eq!(s.shape, vec![4, 4]);
+        assert_eq!(m.get("l0.wo").unwrap().layer_type(), Some("o_proj"));
+    }
+
+    #[test]
+    fn with_replaced_swaps_data() {
+        let dir = std::env::temp_dir().join("icq_model_test3");
+        fake_artifacts(&dir);
+        let m = TrainedModel::load(&dir).unwrap();
+        let mut rep = HashMap::new();
+        rep.insert("l0.wq".to_string(), Matrix::zeros(4, 4));
+        let m2 = m.with_replaced(&rep);
+        assert!(m2.get("l0.wq").unwrap().data.iter().all(|&x| x == 0.0));
+        // Others untouched.
+        assert_eq!(m2.get("l0.wk").unwrap().data, m.get("l0.wk").unwrap().data);
+    }
+}

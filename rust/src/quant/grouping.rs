@@ -1,0 +1,137 @@
+//! Weight-grouping baseline (§1, §4.1 "Grouping").
+//!
+//! Divides each row into contiguous groups of size `g` and quantizes each
+//! group with its own parameters, exploiting reduced local ranges. The
+//! paper's §2 analysis shows this helps less than expected because
+//! outliers are *uniform* — most groups still contain one. The storage
+//! cost is one parameter set per group: for RTN, (scale, zero) as 2×f16 ⇒
+//! `32/g` extra bits/weight; for K-means, a full table ⇒ `2^n·16/g`.
+
+use super::{Codebook, QuantizerKind};
+use crate::util::tensor::Matrix;
+
+/// Result of grouped quantization.
+pub struct GroupedQuantized {
+    pub bits: u32,
+    pub group_size: usize,
+    pub codes: Vec<u16>,
+    /// One codebook per group, row-major: `rows × ceil(cols/g)`.
+    pub group_codebooks: Vec<Codebook>,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: QuantizerKind,
+}
+
+/// Quantize with per-group codebooks.
+pub fn quantize_grouped(
+    w: &Matrix,
+    sens: Option<&Matrix>,
+    kind: QuantizerKind,
+    bits: u32,
+    group_size: usize,
+) -> GroupedQuantized {
+    assert!(group_size >= 1);
+    let groups_per_row = w.cols.div_ceil(group_size);
+    let mut codes = vec![0u16; w.numel()];
+    let mut group_codebooks = Vec::with_capacity(w.rows * groups_per_row);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        let srow = sens.map(|s| s.row(r));
+        for g in 0..groups_per_row {
+            let lo = g * group_size;
+            let hi = (lo + group_size).min(w.cols);
+            let cb = kind.fit(&row[lo..hi], srow.map(|s| &s[lo..hi]), bits);
+            for c in lo..hi {
+                codes[r * w.cols + c] = cb.encode(row[c]);
+            }
+            group_codebooks.push(cb);
+        }
+    }
+    GroupedQuantized {
+        bits,
+        group_size,
+        codes,
+        group_codebooks,
+        rows: w.rows,
+        cols: w.cols,
+        kind,
+    }
+}
+
+impl GroupedQuantized {
+    pub fn dequantize(&self) -> Matrix {
+        let groups_per_row = self.cols.div_ceil(self.group_size);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let g = c / self.group_size;
+                let cb = &self.group_codebooks[r * groups_per_row + g];
+                out.set(r, c, cb.decode(self.codes[r * self.cols + c]));
+            }
+        }
+        out
+    }
+
+    /// Average bits/weight: code bits + per-group parameter amortization.
+    pub fn avg_bits_per_weight(&self) -> f64 {
+        self.bits as f64 + self.kind.param_bits(self.bits) as f64 / self.group_size as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn smaller_groups_lower_error() {
+        let w = random_matrix(8, 512, 3);
+        let e256 = w.mse(&quantize_grouped(&w, None, QuantizerKind::Rtn, 3, 256).dequantize());
+        let e64 = w.mse(&quantize_grouped(&w, None, QuantizerKind::Rtn, 3, 64).dequantize());
+        let e16 = w.mse(&quantize_grouped(&w, None, QuantizerKind::Rtn, 3, 16).dequantize());
+        assert!(e64 < e256 && e16 < e64, "{} {} {}", e256, e64, e16);
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        let w = random_matrix(2, 256, 5);
+        let q = quantize_grouped(&w, None, QuantizerKind::Rtn, 3, 64);
+        // RTN params 32 bits per group of 64 → 0.5 extra bits/weight.
+        assert!((q.avg_bits_per_weight() - 3.5).abs() < 1e-9);
+        let qk = quantize_grouped(&w, None, QuantizerKind::SensitiveKmeans, 2, 64);
+        // K-means table 4×16 bits per group of 64 → 1.0 extra.
+        assert!((qk.avg_bits_per_weight() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ragged_last_group() {
+        let w = random_matrix(3, 100, 7); // 100 = 64 + 36
+        let q = quantize_grouped(&w, None, QuantizerKind::Rtn, 2, 64);
+        let d = q.dequantize();
+        assert_eq!(d.cols, 100);
+        // All values within the row range (sanity).
+        for r in 0..3 {
+            let (lo, hi) = crate::quant::min_max(w.row(r));
+            for &v in d.row(r) {
+                assert!(v >= lo - 1e-5 && v <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn group_of_full_row_equals_per_row() {
+        let w = random_matrix(4, 128, 9);
+        let grouped = quantize_grouped(&w, None, QuantizerKind::Rtn, 3, 128);
+        let per_row = super::super::quantize_per_row(&w, None, QuantizerKind::Rtn, 3);
+        assert!((grouped.dequantize().mse(&per_row.dequantize())).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,259 @@
+//! Incoherence processing baseline (QuIP, Chee et al. 2023; §4.1).
+//!
+//! Applies random orthogonal transforms on both sides of the weight
+//! matrix, `W' = U W Vᵀ`, spreading outlier energy so the transformed
+//! matrix is "incoherent" (entries near-Gaussian). We use the standard
+//! randomized Hadamard construction `U = H·diag(±1)/√d` (QuIP#'s choice):
+//! exactly orthogonal, O(d log d) to apply, and seed-reproducible so
+//! inference can reapply the inverse.
+//!
+//! The paper's Appendix G.2 finding — rotation helps only when extreme
+//! outliers exist, and is ≈neutral on already-Gaussian weights — is
+//! reproduced by `icquant exp fig10`.
+
+use crate::util::prng::Rng;
+use crate::util::tensor::Matrix;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized). len must be a
+/// power of two.
+pub fn fwht(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length {} not a power of two", n);
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = v[j];
+                let y = v[j + h];
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// A seeded randomized-Hadamard orthogonal transform of dimension `d`
+/// (power of two): `Q = H·D/√d`, `D = diag(±1)`.
+#[derive(Clone, Debug)]
+pub struct HadamardTransform {
+    pub d: usize,
+    signs: Vec<f32>,
+}
+
+impl HadamardTransform {
+    pub fn new(d: usize, seed: u64) -> HadamardTransform {
+        assert!(d.is_power_of_two());
+        let mut rng = Rng::new(seed);
+        let signs = (0..d).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+        HadamardTransform { d, signs }
+    }
+
+    /// y = Q x (in place).
+    pub fn forward(&self, v: &mut [f32]) {
+        assert_eq!(v.len(), self.d);
+        for (x, s) in v.iter_mut().zip(&self.signs) {
+            *x *= s;
+        }
+        fwht(v);
+        let scale = 1.0 / (self.d as f32).sqrt();
+        for x in v.iter_mut() {
+            *x *= scale;
+        }
+    }
+
+    /// x = Qᵀ y (in place). Since Q = H·D/√d and H is symmetric with
+    /// H² = d·I: Qᵀ = D·H/√d.
+    pub fn inverse(&self, v: &mut [f32]) {
+        assert_eq!(v.len(), self.d);
+        fwht(v);
+        let scale = 1.0 / (self.d as f32).sqrt();
+        for (x, s) in v.iter_mut().zip(&self.signs) {
+            *x *= scale * *s;
+        }
+    }
+}
+
+/// Two-sided incoherence processing of a weight matrix (rows and columns
+/// must be powers of two — callers pad if needed; the model dims we use
+/// are already powers of two, as are Llama's).
+pub struct Incoherence {
+    pub row_t: HadamardTransform,
+    pub col_t: HadamardTransform,
+}
+
+impl Incoherence {
+    pub fn new(rows: usize, cols: usize, seed: u64) -> Incoherence {
+        Incoherence {
+            row_t: HadamardTransform::new(rows, seed ^ 0xA5A5),
+            col_t: HadamardTransform::new(cols, seed ^ 0x5A5A),
+        }
+    }
+
+    /// W' = U W Vᵀ.
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        let mut out = w.clone();
+        // Transform each row by col_t…
+        for r in 0..out.rows {
+            self.col_t.forward(out.row_mut(r));
+        }
+        // …then each column by row_t (via transpose trick).
+        let mut t = out.transpose();
+        for r in 0..t.rows {
+            self.row_t.forward(t.row_mut(r));
+        }
+        t.transpose()
+    }
+
+    /// W = Uᵀ W' V.
+    pub fn invert(&self, w: &Matrix) -> Matrix {
+        let mut t = w.transpose();
+        for r in 0..t.rows {
+            self.row_t.inverse(t.row_mut(r));
+        }
+        let mut out = t.transpose();
+        for r in 0..out.rows {
+            self.col_t.inverse(out.row_mut(r));
+        }
+        out
+    }
+}
+
+/// Zero-pad a matrix to power-of-two dims (Hadamard needs them); the
+/// companion crop undoes it. Padding with zeros is exact: the rotation
+/// mixes the zeros in, and the inverse + crop restores the original
+/// support.
+pub fn pad_pow2(w: &Matrix) -> Matrix {
+    let r = w.rows.next_power_of_two();
+    let c = w.cols.next_power_of_two();
+    if (r, c) == (w.rows, w.cols) {
+        return w.clone();
+    }
+    let mut out = Matrix::zeros(r, c);
+    for i in 0..w.rows {
+        out.row_mut(i)[..w.cols].copy_from_slice(w.row(i));
+    }
+    out
+}
+
+pub fn crop(w: &Matrix, rows: usize, cols: usize) -> Matrix {
+    let mut out = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        out.row_mut(i).copy_from_slice(&w.row(i)[..cols]);
+    }
+    out
+}
+
+/// QuIP-lite: incoherence-process, quantize per-row with `kind`, invert.
+/// Non-power-of-two shapes are zero-padded for the transform.
+pub fn quantize_incoherent(
+    w: &Matrix,
+    kind: super::QuantizerKind,
+    bits: u32,
+    seed: u64,
+) -> Matrix {
+    let padded = pad_pow2(w);
+    let inc = Incoherence::new(padded.rows, padded.cols, seed);
+    let wt = inc.apply(&padded);
+    let q = super::quantize_per_row(&wt, None, kind, bits);
+    crop(&inc.invert(&q.dequantize()), w.rows, w.cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn fwht_known_values() {
+        let mut v = vec![1.0f32, 0.0, 0.0, 0.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0]);
+        let mut v = vec![1.0f32, 1.0, 1.0, 1.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![4.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn transform_is_orthogonal() {
+        // forward then inverse is identity; norms preserved.
+        let t = HadamardTransform::new(64, 42);
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let mut v = orig.clone();
+        let norm0: f32 = v.iter().map(|x| x * x).sum();
+        t.forward(&mut v);
+        let norm1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((norm0 - norm1).abs() / norm0 < 1e-5);
+        t.inverse(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn two_sided_roundtrip() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::from_vec(16, 32, (0..512).map(|_| rng.normal() as f32).collect());
+        let inc = Incoherence::new(16, 32, 7);
+        let back = inc.invert(&inc.apply(&w));
+        assert!(w.mse(&back) < 1e-10);
+    }
+
+    #[test]
+    fn suppresses_extreme_outlier() {
+        // Appendix G.2 case 1: a single huge spike spreads out under the
+        // rotation, shrinking the max |entry| dramatically.
+        let mut w = Matrix::zeros(64, 64);
+        for r in 0..64 {
+            for c in 0..64 {
+                w.set(r, c, ((r * 64 + c) as f32).sin() * 0.02);
+            }
+        }
+        w.set(10, 20, 50.0);
+        let inc = Incoherence::new(64, 64, 3);
+        let wt = inc.apply(&w);
+        let max0 = w.data.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let max1 = wt.data.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert!(max1 < max0 * 0.1, "max {} -> {}", max0, max1);
+    }
+
+    #[test]
+    fn neutral_on_gaussian_weights() {
+        // Appendix G.2 case 2: already-Gaussian weights keep ≈ the same
+        // range after rotation — the paper's explanation for QuIP's small
+        // gains outside the first blocks.
+        let mut rng = Rng::new(4);
+        let w = Matrix::from_vec(
+            128,
+            128,
+            (0..128 * 128).map(|_| rng.normal() as f32).collect(),
+        );
+        let inc = Incoherence::new(128, 128, 5);
+        let wt = inc.apply(&w);
+        let range = |m: &Matrix| {
+            let (lo, hi) = crate::quant::min_max(&m.data);
+            (hi - lo) as f64
+        };
+        let r0 = range(&w);
+        let r1 = range(&wt);
+        assert!((r1 / r0 - 1.0).abs() < 0.15, "range ratio {}", r1 / r0);
+    }
+
+    #[test]
+    fn quip_lite_end_to_end_better_with_spike() {
+        let mut rng = Rng::new(6);
+        let mut w = Matrix::from_vec(
+            64,
+            64,
+            (0..4096).map(|_| rng.normal() as f32 * 0.02).collect(),
+        );
+        w.set(0, 0, 5.0);
+        let rot = quantize_incoherent(&w, super::super::QuantizerKind::Rtn, 3, 11);
+        let plain = super::super::quantize_per_row(&w, None, super::super::QuantizerKind::Rtn, 3)
+            .dequantize();
+        assert!(w.mse(&rot) < w.mse(&plain));
+    }
+}

@@ -1,0 +1,177 @@
+//! Mixed-precision baseline (SqueezeLLM-lite "dense-and-sparse"; §4.1).
+//!
+//! Keeps the top-γ outliers per row in FP16 (value + absolute column
+//! index) and quantizes the remaining inliers with the sensitivity-aware
+//! K-means quantizer. Storage overhead per outlier: 16-bit value + 16-bit
+//! index = 32 bits ⇒ `32·γ` extra bits/weight — the ≈1 bit/halved-range
+//! cost the paper contrasts with ICQuant's ≈0.3.
+
+use super::{Codebook, QuantizerKind};
+use crate::util::f16::to_f16_precision;
+use crate::util::tensor::Matrix;
+
+pub struct MixedPrecision {
+    pub bits: u32,
+    pub outlier_ratio: f64,
+    pub codes: Vec<u16>,
+    pub row_codebooks: Vec<Codebook>,
+    /// (row, col, f16-precision value) triples for the sparse part.
+    pub outliers: Vec<(u32, u32, f32)>,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: QuantizerKind,
+}
+
+/// Split top-γ |w| per row into FP16 sparse storage; quantize the rest.
+pub fn quantize_mixed(
+    w: &Matrix,
+    sens: Option<&Matrix>,
+    kind: QuantizerKind,
+    bits: u32,
+    outlier_ratio: f64,
+) -> MixedPrecision {
+    let k = ((outlier_ratio * w.cols as f64).floor() as usize).min(w.cols);
+    let mut codes = vec![0u16; w.numel()];
+    let mut row_codebooks = Vec::with_capacity(w.rows);
+    let mut outliers = Vec::with_capacity(w.rows * k);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        let srow = sens.map(|s| s.row(r));
+        let outlier_cols = top_k_by_magnitude(row, k);
+        let mut is_outlier = vec![false; w.cols];
+        for &c in &outlier_cols {
+            is_outlier[c] = true;
+            outliers.push((r as u32, c as u32, to_f16_precision(row[c])));
+        }
+        let inliers: Vec<f32> =
+            (0..w.cols).filter(|&c| !is_outlier[c]).map(|c| row[c]).collect();
+        let inlier_sens: Option<Vec<f32>> = srow.map(|s| {
+            (0..w.cols).filter(|&c| !is_outlier[c]).map(|c| s[c]).collect()
+        });
+        let cb = kind.fit(&inliers, inlier_sens.as_deref(), bits);
+        for c in 0..w.cols {
+            if !is_outlier[c] {
+                codes[r * w.cols + c] = cb.encode(row[c]);
+            }
+        }
+        row_codebooks.push(cb);
+    }
+    MixedPrecision {
+        bits,
+        outlier_ratio,
+        codes,
+        row_codebooks,
+        outliers,
+        rows: w.rows,
+        cols: w.cols,
+        kind,
+    }
+}
+
+/// Column indices of the `k` largest |values| (ties broken by index).
+pub fn top_k_by_magnitude(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    if k < row.len() {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            row[b].abs().partial_cmp(&row[a].abs()).unwrap().then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+impl MixedPrecision {
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let cb = &self.row_codebooks[r];
+            for c in 0..self.cols {
+                out.set(r, c, cb.decode(self.codes[r * self.cols + c]));
+            }
+        }
+        for &(r, c, v) in &self.outliers {
+            out.set(r as usize, c as usize, v);
+        }
+        out
+    }
+
+    /// Average bits/weight: quantized codes for everyone (the sparse format
+    /// still burns a code slot) + 32 bits per outlier + codebook.
+    pub fn avg_bits_per_weight(&self) -> f64 {
+        let outlier_bits = 32.0 * self.outliers.len() as f64 / self.codes.len() as f64;
+        self.bits as f64
+            + outlier_bits
+            + self.kind.param_bits(self.bits) as f64 / self.cols as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn heavy_tailed(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| {
+                    if rng.bool(0.05) {
+                        (rng.student_t(2.0) * 2.0) as f32
+                    } else {
+                        rng.normal() as f32 * 0.2
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn top_k_selects_largest() {
+        let row = [0.1f32, -5.0, 0.2, 3.0, -0.05];
+        assert_eq!(top_k_by_magnitude(&row, 2), vec![1, 3]);
+        assert_eq!(top_k_by_magnitude(&row, 0), Vec::<usize>::new());
+        assert_eq!(top_k_by_magnitude(&row, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn outliers_survive_in_fp16() {
+        let w = heavy_tailed(4, 256, 17);
+        let q = quantize_mixed(&w, None, QuantizerKind::SensitiveKmeans, 2, 0.05);
+        let d = q.dequantize();
+        // Every stored outlier reconstructs to f16 precision of original.
+        for &(r, c, _) in &q.outliers {
+            let orig = w.get(r as usize, c as usize);
+            let rec = d.get(r as usize, c as usize);
+            assert!((rec - orig).abs() <= orig.abs() / 1024.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn beats_plain_quantization_on_heavy_tails() {
+        let w = heavy_tailed(8, 512, 23);
+        let mixed = quantize_mixed(&w, None, QuantizerKind::SensitiveKmeans, 2, 0.05);
+        let plain = crate::quant::quantize_per_row(&w, None, QuantizerKind::SensitiveKmeans, 2);
+        assert!(w.mse(&mixed.dequantize()) < w.mse(&plain.dequantize()));
+    }
+
+    #[test]
+    fn overhead_is_32_gamma() {
+        let w = heavy_tailed(4, 1000, 29);
+        let q = quantize_mixed(&w, None, QuantizerKind::Rtn, 2, 0.05);
+        // 50 outliers/row × 32 bits / 1000 weights = 1.6, plus codes 2 and
+        // RTN params 32/1000.
+        assert!((q.avg_bits_per_weight() - (2.0 + 1.6 + 0.032)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_ratio_degenerates_to_plain() {
+        let w = heavy_tailed(2, 128, 31);
+        let q = quantize_mixed(&w, None, QuantizerKind::Rtn, 3, 0.0);
+        assert!(q.outliers.is_empty());
+        let plain = crate::quant::quantize_per_row(&w, None, QuantizerKind::Rtn, 3);
+        assert!((q.dequantize().mse(&plain.dequantize())).abs() < 1e-12);
+    }
+}

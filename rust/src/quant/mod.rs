@@ -1,0 +1,269 @@
+//! Quantizers and outlier-suppression baselines.
+//!
+//! The paper positions ICQuant as a *framework* usable on top of any
+//! quantizer (§3) and compares it against the standard suppression
+//! techniques (§4.1). This module provides:
+//!
+//! * [`Codebook`] — the common representation: `2^n` scalar levels per
+//!   quantization unit (a row, a group, or a whole tensor).
+//! * [`rtn`] — rounding-to-nearest uniform quantization (min/max affine).
+//! * [`kmeans`] — sensitivity-aware weighted K-means (SqueezeLLM's
+//!   quantizer; ICQuant^SK uses this on each partition).
+//! * [`grouping`] — per-group quantization baseline (GPTQ/AWQ-style).
+//! * [`clipping`] — grid-searched clipped RTN (OmniQuant-lite).
+//! * [`mixed_precision`] — FP16 outliers + quantized inliers
+//!   (SqueezeLLM-lite "dense-and-sparse").
+//! * [`incoherence`] — randomized-Hadamard incoherence processing
+//!   (QuIP/QuIP#-style rotation).
+//! * [`vq`] — d-dimensional vector quantization with k-means codebooks
+//!   (AQLM/QuIP#-lite).
+//! * [`gptq`] — GPTQ adaptive rounding with Hessian error compensation.
+
+pub mod rtn;
+pub mod kmeans;
+pub mod grouping;
+pub mod clipping;
+pub mod mixed_precision;
+pub mod incoherence;
+pub mod vq;
+pub mod gptq;
+
+use crate::util::tensor::Matrix;
+
+/// Which base scalar quantizer a method uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum QuantizerKind {
+    /// Rounding-to-nearest uniform (affine min/max).
+    #[default]
+    Rtn,
+    /// Sensitivity-aware weighted K-means (SqueezeLLM §E.1).
+    SensitiveKmeans,
+}
+
+impl QuantizerKind {
+    /// Fit a codebook on `values` with optional per-value sensitivity.
+    pub fn fit(&self, values: &[f32], sens: Option<&[f32]>, bits: u32) -> Codebook {
+        match self {
+            QuantizerKind::Rtn => rtn::fit_rtn(values, bits),
+            QuantizerKind::SensitiveKmeans => kmeans::fit_kmeans(values, sens, bits, 25),
+        }
+    }
+
+    /// Bits needed to store this quantizer's parameters for one unit
+    /// (per row here): RTN stores (scale, zero) as 2×f16; K-means stores
+    /// the full 2^n level table as f16.
+    pub fn param_bits(&self, bits: u32) -> usize {
+        match self {
+            QuantizerKind::Rtn => 2 * 16,
+            QuantizerKind::SensitiveKmeans => (1usize << bits) * 16,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantizerKind::Rtn => "RTN",
+            QuantizerKind::SensitiveKmeans => "SK",
+        }
+    }
+}
+
+/// A scalar codebook: `levels` sorted ascending, one entry per code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    pub levels: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mut levels: Vec<f32>) -> Codebook {
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Codebook { levels }
+    }
+
+    pub fn bits(&self) -> u32 {
+        debug_assert!(self.levels.len().is_power_of_two());
+        self.levels.len().trailing_zeros()
+    }
+
+    /// Nearest-level code for `x` (binary search — levels are sorted).
+    #[inline]
+    pub fn encode(&self, x: f32) -> u16 {
+        let lv = &self.levels;
+        match lv.binary_search_by(|l| l.partial_cmp(&x).unwrap()) {
+            Ok(i) => i as u16,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i >= lv.len() {
+                    (lv.len() - 1) as u16
+                } else {
+                    // Tie-break toward the closer level.
+                    if (x - lv[i - 1]) <= (lv[i] - x) {
+                        (i - 1) as u16
+                    } else {
+                        i as u16
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn decode(&self, code: u16) -> f32 {
+        self.levels[code as usize]
+    }
+
+    /// Quantize a slice in one pass; returns (codes, reconstruction).
+    pub fn quantize(&self, values: &[f32]) -> (Vec<u16>, Vec<f32>) {
+        let mut codes = Vec::with_capacity(values.len());
+        let mut recon = Vec::with_capacity(values.len());
+        for &x in values {
+            let c = self.encode(x);
+            codes.push(c);
+            recon.push(self.decode(c));
+        }
+        (codes, recon)
+    }
+
+    /// Sum of squared quantization errors over `values`.
+    pub fn sq_err(&self, values: &[f32]) -> f64 {
+        values
+            .iter()
+            .map(|&x| {
+                let d = (x - self.decode(self.encode(x))) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Store levels at f16 precision (what serialization does), mirroring
+    /// deployment where lookup tables live in half precision.
+    pub fn to_f16_precision(&self) -> Codebook {
+        Codebook {
+            levels: self
+                .levels
+                .iter()
+                .map(|&x| crate::util::f16::to_f16_precision(x))
+                .collect(),
+        }
+    }
+}
+
+/// Dense quantization result for a full matrix with per-row codebooks —
+/// the common output shape for the baseline methods.
+pub struct QuantizedMatrix {
+    pub bits: u32,
+    pub codes: Vec<u16>,
+    pub row_codebooks: Vec<Codebook>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Extra storage (bits/weight) beyond codes+codebooks that the method
+    /// carries (e.g. FP16 outliers, group scales); for accounting.
+    pub extra_bits_per_weight: f64,
+}
+
+impl QuantizedMatrix {
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let cb = &self.row_codebooks[r];
+            let row = out.row_mut(r);
+            for c in 0..self.cols {
+                row[c] = cb.decode(self.codes[r * self.cols + c]);
+            }
+        }
+        out
+    }
+
+    /// Average bits/weight including per-row parameters.
+    pub fn avg_bits_per_weight(&self, kind: QuantizerKind) -> f64 {
+        let code_bits = self.bits as f64;
+        let param_bits = kind.param_bits(self.bits) as f64 / self.cols as f64;
+        code_bits + param_bits + self.extra_bits_per_weight
+    }
+}
+
+/// Quantize a full matrix with one codebook per row (the paper's
+/// per-output-channel granularity) using `kind`.
+pub fn quantize_per_row(
+    w: &Matrix,
+    sens: Option<&Matrix>,
+    kind: QuantizerKind,
+    bits: u32,
+) -> QuantizedMatrix {
+    let mut codes = vec![0u16; w.numel()];
+    let mut row_codebooks = Vec::with_capacity(w.rows);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        let srow = sens.map(|s| s.row(r));
+        let cb = kind.fit(row, srow, bits);
+        for (c, &x) in row.iter().enumerate() {
+            codes[r * w.cols + c] = cb.encode(x);
+        }
+        row_codebooks.push(cb);
+    }
+    QuantizedMatrix {
+        bits,
+        codes,
+        row_codebooks,
+        rows: w.rows,
+        cols: w.cols,
+        extra_bits_per_weight: 0.0,
+    }
+}
+
+/// Per-row min/max helper.
+pub fn min_max(values: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in values {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codebook_encode_nearest() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(cb.encode(-5.0), 0);
+        assert_eq!(cb.encode(0.4), 1);
+        assert_eq!(cb.encode(0.6), 2);
+        assert_eq!(cb.encode(10.0), 3);
+        assert_eq!(cb.encode(0.5), 1); // tie → lower
+        assert_eq!(cb.bits(), 2);
+    }
+
+    #[test]
+    fn quantize_roundtrip_on_levels() {
+        let cb = Codebook::new(vec![-2.0, -1.0, 1.0, 2.0]);
+        let (codes, recon) = cb.quantize(&[-2.0, 1.0, 2.0]);
+        assert_eq!(codes, vec![0, 2, 3]);
+        assert_eq!(recon, vec![-2.0, 1.0, 2.0]);
+        assert_eq!(cb.sq_err(&[-2.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn per_row_quantization_shapes() {
+        let w = Matrix::from_vec(2, 4, vec![0.0, 1.0, 2.0, 3.0, -3.0, -2.0, -1.0, 0.0]);
+        let q = quantize_per_row(&w, None, QuantizerKind::Rtn, 2);
+        assert_eq!(q.row_codebooks.len(), 2);
+        assert_eq!(q.codes.len(), 8);
+        let deq = q.dequantize();
+        assert_eq!(deq.rows, 2);
+        // 2 bits over 4 distinct uniform values → exact.
+        assert!(w.mse(&deq) < 1e-12);
+    }
+
+    #[test]
+    fn min_max_basic() {
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+    }
+}

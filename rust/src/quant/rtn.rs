@@ -1,0 +1,139 @@
+//! Rounding-to-nearest (RTN) uniform quantization.
+//!
+//! The simplest scalar quantizer: `2^n` equally-spaced levels spanning
+//! `[min, max]` of the unit being quantized (asymmetric affine, matching
+//! the "vanilla-RTN" baseline in Fig 3/Fig 5). ICQuant^RTN applies this
+//! independently to the inlier and outlier partitions; because each
+//! partition covers ≈half the range, n-bit ICQuant^RTN matches the
+//! resolution of (n+1)-bit vanilla RTN (paper Fig 3).
+
+use super::Codebook;
+
+/// Fit a uniform codebook spanning `[min, max]` of `values`.
+pub fn fit_rtn(values: &[f32], bits: u32) -> Codebook {
+    let (lo, hi) = super::min_max(values);
+    fit_rtn_range(lo, hi, bits)
+}
+
+/// Uniform codebook over an explicit range.
+pub fn fit_rtn_range(lo: f32, hi: f32, bits: u32) -> Codebook {
+    assert!(bits >= 1 && bits <= 8);
+    let n = 1usize << bits;
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        // Degenerate (constant or empty input): all levels equal.
+        let v = if lo.is_finite() { lo } else { 0.0 };
+        return Codebook { levels: vec![v; n] };
+    }
+    let step = (hi - lo) / (n - 1) as f32;
+    Codebook {
+        levels: (0..n).map(|i| lo + step * i as f32).collect(),
+    }
+}
+
+/// The paper's ICQuant^RTN outlier treatment (Appendix E.1): positive and
+/// negative outliers sit on the two tails, so spend 1 bit on the sign and
+/// quantize each side with an (n−1)-bit uniform codebook over its own
+/// range. Returns a single 2^n-entry codebook realizing that layout.
+pub fn fit_rtn_two_sided(values: &[f32], bits: u32) -> Codebook {
+    assert!(bits >= 2, "two-sided RTN needs ≥2 bits");
+    let neg: Vec<f32> = values.iter().copied().filter(|&x| x < 0.0).collect();
+    let pos: Vec<f32> = values.iter().copied().filter(|&x| x >= 0.0).collect();
+    let half = 1usize << (bits - 1);
+    let mut levels = Vec::with_capacity(1 << bits);
+    let side = |vals: &[f32]| -> Vec<f32> {
+        if vals.is_empty() {
+            return vec![0.0; half];
+        }
+        let (lo, hi) = super::min_max(vals);
+        fit_rtn_range(lo, hi, bits - 1).levels
+    };
+    levels.extend(side(&neg));
+    levels.extend(side(&pos));
+    Codebook::new(levels)
+}
+
+/// RTN quantization error for a given range on a slice — used by the
+/// clipping grid search.
+pub fn rtn_sq_err(values: &[f32], lo: f32, hi: f32, bits: u32) -> f64 {
+    let cb = fit_rtn_range(lo, hi, bits);
+    cb.sq_err(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn levels_are_uniform_and_cover_range() {
+        let cb = fit_rtn(&[-1.0, 0.2, 3.0], 3);
+        assert_eq!(cb.levels.len(), 8);
+        assert_eq!(cb.levels[0], -1.0);
+        assert_eq!(cb.levels[7], 3.0);
+        let step = cb.levels[1] - cb.levels[0];
+        for w in cb.levels.windows(2) {
+            assert!((w[1] - w[0] - step).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn max_error_is_half_step() {
+        let (lo, hi, bits) = (-2.0f32, 2.0f32, 3u32);
+        let cb = fit_rtn_range(lo, hi, bits);
+        let step = (hi - lo) / 7.0;
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = lo + rng.f32() * (hi - lo);
+            let err = (x - cb.decode(cb.encode(x))).abs();
+            assert!(err <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_input() {
+        let cb = fit_rtn(&[5.0, 5.0, 5.0], 2);
+        assert_eq!(cb.decode(cb.encode(5.0)), 5.0);
+    }
+
+    #[test]
+    fn halved_range_gains_one_bit() {
+        // The paper's core resolution argument (§2): halving the range at
+        // n−1 bits matches the full range at n bits.
+        let full = fit_rtn_range(-1.0, 1.0, 3);
+        let half = fit_rtn_range(-0.5, 0.5, 2);
+        let step_full = full.levels[1] - full.levels[0];
+        let step_half = half.levels[1] - half.levels[0];
+        // steps: 2/7 vs 1/3 — comparable resolution (within 20 %).
+        assert!((step_half / step_full - 7.0 / 6.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn two_sided_separates_tails() {
+        // Outlier values on two tails; two-sided RTN must place half the
+        // levels on each side.
+        let vals: Vec<f32> = vec![-3.0, -2.8, -2.5, 2.4, 2.9, 3.1];
+        let cb = fit_rtn_two_sided(&vals, 3);
+        assert_eq!(cb.levels.len(), 8);
+        let neg = cb.levels.iter().filter(|&&x| x < 0.0).count();
+        assert_eq!(neg, 4);
+        // Every input lands within its own tail's range.
+        for &v in &vals {
+            let r = cb.decode(cb.encode(v));
+            assert!((r - v).abs() < 0.35, "v={} r={}", v, r);
+        }
+    }
+
+    #[test]
+    fn clip_reduces_error_with_outlier() {
+        // Clipping a moderate outlier shrinks error for the (large) bulk
+        // by more than the clamp penalty — the premise of the clipping
+        // baseline. (A single *extreme* outlier flips this: the clamp
+        // penalty dominates, which is exactly why clipping underperforms
+        // in the paper's comparisons.)
+        let mut vals: Vec<f32> = (0..1000).map(|i| (i as f32 / 500.0) - 1.0).collect();
+        vals.push(3.0);
+        let full = rtn_sq_err(&vals, -1.0, 3.0, 3);
+        let clipped = rtn_sq_err(&vals, -1.0, 1.0, 3);
+        assert!(clipped < full, "clipped {} full {}", clipped, full);
+    }
+}

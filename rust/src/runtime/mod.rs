@@ -1,0 +1,335 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute from
+//! the serving/eval hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU): HLO **text** is the
+//! interchange format — jax ≥0.5 emits 64-bit instruction ids in
+//! serialized protos which this XLA rejects; the text parser reassigns
+//! ids (see /opt/xla-example/README.md). Executables are compiled lazily
+//! and cached per entry name; model weights can be uploaded once as
+//! device buffers and reused across calls ([`Engine::upload`]).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Input/output spec of one AOT entry (from aot_manifest.json).
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed aot_manifest.json.
+#[derive(Clone, Debug)]
+pub struct AotManifest {
+    pub eval_batch: usize,
+    pub prefill_len: usize,
+    pub buckets: Vec<usize>,
+    pub q_bits: Vec<usize>,
+    pub entries: HashMap<String, EntrySpec>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .context("specs not array")?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                shape: s
+                    .req("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: s.req("dtype")?.as_str().context("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl AotManifest {
+    pub fn load(dir: &Path) -> Result<AotManifest> {
+        let path = dir.join("aot_manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("aot manifest: {}", e))?;
+        let mut entries = HashMap::new();
+        for e in j.req("entries")?.as_arr().context("entries")? {
+            let name = e.req("name")?.as_str().context("name")?.to_string();
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name,
+                    file: e.req("file")?.as_str().context("file")?.to_string(),
+                    inputs: parse_specs(e.req("inputs")?)?,
+                    outputs: parse_specs(e.req("outputs")?)?,
+                },
+            );
+        }
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            j.req(key)?
+                .as_arr()
+                .context("arr")?
+                .iter()
+                .map(|v| v.as_usize().context("elem"))
+                .collect()
+        };
+        Ok(AotManifest {
+            eval_batch: j.req("eval_batch")?.as_usize().context("eval_batch")?,
+            prefill_len: j.req("prefill_len")?.as_usize().context("prefill_len")?,
+            buckets: usize_arr("buckets")?,
+            q_bits: usize_arr("q_bits")?,
+            entries,
+        })
+    }
+}
+
+/// A host-side tensor heading into PJRT.
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32(data, shape) => {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    Ok(lit.reshape(&dims)?)
+                }
+            }
+            HostTensor::I32(data, shape) => {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    Ok(lit.reshape(&dims)?)
+                }
+            }
+        }
+    }
+}
+
+/// A device buffer paired with the host literal it was copied from.
+/// The literal must outlive the buffer because the host→device copy is
+/// asynchronous (see [`Engine::upload`]).
+pub struct ResidentBuffer {
+    buffer: xla::PjRtBuffer,
+    _literal: xla::Literal,
+}
+
+impl ResidentBuffer {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buffer
+    }
+}
+
+/// The PJRT engine: one CPU client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: AotManifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile-time per entry (for metrics/EXPERIMENTS.md).
+    pub compile_ms: HashMap<String, f64>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = AotManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            executables: HashMap::new(),
+            compile_ms: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &AotManifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an entry.
+    pub fn prepare(&mut self, entry: &str) -> Result<()> {
+        if self.executables.contains_key(entry) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("unknown AOT entry '{}'", entry))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {}", path.display(), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_ms
+            .insert(entry.to_string(), t0.elapsed().as_secs_f64() * 1e3);
+        self.executables.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry with host tensors; returns untupled output
+    /// literals.
+    pub fn execute(&mut self, entry: &str, args: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        self.prepare(entry)?;
+        let spec = &self.manifest.entries[entry];
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "entry '{}' expects {} inputs, got {}",
+                entry,
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_literals(entry, &refs)
+    }
+
+    /// Execute with pre-built literal references (the weight literals are
+    /// built once by the coordinator and borrowed on every call — no
+    /// per-call host copies).
+    pub fn execute_literals(
+        &mut self,
+        entry: &str,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.prepare(entry)?;
+        let exe = &self.executables[entry];
+        let result = exe.execute::<&xla::Literal>(literals)?;
+        Self::untuple(result)
+    }
+
+    /// Upload a host literal to the device once; the returned
+    /// [`ResidentBuffer`] can be reused across any number of
+    /// [`Engine::execute_buffers`] calls. This is the §Perf optimization
+    /// that removes the per-step weight copy from the decode loop
+    /// (EXPERIMENTS.md §Perf).
+    ///
+    /// `BufferFromHostLiteral` copies **asynchronously**, so the source
+    /// literal is moved into the returned handle and kept alive for the
+    /// buffer's lifetime — dropping it early is a use-after-free inside
+    /// XLA (observed as SIGSEGV with xla_extension 0.5.1).
+    pub fn upload(&self, lit: xla::Literal) -> Result<ResidentBuffer> {
+        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(ResidentBuffer { buffer, _literal: lit })
+    }
+
+    /// Upload a batch of literals (e.g. the model weights), then **block
+    /// until every copy has landed**. The TFRT CPU client's async
+    /// `CopyFromLiteral` tasks race with concurrent XLA compilation
+    /// (observed SIGSEGV inside `ShapeUtil::ByteSizeOf` when a compile
+    /// overlapped in-flight copies); the bulk upload path always runs
+    /// near a compile, so it synchronizes. The crate exposes no
+    /// buffer-ready wait, so we force completion with a readback of each
+    /// buffer — load-time only, ~µs/MB.
+    pub fn upload_all(&self, lits: Vec<xla::Literal>) -> Result<Vec<ResidentBuffer>> {
+        let bufs: Vec<ResidentBuffer> =
+            lits.into_iter().map(|l| self.upload(l)).collect::<Result<_>>()?;
+        for b in &bufs {
+            let _ = b.buffer.to_literal_sync()?; // barrier
+        }
+        Ok(bufs)
+    }
+
+    /// Execute with device-resident buffers (weights uploaded once via
+    /// [`Engine::upload_all`], per-call data uploaded via
+    /// [`Engine::upload`]).
+    pub fn execute_buffers(
+        &mut self,
+        entry: &str,
+        buffers: &[&ResidentBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.prepare(entry)?;
+        let exe = &self.executables[entry];
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| &b.buffer).collect();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        Self::untuple(result)
+    }
+
+    fn untuple(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(out.to_tuple()?)
+    }
+
+    /// Read back a literal as f32s.
+    pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Read back the first element of a scalar f32 literal.
+    pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        Ok(lit.get_first_element::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_literal_shapes() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let t = HostTensor::scalar_i32(7);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("icq_rt_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("aot_manifest.json"),
+            r#"{"eval_batch": 4, "prefill_len": 64, "buckets": [1, 2],
+                "q_bits": [2], "config": {},
+                "entries": [{"name": "e1", "file": "e1.hlo.txt",
+                  "inputs": [{"shape": [4, 128], "dtype": "i32"}],
+                  "outputs": [{"shape": [], "dtype": "f32"}]}]}"#,
+        )
+        .unwrap();
+        let m = AotManifest::load(&dir).unwrap();
+        assert_eq!(m.eval_batch, 4);
+        assert_eq!(m.buckets, vec![1, 2]);
+        let e = &m.entries["e1"];
+        assert_eq!(e.inputs[0].shape, vec![4, 128]);
+        assert_eq!(e.outputs[0].dtype, "f32");
+    }
+
+    // Engine execution against real HLO is covered by rust/tests/
+    // integration tests (requires `make artifacts`).
+}

@@ -1,0 +1,208 @@
+//! Statistics of outliers (paper §2, Appendix B/C): range analysis,
+//! positional uniformity via the chi-square goodness-of-fit test, and
+//! group-frequency histograms.
+
+use crate::quant::mixed_precision::top_k_by_magnitude;
+use crate::util::math::{chi2_critical, chi2_sf};
+use crate::util::tensor::Matrix;
+
+/// Fraction of a row's value range consumed by its top-`frac` outliers:
+/// `1 − range(inliers)/range(all)` (Fig 1a's y-axis).
+pub fn range_taken_by_outliers(row: &[f32], frac: f64) -> f64 {
+    let k = ((frac * row.len() as f64).floor() as usize).min(row.len());
+    if k == 0 {
+        return 0.0;
+    }
+    let out = top_k_by_magnitude(row, k);
+    let mut mask = vec![false; row.len()];
+    for &c in &out {
+        mask[c] = true;
+    }
+    let (mut flo, mut fhi) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut ilo, mut ihi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for (c, &v) in row.iter().enumerate() {
+        flo = flo.min(v);
+        fhi = fhi.max(v);
+        if !mask[c] {
+            ilo = ilo.min(v);
+            ihi = ihi.max(v);
+        }
+    }
+    let full = (fhi - flo) as f64;
+    let inner = (ihi - ilo) as f64;
+    if full <= 0.0 {
+        0.0
+    } else {
+        (1.0 - inner / full).clamp(0.0, 1.0)
+    }
+}
+
+/// Average of [`range_taken_by_outliers`] over the rows of a matrix.
+pub fn avg_range_taken(w: &Matrix, frac: f64) -> f64 {
+    (0..w.rows)
+        .map(|r| range_taken_by_outliers(w.row(r), frac))
+        .sum::<f64>()
+        / w.rows as f64
+}
+
+/// Outlier counts per group of `group_size` consecutive columns (Fig 2).
+pub fn group_frequency(positions: &[usize], cols: usize, group_size: usize) -> Vec<usize> {
+    let n_groups = cols.div_ceil(group_size);
+    let mut counts = vec![0usize; n_groups];
+    for &p in positions {
+        counts[p / group_size] += 1;
+    }
+    counts
+}
+
+/// Result of a chi-square uniformity test on one row's outlier positions.
+#[derive(Clone, Copy, Debug)]
+pub struct Chi2Result {
+    pub statistic: f64,
+    pub dof: f64,
+    pub p_value: f64,
+    pub reject: bool,
+}
+
+/// Pearson chi-square goodness-of-fit of outlier positions against the
+/// uniform distribution, over groups of `group_size` columns (paper
+/// Appendix C.1: group_size 256, α = 0.05).
+pub fn chi2_uniformity(
+    positions: &[usize],
+    cols: usize,
+    group_size: usize,
+    alpha: f64,
+) -> Chi2Result {
+    let counts = group_frequency(positions, cols, group_size);
+    // Only full groups participate (the paper divides rows into
+    // non-overlapping groups of 256; widths are multiples in practice).
+    let n_full = cols / group_size;
+    let total: usize = counts.iter().take(n_full).sum();
+    let expected = total as f64 / n_full as f64;
+    let mut stat = 0.0;
+    for &c in counts.iter().take(n_full) {
+        let d = c as f64 - expected;
+        stat += d * d / expected.max(1e-12);
+    }
+    let dof = (n_full - 1) as f64;
+    let p = chi2_sf(stat, dof);
+    Chi2Result { statistic: stat, dof, p_value: p, reject: p < alpha }
+}
+
+/// Rejection rate over all rows of a weight matrix at outlier ratio γ
+/// (the Table 1/Table 5 cell).
+pub fn rejection_rate(w: &Matrix, gamma: f64, group_size: usize, alpha: f64) -> f64 {
+    let k = ((gamma * w.cols as f64).floor() as usize).min(w.cols);
+    let mut rejected = 0usize;
+    for r in 0..w.rows {
+        let positions = top_k_by_magnitude(w.row(r), k);
+        if chi2_uniformity(&positions, w.cols, group_size, alpha).reject {
+            rejected += 1;
+        }
+    }
+    rejected as f64 / w.rows as f64
+}
+
+/// Histogram of a slice (Fig 1b): `bins` equal-width buckets over
+/// [min, max]; returns (edges, counts).
+pub fn histogram(values: &[f32], bins: usize) -> (Vec<f64>, Vec<usize>) {
+    let (lo, hi) = crate::quant::min_max(values);
+    let lo = lo as f64;
+    let hi = hi as f64;
+    let width = ((hi - lo) / bins as f64).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        let b = (((v as f64 - lo) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let edges = (0..=bins).map(|i| lo + width * i as f64).collect();
+    (edges, counts)
+}
+
+/// Critical value helper re-export for harness display.
+pub fn chi2_crit(dof: f64, alpha: f64) -> f64 {
+    chi2_critical(dof, alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synthzoo::{family, LayerType};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn uniform_positions_rarely_rejected() {
+        // False-positive rate at α=0.05 must be ≈5 %.
+        let mut rng = Rng::new(3);
+        let (cols, group, k) = (2048, 256, 128);
+        let mut rejected = 0;
+        let trials = 400;
+        for _ in 0..trials {
+            let positions = rng.sample_indices(cols, k);
+            if chi2_uniformity(&positions, cols, group, 0.05).reject {
+                rejected += 1;
+            }
+        }
+        let rate = rejected as f64 / trials as f64;
+        assert!(rate < 0.10, "uniform rejection rate {}", rate);
+    }
+
+    #[test]
+    fn clustered_positions_always_rejected() {
+        // All outliers in one group — must reject with overwhelming
+        // confidence.
+        let positions: Vec<usize> = (0..128).collect();
+        let res = chi2_uniformity(&positions, 2048, 256, 0.05);
+        assert!(res.reject);
+        assert!(res.p_value < 1e-10);
+    }
+
+    #[test]
+    fn group_frequency_counts() {
+        let positions = [0usize, 1, 255, 256, 600];
+        let f = group_frequency(&positions, 1024, 256);
+        assert_eq!(f, vec![3, 1, 1, 0]);
+    }
+
+    #[test]
+    fn range_taken_gaussian_row_matches_theory() {
+        // Gaussian row of width 4096: top-5 % spans ≈ 1 − 1.96/max ≈ 50 %.
+        let mut rng = Rng::new(7);
+        let row: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let taken = range_taken_by_outliers(&row, 0.05);
+        assert!((0.33..0.65).contains(&taken), "taken={}", taken);
+        // More outliers take more range; monotone.
+        let taken10 = range_taken_by_outliers(&row, 0.10);
+        assert!(taken10 > taken);
+    }
+
+    #[test]
+    fn table1_shape_reproduced() {
+        // q_proj near the 5 % false-positive floor; o_proj far above it —
+        // the Table 1 anomaly. Uses the paper's setup: groups of 256,
+        // γ = 6.25 %, α = 0.05, on the wide statistics layers.
+        let f = family("llama2-7b").unwrap();
+        let q = f.gen_stat_layer(LayerType::QProj, 1);
+        let o = f.gen_stat_layer(LayerType::OProj, 1);
+        let rq = rejection_rate(&q, 0.0625, 256, 0.05);
+        let ro = rejection_rate(&o, 0.0625, 256, 0.05);
+        assert!(rq < 0.15, "q_proj rejection {}", rq);
+        assert!(ro > 0.4, "o_proj rejection {}", ro);
+        assert!(ro > rq * 3.0);
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let vals: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.013).sin()).collect();
+        let (edges, counts) = histogram(&vals, 32);
+        assert_eq!(edges.len(), 33);
+        assert_eq!(counts.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn chi2_critical_sane() {
+        // group 256 over 2048 cols → dof 7; crit at 0.05 ≈ 14.07.
+        let c = chi2_crit(7.0, 0.05);
+        assert!((c - 14.067).abs() < 0.01, "crit {}", c);
+    }
+}

@@ -1,0 +1,165 @@
+//! IEEE-754 binary16 conversion (the `half` crate is not vendored).
+//!
+//! Used by the mixed-precision baseline (SqueezeLLM keeps outliers in FP16)
+//! and for storage accounting. Round-to-nearest-even on encode, exact on
+//! decode.
+
+/// Convert `f32` → `f16` bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m | ((mant >> 13) as u16 & 0x03FF.min(0x3FF));
+    }
+
+    // Re-bias: f32 bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        // Overflow → ±Inf
+        return sign | 0x7C00;
+    }
+    if unbiased >= -14 {
+        // Normal range.
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let half_mant = (mant >> 13) as u16;
+        let round_bits = mant & 0x1FFF;
+        let mut out = sign | half_exp | half_mant;
+        // Round to nearest even.
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (half_mant & 1) == 1) {
+            out = out.wrapping_add(1); // carries into exponent correctly
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal half.
+        let shift = (-14 - unbiased) as u32; // 1..=11
+        let full_mant = mant | 0x0080_0000; // implicit leading 1
+        let half_mant = (full_mant >> (13 + shift)) as u16;
+        let round_pos = 13 + shift;
+        let round_bits = full_mant & ((1u32 << round_pos) - 1);
+        let half_ulp = 1u32 << (round_pos - 1);
+        let mut out = sign | half_mant;
+        if round_bits > half_ulp || (round_bits == half_ulp && (half_mant & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    // Underflow → ±0
+    sign
+}
+
+/// Convert `f16` bits → `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            // After s shifts, e = msb(mant) − 11; unbiased exp = msb − 24,
+            // so the f32 exponent field is e + 114.
+            sign | (((e + 114) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // Inf/NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through f16 precision (what "store in FP16" costs).
+#[inline]
+pub fn to_f16_precision(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(to_f16_precision(x), x, "i={}", i);
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7BFF), 65504.0);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 5.96e-8_f32; // ~smallest subnormal f16
+        let rt = to_f16_precision(tiny);
+        assert!(rt > 0.0 && (rt - tiny).abs() / tiny < 0.5);
+        // Below underflow threshold → 0.
+        assert_eq!(to_f16_precision(1e-10), 0.0);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(to_f16_precision(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn relative_error_bound_normals() {
+        // f16 has 11 bits of significand → rel err ≤ 2^-11.
+        let mut state = 0x12345u64;
+        for _ in 0..10_000 {
+            let r = crate::util::prng::splitmix64(&mut state);
+            let x = ((r >> 40) as f32 / (1u64 << 24) as f32) * 100.0 - 50.0;
+            if x.abs() < 1e-3 {
+                continue;
+            }
+            let e = (to_f16_precision(x) - x).abs() / x.abs();
+            assert!(e <= 1.0 / 2048.0 + 1e-7, "x={} err={}", x, e);
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_f16_bit_patterns() {
+        // Every finite f16 must decode→encode to itself.
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan patterns not bit-stable for NaN payloads
+            }
+            let x = f16_bits_to_f32(h);
+            let h2 = f32_to_f16_bits(x);
+            // -0 and +0 normalize to themselves.
+            assert_eq!(h, h2, "h={:04x} x={}", h, x);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Special functions needed by the statistics module: log-gamma,
+//! regularized incomplete gamma (→ chi-square CDF), and erf.
+//!
+//! Implementations follow Numerical Recipes (Lanczos approximation for
+//! lgamma; series + continued fraction for P(a,x)); accuracy ~1e-10, far
+//! beyond what the chi-square tests need.
+
+/// Natural log of the gamma function (Lanczos, g=7, n=9).
+pub fn lgamma(x: f64) -> f64 {
+    const COF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COF[0];
+    let t = x + 7.5;
+    for (i, &c) in COF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma P(a, x) = γ(a,x)/Γ(a).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0, "gamma_p domain: a={} x={}", a, x);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // Series representation converges fast here.
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - lgamma(a)).exp()
+    } else {
+        // Continued fraction for Q(a,x), then P = 1 - Q (Lentz's method).
+        let mut b = x + 1.0 - a;
+        let mut c = 1e308;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        1.0 - h * (-x + a * x.ln() - lgamma(a)).exp()
+    }
+}
+
+/// Chi-square CDF with `k` degrees of freedom.
+#[inline]
+pub fn chi2_cdf(x: f64, k: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        gamma_p(k / 2.0, x / 2.0)
+    }
+}
+
+/// Chi-square survival function (p-value of an observed statistic).
+#[inline]
+pub fn chi2_sf(x: f64, k: f64) -> f64 {
+    1.0 - chi2_cdf(x, k)
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26-style rational approx refined
+/// via the incomplete gamma identity erf(x) = P(1/2, x²).
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        -erf(-x)
+    } else {
+        gamma_p(0.5, x * x)
+    }
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Inverse standard normal CDF (Acklam's algorithm, |rel err| < 1.15e-9).
+pub fn norm_ppf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "norm_ppf domain");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -norm_ppf(1.0 - p)
+    }
+}
+
+/// Chi-square upper critical value: smallest x with SF(x) <= alpha.
+/// Bisection on the CDF — called once per (k, alpha), speed irrelevant.
+pub fn chi2_critical(k: f64, alpha: f64) -> f64 {
+    let (mut lo, mut hi) = (0.0, k + 100.0 * (k.sqrt() + 1.0));
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if chi2_sf(mid, k) > alpha {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{} vs {}", a, b);
+    }
+
+    #[test]
+    fn lgamma_known() {
+        close(lgamma(1.0), 0.0, 1e-12);
+        close(lgamma(2.0), 0.0, 1e-12);
+        close(lgamma(5.0), (24.0f64).ln(), 1e-10); // Γ(5)=24
+        close(lgamma(0.5), (std::f64::consts::PI.sqrt()).ln(), 1e-10);
+        close(lgamma(10.5), 13.940_625_219_403_76, 1e-8);
+    }
+
+    #[test]
+    fn gamma_p_known() {
+        // P(1, x) = 1 - e^-x
+        for x in [0.1, 1.0, 3.0, 10.0] {
+            close(gamma_p(1.0, x), 1.0 - (-x).exp(), 1e-12);
+        }
+        close(gamma_p(0.5, 0.5), 0.682_689_492_137, 1e-9); // erf(1/√2·√2·…)
+    }
+
+    #[test]
+    fn chi2_cdf_known() {
+        // scipy.stats.chi2.cdf references
+        close(chi2_cdf(3.841458820694124, 1.0), 0.95, 1e-9);
+        close(chi2_cdf(16.918977604620448, 9.0), 0.95, 1e-9);
+        close(chi2_cdf(30.143527205646159, 15.0), 0.989, 2e-2);
+        close(chi2_cdf(10.0, 10.0), 0.559_506_714_934, 1e-9);
+    }
+
+    #[test]
+    fn chi2_critical_inverts_sf() {
+        for k in [1.0, 5.0, 15.0, 63.0, 255.0] {
+            let c = chi2_critical(k, 0.05);
+            close(chi2_sf(c, k), 0.05, 1e-6);
+        }
+    }
+
+    #[test]
+    fn erf_known() {
+        close(erf(0.0), 0.0, 1e-15);
+        close(erf(1.0), 0.842_700_792_949_715, 1e-9);
+        close(erf(-1.0), -0.842_700_792_949_715, 1e-9);
+        close(erf(2.0), 0.995_322_265_018_953, 1e-9);
+    }
+
+    #[test]
+    fn norm_cdf_ppf_roundtrip() {
+        for p in [0.001, 0.01, 0.05, 0.3, 0.5, 0.8, 0.975, 0.999] {
+            close(norm_cdf(norm_ppf(p)), p, 1e-7);
+        }
+        close(norm_ppf(0.975), 1.959_963_984_540_054, 1e-7);
+    }
+}

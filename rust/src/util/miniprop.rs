@@ -1,0 +1,142 @@
+//! A tiny in-repo property-testing helper (`proptest` is not in the offline
+//! registry).
+//!
+//! [`check`] runs a property over many seeded random cases; on failure it
+//! re-runs with progressively "smaller" cases drawn from the same generator
+//! (generator-driven shrinking: generators receive a `size` hint in `0..=1`
+//! and should produce structurally smaller inputs for smaller sizes), then
+//! panics with the seed so the case is reproducible.
+
+use crate::util::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xDEC0DE }
+    }
+}
+
+impl Config {
+    pub fn with_cases(cases: usize) -> Self {
+        Config { cases, seed: 0xDEC0DE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random inputs produced by `gen`.
+///
+/// `gen(rng, size)` — `size` ramps 0→1 over the run so early cases are
+/// small. `prop` returns `Err(msg)` (or panics) to signal failure.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, f64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = (case as f64 + 1.0) / cfg.cases as f64;
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let input = gen(&mut case_rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink: try 32 smaller inputs from fresh sub-seeds; report the
+            // smallest failing one we find.
+            let mut best: (f64, T, String, u64) = (size, input, msg, case_seed);
+            let mut shrink_rng = Rng::new(case_seed ^ 0x5EED);
+            let mut s = size;
+            for _ in 0..32 {
+                s *= 0.7;
+                let sseed = shrink_rng.next_u64();
+                let mut r = Rng::new(sseed);
+                let candidate = gen(&mut r, s);
+                if let Err(m) = prop(&candidate) {
+                    best = (s, candidate, m, sseed);
+                }
+            }
+            panic!(
+                "property '{}' failed (case {}, seed {:#x}, size {:.3}):\n  {}\n  input: {:?}",
+                name, case, best.3, best.0, best.2, best.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "sum-commutes",
+            Config::with_cases(64),
+            |r, size| {
+                let len = 1 + (size * 100.0) as usize;
+                (0..len).map(|_| r.f64()).collect::<Vec<_>>()
+            },
+            |v| {
+                n += 1;
+                let a: f64 = v.iter().sum();
+                let b: f64 = v.iter().rev().sum();
+                if (a - b).abs() < 1e-9 * v.len() as f64 {
+                    Ok(())
+                } else {
+                    Err("sum not commutative".into())
+                }
+            },
+        );
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-small",
+            Config::with_cases(64),
+            |r, size| (r.f64() * size * 100.0) as u32,
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("x={} not < 5", x))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // Same config must generate the same sequence of inputs.
+        let collect = || {
+            let mut v = Vec::new();
+            check(
+                "collect",
+                Config::with_cases(16),
+                |r, _| r.next_u64(),
+                |&x| {
+                    v.push(x);
+                    Ok(())
+                },
+            );
+            v
+        };
+        assert_eq!(collect(), collect());
+    }
+}

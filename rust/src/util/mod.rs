@@ -1,0 +1,62 @@
+//! Substrate utilities: deterministic PRNG, minimal JSON, IEEE-754 half
+//! precision, special functions, a tiny property-testing helper, and flat
+//! tensor IO.
+//!
+//! The offline vendored registry only carries the `xla` crate closure, so
+//! `rand`, `serde`, `half`, and `proptest` are reimplemented here as small,
+//! well-tested modules.
+
+pub mod prng;
+pub mod json;
+pub mod f16;
+pub mod math;
+pub mod miniprop;
+pub mod tensor;
+
+/// Format a byte count human-readably (`1.50 MiB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units (`1.23 ms`).
+pub fn human_duration(d: std::time::Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{:.0} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        assert_eq!(human_duration(std::time::Duration::from_nanos(500)), "500 ns");
+        assert_eq!(human_duration(std::time::Duration::from_micros(1500)), "1.50 ms");
+    }
+}

@@ -1,0 +1,375 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `rand` is not in the offline registry, so we implement the standard
+//! splitmix64 seeder + xoshiro256** generator (Blackman & Vigna, 2018).
+//! Everything in the repo that needs randomness (synthetic model zoo,
+//! property tests, K-means init, Hadamard sign flips, workload generators)
+//! goes through [`Rng`], so every experiment is reproducible from a seed.
+
+/// splitmix64 step — used to expand a 64-bit seed into xoshiro state and as
+/// a standalone cheap mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG. Not cryptographic; excellent statistical quality and
+/// extremely fast — the right tool for simulation workloads.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from the last Box-Muller draw.
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically. Any `u64` is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent stream (for parallel/per-row generation).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's unbiased multiply-shift.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Student-t with `nu` degrees of freedom (ratio-of-normals via
+    /// chi-square from sum of squared normals; fine for nu up to ~50).
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        // chi2(nu) ~ gamma(nu/2, 2) via Marsaglia-Tsang.
+        let chi2 = 2.0 * self.gamma(nu / 2.0);
+        self.normal() / (chi2 / nu).sqrt()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang squeeze (shape >= 0.01).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: gamma(a) = gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices sampled uniformly from `[0, n)`, sorted.
+    /// Uses Floyd's algorithm — O(k) memory regardless of n.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut set = std::collections::HashSet::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j as u64 + 1) as usize;
+            if !set.insert(t) {
+                set.insert(j);
+            }
+        }
+        let mut v: Vec<usize> = set.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Zipf-distributed integer in `[0, n)` with exponent `s`, via
+    /// precomputed CDF walk (linear; use for modest n in workload gen).
+    pub fn zipf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.f64();
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+/// Precompute a Zipf CDF for [`Rng::zipf`].
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    for x in w.iter_mut() {
+        acc += *x / total;
+        *x = acc;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_range() {
+        let mut r = Rng::new(3);
+        let mut seen = [0usize; 10];
+        for _ in 0..100_000 {
+            seen[r.below(10) as usize] += 1;
+        }
+        for &c in &seen {
+            // Each bucket ~10k; allow 10% slack.
+            assert!((9_000..11_000).contains(&c), "bucket count {}", c);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.03, "var {}", var);
+    }
+
+    #[test]
+    fn student_t_heavier_tail_than_normal() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let thresh = 4.0;
+        let mut t_tail = 0;
+        let mut n_tail = 0;
+        for _ in 0..n {
+            if r.student_t(3.0).abs() > thresh {
+                t_tail += 1;
+            }
+            if r.normal().abs() > thresh {
+                n_tail += 1;
+            }
+        }
+        assert!(t_tail > 10 * (n_tail + 1), "t {} vs n {}", t_tail, n_tail);
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::new(17);
+        let shape = 4.5;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+        assert!((mean - shape).abs() < 0.06, "mean {}", mean);
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Rng::new(23);
+        for _ in 0..100 {
+            let v = r.sample_indices(1000, 50);
+            assert_eq!(v.len(), 50);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(*v.last().unwrap() < 1000);
+        }
+    }
+
+    #[test]
+    fn sample_indices_uniform_positions() {
+        // Positions of sampled indices should be uniform — this is the
+        // mechanism the paper's random-permutation fallback relies on.
+        let mut r = Rng::new(29);
+        let mut hist = [0usize; 4];
+        for _ in 0..4000 {
+            for &i in &r.sample_indices(256, 16) {
+                hist[i / 64] += 1;
+            }
+        }
+        let total: usize = hist.iter().sum();
+        for &h in &hist {
+            let frac = h as f64 / total as f64;
+            assert!((frac - 0.25).abs() < 0.02, "frac {}", frac);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(31);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_monotone_frequencies() {
+        let cdf = zipf_cdf(50, 1.1);
+        let mut r = Rng::new(37);
+        let mut hist = vec![0usize; 50];
+        for _ in 0..50_000 {
+            hist[r.zipf(&cdf)] += 1;
+        }
+        assert!(hist[0] > hist[10] && hist[10] > hist[40]);
+    }
+}

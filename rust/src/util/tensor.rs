@@ -1,0 +1,227 @@
+//! Flat row-major 2-D matrix type and raw binary tensor IO.
+//!
+//! Weight artifacts are stored as little-endian `f32` blobs plus a JSON
+//! manifest (written by `python/compile/train.py`, read by
+//! [`crate::model`]); this module provides the in-memory container and the
+//! blob codec.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Row-major 2-D f32 matrix. Rows are the paper's "output channels".
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Mean squared error against another matrix of the same shape.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc / self.numel() as f64
+    }
+
+    /// Squared Frobenius norm of the difference (the paper's ‖Q(w)−w‖²).
+    pub fn sq_err(&self, other: &Matrix) -> f64 {
+        self.mse(other) * self.numel() as f64
+    }
+
+    /// Proxy-Hessian weighted error  Σ_ij H_j (a_ij − b_ij)²  with per-input
+    /// -channel diagonal Hessian `h` (len == cols). This is the SqueezeLLM /
+    /// GPTQ proxy objective restricted to a diagonal.
+    pub fn weighted_sq_err(&self, other: &Matrix, h: &[f32]) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        assert_eq!(h.len(), self.cols);
+        let mut acc = 0.0f64;
+        for r in 0..self.rows {
+            let a = self.row(r);
+            let b = other.row(r);
+            for c in 0..self.cols {
+                let d = (a[c] - b[c]) as f64;
+                acc += h[c] as f64 * d * d;
+            }
+        }
+        acc
+    }
+
+    /// `self @ other` (naive; used in tests and small evals only — the hot
+    /// path runs through PJRT).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (j, &b) in orow.iter().enumerate() {
+                    out_row[j] += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+}
+
+/// Write a slice of f32 as little-endian bytes.
+pub fn write_f32_slice<W: Write>(w: &mut W, data: &[f32]) -> Result<()> {
+    // Chunked to avoid a full copy for large tensors.
+    let mut buf = Vec::with_capacity(4 * 65536);
+    for chunk in data.chunks(65536) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Read `n` little-endian f32 values.
+pub fn read_f32_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes).context("short read of f32 blob")?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Load a slice of a flat f32 blob file: `n` elements starting at element
+/// offset `off`.
+pub fn read_f32_at(path: &Path, off: usize, n: usize) -> Result<Vec<f32>> {
+    use std::io::Seek;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    f.seek(std::io::SeekFrom::Start(off as u64 * 4))?;
+    read_f32_vec(&mut f, n)
+}
+
+/// Save a matrix as `<path>` raw blob (no header; shape travels in JSON).
+pub fn save_matrix(path: &Path, m: &Matrix) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_f32_slice(&mut f, &m.data)?;
+    Ok(())
+}
+
+/// Load a raw blob as a matrix with an externally-known shape.
+pub fn load_matrix(path: &Path, rows: usize, cols: usize) -> Result<Matrix> {
+    let meta = std::fs::metadata(path)?;
+    if meta.len() != (rows * cols * 4) as u64 {
+        bail!(
+            "blob {} has {} bytes, expected {} for {}x{} f32",
+            path.display(),
+            meta.len(),
+            rows * cols * 4,
+            rows,
+            cols
+        );
+    }
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    Ok(Matrix::from_vec(rows, cols, read_f32_vec(&mut f, rows * cols)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        assert_eq!(a.matmul(&b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn mse_and_weighted() {
+        let a = Matrix::from_vec(1, 2, vec![1., 2.]);
+        let b = Matrix::from_vec(1, 2, vec![2., 0.]);
+        assert!((a.mse(&b) - 2.5).abs() < 1e-12);
+        let werr = a.weighted_sq_err(&b, &[2.0, 1.0]);
+        assert!((werr - (2.0 * 1.0 + 1.0 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let dir = std::env::temp_dir().join("icq_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.bin");
+        let m = Matrix::from_vec(3, 4, (0..12).map(|i| i as f32 * 0.5 - 2.0).collect());
+        save_matrix(&p, &m).unwrap();
+        let m2 = load_matrix(&p, 3, 4).unwrap();
+        assert_eq!(m, m2);
+        // Offset read gets the second row.
+        let row1 = read_f32_at(&p, 4, 4).unwrap();
+        assert_eq!(row1, m.row(1));
+        // Wrong shape errors.
+        assert!(load_matrix(&p, 4, 4).is_err());
+    }
+}

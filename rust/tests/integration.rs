@@ -1,0 +1,217 @@
+//! Integration tests across the full stack: artifacts → model IO → PJRT
+//! runtime → eval → coordinator. These require `make artifacts` to have
+//! run (they are skipped with a message otherwise, so `cargo test` stays
+//! green on a fresh checkout).
+
+use icquant::coordinator::backend::PjrtBackend;
+use icquant::coordinator::{ServeConfig, Server};
+use icquant::eval::{load_corpus_tokens, perplexity, weight_literals};
+use icquant::icquant::{IcqConfig, IcqMatrix};
+use icquant::model::{artifacts_dir, TrainedModel};
+use icquant::quant::QuantizerKind;
+use icquant::runtime::{Engine, HostTensor};
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("aot_manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn model_loads_and_validates() {
+    require_artifacts!();
+    let m = TrainedModel::load(&artifacts_dir()).unwrap();
+    m.validate().unwrap();
+    assert_eq!(m.config.vocab, 256);
+    assert_eq!(m.projections().len(), 7 * m.config.n_layers);
+    assert!(!m.sensitivity.is_empty(), "sensitivity artifact missing");
+    // Trained model should beat the uniform baseline comfortably.
+    assert!(m.val_loss < 3.0, "val loss {}", m.val_loss);
+}
+
+#[test]
+fn engine_executes_forward_loss() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let model = TrainedModel::load(&dir).unwrap();
+    let mut engine = Engine::new(&dir).unwrap();
+    let weights = weight_literals(&model).unwrap();
+    let tokens = load_corpus_tokens(&dir, "test").unwrap();
+    let ppl = perplexity(&mut engine, weights, &tokens, 4).unwrap();
+    // Perplexity through PJRT must be consistent with the training-side
+    // validation loss (same architecture, same weights, different split).
+    let val_ppl = model.val_loss.exp();
+    assert!(ppl > 1.0 && ppl < val_ppl * 2.0, "ppl {} vs val {}", ppl, val_ppl);
+}
+
+#[test]
+fn quantized_weights_degrade_gracefully() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let model = TrainedModel::load(&dir).unwrap();
+    let mut engine = Engine::new(&dir).unwrap();
+    let tokens = load_corpus_tokens(&dir, "test").unwrap();
+
+    let fp_ppl = {
+        let w = weight_literals(&model).unwrap();
+        perplexity(&mut engine, w, &tokens, 4).unwrap()
+    };
+
+    // ICQuant 3-bit SK on every projection.
+    let mut replacements = HashMap::new();
+    for t in model.projections() {
+        let w = t.as_matrix();
+        let sens = model.sensitivity_of(&t.name).map(|s| s.as_matrix());
+        let cfg = IcqConfig {
+            bits: 3,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::SensitiveKmeans,
+        };
+        let q = IcqMatrix::quantize(&w, sens.as_ref(), &cfg).unwrap();
+        replacements.insert(t.name.clone(), q.dequantize());
+    }
+    let qm = model.with_replaced(&replacements);
+    let q_ppl = {
+        let w = weight_literals(&qm).unwrap();
+        perplexity(&mut engine, w, &tokens, 4).unwrap()
+    };
+    assert!(q_ppl >= fp_ppl * 0.99, "q {} vs fp {}", q_ppl, fp_ppl);
+    assert!(
+        q_ppl < fp_ppl * 1.5,
+        "3.31-bit ICQuant should be near-lossless: q {} vs fp {}",
+        q_ppl,
+        fp_ppl
+    );
+}
+
+#[test]
+fn forward_q_entry_matches_dequantized_fp_path() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let model = TrainedModel::load(&dir).unwrap();
+    let mut engine = Engine::new(&dir).unwrap();
+    let tokens = load_corpus_tokens(&dir, "test").unwrap();
+    let bits = 2u32;
+
+    // Quantize projections; build both the forward_q args (codes + fused
+    // codebooks) and the dequantized FP replacement weights.
+    let mut q_args: Vec<xla::Literal> = Vec::new();
+    let mut replacements = HashMap::new();
+    let b = engine.manifest().eval_batch;
+    let s = model.config.max_seq;
+    let mut toks = Vec::with_capacity(b * s);
+    let mut targets = Vec::with_capacity(b * s);
+    for seq in 0..b {
+        let start = seq * (s + 1);
+        toks.extend_from_slice(&tokens[start..start + s]);
+        targets.extend_from_slice(&tokens[start + 1..start + s + 1]);
+    }
+    q_args.push(HostTensor::I32(toks.clone(), vec![b, s]).to_literal().unwrap());
+    q_args.push(HostTensor::I32(targets.clone(), vec![b, s]).to_literal().unwrap());
+
+    let cfg = IcqConfig { bits, outlier_ratio: 0.05, gap_bits: 6, quantizer: QuantizerKind::Rtn };
+    for t in &model.tensors {
+        if t.is_projection() {
+            let q = IcqMatrix::quantize(&t.as_matrix(), None, &cfg).unwrap();
+            let rt = q.to_runtime();
+            replacements.insert(t.name.clone(), rt.dequantize());
+            let codes_i32: Vec<i32> = rt.codes.iter().map(|&c| c as i32).collect();
+            q_args.push(
+                HostTensor::I32(codes_i32, vec![rt.rows, rt.cols]).to_literal().unwrap(),
+            );
+            let cb_flat: Vec<f32> =
+                rt.codebooks.iter().flat_map(|c| c.iter().copied()).collect();
+            let cb_cols = 1usize << (bits + 1);
+            q_args.push(
+                HostTensor::F32(cb_flat, vec![rt.rows, cb_cols]).to_literal().unwrap(),
+            );
+        } else {
+            q_args.push(
+                HostTensor::F32(t.data.clone(), t.shape.clone()).to_literal().unwrap(),
+            );
+        }
+    }
+
+    // Quantized-graph NLL (Pallas dequant inside the HLO)…
+    let refs: Vec<&xla::Literal> = q_args.iter().collect();
+    let out = engine
+        .execute_literals(&format!("forward_q{}_b{}", bits, b), &refs)
+        .unwrap();
+    let q_nll = Engine::scalar_f32(&out[0]).unwrap();
+
+    // …must equal the FP graph on dequantized weights.
+    let fp_model = model.with_replaced(&replacements);
+    let weights = weight_literals(&fp_model).unwrap();
+    let data = [
+        HostTensor::I32(toks, vec![b, s]).to_literal().unwrap(),
+        HostTensor::I32(targets, vec![b, s]).to_literal().unwrap(),
+    ];
+    let args: Vec<&xla::Literal> = data.iter().chain(weights.iter()).collect();
+    let out = engine
+        .execute_literals(&format!("forward_loss_b{}", b), &args)
+        .unwrap();
+    let fp_nll = Engine::scalar_f32(&out[0]).unwrap();
+
+    assert!(
+        (q_nll - fp_nll).abs() < 2e-3,
+        "forward_q {} vs fp-on-dequant {}",
+        q_nll,
+        fp_nll
+    );
+}
+
+#[test]
+fn serving_end_to_end_with_pjrt() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let model = TrainedModel::load(&dir).unwrap();
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(10),
+        max_new_tokens: 8,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: 64,
+    };
+    let dir2 = dir.clone();
+    let server = Server::start(cfg, move || {
+        let mut b = PjrtBackend::new(&dir2, &model).unwrap();
+        b.warmup().unwrap();
+        b
+    });
+    let prompt: Vec<i32> = b"Yhe rapid deployment of large language "
+        .iter()
+        .map(|&b| b as i32)
+        .collect();
+    let mut rxs = Vec::new();
+    for _ in 0..6 {
+        let (_, rx) = server.submit(prompt.clone(), 8);
+        rxs.push(rx);
+    }
+    let mut outputs = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        assert_eq!(resp.tokens.len(), 8);
+        // Tokens must be valid bytes.
+        assert!(resp.tokens.iter().all(|&t| (0..256).contains(&t)));
+        outputs.push(resp.tokens);
+    }
+    // Same prompt ⇒ same greedy generation, batched or not.
+    for o in &outputs[1..] {
+        assert_eq!(o, &outputs[0]);
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 6);
+    assert!(snap.tokens == 48);
+    server.shutdown();
+}
