@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI for the rust crate: build, test, format, lint, and record the store
+# bench. Mirrors the tier-1 verify (`cargo build --release && cargo test
+# -q`) plus hygiene gates.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "=== cargo build --release ==="
+cargo build --release
+
+echo "=== cargo test -q ==="
+cargo test -q
+
+echo "=== cargo fmt --check ==="
+cargo fmt --check
+
+echo "=== cargo clippy -- -D warnings ==="
+cargo clippy --all-targets -- -D warnings
+
+echo "=== store bench → BENCH_store.json ==="
+# The bench binary writes BENCH_store.json into the working directory;
+# keep the recorded copy at the repo root next to this script.
+if cargo bench --bench store; then
+    if [ -f BENCH_store.json ]; then
+        mv BENCH_store.json ../BENCH_store.json
+        echo "recorded ../BENCH_store.json"
+    fi
+else
+    echo "WARNING: store bench failed; BENCH_store.json not refreshed" >&2
+fi
+
+echo "CI OK"

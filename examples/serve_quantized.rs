@@ -2,24 +2,30 @@
 //!
 //! 1. Load the *trained* Llama-mini (JAX-trained at build time).
 //! 2. Quantize every projection with ICQuant^SK at 2 bits + 5 % outliers
-//!    (≈2.3 bits/weight storage), report ppl before/after through the
-//!    PJRT-compiled eval graph.
+//!    (≈2.3 bits/weight storage) into a single `ICQZ` container,
+//!    register it in the artifact registry, and report ppl before/after
+//!    through the PJRT-compiled eval graph.
 //! 3. Start the serving coordinator (dynamic batcher + prefill/decode
-//!    KV-cache scheduler over AOT-compiled HLO) and serve a batched
-//!    workload of corpus prompts, reporting latency/throughput.
+//!    KV-cache scheduler over AOT-compiled HLO) **loading its weights
+//!    from the registered container through the LRU decode cache**, and
+//!    serve a batched workload of corpus prompts.
 //!
 //!     cargo run --release --example serve_quantized
 //!
 //! This is the system the paper's intro motivates: weights live at
-//! ≈2.3 bits in storage; Python never runs at request time.
+//! ≈2.3 bits in a checksummed, content-addressed artifact; Python never
+//! runs at request time.
 
 use icquant::coordinator::backend::PjrtBackend;
 use icquant::coordinator::{ServeConfig, Server};
 use icquant::eval::{load_corpus_tokens, perplexity, weight_literals};
-use icquant::experiments::methods::Method;
+use icquant::icquant::IcqConfig;
 use icquant::model::{artifacts_dir, TrainedModel};
+use icquant::quant::QuantizerKind;
 use icquant::runtime::Engine;
+use icquant::store::{container, quantize_trained, DecodeCache, Registry, StoredModel};
 use icquant::util::human_bytes;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
@@ -33,37 +39,56 @@ fn main() -> anyhow::Result<()> {
         model.projection_params()
     );
 
-    // --- quantize ---------------------------------------------------------
-    let method = Method::IcqSk { bits: 2, ratio: 0.05 };
+    // --- quantize → pack → register ----------------------------------------
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 0, // Lemma-1-optimal b for γ
+        quantizer: QuantizerKind::SensitiveKmeans,
+    };
     let t0 = Instant::now();
-    let (replacements, avg_bits) = method.quantize_model(&model);
+    let packed = quantize_trained(&model, &cfg)?;
+    let registry = Registry::open(Registry::default_root())?;
+    let record = registry.put_model("llama-mini-icq2", &packed)?;
+    let (_, container_path) = registry.resolve(&record.spec())?;
+    let info = container::inspect(&container_path)?;
     println!(
-        "\nquantized with {} in {:.2}s → {:.3} bits/weight",
-        method.name(),
+        "\nquantized with ICQuant^SK in {:.2}s → {}",
         t0.elapsed().as_secs_f64(),
-        avg_bits
+        record.spec()
+    );
+    println!(
+        "  bits/weight: {:.3} storage ({:.3} code) | container {}",
+        info.storage_bits_per_weight,
+        info.code_bits_per_weight,
+        human_bytes(record.bytes)
     );
     let fp_bytes = model.projection_params() * 4;
-    let q_bytes = (model.projection_params() as f64 * avg_bits / 8.0) as u64;
     println!(
-        "projection storage: {} → {} ({:.1}x smaller than fp32, {:.1}x vs fp16)",
+        "  projection storage {} → ≈{} ({:.1}x smaller than fp32)",
         human_bytes(fp_bytes as u64),
-        human_bytes(q_bytes),
-        fp_bytes as f64 / q_bytes as f64,
-        fp_bytes as f64 / 2.0 / q_bytes as f64,
+        human_bytes((model.projection_params() as f64 * info.storage_bits_per_weight / 8.0) as u64),
+        fp_bytes as f64 * 8.0 / (model.projection_params() as f64 * info.storage_bits_per_weight),
     );
+    assert!(registry.verify(&record.spec())?.ok(), "fresh artifact failed verify");
 
-    // --- perplexity before/after ------------------------------------------
-    let qmodel = model.with_replaced(&replacements);
+    // --- perplexity before/after (container decode path) -------------------
+    let cache = Arc::new(DecodeCache::new(512 << 20));
+    let stored = StoredModel::open(&container_path, cache.clone())?;
+    let qmodel = stored.to_trained_model()?;
     let mut engine = Engine::new(&dir)?;
     let test = load_corpus_tokens(&dir, "test")?;
     let fp_ppl = perplexity(&mut engine, weight_literals(&model)?, &test, 8)?;
     let q_ppl = perplexity(&mut engine, weight_literals(&qmodel)?, &test, 8)?;
-    println!("\ntest perplexity: fp32 {:.3} → {} {:.3} ({:+.2}%)",
-        fp_ppl, method.name(), q_ppl, (q_ppl / fp_ppl - 1.0) * 100.0);
+    println!(
+        "\ntest perplexity: fp32 {:.3} → ICQuant^SK {:.3} ({:+.2}%)",
+        fp_ppl,
+        q_ppl,
+        (q_ppl / fp_ppl - 1.0) * 100.0
+    );
     drop(engine);
 
-    // --- serve -------------------------------------------------------------
+    // --- serve from the container ------------------------------------------
     let cfg = ServeConfig {
         max_batch: 8,
         max_wait: Duration::from_millis(15),
@@ -71,11 +96,12 @@ fn main() -> anyhow::Result<()> {
         buckets: vec![1, 2, 4, 8],
         prefill_len: 64,
     };
-    println!("\nstarting coordinator (buckets {:?}, max_wait 15ms)…", cfg.buckets);
+    println!("\nstarting coordinator from {} (buckets {:?})…", record.spec(), cfg.buckets);
     let dir2 = dir.clone();
-    let qmodel2 = qmodel.clone();
+    let cpath = container_path.clone();
+    let serve_cache = cache.clone();
     let server = Server::start(cfg, move || {
-        let mut b = PjrtBackend::new(&dir2, &qmodel2).expect("backend");
+        let mut b = PjrtBackend::from_container(&dir2, &cpath, serve_cache).expect("backend");
         b.warmup().expect("warmup");
         b
     });
@@ -101,6 +127,7 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics.snapshot();
+    let cstats = cache.stats();
 
     println!("\n=== end-to-end serving report (quantized model) ===");
     println!("requests / tokens      : {} / {}", snap.requests, total_tokens);
@@ -109,6 +136,12 @@ fn main() -> anyhow::Result<()> {
     println!("avg prefill            : {:.1} ms", snap.avg_prefill_ms);
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
     println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
+    println!(
+        "decode cache           : {} hits / {} misses ({})",
+        cstats.hits,
+        cstats.misses,
+        human_bytes(cstats.decoded_bytes)
+    );
     if let Some(tokens) = sample {
         let text: String = tokens
             .iter()

@@ -1,0 +1,136 @@
+//! Store benches: ICQZ pack/load throughput, full-file verify, and the
+//! cached-vs-uncached decode path the coordinator rides on. Results are
+//! printed and also recorded as `BENCH_store.json` (consumed by ci.sh).
+
+use icquant::bench::{bench_fn, bench_throughput, black_box, BenchResult};
+use icquant::icquant::IcqConfig;
+use icquant::quant::QuantizerKind;
+use icquant::store::{container, synth_model, DecodeCache, StoredModel};
+use icquant::util::json::Json;
+use std::sync::Arc;
+
+fn main() {
+    let dir = std::env::temp_dir().join("icq_store_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let family = icquant::synthzoo::family("llama3.2-1b").unwrap();
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = synth_model(&family, &cfg, None).unwrap();
+    let path = dir.join("bench.icqz");
+    container::save(&model, &path).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+    let info = container::inspect(&path).unwrap();
+    println!(
+        "container: {} sections, {} quantized params, {:.3} bits/weight, {} bytes\n",
+        info.sections.len(),
+        info.quantized_params,
+        info.storage_bits_per_weight,
+        file_bytes
+    );
+
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    results.push(bench_throughput("store/pack (save container)", 300, file_bytes, || {
+        container::save(black_box(&model), black_box(&path)).unwrap();
+    }));
+    println!("{}", results.last().unwrap().report());
+
+    results.push(bench_throughput("store/load (decode container)", 300, file_bytes, || {
+        black_box(container::load(black_box(&path)).unwrap());
+    }));
+    println!("{}", results.last().unwrap().report());
+
+    results.push(bench_throughput("store/verify (CRC full file)", 300, file_bytes, || {
+        let report = container::verify(black_box(&path)).unwrap();
+        assert!(report.ok());
+    }));
+    println!("{}", results.last().unwrap().report());
+
+    // Decode path: cold (fresh cache every iteration) vs hot (shared).
+    let loaded = container::load(&path).unwrap();
+    let cold_stored = StoredModel::from_model(loaded, Arc::new(DecodeCache::new(0)), "cold");
+    let names: Vec<String> =
+        cold_stored.quantized_names().iter().map(|s| s.to_string()).collect();
+    let plane_bytes: u64 = names
+        .iter()
+        .map(|n| cold_stored.decode(n).unwrap().numel() as u64 * 4)
+        .sum();
+    results.push(bench_throughput(
+        "store/decode all planes (uncached)",
+        400,
+        plane_bytes,
+        || {
+            for n in &names {
+                black_box(cold_stored.decode(n).unwrap());
+            }
+        },
+    ));
+    println!("{}", results.last().unwrap().report());
+
+    let hot_cache = Arc::new(DecodeCache::new(256 << 20));
+    let hot_stored =
+        StoredModel::from_model(container::load(&path).unwrap(), hot_cache.clone(), "hot");
+    for n in &names {
+        hot_stored.decode(n).unwrap(); // warm
+    }
+    results.push(bench_throughput(
+        "store/decode all planes (LRU cached)",
+        400,
+        plane_bytes,
+        || {
+            for n in &names {
+                black_box(hot_stored.decode(n).unwrap());
+            }
+        },
+    ));
+    println!("{}", results.last().unwrap().report());
+    let s = hot_cache.stats();
+    println!(
+        "  cache: {} hits / {} misses ({:.1}% hit rate)",
+        s.hits,
+        s.misses,
+        s.hit_rate() * 100.0
+    );
+
+    results.push(bench_fn("store/to_trained_model (cached)", 300, || {
+        black_box(hot_stored.to_trained_model().unwrap());
+    }));
+    println!("{}", results.last().unwrap().report());
+
+    // Record machine-readable results for ci.sh / regression tracking.
+    let json = Json::obj(vec![
+        ("bench", Json::str("store")),
+        ("container_bytes", Json::num(file_bytes as f64)),
+        (
+            "storage_bits_per_weight",
+            Json::num(info.storage_bits_per_weight),
+        ),
+        (
+            "results",
+            Json::arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        let mut fields = vec![
+                            ("name", Json::str(r.name.clone())),
+                            ("mean_ns", Json::num(r.mean_ns)),
+                            ("p50_ns", Json::num(r.p50_ns)),
+                            ("p99_ns", Json::num(r.p99_ns)),
+                            ("iters", Json::num(r.iters as f64)),
+                        ];
+                        if let Some(b) = r.bytes_per_iter {
+                            fields.push(("bytes_per_iter", Json::num(b as f64)));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_store.json", json.to_string()).unwrap();
+    println!("\nwrote BENCH_store.json");
+}

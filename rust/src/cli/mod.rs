@@ -4,6 +4,10 @@
 //! ```text
 //! icquant exp <id|all> [--fast]      regenerate a paper table/figure
 //! icquant quantize [opts]            quantize a tensor → .icqm artifact
+//! icquant pack [opts]                quantize a zoo model → .icqz container
+//! icquant inspect <file|name[@hash]> show an ICQZ container's TOC
+//! icquant verify <file|name[@hash]>  full integrity check (CRCs, layout)
+//! icquant store list|gc              artifact-registry maintenance
 //! icquant stats --family <name>      outlier statistics for a zoo family
 //! icquant bound [--gamma g]          Lemma 1 bound table + optimal b
 //! icquant serve [opts]               run the serving demo
@@ -17,8 +21,10 @@ pub mod serve_demo;
 use crate::experiments;
 use crate::icquant::{packed, IcqConfig, IcqMatrix};
 use crate::quant::QuantizerKind;
+use crate::store::{self, container, Registry};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 /// Parsed flag set: positionals + `--key value` + `--flag` booleans.
 pub struct Args {
@@ -86,6 +92,10 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         "exp" => cmd_exp(&args),
         "quantize" => cmd_quantize(&args),
+        "pack" => cmd_pack(&args),
+        "inspect" => cmd_inspect(&args),
+        "verify" => cmd_verify(&args),
+        "store" => cmd_store(&args),
         "stats" => cmd_stats(&args),
         "bound" => cmd_bound(&args),
         "serve" => cmd_serve(&args),
@@ -111,6 +121,15 @@ fn print_help() {
     println!("  quantize [--bits n] [--ratio g] [--quantizer rtn|sk]");
     println!("           [--rows r --cols c --seed s] [--out file.icqm]");
     println!("                                quantize a (synthetic) matrix");
+    println!("  pack [--family f] [--bits n] [--ratio g] [--gap b]");
+    println!("       [--quantizer rtn|sk] [--blocks k] [--out file.icqz]");
+    println!("       [--name reg-name] [--store dir]");
+    println!("                                quantize a zoo model into one");
+    println!("                                ICQZ container (+ registry put)");
+    println!("  inspect <file|name[@hash]>    show a container's TOC/accounting");
+    println!("  verify <file|name[@hash]>     full integrity check (CRC32s,");
+    println!("                                padding, layout, accounting)");
+    println!("  store list|gc [--store dir]   artifact-registry maintenance");
     println!("  stats --family <name>         outlier stats for a zoo family");
     println!("  bound [--gamma g]             Lemma 1 bound + optimal b");
     println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
@@ -134,11 +153,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let rows = args.usize_flag("rows", 256)?;
     let cols = args.usize_flag("cols", 1024)?;
     let seed = args.usize_flag("seed", 7)? as u64;
-    let quantizer = match args.flag("quantizer").unwrap_or("rtn") {
-        "rtn" => QuantizerKind::Rtn,
-        "sk" => QuantizerKind::SensitiveKmeans,
-        q => bail!("unknown quantizer '{}'", q),
-    };
+    let quantizer: QuantizerKind = args.flag("quantizer").unwrap_or("rtn").parse()?;
     let w = crate::synthzoo::demo_matrix(rows, cols, seed);
     let cfg = IcqConfig { bits, outlier_ratio: ratio, gap_bits: 0, quantizer };
     let t0 = std::time::Instant::now();
@@ -168,6 +183,194 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn registry_from(args: &Args) -> Result<Registry> {
+    let root = args
+        .flag("store")
+        .map(PathBuf::from)
+        .unwrap_or_else(Registry::default_root);
+    Registry::open(root)
+}
+
+/// `inspect`/`verify` accept either a filesystem path or a registry
+/// `name[@hash]` spec.
+fn resolve_container(args: &Args, spec: &str) -> Result<PathBuf> {
+    let p = Path::new(spec);
+    if p.exists() {
+        return Ok(p.to_path_buf());
+    }
+    let (record, path) = registry_from(args)?.resolve(spec)?;
+    println!("resolved {} → {}", record.spec(), path.display());
+    Ok(path)
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let family_name = args.flag("family").unwrap_or("llama3.2-1b");
+    let family = crate::synthzoo::family(family_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown family '{}' (see `icquant zoo`)", family_name))?;
+    let bits = args.usize_flag("bits", 2)? as u32;
+    let ratio = args.f64_flag("ratio", 0.05)?;
+    let gap_bits = args.usize_flag("gap", 0)? as u32;
+    let quantizer: QuantizerKind = args.flag("quantizer").unwrap_or("rtn").parse()?;
+    let blocks = match args.usize_flag("blocks", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let cfg = IcqConfig { bits, outlier_ratio: ratio, gap_bits, quantizer };
+    let out = args
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{}.icqz", family_name)));
+
+    let t0 = std::time::Instant::now();
+    let model = store::synth_model(&family, &cfg, blocks)?;
+    container::save(&model, &out)?;
+    let dt = t0.elapsed();
+    let info = container::inspect(&out)?;
+    println!(
+        "packed {} ({} sections, {} quantized / {} dense params) in {}",
+        out.display(),
+        info.sections.len(),
+        info.quantized_params,
+        info.dense_params,
+        crate::util::human_duration(dt)
+    );
+    println!(
+        "  storage bits/weight  : {:.4} (measured over serialized sections)",
+        info.storage_bits_per_weight
+    );
+    println!(
+        "  code bits/weight     : {:.4} (n + B)   full: {:.4} (+codebooks)",
+        info.code_bits_per_weight, info.full_bits_per_weight
+    );
+    println!(
+        "  container size       : {}",
+        crate::util::human_bytes(info.file_len)
+    );
+    if let Some(name) = args.flag("name") {
+        let record = registry_from(args)?.put_file(name, &out)?;
+        println!("  registered           : {}", record.spec());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let spec = args
+        .positional
+        .first()
+        .context("usage: icquant inspect <file|name[@hash]>")?;
+    let path = resolve_container(args, spec)?;
+    let info = container::inspect(&path)?;
+    println!("{}", path.display());
+    if let Some(c) = &info.config {
+        println!(
+            "  config: vocab={} d_model={} layers={} heads={} d_ff={} max_seq={}",
+            c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq
+        );
+    } else {
+        println!("  config: (none)");
+    }
+    println!(
+        "  params: {} quantized + {} dense | bits/weight: {:.4} storage, {:.4} code, {:.4} full",
+        info.quantized_params,
+        info.dense_params,
+        info.storage_bits_per_weight,
+        info.code_bits_per_weight,
+        info.full_bits_per_weight
+    );
+    println!(
+        "  {} sections, data at {} (64-byte aligned), {} total",
+        info.sections.len(),
+        info.data_start,
+        crate::util::human_bytes(info.file_len)
+    );
+    println!(
+        "\n  {:<16} {:>4} {:>14} {:>10} {:>10}  {}",
+        "name", "kind", "shape", "offset", "bytes", "crc32"
+    );
+    for s in &info.sections {
+        let shape = s
+            .shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        println!(
+            "  {:<16} {:>4} {:>14} {:>10} {:>10}  {:08x}",
+            s.name,
+            s.kind.as_str(),
+            shape,
+            s.offset,
+            s.len,
+            s.crc32
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let spec = args
+        .positional
+        .first()
+        .context("usage: icquant verify <file|name[@hash]>")?;
+    let p = Path::new(spec);
+    let report = if p.exists() {
+        container::verify(p)?
+    } else {
+        // Registry specs additionally re-check the content hash.
+        registry_from(args)?.verify(spec)?
+    };
+    println!(
+        "verified {} sections, {} bytes",
+        report.sections_checked,
+        report.bytes_checked
+    );
+    if report.ok() {
+        println!("OK: container is intact");
+        Ok(())
+    } else {
+        for issue in &report.issues {
+            eprintln!("  FAIL: {}", issue);
+        }
+        bail!("{} integrity issue(s) found in {}", report.issues.len(), spec);
+    }
+}
+
+fn cmd_store(args: &Args) -> Result<()> {
+    let reg = registry_from(args)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            let records = reg.list()?;
+            if records.is_empty() {
+                println!("registry {} is empty", reg.root().display());
+                return Ok(());
+            }
+            println!(
+                "{:<44} {:>10} {:>10} {:>12}",
+                "artifact", "size", "bits/w", "created"
+            );
+            for r in records {
+                println!(
+                    "{:<44} {:>10} {:>10.3} {:>12}",
+                    r.spec(),
+                    crate::util::human_bytes(r.bytes),
+                    r.storage_bits_per_weight,
+                    r.created_unix
+                );
+            }
+            Ok(())
+        }
+        Some("gc") => {
+            let removed = reg.gc()?;
+            println!("removed {} unreferenced object(s)", removed.len());
+            for p in removed {
+                println!("  {}", p.display());
+            }
+            Ok(())
+        }
+        other => bail!("usage: icquant store <list|gc> (got {:?})", other),
+    }
 }
 
 fn cmd_stats(args: &Args) -> Result<()> {
@@ -306,5 +509,40 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(dispatch(&["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn pack_inspect_verify_flow() {
+        let dir = std::env::temp_dir().join("icq_cli_pack_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("m.icqz");
+        let reg = dir.join("registry");
+        cmd_pack(&args(&[
+            "--family", "llama3.2-1b", "--bits", "2", "--blocks", "1",
+            "--out", out.to_str().unwrap(),
+            "--name", "cli-demo", "--store", reg.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.exists());
+        let out_s = out.to_str().unwrap();
+        cmd_inspect(&args(&[out_s])).unwrap();
+        cmd_verify(&args(&[out_s])).unwrap();
+        // Registry spec resolution path.
+        cmd_verify(&args(&["cli-demo", "--store", reg.to_str().unwrap()])).unwrap();
+        cmd_store(&args(&["list", "--store", reg.to_str().unwrap()])).unwrap();
+        cmd_store(&args(&["gc", "--store", reg.to_str().unwrap()])).unwrap();
+        // A flipped byte must fail verification.
+        let mut bytes = std::fs::read(&out).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x08;
+        std::fs::write(&out, &bytes).unwrap();
+        assert!(cmd_verify(&args(&[out_s])).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_unknown_family_and_quantizer() {
+        assert!(cmd_pack(&args(&["--family", "gpt-17t"])).is_err());
+        assert!(cmd_pack(&args(&["--quantizer", "fp4"])).is_err());
     }
 }

@@ -6,7 +6,9 @@
 
 use crate::model::TrainedModel;
 use crate::runtime::{Engine, HostTensor};
+use crate::store::{DecodeCache, StoredModel};
 use anyhow::{Context, Result};
+use std::sync::Arc;
 
 /// In-flight generation state for one batch.
 pub struct DecodeState {
@@ -58,6 +60,21 @@ impl PjrtBackend {
         let weights = engine.upload_all(weight_lits)?;
         let prefill_len = engine.manifest().prefill_len;
         Ok(PjrtBackend { engine, weights, max_seq: model.config.max_seq, prefill_len })
+    }
+
+    /// Serve straight from an `ICQZ` container: quantized layers are
+    /// decoded through the shared LRU cache (one decode per layer even
+    /// across backend restarts within the cache's budget), assembled
+    /// into the positional weight ABI, and uploaded once.
+    pub fn from_container(
+        artifacts_dir: &std::path::Path,
+        container: &std::path::Path,
+        cache: Arc<DecodeCache>,
+    ) -> Result<PjrtBackend> {
+        let stored = StoredModel::open(container, cache)
+            .with_context(|| format!("open container {}", container.display()))?;
+        let model = stored.to_trained_model()?;
+        Self::new(artifacts_dir, &model)
     }
 
     /// Pre-compile all serving buckets (avoids first-request latency).

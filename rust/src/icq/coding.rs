@@ -113,7 +113,10 @@ impl RowIndexCode {
                 positions.push(cursor - 1);
             }
         }
-        debug_assert_eq!(positions.len(), self.n_outliers as usize);
+        // For encode-produced codes `positions.len() == n_outliers`; codes
+        // rebuilt via `from_parts` from untrusted bytes may disagree, so
+        // deserializers validate the count instead of asserting here
+        // (see `icquant::packed::read_from`).
         positions
     }
 

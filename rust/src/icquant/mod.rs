@@ -91,6 +91,12 @@ impl IcqMatrix {
             cfg.outlier_ratio >= 0.0 && cfg.outlier_ratio < 0.5,
             "outlier ratio must be in [0, 0.5)"
         );
+        // 0 = auto (Lemma-1 optimal); explicit widths must stay within
+        // what the gap codec and the serialized artifact accept.
+        ensure!(
+            cfg.gap_bits == 0 || (1..=15).contains(&cfg.gap_bits),
+            "gap_bits must be 0 (auto) or in 1..=15"
+        );
         if let Some(s) = sens {
             ensure!((s.rows, s.cols) == (w.rows, w.cols), "sensitivity shape mismatch");
         }
@@ -269,6 +275,15 @@ mod tests {
     fn auto_gap_bits_matches_optimal() {
         let cfg = IcqConfig { outlier_ratio: 0.05, gap_bits: 0, ..Default::default() };
         assert_eq!(cfg.resolved_gap_bits(), 6);
+    }
+
+    #[test]
+    fn rejects_unencodable_gap_width() {
+        // A width the codec (and the ICQM/ICQZ readers) cannot accept
+        // must be refused at quantize time, not at load time.
+        let w = heavy_tailed(2, 64, 15);
+        let cfg = IcqConfig { gap_bits: 16, ..Default::default() };
+        assert!(IcqMatrix::quantize(&w, None, &cfg).is_err());
     }
 
     #[test]

@@ -14,6 +14,12 @@
 //! gaps_len   u64 + concatenated gap-stream bytes (byte-aligned per row)
 //! codebooks  rows × 2 × 2^bits × u16 (f16 levels: inlier then outlier)
 //! ```
+//!
+//! The same byte layout is embedded verbatim as the `icq` sections of the
+//! multi-tensor `ICQZ` container ([`crate::store::container`]); every read
+//! here is hardened against truncated or corrupt input — dims are bounded,
+//! payload lengths are validated against the header before allocation, and
+//! all failures are `anyhow` errors, never panics.
 
 use super::IcqMatrix;
 use crate::bitstream::PackedPlane;
@@ -21,12 +27,16 @@ use crate::icq::RowIndexCode;
 use crate::quant::{Codebook, QuantizerKind};
 use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"ICQM";
 const VERSION: u32 = 1;
+
+/// Upper bound on the JSON header we will ever emit; reads reject larger
+/// values before allocating (corrupt `hlen` must not drive an OOM).
+const MAX_HEADER_LEN: usize = 1 << 16;
 
 fn header_json(m: &IcqMatrix) -> String {
     Json::obj(vec![
@@ -35,13 +45,7 @@ fn header_json(m: &IcqMatrix) -> String {
         ("bits", Json::num(m.bits as f64)),
         ("gap_bits", Json::num(m.gap_bits as f64)),
         ("outlier_ratio", Json::num(m.outlier_ratio)),
-        (
-            "quantizer",
-            Json::str(match m.quantizer {
-                QuantizerKind::Rtn => "rtn",
-                QuantizerKind::SensitiveKmeans => "sk",
-            }),
-        ),
+        ("quantizer", Json::str(m.quantizer.to_str())),
     ])
     .to_string()
 }
@@ -57,10 +61,8 @@ pub fn serialized_size(m: &IcqMatrix) -> usize {
         + m.rows * 2 * (1usize << m.bits) * 2
 }
 
-pub fn save(m: &IcqMatrix, path: &Path) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
-    );
+/// Serialize into any writer (file, in-memory container section, …).
+pub fn write_to<W: Write>(m: &IcqMatrix, f: &mut W) -> Result<()> {
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     let header = header_json(m);
@@ -90,74 +92,156 @@ pub fn save(m: &IcqMatrix, path: &Path) -> Result<()> {
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<IcqMatrix> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+/// Serialize to an in-memory buffer (the `ICQZ` section payload path).
+pub fn to_bytes(m: &IcqMatrix) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(serialized_size(m));
+    write_to(m, &mut buf).expect("Vec<u8> writes are infallible");
+    buf
+}
+
+pub fn save(m: &IcqMatrix, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
     );
+    write_to(m, &mut f)
+}
+
+/// Deserialize from any reader. Every length field is validated against
+/// the header dims before allocation; corrupt or truncated input yields a
+/// descriptive error, never a panic or an unbounded allocation.
+pub fn read_from<R: Read>(f: &mut R) -> Result<IcqMatrix> {
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).context("read magic")?;
     if &magic != MAGIC {
         bail!("not an ICQM artifact: bad magic");
     }
-    let version = read_u32(&mut f)?;
+    let version = read_u32(f).context("read version")?;
     if version != VERSION {
         bail!("unsupported ICQM version {}", version);
     }
-    let hlen = read_u32(&mut f)? as usize;
+    let hlen = read_u32(f).context("read header length")? as usize;
+    ensure!(hlen <= MAX_HEADER_LEN, "header length {} exceeds cap {}", hlen, MAX_HEADER_LEN);
     let mut hbytes = vec![0u8; hlen];
-    f.read_exact(&mut hbytes)?;
-    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+    f.read_exact(&mut hbytes).context("read header")?;
+    let header = Json::parse(std::str::from_utf8(&hbytes).context("header not utf-8")?)
         .map_err(|e| anyhow::anyhow!("header: {}", e))?;
     let rows = header.req("rows")?.as_usize().context("rows")?;
     let cols = header.req("cols")?.as_usize().context("cols")?;
     let bits = header.req("bits")?.as_usize().context("bits")? as u32;
     let gap_bits = header.req("gap_bits")?.as_usize().context("gap_bits")? as u32;
     let outlier_ratio = header.req("outlier_ratio")?.as_f64().context("outlier_ratio")?;
-    let quantizer = match header.req("quantizer")?.as_str() {
-        Some("rtn") => QuantizerKind::Rtn,
-        Some("sk") => QuantizerKind::SensitiveKmeans,
-        other => bail!("unknown quantizer {:?}", other),
-    };
+    let quantizer: QuantizerKind = header
+        .req("quantizer")?
+        .as_str()
+        .context("quantizer not a string")?
+        .parse()?;
+    ensure!(rows >= 1 && cols >= 1, "degenerate dims {}x{}", rows, cols);
+    ensure!(
+        rows.checked_mul(cols).is_some_and(|n| n <= 1usize << 31),
+        "implausible dims {}x{}",
+        rows,
+        cols
+    );
+    ensure!((1..=8).contains(&bits), "bits {} out of range 1..=8", bits);
+    ensure!((1..=15).contains(&gap_bits), "gap_bits {} out of range 1..=15", gap_bits);
+    ensure!(
+        outlier_ratio.is_finite() && (0.0..0.5).contains(&outlier_ratio),
+        "outlier_ratio {} out of range [0, 0.5)",
+        outlier_ratio
+    );
 
+    // Every gap symbol advances the decode cursor by ≥ 1 position, so a
+    // row of `cols` weights can never take more than `cols` symbols (and
+    // never holds more outliers than columns) — bound both before
+    // trusting them for the stream-slicing arithmetic below.
     let mut n_symbols = Vec::with_capacity(rows);
-    for _ in 0..rows {
-        n_symbols.push(read_u32(&mut f)?);
+    for r in 0..rows {
+        let n = read_u32(f).with_context(|| format!("read n_symbols[{}]", r))?;
+        ensure!(n as usize <= cols, "row {}: n_symbols {} exceeds cols {}", r, n, cols);
+        n_symbols.push(n);
     }
     let mut n_outliers = Vec::with_capacity(rows);
-    for _ in 0..rows {
-        n_outliers.push(read_u32(&mut f)?);
+    for r in 0..rows {
+        let n = read_u32(f).with_context(|| format!("read n_outliers[{}]", r))?;
+        ensure!(n as usize <= cols, "row {}: n_outliers {} exceeds cols {}", r, n, cols);
+        ensure!(
+            n <= n_symbols[r],
+            "row {}: n_outliers {} exceeds n_symbols {}",
+            r,
+            n,
+            n_symbols[r]
+        );
+        n_outliers.push(n);
     }
-    let plane_len = read_u64(&mut f)? as usize;
+
+    let plane_len = read_u64(f).context("read plane length")? as usize;
+    let want_plane = (rows * cols * bits as usize).div_ceil(8);
+    ensure!(
+        plane_len == want_plane,
+        "code plane is {} bytes, header dims imply {}",
+        plane_len,
+        want_plane
+    );
     let mut plane_bytes = vec![0u8; plane_len];
-    f.read_exact(&mut plane_bytes)?;
+    f.read_exact(&mut plane_bytes).context("read code plane")?;
     let code_plane = PackedPlane::from_bytes(rows, cols, bits, plane_bytes);
 
-    let gaps_len = read_u64(&mut f)? as usize;
+    let gaps_len = read_u64(f).context("read gap stream length")? as usize;
+    let want_gaps: usize = n_symbols
+        .iter()
+        .map(|&n| (n as usize * gap_bits as usize).div_ceil(8))
+        .sum();
+    ensure!(
+        gaps_len == want_gaps,
+        "gap streams are {} bytes, per-row symbol counts imply {}",
+        gaps_len,
+        want_gaps
+    );
     let mut gap_bytes = vec![0u8; gaps_len];
-    f.read_exact(&mut gap_bytes)?;
+    f.read_exact(&mut gap_bytes).context("read gap streams")?;
     let mut index_codes = Vec::with_capacity(rows);
     let mut off = 0usize;
     for r in 0..rows {
         let nbytes = ((n_symbols[r] as usize) * gap_bits as usize).div_ceil(8);
-        index_codes.push(RowIndexCode::from_parts(
+        // `off + nbytes ≤ gaps_len` holds by the sum check above.
+        let code = RowIndexCode::from_parts(
             gap_bits,
             n_symbols[r],
             n_outliers[r],
             gap_bytes[off..off + nbytes].to_vec(),
-        ));
+        );
+        // The stream must decode to exactly the advertised outlier count
+        // with every position inside the row — otherwise downstream mask
+        // decodes would index out of bounds.
+        let positions = code.decode();
+        ensure!(
+            positions.len() == n_outliers[r] as usize,
+            "row {}: gap stream decodes {} outliers, header says {}",
+            r,
+            positions.len(),
+            n_outliers[r]
+        );
+        if let Some(&last) = positions.last() {
+            ensure!(
+                last < cols,
+                "row {}: outlier position {} out of range (cols {})",
+                r,
+                last,
+                cols
+            );
+        }
+        index_codes.push(code);
         off += nbytes;
-    }
-    if off != gaps_len {
-        bail!("gap stream length mismatch: consumed {} of {}", off, gaps_len);
     }
 
     let k = 1usize << bits;
     let mut inlier_cbs = Vec::with_capacity(rows);
     let mut outlier_cbs = Vec::with_capacity(rows);
     let mut lv_bytes = vec![0u8; k * 2];
-    for _ in 0..rows {
+    for r in 0..rows {
         for which in 0..2 {
-            f.read_exact(&mut lv_bytes)?;
+            f.read_exact(&mut lv_bytes)
+                .with_context(|| format!("read codebook (row {})", r))?;
             let levels: Vec<f32> = lv_bytes
                 .chunks_exact(2)
                 .map(|b| f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
@@ -184,6 +268,33 @@ pub fn load(path: &Path) -> Result<IcqMatrix> {
     })
 }
 
+/// Deserialize from an exact in-memory buffer; trailing bytes are an
+/// error (container sections carry exact lengths).
+pub fn from_bytes(bytes: &[u8]) -> Result<IcqMatrix> {
+    let mut cursor = bytes;
+    let m = read_from(&mut cursor)?;
+    ensure!(
+        cursor.is_empty(),
+        "{} trailing bytes after ICQM payload",
+        cursor.len()
+    );
+    Ok(m)
+}
+
+pub fn load(path: &Path) -> Result<IcqMatrix> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let m = read_from(&mut f)?;
+    let mut probe = [0u8; 1];
+    ensure!(
+        f.read(&mut probe).context("probe for trailing data")? == 0,
+        "trailing data after ICQM payload in {}",
+        path.display()
+    );
+    Ok(m)
+}
+
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -208,11 +319,15 @@ mod tests {
         dir.join(name)
     }
 
-    #[test]
-    fn save_load_roundtrip_bitexact() {
+    fn demo_artifact() -> IcqMatrix {
         let w = synthzoo::demo_matrix(12, 300, 21);
         let cfg = IcqConfig { bits: 3, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
-        let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+        IcqMatrix::quantize(&w, None, &cfg).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip_bitexact() {
+        let q = demo_artifact();
         let p = tmp("roundtrip.icqm");
         save(&q, &p).unwrap();
         let q2 = load(&p).unwrap();
@@ -236,6 +351,7 @@ mod tests {
         save(&q, &p).unwrap();
         let actual = std::fs::metadata(&p).unwrap().len() as usize;
         assert_eq!(actual, serialized_size(&q));
+        assert_eq!(to_bytes(&q).len(), serialized_size(&q));
         // File-level bits/weight ≈ n + B + codebooks + small header.
         let bits_per_weight = actual as f64 * 8.0 / q.code_plane.storage_bits() as f64
             * q.bits as f64;
@@ -247,5 +363,79 @@ mod tests {
         let p = tmp("garbage.icqm");
         std::fs::write(&p, b"not an artifact").unwrap();
         assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip_rejects_trailing() {
+        let q = demo_artifact();
+        let bytes = to_bytes(&q);
+        let q2 = from_bytes(&bytes).unwrap();
+        assert_eq!(q.code_plane.bytes(), q2.code_plane.bytes());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn truncation_at_every_section_boundary_errors() {
+        let q = demo_artifact();
+        let bytes = to_bytes(&q);
+        let header_len =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let hdr_end = 12 + header_len;
+        let counts_end = hdr_end + q.rows * 8;
+        let plane_end = counts_end + 8 + q.code_plane.storage_bytes();
+        let gaps: usize = q.index_codes.iter().map(|c| c.bytes().len()).sum();
+        let gaps_end = plane_end + 8 + gaps;
+        // Truncate at (and just inside) each section boundary: all must
+        // error, none may panic.
+        for cut in [3, 8, 11, hdr_end - 1, hdr_end, counts_end - 2, counts_end,
+                    counts_end + 7, plane_end - 1, plane_end, gaps_end - 1,
+                    gaps_end, bytes.len() - 1]
+        {
+            let err = from_bytes(&bytes[..cut]);
+            assert!(err.is_err(), "truncation at {} of {} accepted", cut, bytes.len());
+        }
+    }
+
+    #[test]
+    fn byte_flip_in_metadata_is_detected() {
+        let q = demo_artifact();
+        let bytes = to_bytes(&q);
+        // Flip every byte of the fixed-size prefix + length fields; the
+        // loader must reject or at minimum never panic. (Flips inside the
+        // code plane silently change codes — that's what the ICQZ CRCs
+        // catch at the container level.)
+        let header_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        for i in 0..12 + header_len {
+            let mut corrupt = bytes.clone();
+            corrupt[i] ^= 0xA5;
+            let _ = from_bytes(&corrupt); // must not panic
+        }
+        // Inflating a per-row symbol count past `cols` must be rejected.
+        let mut corrupt = bytes.clone();
+        let counts_off = 12 + header_len;
+        corrupt[counts_off..counts_off + 4]
+            .copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(from_bytes(&corrupt).is_err());
+    }
+
+    #[test]
+    fn dim_payload_mismatch_is_rejected() {
+        let q = demo_artifact();
+        let bytes = to_bytes(&q);
+        // Grow `cols` in the JSON header: the plane length no longer
+        // matches the dims and the loader must say so.
+        let header_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let hdr = String::from_utf8(bytes[12..12 + header_len].to_vec()).unwrap();
+        let hacked = hdr.replace("\"cols\":300", "\"cols\":301");
+        assert_ne!(hdr, hacked);
+        let mut out = Vec::new();
+        out.extend_from_slice(&bytes[..8]);
+        out.extend_from_slice(&(hacked.len() as u32).to_le_bytes());
+        out.extend_from_slice(hacked.as_bytes());
+        out.extend_from_slice(&bytes[12 + header_len..]);
+        let err = from_bytes(&out).unwrap_err();
+        assert!(format!("{:#}", err).contains("imply"), "{:#}", err);
     }
 }

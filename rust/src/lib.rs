@@ -15,11 +15,13 @@
 //!   incoherence / VQ / GPTQ-lite baselines), [`icquant`] (the framework
 //!   gluing partitioning + coding + dual codebooks into a packed artifact),
 //!   [`stats`] (§2 statistics), [`synthzoo`] (synthetic model families).
-//! * **System** — [`model`] (weight/sensitivity artifacts), [`runtime`]
-//!   (PJRT executor for AOT-lowered JAX/Pallas HLO), [`eval`] (perplexity +
-//!   zero-shot tasks), [`coordinator`] (dynamic-batching serving stack),
-//!   [`experiments`] (one harness per paper table/figure), [`bench`]
-//!   (timing harness).
+//! * **System** — [`model`] (weight/sensitivity artifacts), [`store`]
+//!   (the `ICQZ` checkpoint container, the content-addressed artifact
+//!   registry, and the LRU decode cache the serving stack loads through),
+//!   [`runtime`] (PJRT executor for AOT-lowered JAX/Pallas HLO), [`eval`]
+//!   (perplexity + zero-shot tasks), [`coordinator`] (dynamic-batching
+//!   serving stack), [`experiments`] (one harness per paper table/figure),
+//!   [`bench`] (timing harness).
 
 pub mod util;
 pub mod bitstream;
@@ -29,6 +31,7 @@ pub mod icquant;
 pub mod stats;
 pub mod synthzoo;
 pub mod model;
+pub mod store;
 pub mod runtime;
 pub mod eval;
 pub mod coordinator;

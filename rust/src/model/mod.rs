@@ -27,7 +27,8 @@ impl ModelConfig {
         self.d_model / self.n_heads
     }
 
-    fn from_json(j: &Json) -> Result<ModelConfig> {
+    /// Parse from manifest JSON (also the `ICQZ` container TOC format).
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
         Ok(ModelConfig {
             vocab: j.req("vocab")?.as_usize().context("vocab")?,
             d_model: j.req("d_model")?.as_usize().context("d_model")?,
@@ -36,6 +37,18 @@ impl ModelConfig {
             d_ff: j.req("d_ff")?.as_usize().context("d_ff")?,
             max_seq: j.req("max_seq")?.as_usize().context("max_seq")?,
         })
+    }
+
+    /// Inverse of [`Self::from_json`]; used by the `ICQZ` container TOC.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+        ])
     }
 }
 
@@ -94,6 +107,24 @@ pub struct TrainedModel {
 }
 
 impl TrainedModel {
+    /// Assemble from already-materialized tensors (the `ICQZ` container
+    /// decode path — see [`crate::store::StoredModel::to_trained_model`]).
+    /// Tensor order is preserved; it is the positional ABI of the
+    /// AOT-compiled HLO entries.
+    pub fn from_parts(
+        config: ModelConfig,
+        tensors: Vec<NamedTensor>,
+        sensitivity: Vec<NamedTensor>,
+        val_loss: f64,
+    ) -> TrainedModel {
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        TrainedModel { config, tensors, sensitivity, val_loss, index }
+    }
+
     /// Load from an artifacts directory (`model_manifest.json` +
     /// `model_weights.bin` [+ `sensitivity.bin`]).
     pub fn load(dir: &Path) -> Result<TrainedModel> {
@@ -267,6 +298,26 @@ mod tests {
         let s = m.sensitivity_of("l0.wq").unwrap();
         assert_eq!(s.shape, vec![4, 4]);
         assert_eq!(m.get("l0.wo").unwrap().layer_type(), Some("o_proj"));
+    }
+
+    #[test]
+    fn config_json_roundtrip_and_from_parts() {
+        let cfg = ModelConfig {
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 8,
+            max_seq: 16,
+        };
+        let back = ModelConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.vocab, cfg.vocab);
+        assert_eq!(back.d_model, cfg.d_model);
+        assert_eq!(back.max_seq, cfg.max_seq);
+        let t = NamedTensor { name: "tok_emb".into(), shape: vec![2, 2], data: vec![0.0; 4] };
+        let m = TrainedModel::from_parts(cfg, vec![t], Vec::new(), 1.0);
+        assert_eq!(m.get("tok_emb").unwrap().shape, vec![2, 2]);
+        assert_eq!(m.val_loss, 1.0);
     }
 
     #[test]

@@ -65,6 +65,32 @@ impl QuantizerKind {
             QuantizerKind::SensitiveKmeans => "SK",
         }
     }
+
+    /// Canonical on-disk / CLI identifier. The single source of truth for
+    /// the `QuantizerKind` ↔ string mapping used by the `ICQM` header,
+    /// the `ICQZ` container TOC, and `icquant --quantizer`; the inverse
+    /// is the [`std::str::FromStr`] impl below.
+    pub fn to_str(&self) -> &'static str {
+        match self {
+            QuantizerKind::Rtn => "rtn",
+            QuantizerKind::SensitiveKmeans => "sk",
+        }
+    }
+}
+
+impl std::str::FromStr for QuantizerKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<QuantizerKind, Self::Err> {
+        match s {
+            "rtn" => Ok(QuantizerKind::Rtn),
+            "sk" => Ok(QuantizerKind::SensitiveKmeans),
+            other => Err(anyhow::anyhow!(
+                "unknown quantizer '{}' (expected 'rtn' or 'sk')",
+                other
+            )),
+        }
+    }
 }
 
 /// A scalar codebook: `levels` sorted ascending, one entry per code.
@@ -265,5 +291,14 @@ mod tests {
     #[test]
     fn min_max_basic() {
         assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn quantizer_kind_str_roundtrip() {
+        for kind in [QuantizerKind::Rtn, QuantizerKind::SensitiveKmeans] {
+            let s = kind.to_str();
+            assert_eq!(s.parse::<QuantizerKind>().unwrap(), kind);
+        }
+        assert!("squeeze".parse::<QuantizerKind>().is_err());
     }
 }

@@ -1,0 +1,253 @@
+//! Byte-budget LRU cache for dequantized weight planes.
+//!
+//! The serving hot loop wants dense f32 planes; the store keeps layers
+//! in their ≈2.3-bit packed form. [`DecodeCache`] sits between them:
+//! `get_or_decode` runs the fused runtime decode
+//! ([`IcqMatrix::to_runtime`] → dequantize) at most once per key while
+//! the entry is resident, so repeated prefill/decode batches — and
+//! multiple consumers of the same artifact — share one decode.
+//!
+//! Eviction is least-recently-used over a *byte* budget (weight planes
+//! vary by orders of magnitude across layers, so an entry-count bound
+//! would be meaningless). Victim selection scans the table; the table
+//! holds one entry per model layer (dozens), so the scan is noise next
+//! to a single plane decode. Entries are handed out as `Arc<Matrix>` —
+//! eviction never invalidates a plane a consumer still holds.
+
+use crate::icquant::IcqMatrix;
+use crate::util::tensor::Matrix;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Counters since construction (monotonic; read via [`DecodeCache::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Total bytes produced by decodes (including later-evicted planes).
+    pub decoded_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    plane: Arc<Matrix>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    bytes: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// Thread-safe byte-budget LRU decode cache (shared via `Arc`).
+pub struct DecodeCache {
+    inner: Mutex<Inner>,
+    budget_bytes: usize,
+}
+
+impl DecodeCache {
+    pub fn new(budget_bytes: usize) -> DecodeCache {
+        DecodeCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            budget_bytes,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// The dense plane for `key`, decoding `m` on a miss.
+    pub fn get_or_decode(&self, key: &str, m: &IcqMatrix) -> Arc<Matrix> {
+        self.get_or_insert_with(key, || m.to_runtime().dequantize())
+    }
+
+    /// General form: `decode` runs only on a miss. It executes under the
+    /// cache lock (decodes are CPU-bound and the lock is per-cache, not
+    /// per-request); `decode` must not touch this cache.
+    pub fn get_or_insert_with<F>(&self, key: &str, decode: F) -> Arc<Matrix>
+    where
+        F: FnOnce() -> Matrix,
+    {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let now = inner.tick;
+        if let Some(e) = inner.map.get_mut(key) {
+            e.last_used = now;
+            inner.stats.hits += 1;
+            return e.plane.clone();
+        }
+        let plane = Arc::new(decode());
+        let bytes = plane.numel() * 4;
+        inner.stats.misses += 1;
+        inner.stats.decoded_bytes += bytes as u64;
+        inner.bytes += bytes;
+        inner
+            .map
+            .insert(key.to_string(), Entry { plane: plane.clone(), bytes, last_used: now });
+        // Evict LRU entries (never the one just inserted) until within
+        // budget. A single over-budget plane stays resident — the cache
+        // must still serve it.
+        while inner.bytes > self.budget_bytes && inner.map.len() > 1 {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(k, _)| k.as_str() != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = inner.map.remove(&k).expect("victim vanished");
+                    inner.bytes -= e.bytes;
+                    inner.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        plane
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes (≤ budget except for a single oversized plane).
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Drop every resident plane (stats are preserved).
+    pub fn clear(&self) {
+        let mut guard = self.inner.lock().unwrap();
+        guard.map.clear();
+        guard.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::icquant::IcqConfig;
+    use crate::synthzoo;
+
+    fn plane(seed: u64) -> Matrix {
+        synthzoo::demo_matrix(8, 32, seed) // 1 KiB each
+    }
+
+    #[test]
+    fn hit_returns_same_arc_and_counts() {
+        let c = DecodeCache::new(1 << 20);
+        let a = c.get_or_insert_with("x", || plane(1));
+        let b = c.get_or_insert_with("x", || panic!("decode ran on a hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes_used(), 8 * 32 * 4);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        // Budget fits exactly two 1 KiB planes.
+        let c = DecodeCache::new(2 * 1024);
+        c.get_or_insert_with("a", || plane(1));
+        c.get_or_insert_with("b", || plane(2));
+        // Touch "a" so "b" is the LRU victim.
+        c.get_or_insert_with("a", || panic!("hit expected"));
+        c.get_or_insert_with("c", || plane(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.bytes_used() <= 2 * 1024);
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        // "a" survived (and is refreshed again by this touch).
+        c.get_or_insert_with("a", || panic!("'a' should still be resident"));
+        // "b" was evicted; re-fetching decodes again (evicting "c",
+        // which is now the least recently used).
+        let before = c.stats().misses;
+        c.get_or_insert_with("b", || plane(2));
+        assert_eq!(c.stats().misses, before + 1);
+    }
+
+    #[test]
+    fn oversized_single_entry_stays_resident() {
+        let c = DecodeCache::new(16); // absurdly small budget
+        let a = c.get_or_insert_with("big", || plane(7));
+        assert_eq!(c.len(), 1);
+        let b = c.get_or_insert_with("big", || panic!("must hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn decode_cache_decodes_icq_matrices_once() {
+        let w = synthzoo::demo_matrix(16, 256, 9);
+        let q = crate::icquant::IcqMatrix::quantize(&w, None, &IcqConfig::default()).unwrap();
+        let c = DecodeCache::new(1 << 20);
+        let d1 = c.get_or_decode("m", &q);
+        let d2 = c.get_or_decode("m", &q);
+        assert!(Arc::ptr_eq(&d1, &d2));
+        assert_eq!(d1.data, q.to_runtime().dequantize().data);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn clear_preserves_stats() {
+        let c = DecodeCache::new(1 << 20);
+        c.get_or_insert_with("a", || plane(1));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_used(), 0);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let c = Arc::new(DecodeCache::new(1 << 20));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8 {
+                    let _ = c.get_or_insert_with(&format!("k{}", i), || plane(i as u64));
+                }
+                t
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 32);
+        assert_eq!(c.len(), 8);
+        assert_eq!(s.misses, 8);
+    }
+}

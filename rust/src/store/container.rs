@@ -1,0 +1,836 @@
+//! `ICQZ` v1: the single-file multi-tensor container for a quantized
+//! checkpoint.
+//!
+//! Layout (little-endian):
+//! ```text
+//! 0   magic   "ICQZ"                      4 B
+//! 4   version u32                         4 B
+//! 8   toc_len u32                         4 B
+//! 12  toc_crc u32 (CRC32 of the TOC)      4 B
+//! 16  toc     JSON                        toc_len B
+//!     zero padding to a 64-byte boundary  → data_start
+//!     sections, each starting 64-byte-aligned relative to data_start,
+//!     zero padding between sections, file ends at the last section's
+//!     final byte
+//! ```
+//!
+//! The TOC records the [`ModelConfig`], exact bits/weight accounting
+//! (`storage_bits_per_weight` is measured over the serialized section
+//! bytes, not estimated), and one entry per section:
+//! `{name, kind: "icq"|"f32", shape, offset, len, crc32}` with `offset`
+//! relative to `data_start` — offsets are therefore independent of the
+//! TOC's own length, and 64-byte alignment makes every section directly
+//! mmap-able.
+//!
+//! Section payloads: `icq` sections embed the [`crate::icquant::packed`]
+//! `ICQM` byte layout verbatim (one quantized matrix each); `f32`
+//! sections are raw little-endian f32 data with the shape in the TOC.
+//! Every byte of the file is covered by a check: magic/version by
+//! [`load`]/[`verify`], the TOC by `toc_crc`, padding by the
+//! all-zeros rule, and sections by their CRC32s — a single flipped byte
+//! anywhere is detected by [`verify`].
+
+use crate::icquant::{packed, IcqMatrix};
+use crate::model::ModelConfig;
+use crate::util::crc32;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ICQZ";
+const VERSION: u32 = 1;
+const ALIGN: usize = 64;
+/// Fixed-size prefix before the TOC bytes.
+const PREFIX: usize = 16;
+/// Reads reject TOCs larger than this before allocating.
+const MAX_TOC_LEN: usize = 1 << 24;
+/// Sanity caps on untrusted TOC values: with offsets/lengths below
+/// 2^40 and element counts below 2^34, every sum and `numel * 4`
+/// downstream fits a u64/usize with room to spare — no read-path
+/// arithmetic can wrap even on adversarial input.
+const MAX_SECTION_BYTES: usize = 1 << 40;
+const MAX_SECTION_ELEMS: usize = 1 << 34;
+
+/// Checked product of an untrusted shape, capped at
+/// [`MAX_SECTION_ELEMS`].
+fn checked_numel(name: &str, shape: &[usize]) -> Result<usize> {
+    let mut numel = 1usize;
+    for &d in shape {
+        numel = numel
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_SECTION_ELEMS)
+            .with_context(|| {
+                format!("section '{}': implausible shape {:?}", name, shape)
+            })?;
+    }
+    Ok(numel)
+}
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// One tensor going into (or coming out of) a container.
+pub enum TensorPayload {
+    /// A quantized projection (stored as an embedded `ICQM` payload).
+    Quantized(IcqMatrix),
+    /// An f32 side tensor (norms, embeddings, heads).
+    Dense { shape: Vec<usize>, data: Vec<f32> },
+}
+
+/// An in-memory model checkpoint: ordered named tensors + config. Order
+/// is load-bearing (the positional ABI of the AOT-compiled HLO entries).
+pub struct IcqzModel {
+    pub config: Option<ModelConfig>,
+    /// NaN when unknown (synthetic checkpoints).
+    pub val_loss: f64,
+    pub entries: Vec<(String, TensorPayload)>,
+}
+
+/// Which payload codec a section uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionKind {
+    Icq,
+    F32,
+}
+
+impl SectionKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SectionKind::Icq => "icq",
+            SectionKind::F32 => "f32",
+        }
+    }
+
+    fn parse(s: &str) -> Result<SectionKind> {
+        match s {
+            "icq" => Ok(SectionKind::Icq),
+            "f32" => Ok(SectionKind::F32),
+            other => bail!("unknown section kind '{}'", other),
+        }
+    }
+}
+
+/// TOC entry for one section.
+#[derive(Clone, Debug)]
+pub struct SectionInfo {
+    pub name: String,
+    pub kind: SectionKind,
+    pub shape: Vec<usize>,
+    /// Byte offset relative to `data_start` (64-byte aligned).
+    pub offset: usize,
+    pub len: usize,
+    pub crc32: u32,
+}
+
+/// Parsed header + TOC of a container (no payload decode).
+#[derive(Clone, Debug)]
+pub struct ContainerInfo {
+    pub config: Option<ModelConfig>,
+    pub val_loss: f64,
+    pub sections: Vec<SectionInfo>,
+    pub quantized_params: usize,
+    pub dense_params: usize,
+    /// Measured: Σ `icq` section bytes × 8 / quantized params. Exact by
+    /// construction — this *is* the paper's deployed-size claim.
+    pub storage_bits_per_weight: f64,
+    /// Σ (n + B) · numel / Σ numel over quantized layers (code planes +
+    /// index streams, the paper's headline accounting).
+    pub code_bits_per_weight: f64,
+    /// `code_bits_per_weight` + codebook storage.
+    pub full_bits_per_weight: f64,
+    pub data_start: usize,
+    pub file_len: u64,
+}
+
+impl ContainerInfo {
+    pub fn section(&self, name: &str) -> Option<&SectionInfo> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+}
+
+/// Outcome of a full-file integrity check. `issues` is empty iff every
+/// byte of the file verified clean.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub sections_checked: usize,
+    pub bytes_checked: u64,
+    pub issues: Vec<String>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.issues.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Write path
+// ---------------------------------------------------------------------------
+
+struct Plan {
+    toc: String,
+    data_start: usize,
+    sections: Vec<SectionInfo>,
+    payloads: Vec<Vec<u8>>,
+    total: usize,
+}
+
+fn payload_bytes(name: &str, payload: &TensorPayload) -> Result<(SectionKind, Vec<usize>, Vec<u8>)> {
+    match payload {
+        TensorPayload::Quantized(m) => {
+            Ok((SectionKind::Icq, vec![m.rows, m.cols], packed::to_bytes(m)))
+        }
+        TensorPayload::Dense { shape, data } => {
+            let numel: usize = shape.iter().product();
+            ensure!(
+                numel == data.len(),
+                "tensor '{}': shape {:?} does not match {} values",
+                name,
+                shape,
+                data.len()
+            );
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for x in data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            Ok((SectionKind::F32, shape.clone(), bytes))
+        }
+    }
+}
+
+fn plan(model: &IcqzModel) -> Result<Plan> {
+    let mut sections = Vec::with_capacity(model.entries.len());
+    let mut payloads = Vec::with_capacity(model.entries.len());
+    let mut offset = 0usize;
+    let mut quantized_params = 0usize;
+    let mut dense_params = 0usize;
+    let mut storage_bits = 0u64;
+    let mut code_bits = 0.0f64;
+    let mut full_bits = 0.0f64;
+    for (name, payload) in &model.entries {
+        ensure!(!name.is_empty(), "empty tensor name");
+        ensure!(
+            !sections.iter().any(|s: &SectionInfo| &s.name == name),
+            "duplicate tensor name '{}'",
+            name
+        );
+        let (kind, shape, bytes) = payload_bytes(name, payload)?;
+        if let TensorPayload::Quantized(m) = payload {
+            let numel = m.rows * m.cols;
+            quantized_params += numel;
+            storage_bits += bytes.len() as u64 * 8;
+            code_bits += m.avg_bits_per_weight() * numel as f64;
+            full_bits += m.avg_bits_per_weight_full() * numel as f64;
+        } else {
+            dense_params += shape.iter().product::<usize>();
+        }
+        sections.push(SectionInfo {
+            name: name.clone(),
+            kind,
+            shape,
+            offset,
+            len: bytes.len(),
+            crc32: crc32(&bytes),
+        });
+        offset = align_up(offset + bytes.len());
+        payloads.push(bytes);
+    }
+    let data_span = sections.last().map(|s| s.offset + s.len).unwrap_or(0);
+
+    let per_weight = |total: f64| {
+        if quantized_params == 0 {
+            0.0
+        } else {
+            total / quantized_params as f64
+        }
+    };
+    let mut toc_fields = vec![
+        ("format", Json::str("icqz")),
+        ("version", Json::num(VERSION as f64)),
+        (
+            "config",
+            match &model.config {
+                Some(c) => c.to_json(),
+                None => Json::Null,
+            },
+        ),
+        ("quantized_params", Json::num(quantized_params as f64)),
+        ("dense_params", Json::num(dense_params as f64)),
+        ("storage_bits_per_weight", Json::num(per_weight(storage_bits as f64))),
+        ("code_bits_per_weight", Json::num(per_weight(code_bits))),
+        ("full_bits_per_weight", Json::num(per_weight(full_bits))),
+        (
+            "sections",
+            Json::arr(
+                sections
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(s.name.clone())),
+                            ("kind", Json::str(s.kind.as_str())),
+                            (
+                                "shape",
+                                Json::arr(
+                                    s.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                                ),
+                            ),
+                            ("offset", Json::num(s.offset as f64)),
+                            ("len", Json::num(s.len as f64)),
+                            ("crc32", Json::num(s.crc32 as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    // NaN is not representable in JSON; only persist a known loss.
+    if model.val_loss.is_finite() {
+        toc_fields.push(("val_loss", Json::num(model.val_loss)));
+    }
+    let toc = Json::obj(toc_fields).to_string();
+    ensure!(toc.len() <= MAX_TOC_LEN, "TOC too large ({} bytes)", toc.len());
+    let data_start = align_up(PREFIX + toc.len());
+    // A sectionless container ends right after the TOC (no pad to write).
+    let total = if sections.is_empty() {
+        PREFIX + toc.len()
+    } else {
+        data_start + data_span
+    };
+    Ok(Plan { toc, data_start, sections, payloads, total })
+}
+
+/// Exact on-disk size in bytes of `container::save(model)`.
+pub fn serialized_size(model: &IcqzModel) -> Result<usize> {
+    Ok(plan(model)?.total)
+}
+
+/// Write a single-file `ICQZ` container.
+pub fn save(model: &IcqzModel, path: &Path) -> Result<()> {
+    let p = plan(model)?;
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(p.toc.len() as u32).to_le_bytes())?;
+    f.write_all(&crc32(p.toc.as_bytes()).to_le_bytes())?;
+    f.write_all(p.toc.as_bytes())?;
+    let mut pos = PREFIX + p.toc.len();
+    for (meta, bytes) in p.sections.iter().zip(&p.payloads) {
+        let target = p.data_start + meta.offset;
+        debug_assert!(target >= pos);
+        write_zeros(&mut f, target - pos)?;
+        f.write_all(bytes)?;
+        pos = target + bytes.len();
+    }
+    debug_assert_eq!(pos, p.total);
+    f.flush()?;
+    Ok(())
+}
+
+fn write_zeros<W: Write>(f: &mut W, n: usize) -> std::io::Result<()> {
+    const Z: [u8; ALIGN] = [0u8; ALIGN];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(ALIGN);
+        f.write_all(&Z[..take])?;
+        left -= take;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Read path
+// ---------------------------------------------------------------------------
+
+fn parse_sections(toc: &Json) -> Result<Vec<SectionInfo>> {
+    let arr = toc.req("sections")?.as_arr().context("sections not an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, s) in arr.iter().enumerate() {
+        let name = s.req("name")?.as_str().context("section name")?.to_string();
+        let kind = SectionKind::parse(s.req("kind")?.as_str().context("section kind")?)?;
+        let shape: Vec<usize> = s
+            .req("shape")?
+            .as_arr()
+            .context("section shape")?
+            .iter()
+            .map(|d| d.as_usize().context("shape element"))
+            .collect::<Result<_>>()?;
+        let offset = s.req("offset")?.as_usize().context("section offset")?;
+        let len = s.req("len")?.as_usize().context("section len")?;
+        let crc = s.req("crc32")?.as_usize().context("section crc32")?;
+        ensure!(crc <= u32::MAX as usize, "section {} crc32 out of range", i);
+        ensure!(
+            offset <= MAX_SECTION_BYTES && len <= MAX_SECTION_BYTES,
+            "section '{}': implausible offset {} / len {}",
+            name,
+            offset,
+            len
+        );
+        let numel = checked_numel(&name, &shape)?;
+        if kind == SectionKind::F32 {
+            ensure!(
+                len == numel * 4,
+                "section '{}': {} bytes for shape {:?}",
+                name,
+                len,
+                shape
+            );
+        }
+        ensure!(offset % ALIGN == 0, "section '{}' offset {} not {}-aligned", name, offset, ALIGN);
+        ensure!(
+            out.iter().all(|p: &SectionInfo| p.name != name),
+            "duplicate section name '{}'",
+            name
+        );
+        if let Some(prev) = out.last() {
+            ensure!(
+                offset >= align_up(prev.offset + prev.len),
+                "section '{}' overlaps its predecessor",
+                name
+            );
+        }
+        out.push(SectionInfo { name, kind, shape, offset, len, crc32: crc as u32 });
+    }
+    Ok(out)
+}
+
+fn read_header(bytes: &[u8], check_toc_crc: bool) -> Result<(Json, usize)> {
+    ensure!(bytes.len() >= PREFIX, "file too short for an ICQZ header");
+    ensure!(bytes[0..4] == MAGIC[..], "not an ICQZ container: bad magic");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported ICQZ version {}", version);
+    let toc_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    ensure!(toc_len <= MAX_TOC_LEN, "TOC length {} exceeds cap", toc_len);
+    ensure!(PREFIX + toc_len <= bytes.len(), "TOC extends past end of file");
+    let toc_crc = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let toc_bytes = &bytes[PREFIX..PREFIX + toc_len];
+    if check_toc_crc {
+        ensure!(
+            crc32(toc_bytes) == toc_crc,
+            "TOC checksum mismatch (file header corrupt?)"
+        );
+    }
+    let toc = Json::parse(std::str::from_utf8(toc_bytes).context("TOC not utf-8")?)
+        .map_err(|e| anyhow::anyhow!("TOC: {}", e))?;
+    Ok((toc, align_up(PREFIX + toc_len)))
+}
+
+fn info_from_toc(toc: &Json, data_start: usize, file_len: u64) -> Result<ContainerInfo> {
+    let config = match toc.req("config")? {
+        Json::Null => None,
+        c => Some(ModelConfig::from_json(c)?),
+    };
+    let val_loss = toc.get("val_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    Ok(ContainerInfo {
+        config,
+        val_loss,
+        sections: parse_sections(toc)?,
+        quantized_params: toc.req("quantized_params")?.as_usize().context("quantized_params")?,
+        dense_params: toc.req("dense_params")?.as_usize().context("dense_params")?,
+        storage_bits_per_weight: toc
+            .req("storage_bits_per_weight")?
+            .as_f64()
+            .context("storage_bits_per_weight")?,
+        code_bits_per_weight: toc
+            .req("code_bits_per_weight")?
+            .as_f64()
+            .context("code_bits_per_weight")?,
+        full_bits_per_weight: toc
+            .req("full_bits_per_weight")?
+            .as_f64()
+            .context("full_bits_per_weight")?,
+        data_start,
+        file_len,
+    })
+}
+
+/// Parse header + TOC only (cheap; no payload reads or checksums beyond
+/// the TOC's own CRC).
+pub fn inspect(path: &Path) -> Result<ContainerInfo> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    inspect_bytes(&bytes)
+}
+
+/// [`inspect`] over an already-read buffer (lets callers that also hash
+/// or store the container — e.g. the registry — read the file once, so
+/// the bytes validated are exactly the bytes kept).
+pub fn inspect_bytes(bytes: &[u8]) -> Result<ContainerInfo> {
+    let (toc, data_start) = read_header(bytes, true)?;
+    let info = info_from_toc(&toc, data_start, bytes.len() as u64)?;
+    if let Some(last) = info.sections.last() {
+        ensure!(
+            data_start + last.offset + last.len <= bytes.len(),
+            "sections extend past end of file"
+        );
+    }
+    Ok(info)
+}
+
+/// Load the full model: every section checksum is verified and every
+/// payload decoded (through the hardened `ICQM` reader for `icq`
+/// sections).
+pub fn load(path: &Path) -> Result<IcqzModel> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    let (toc, data_start) = read_header(&bytes, true)?;
+    let info = info_from_toc(&toc, data_start, bytes.len() as u64)?;
+    let mut entries = Vec::with_capacity(info.sections.len());
+    for s in &info.sections {
+        let start = data_start + s.offset;
+        ensure!(
+            start + s.len <= bytes.len(),
+            "section '{}' extends past end of file",
+            s.name
+        );
+        let payload = &bytes[start..start + s.len];
+        ensure!(
+            crc32(payload) == s.crc32,
+            "section '{}' checksum mismatch (corrupt container)",
+            s.name
+        );
+        let value = match s.kind {
+            SectionKind::Icq => {
+                let m = packed::from_bytes(payload)
+                    .with_context(|| format!("section '{}'", s.name))?;
+                ensure!(
+                    s.shape == [m.rows, m.cols],
+                    "section '{}': TOC shape {:?} != payload dims [{}, {}]",
+                    s.name,
+                    s.shape,
+                    m.rows,
+                    m.cols
+                );
+                TensorPayload::Quantized(m)
+            }
+            SectionKind::F32 => {
+                // `len == numel(shape) * 4` was validated (with checked
+                // arithmetic) when the TOC was parsed.
+                let data: Vec<f32> = payload
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                TensorPayload::Dense { shape: s.shape.clone(), data }
+            }
+        };
+        entries.push((s.name.clone(), value));
+    }
+    Ok(IcqzModel { config: info.config, val_loss: info.val_loss, entries })
+}
+
+/// Full-file integrity check. Collects *all* problems instead of failing
+/// fast; together the checks cover every byte of the file (header, TOC
+/// CRC, zero padding, per-section CRCs, exact file length), so any
+/// single flipped byte surfaces as at least one issue.
+pub fn verify(path: &Path) -> Result<VerifyReport> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    Ok(verify_bytes(&bytes))
+}
+
+/// [`verify`] over an already-read buffer (lets callers that also hash
+/// the container — e.g. the registry — read the file once).
+pub fn verify_bytes(bytes: &[u8]) -> VerifyReport {
+    let mut report = VerifyReport { bytes_checked: bytes.len() as u64, ..Default::default() };
+    let (toc, data_start) = match read_header(bytes, false) {
+        Ok(x) => x,
+        Err(e) => {
+            report.issues.push(format!("header: {:#}", e));
+            return report;
+        }
+    };
+    // TOC CRC (header parse above skipped it so we can report it here).
+    let toc_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let stored_crc = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    if crc32(&bytes[PREFIX..PREFIX + toc_len]) != stored_crc {
+        report.issues.push("TOC checksum mismatch".to_string());
+    }
+    let info = match info_from_toc(&toc, data_start, bytes.len() as u64) {
+        Ok(i) => i,
+        Err(e) => {
+            report.issues.push(format!("TOC: {:#}", e));
+            return report;
+        }
+    };
+    // Padding between TOC end and data_start must be zero.
+    let mut covered = PREFIX + toc_len;
+    let check_pad = |report: &mut VerifyReport, from: usize, to: usize, what: &str| {
+        if from >= to || to > bytes.len() {
+            return;
+        }
+        if bytes[from..to].iter().any(|&b| b != 0) {
+            report.issues.push(format!("nonzero padding bytes {} ({}..{})", what, from, to));
+        }
+    };
+    for s in &info.sections {
+        let start = data_start + s.offset;
+        let end = start + s.len;
+        if end > bytes.len() {
+            report.issues.push(format!("section '{}' extends past end of file", s.name));
+            continue;
+        }
+        check_pad(&mut report, covered, start, &format!("before '{}'", s.name));
+        let payload = &bytes[start..end];
+        if crc32(payload) != s.crc32 {
+            report.issues.push(format!("section '{}' checksum mismatch", s.name));
+        } else if s.kind == SectionKind::Icq {
+            match packed::from_bytes(payload) {
+                Ok(m) => {
+                    if s.shape != [m.rows, m.cols] {
+                        report.issues.push(format!(
+                            "section '{}': TOC shape {:?} != payload dims [{}, {}]",
+                            s.name, s.shape, m.rows, m.cols
+                        ));
+                    }
+                }
+                Err(e) => report
+                    .issues
+                    .push(format!("section '{}' undecodable: {:#}", s.name, e)),
+            }
+        }
+        report.sections_checked += 1;
+        covered = end;
+    }
+    // The file must end exactly at the last section (no trailing bytes).
+    if covered != bytes.len() {
+        report.issues.push(format!(
+            "file length {} != expected {} (trailing or missing bytes)",
+            bytes.len(),
+            covered
+        ));
+    }
+    // Measured accounting must match the header claim exactly.
+    let measured: u64 = info
+        .sections
+        .iter()
+        .filter(|s| s.kind == SectionKind::Icq)
+        .map(|s| s.len as u64 * 8)
+        .sum();
+    if info.quantized_params > 0 {
+        let bpw = measured as f64 / info.quantized_params as f64;
+        if (bpw - info.storage_bits_per_weight).abs() > 1e-9 {
+            report.issues.push(format!(
+                "header claims {} bits/weight, sections measure {}",
+                info.storage_bits_per_weight, bpw
+            ));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::icquant::IcqConfig;
+    use crate::quant::QuantizerKind;
+    use crate::store;
+    use crate::synthzoo;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("icqz_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn demo_model() -> IcqzModel {
+        let f = synthzoo::family("llama3.2-1b").unwrap();
+        let cfg = IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::Rtn,
+        };
+        store::synth_model(&f, &cfg, Some(1)).unwrap()
+    }
+
+    #[test]
+    fn save_load_preserves_everything() {
+        let model = demo_model();
+        let p = tmp("roundtrip.icqz");
+        save(&model, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.entries.len(), model.entries.len());
+        let cfg = back.config.as_ref().unwrap();
+        assert_eq!(cfg.d_model, model.config.as_ref().unwrap().d_model);
+        for ((n1, p1), (n2, p2)) in model.entries.iter().zip(&back.entries) {
+            assert_eq!(n1, n2);
+            match (p1, p2) {
+                (TensorPayload::Dense { data: a, .. }, TensorPayload::Dense { data: b, .. }) => {
+                    assert_eq!(a, b, "{}", n1);
+                }
+                (TensorPayload::Quantized(a), TensorPayload::Quantized(b)) => {
+                    assert_eq!(a.code_plane.bytes(), b.code_plane.bytes(), "{}", n1);
+                    for r in 0..a.rows {
+                        assert_eq!(a.index_codes[r].decode(), b.index_codes[r].decode());
+                    }
+                }
+                _ => panic!("{}: payload kind changed", n1),
+            }
+        }
+    }
+
+    #[test]
+    fn serialized_size_is_exact_and_sections_aligned() {
+        let model = demo_model();
+        let p = tmp("size.icqz");
+        save(&model, &p).unwrap();
+        let actual = std::fs::metadata(&p).unwrap().len() as usize;
+        assert_eq!(actual, serialized_size(&model).unwrap());
+        let info = inspect(&p).unwrap();
+        assert_eq!(info.data_start % ALIGN, 0);
+        for s in &info.sections {
+            assert_eq!(s.offset % ALIGN, 0, "section {} misaligned", s.name);
+        }
+    }
+
+    #[test]
+    fn header_accounting_is_exact() {
+        let model = demo_model();
+        let p = tmp("accounting.icqz");
+        save(&model, &p).unwrap();
+        let info = inspect(&p).unwrap();
+        // Measured over the file's sections…
+        let mut measured_bits = 0u64;
+        let mut params = 0usize;
+        for s in &info.sections {
+            if s.kind == SectionKind::Icq {
+                measured_bits += s.len as u64 * 8;
+                params += s.shape.iter().product::<usize>();
+            }
+        }
+        assert_eq!(params, info.quantized_params);
+        let measured = measured_bits as f64 / params as f64;
+        assert!(
+            (measured - info.storage_bits_per_weight).abs() < 1e-9,
+            "header {} vs file-measured {}",
+            info.storage_bits_per_weight,
+            measured
+        );
+        // …and over the in-memory matrices: the container must cost
+        // exactly what the per-matrix `IcqMatrix::storage_bytes`
+        // accounting claims (well within the 1% acceptance envelope —
+        // it is identical by construction).
+        let mut mem_bits = 0u64;
+        let mut code_bits = 0.0;
+        for (_, payload) in &model.entries {
+            if let TensorPayload::Quantized(m) = payload {
+                mem_bits += m.storage_bytes() as u64 * 8;
+                code_bits += m.avg_bits_per_weight() * (m.rows * m.cols) as f64;
+            }
+        }
+        let mem = mem_bits as f64 / params as f64;
+        assert!(
+            (mem - info.storage_bits_per_weight).abs() < 1e-9,
+            "header {} vs IcqMatrix accounting {}",
+            info.storage_bits_per_weight,
+            mem
+        );
+        assert!((code_bits / params as f64 - info.code_bits_per_weight).abs() < 1e-9);
+        // Container framing (TOC + alignment padding + dense sections
+        // aside) adds < 1% on top of the summed section payloads.
+        let section_bits: u64 =
+            info.sections.iter().map(|s| s.len as u64 * 8).sum();
+        let file_bits = info.file_len * 8;
+        assert!(
+            (file_bits as f64) < section_bits as f64 * 1.01,
+            "container framing overhead too large: {} vs {}",
+            file_bits,
+            section_bits
+        );
+        // Storage ≥ code accounting (headers/codebooks ride on top) and
+        // in the paper's ≈(n+0.3) neighborhood for 2-bit γ=5 %.
+        assert!(info.storage_bits_per_weight > info.code_bits_per_weight);
+        assert!(info.code_bits_per_weight > 2.0 && info.code_bits_per_weight < 2.5);
+    }
+
+    #[test]
+    fn verify_clean_file_is_ok() {
+        let model = demo_model();
+        let p = tmp("verify_ok.icqz");
+        save(&model, &p).unwrap();
+        let report = verify(&p).unwrap();
+        assert!(report.ok(), "issues: {:?}", report.issues);
+        assert_eq!(report.sections_checked, model.entries.len());
+    }
+
+    #[test]
+    fn verify_detects_any_single_flipped_byte() {
+        let model = demo_model();
+        let p = tmp("verify_flip.icqz");
+        save(&model, &p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        // A sample stride through the whole file plus the structural
+        // boundaries — each flip must surface as at least one issue.
+        let info = inspect(&p).unwrap();
+        let mut offsets: Vec<usize> = (0..clean.len()).step_by(509).collect();
+        offsets.extend([0, 5, 9, 13, 20, clean.len() - 1]);
+        for s in &info.sections {
+            // First payload byte, and the padding byte right before it.
+            offsets.push(info.data_start + s.offset);
+            if s.offset > 0 {
+                offsets.push(info.data_start + s.offset - 1);
+            }
+        }
+        for off in offsets {
+            let mut corrupt = clean.clone();
+            corrupt[off] ^= 0x40;
+            let pc = tmp("verify_flip_corrupt.icqz");
+            std::fs::write(&pc, &corrupt).unwrap();
+            let report = verify(&pc).unwrap();
+            assert!(
+                !report.ok(),
+                "flip at byte {} of {} not detected",
+                off,
+                clean.len()
+            );
+        }
+    }
+
+    #[test]
+    fn load_rejects_corrupt_sections() {
+        let model = demo_model();
+        let p = tmp("load_corrupt.icqz");
+        save(&model, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let info = inspect(&p).unwrap();
+        // Flip one byte inside the first icq section's payload.
+        let s = info.sections.iter().find(|s| s.kind == SectionKind::Icq).unwrap();
+        let off = info.data_start + s.offset + s.len / 2;
+        bytes[off] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err();
+        assert!(format!("{:#}", err).contains("checksum"), "{:#}", err);
+    }
+
+    #[test]
+    fn empty_and_configless_models_round_trip() {
+        let model = IcqzModel { config: None, val_loss: f64::NAN, entries: vec![] };
+        let p = tmp("empty.icqz");
+        save(&model, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert!(back.config.is_none());
+        assert!(back.entries.is_empty());
+        assert!(back.val_loss.is_nan());
+        assert!(verify(&p).unwrap().ok());
+        assert_eq!(
+            std::fs::metadata(&p).unwrap().len() as usize,
+            serialized_size(&model).unwrap()
+        );
+    }
+
+    #[test]
+    fn duplicate_names_rejected_at_save() {
+        let model = IcqzModel {
+            config: None,
+            val_loss: f64::NAN,
+            entries: vec![
+                ("a".into(), TensorPayload::Dense { shape: vec![1], data: vec![1.0] }),
+                ("a".into(), TensorPayload::Dense { shape: vec![1], data: vec![2.0] }),
+            ],
+        };
+        assert!(save(&model, &tmp("dup.icqz")).is_err());
+    }
+}

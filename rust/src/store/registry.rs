@@ -1,0 +1,525 @@
+//! On-disk artifact registry: content-hash-named container files plus a
+//! manifest, so consumers resolve quantized checkpoints by `name@hash`
+//! instead of ad-hoc paths.
+//!
+//! Layout under the registry root (`$ICQ_STORE`, default `icq_store/`):
+//! ```text
+//! icq_store/
+//!   manifest.json            {"artifacts": [{name, hash, bytes, ...}]}
+//!   objects/<hash>.icqz      immutable, content-addressed containers
+//! ```
+//!
+//! The hash is a 128-bit FNV-1a variant (two independent 64-bit
+//! streams), hex-encoded — content *addressing* and corruption
+//! detection, not cryptographic authentication (the offline registry
+//! carries no hash crates; collisions under non-adversarial use are
+//! vanishingly unlikely and `verify` additionally re-checks the
+//! container's per-section CRCs).
+//!
+//! `put` is atomic (write to a temp file, then rename), `objects/` files
+//! are deduplicated by hash, and `gc` removes objects no manifest entry
+//! references (e.g. after a manifest edit or a crashed `put`).
+
+use super::container;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One manifest row. `name` is the human handle; `hash` the immutable id.
+#[derive(Clone, Debug)]
+pub struct ArtifactRecord {
+    pub name: String,
+    pub hash: String,
+    pub bytes: u64,
+    pub storage_bits_per_weight: f64,
+    pub created_unix: u64,
+}
+
+impl ArtifactRecord {
+    /// `name@hash12` — the canonical display form.
+    pub fn spec(&self) -> String {
+        format!("{}@{}", self.name, &self.hash[..12.min(self.hash.len())])
+    }
+}
+
+/// Handle to a registry root directory.
+pub struct Registry {
+    root: PathBuf,
+}
+
+/// Exclusive advisory lock over the registry's mutating operations:
+/// a lock file created with `O_EXCL`, removed on drop. `put` and `gc`
+/// are read-modify-write over `manifest.json` / `objects/`; without
+/// this, two concurrent puts would silently drop one record (and a
+/// racing gc could delete a just-copied object). Readers don't need
+/// it — manifest writes are atomic renames.
+struct RegistryLock {
+    path: PathBuf,
+}
+
+impl RegistryLock {
+    fn acquire(root: &Path) -> Result<RegistryLock> {
+        let path = root.join("registry.lock");
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(_) => return Ok(RegistryLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    ensure!(
+                        std::time::Instant::now() < deadline,
+                        "timed out waiting for registry lock {} (crashed holder? remove it)",
+                        path.display()
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("create lock {}", path.display()))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for RegistryLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Seconds since a file was last modified (None if the filesystem
+/// can't say — such files are never gc'd).
+fn entry_age_secs(path: &Path) -> Option<u64> {
+    let modified = std::fs::metadata(path).ok()?.modified().ok()?;
+    std::time::SystemTime::now().duration_since(modified).ok().map(|d| d.as_secs())
+}
+
+/// 128-bit FNV-1a-style content hash, hex-encoded (see module docs).
+pub fn content_hash(bytes: &[u8]) -> String {
+    const OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+    const OFFSET_B: u64 = 0x6c62_272e_07bb_0142;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut a = OFFSET_A;
+    let mut b = OFFSET_B;
+    for &x in bytes {
+        a = (a ^ x as u64).wrapping_mul(PRIME);
+        b = (b ^ (x ^ 0x5c) as u64).wrapping_mul(PRIME);
+    }
+    // Finalize with a length fold so prefixes don't collide trivially.
+    a ^= (bytes.len() as u64).wrapping_mul(PRIME);
+    b = (b ^ a.rotate_left(29)).wrapping_mul(PRIME);
+    format!("{:016x}{:016x}", a, b)
+}
+
+impl Registry {
+    /// Open (creating directories if needed) a registry at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Registry> {
+        let root = root.into();
+        std::fs::create_dir_all(root.join("objects"))
+            .with_context(|| format!("create registry at {}", root.display()))?;
+        Ok(Registry { root })
+    }
+
+    /// `$ICQ_STORE` or `./icq_store`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("ICQ_STORE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("icq_store"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    fn object_path(&self, hash: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{}.icqz", hash))
+    }
+
+    fn read_manifest(&self) -> Result<Vec<ArtifactRecord>> {
+        let path = self.manifest_path();
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {}", e))?;
+        let mut out = Vec::new();
+        for a in j.req("artifacts")?.as_arr().context("artifacts not an array")? {
+            out.push(ArtifactRecord {
+                name: a.req("name")?.as_str().context("name")?.to_string(),
+                hash: a.req("hash")?.as_str().context("hash")?.to_string(),
+                bytes: a.req("bytes")?.as_usize().context("bytes")? as u64,
+                storage_bits_per_weight: a
+                    .req("storage_bits_per_weight")?
+                    .as_f64()
+                    .context("storage_bits_per_weight")?,
+                created_unix: a.req("created_unix")?.as_usize().context("created_unix")?
+                    as u64,
+            });
+        }
+        Ok(out)
+    }
+
+    fn write_manifest(&self, records: &[ArtifactRecord]) -> Result<()> {
+        let j = Json::obj(vec![(
+            "artifacts",
+            Json::arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::str(r.name.clone())),
+                            ("hash", Json::str(r.hash.clone())),
+                            ("bytes", Json::num(r.bytes as f64)),
+                            (
+                                "storage_bits_per_weight",
+                                Json::num(r.storage_bits_per_weight),
+                            ),
+                            ("created_unix", Json::num(r.created_unix as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )]);
+        let tmp = self.manifest_path().with_extension("json.tmp");
+        std::fs::write(&tmp, j.to_string())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.manifest_path()).context("commit manifest")?;
+        Ok(())
+    }
+
+    /// Register an existing `ICQZ` file under `name`: content-hash it,
+    /// copy into `objects/`, append to the manifest. Re-putting identical
+    /// content under the same name is a no-op returning the prior record.
+    pub fn put_file(&self, name: &str, src: &Path) -> Result<ArtifactRecord> {
+        ensure!(
+            !name.is_empty() && !name.contains('@') && !name.contains('/'),
+            "artifact name '{}' must be nonempty without '@' or '/'",
+            name
+        );
+        // One read: the bytes we validate are exactly the bytes we hash
+        // and store (no inspect-then-reread race with a writer of src).
+        let bytes = std::fs::read(src)?;
+        let info = container::inspect_bytes(&bytes)
+            .with_context(|| format!("{} is not a readable ICQZ container", src.display()))?;
+        let hash = content_hash(&bytes);
+        // Object copy + manifest append must be atomic w.r.t. other
+        // put/gc calls (see RegistryLock).
+        let _lock = RegistryLock::acquire(&self.root)?;
+        let mut records = self.read_manifest()?;
+        if let Some(existing) = records.iter().find(|r| r.name == name && r.hash == hash) {
+            return Ok(existing.clone());
+        }
+        let obj = self.object_path(&hash);
+        if !obj.exists() {
+            let tmp = obj.with_extension("icqz.tmp");
+            std::fs::write(&tmp, &bytes)
+                .with_context(|| format!("write {}", tmp.display()))?;
+            std::fs::rename(&tmp, &obj).context("commit object")?;
+        }
+        let record = ArtifactRecord {
+            name: name.to_string(),
+            hash,
+            bytes: bytes.len() as u64,
+            storage_bits_per_weight: info.storage_bits_per_weight,
+            created_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        };
+        records.push(record.clone());
+        self.write_manifest(&records)?;
+        Ok(record)
+    }
+
+    /// Serialize an in-memory model straight into the registry.
+    pub fn put_model(&self, name: &str, model: &container::IcqzModel) -> Result<ArtifactRecord> {
+        // Unique temp name so concurrent puts of the same model name
+        // never interleave writes into one file.
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let tmp = self
+            .root
+            .join(format!(".put-{}-{}-{}.icqz.tmp", name, std::process::id(), nanos));
+        container::save(model, &tmp)?;
+        let result = self.put_file(name, &tmp);
+        let _ = std::fs::remove_file(&tmp);
+        result
+    }
+
+    /// Resolve `"name"` (newest) or `"name@hashprefix"` to its record
+    /// and object path.
+    pub fn resolve(&self, spec: &str) -> Result<(ArtifactRecord, PathBuf)> {
+        let records = self.read_manifest()?;
+        let (name, prefix) = match spec.split_once('@') {
+            Some((n, p)) => (n, Some(p)),
+            None => (spec, None),
+        };
+        let matches: Vec<&ArtifactRecord> = records
+            .iter()
+            .filter(|r| {
+                r.name == name
+                    && match prefix {
+                        Some(p) => r.hash.starts_with(p),
+                        None => true,
+                    }
+            })
+            .collect();
+        let record = match (matches.last(), prefix) {
+            (Some(&r), _) => r.clone(),
+            (None, Some(p)) => bail!("no artifact '{}' with hash prefix '{}'", name, p),
+            (None, None) => bail!(
+                "no artifact named '{}' in registry {}",
+                name,
+                self.root.display()
+            ),
+        };
+        if let Some(p) = prefix {
+            let distinct: std::collections::HashSet<&str> =
+                matches.iter().map(|r| r.hash.as_str()).collect();
+            ensure!(
+                distinct.len() == 1,
+                "hash prefix '{}' is ambiguous for '{}' ({} matches)",
+                p,
+                name,
+                distinct.len()
+            );
+        }
+        let path = self.object_path(&record.hash);
+        ensure!(
+            path.exists(),
+            "manifest references missing object {} (registry corrupted?)",
+            path.display()
+        );
+        Ok((record, path))
+    }
+
+    /// All manifest records, oldest first.
+    pub fn list(&self) -> Result<Vec<ArtifactRecord>> {
+        self.read_manifest()
+    }
+
+    /// Integrity check for one artifact: the object's bytes must hash to
+    /// its manifest id *and* pass the container's full-file verify. The
+    /// file is read once; both checks run over the same buffer.
+    pub fn verify(&self, spec: &str) -> Result<container::VerifyReport> {
+        let (record, path) = self.resolve(spec)?;
+        let bytes = std::fs::read(&path)?;
+        let mut report = container::verify_bytes(&bytes);
+        if content_hash(&bytes) != record.hash {
+            report
+                .issues
+                .push(format!("object bytes no longer hash to {}", record.hash));
+        }
+        Ok(report)
+    }
+
+    /// Delete objects no manifest record references, plus stale put
+    /// debris; returns the removed paths.
+    pub fn gc(&self) -> Result<Vec<PathBuf>> {
+        let _lock = RegistryLock::acquire(&self.root)?;
+        let referenced: std::collections::HashSet<String> =
+            self.read_manifest()?.into_iter().map(|r| r.hash).collect();
+        let mut removed = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("objects"))? {
+            let path = entry?.path();
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+            let ext = path.extension().and_then(|e| e.to_str());
+            let stale = match ext {
+                Some("icqz") => !referenced.contains(stem),
+                Some("tmp") => true, // leftover from a crashed object copy
+                _ => false,
+            };
+            if stale {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("remove {}", path.display()))?;
+                removed.push(path);
+            }
+        }
+        // Root-level `.put-*.icqz.tmp` files from crashed `put_model`
+        // calls. `container::save` there runs *before* the lock is
+        // taken, so a fresh temp may belong to an in-flight put — only
+        // collect ones old enough that their writer is surely gone.
+        const STALE_TMP_SECS: u64 = 3600;
+        for entry in std::fs::read_dir(&self.root)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if !(path.is_file() && name.starts_with(".put-") && name.ends_with(".tmp")) {
+                continue;
+            }
+            let old_enough = entry_age_secs(&path).map(|a| a > STALE_TMP_SECS);
+            if old_enough.unwrap_or(false) {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("remove {}", path.display()))?;
+                removed.push(path);
+            }
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::icquant::IcqConfig;
+    use crate::quant::QuantizerKind;
+    use crate::store;
+    use crate::synthzoo;
+
+    fn fresh_root(name: &str) -> PathBuf {
+        let root = std::env::temp_dir().join("icq_registry_test").join(name);
+        let _ = std::fs::remove_dir_all(&root);
+        root
+    }
+
+    fn demo_container(path: &Path, blocks: usize) {
+        let f = synthzoo::family("llama3.2-1b").unwrap();
+        let cfg = IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::Rtn,
+        };
+        let m = store::synth_model(&f, &cfg, Some(blocks)).unwrap();
+        container::save(&m, path).unwrap();
+    }
+
+    #[test]
+    fn put_resolve_list_roundtrip() {
+        let root = fresh_root("roundtrip");
+        let reg = Registry::open(&root).unwrap();
+        let src = root.join("src.icqz");
+        demo_container(&src, 1);
+        let rec = reg.put_file("demo", &src).unwrap();
+        assert_eq!(rec.name, "demo");
+        assert_eq!(rec.bytes, std::fs::metadata(&src).unwrap().len());
+        assert!(rec.storage_bits_per_weight > 2.0);
+
+        let (r2, path) = reg.resolve("demo").unwrap();
+        assert_eq!(r2.hash, rec.hash);
+        assert!(path.exists());
+        // Resolution by hash prefix.
+        let (r3, _) = reg.resolve(&format!("demo@{}", &rec.hash[..8])).unwrap();
+        assert_eq!(r3.hash, rec.hash);
+        assert_eq!(reg.list().unwrap().len(), 1);
+        // Idempotent re-put.
+        let rec2 = reg.put_file("demo", &src).unwrap();
+        assert_eq!(rec2.hash, rec.hash);
+        assert_eq!(reg.list().unwrap().len(), 1);
+        // Spec formatting.
+        assert!(rec.spec().starts_with("demo@"));
+    }
+
+    #[test]
+    fn resolve_picks_newest_and_rejects_unknown() {
+        let root = fresh_root("newest");
+        let reg = Registry::open(&root).unwrap();
+        let a = root.join("a.icqz");
+        let b = root.join("b.icqz");
+        demo_container(&a, 1);
+        demo_container(&b, 2);
+        let ra = reg.put_file("m", &a).unwrap();
+        let rb = reg.put_file("m", &b).unwrap();
+        assert_ne!(ra.hash, rb.hash);
+        let (newest, _) = reg.resolve("m").unwrap();
+        assert_eq!(newest.hash, rb.hash);
+        let (old, _) = reg.resolve(&format!("m@{}", &ra.hash[..10])).unwrap();
+        assert_eq!(old.hash, ra.hash);
+        assert!(reg.resolve("other").is_err());
+        assert!(reg.resolve("m@ffffffffffff").is_err());
+    }
+
+    #[test]
+    fn verify_detects_object_tampering() {
+        let root = fresh_root("tamper");
+        let reg = Registry::open(&root).unwrap();
+        let src = root.join("src.icqz");
+        demo_container(&src, 1);
+        let rec = reg.put_file("demo", &src).unwrap();
+        assert!(reg.verify("demo").unwrap().ok());
+        // Flip one byte in the stored object.
+        let obj = reg.object_path(&rec.hash);
+        let mut bytes = std::fs::read(&obj).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&obj, &bytes).unwrap();
+        let report = reg.verify("demo").unwrap();
+        assert!(!report.ok(), "tampered object passed verify");
+    }
+
+    #[test]
+    fn gc_removes_only_unreferenced_objects() {
+        let root = fresh_root("gc");
+        let reg = Registry::open(&root).unwrap();
+        let src = root.join("src.icqz");
+        demo_container(&src, 1);
+        let rec = reg.put_file("demo", &src).unwrap();
+        // Drop an orphan object alongside the live one.
+        let orphan = root.join("objects").join(format!("{}.icqz", "0".repeat(32)));
+        std::fs::write(&orphan, b"junk").unwrap();
+        // A *fresh* put temp at the root must survive gc (it may belong
+        // to an in-flight put; only hour-old debris is collected).
+        let fresh_tmp = root.join(".put-live-1-1.icqz.tmp");
+        std::fs::write(&fresh_tmp, b"in flight").unwrap();
+        let removed = reg.gc().unwrap();
+        assert_eq!(removed, vec![orphan.clone()]);
+        assert!(!orphan.exists());
+        assert!(fresh_tmp.exists());
+        assert!(reg.object_path(&rec.hash).exists());
+    }
+
+    #[test]
+    fn rejects_bad_names_and_non_containers() {
+        let root = fresh_root("badput");
+        let reg = Registry::open(&root).unwrap();
+        let junk = root.join("junk.bin");
+        std::fs::write(&junk, b"not a container").unwrap();
+        assert!(reg.put_file("x", &junk).is_err());
+        let src = root.join("src.icqz");
+        demo_container(&src, 1);
+        assert!(reg.put_file("bad@name", &src).is_err());
+        assert!(reg.put_file("", &src).is_err());
+    }
+
+    #[test]
+    fn concurrent_puts_lose_no_records() {
+        let root = fresh_root("concurrent");
+        let reg = std::sync::Arc::new(Registry::open(&root).unwrap());
+        let src = root.join("src.icqz");
+        demo_container(&src, 1);
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let reg = reg.clone();
+            let src = src.clone();
+            handles.push(std::thread::spawn(move || {
+                reg.put_file(&format!("m{}", i), &src).unwrap()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // All four manifest records survive the concurrent read-modify-
+        // write, and the shared object deduplicated to one file.
+        assert_eq!(reg.list().unwrap().len(), 4);
+        for i in 0..4 {
+            assert!(reg.resolve(&format!("m{}", i)).is_ok());
+        }
+        // Lock file is released.
+        assert!(!root.join("registry.lock").exists());
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_sensitive() {
+        let h1 = content_hash(b"hello");
+        assert_eq!(h1.len(), 32);
+        assert_eq!(h1, content_hash(b"hello"));
+        assert_ne!(h1, content_hash(b"hellp"));
+        assert_ne!(content_hash(b""), content_hash(b"\0"));
+    }
+}

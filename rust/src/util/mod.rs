@@ -29,6 +29,34 @@ pub fn human_bytes(n: u64) -> String {
     }
 }
 
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) lookup table, built at
+/// compile time. Used for the per-section checksums of the `ICQZ`
+/// container ([`crate::store::container`]).
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `bytes` — the standard zlib/PNG checksum.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
 /// Format a duration in adaptive units (`1.23 ms`).
 pub fn human_duration(d: std::time::Duration) -> String {
     let ns = d.as_nanos() as f64;
@@ -58,5 +86,18 @@ mod tests {
     fn human_duration_units() {
         assert_eq!(human_duration(std::time::Duration::from_nanos(500)), "500 ns");
         assert_eq!(human_duration(std::time::Duration::from_micros(1500)), "1.50 ms");
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vectors for CRC-32/IEEE.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        // Single-bit sensitivity: any flip changes the checksum.
+        let base = crc32(b"icqz section payload");
+        let mut corrupt = b"icqz section payload".to_vec();
+        corrupt[3] ^= 0x01;
+        assert_ne!(crc32(&corrupt), base);
     }
 }

@@ -10,7 +10,9 @@ use icquant::icquant::{IcqConfig, IcqMatrix};
 use icquant::model::{artifacts_dir, TrainedModel};
 use icquant::quant::QuantizerKind;
 use icquant::runtime::{Engine, HostTensor};
+use icquant::store::{container, quantize_trained, DecodeCache, StoredModel};
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn have_artifacts() -> bool {
@@ -168,6 +170,58 @@ fn forward_q_entry_matches_dequantized_fp_path() {
         q_nll,
         fp_nll
     );
+}
+
+#[test]
+fn pjrt_serves_from_icqz_container() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let model = TrainedModel::load(&dir).unwrap();
+    let cfg = IcqConfig {
+        bits: 3,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let packed = quantize_trained(&model, &cfg).unwrap();
+    let cdir = std::env::temp_dir().join("icq_it_container");
+    std::fs::create_dir_all(&cdir).unwrap();
+    let cpath = cdir.join("llama-mini.icqz");
+    container::save(&packed, &cpath).unwrap();
+    assert!(container::verify(&cpath).unwrap().ok());
+
+    let cache = Arc::new(DecodeCache::new(256 << 20));
+    // The container round-trips to a servable model with the same ABI.
+    let stored = StoredModel::open(&cpath, cache.clone()).unwrap();
+    let qmodel = stored.to_trained_model().unwrap();
+    qmodel.validate().unwrap();
+
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(10),
+        max_new_tokens: 4,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: 64,
+    };
+    let dir2 = dir.clone();
+    let cache2 = cache.clone();
+    let server = Server::start(cfg, move || {
+        PjrtBackend::from_container(&dir2, &cpath, cache2).unwrap()
+    });
+    let prompt: Vec<i32> = b"The rapid deployment of large language "
+        .iter()
+        .map(|&b| b as i32)
+        .collect();
+    let (_, rx) = server.submit(prompt, 4);
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+    assert_eq!(resp.tokens.len(), 4);
+    server.shutdown();
+    // Backend construction decoded each projection once, through the
+    // shared cache that already served `to_trained_model` above.
+    let stats = cache.stats();
+    assert_eq!(stats.misses as usize, model.projections().len());
+    assert!(stats.hits >= stats.misses);
 }
 
 #[test]

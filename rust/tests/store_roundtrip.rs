@@ -1,0 +1,296 @@
+//! Store-subsystem integration: ICQZ containers, the artifact registry,
+//! and the LRU decode cache feeding the serving coordinator. These run
+//! without PJRT artifacts (pure library + a deterministic backend).
+
+use icquant::coordinator::backend::{Backend, DecodeState};
+use icquant::coordinator::{ServeConfig, Server};
+use icquant::icquant::{packed, IcqConfig, IcqMatrix};
+use icquant::quant::QuantizerKind;
+use icquant::store::{container, DecodeCache, Registry, StoredModel};
+use icquant::store::container::{IcqzModel, TensorPayload};
+use icquant::synthzoo;
+use icquant::util::miniprop::{check, Config};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("icq_store_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// pack → load → decode must be bit-identical to the in-memory
+/// `IcqMatrix` path (codebooks compared at their serialized f16
+/// precision), and `serialized_size` must exactly match bytes written —
+/// for both the single-matrix `ICQM` and the container `ICQZ`.
+#[test]
+fn prop_container_roundtrip_bitexact_and_sized() {
+    let dir = tmp_dir("prop_roundtrip");
+    check(
+        "icqz-roundtrip",
+        Config::with_cases(10),
+        |rng, size| {
+            let n_tensors = 1 + (size * 4.0) as usize;
+            let bits = rng.range_inclusive(2, 4) as u32;
+            let kind = if rng.bool(0.5) {
+                QuantizerKind::Rtn
+            } else {
+                QuantizerKind::SensitiveKmeans
+            };
+            let seed = rng.next_u64();
+            (n_tensors, bits, kind, seed)
+        },
+        |&(n_tensors, bits, kind, seed)| {
+            let cfg = IcqConfig {
+                bits,
+                outlier_ratio: 0.05,
+                gap_bits: 6,
+                quantizer: kind,
+            };
+            // A mix of quantized and dense entries.
+            let mut entries = Vec::new();
+            let mut originals = Vec::new();
+            for i in 0..n_tensors {
+                let rows = 4 + 3 * i;
+                let cols = 96 + 32 * i;
+                let w = synthzoo::demo_matrix(rows, cols, seed ^ i as u64);
+                let q = IcqMatrix::quantize(&w, None, &cfg)
+                    .map_err(|e| format!("quantize: {}", e))?;
+
+                // ICQM: exact size + bit-exact byte roundtrip.
+                let bytes = packed::to_bytes(&q);
+                if bytes.len() != packed::serialized_size(&q) {
+                    return Err(format!(
+                        "ICQM serialized_size {} != {} written",
+                        packed::serialized_size(&q),
+                        bytes.len()
+                    ));
+                }
+                let q2 = packed::from_bytes(&bytes).map_err(|e| format!("ICQM load: {}", e))?;
+                if packed::to_bytes(&q2) != bytes {
+                    return Err("ICQM re-serialization not bit-identical".into());
+                }
+
+                originals.push(q.clone());
+                entries.push((format!("t{}.wq", i), TensorPayload::Quantized(q)));
+                entries.push((
+                    format!("t{}.norm", i),
+                    TensorPayload::Dense {
+                        shape: vec![rows],
+                        data: (0..rows).map(|r| r as f32 * 0.5 - 1.0).collect(),
+                    },
+                ));
+            }
+            let model = IcqzModel { config: None, val_loss: f64::NAN, entries };
+
+            // ICQZ: exact size.
+            let path = dir.join("case.icqz");
+            container::save(&model, &path).map_err(|e| format!("save: {}", e))?;
+            let actual = std::fs::metadata(&path).unwrap().len() as usize;
+            let predicted = container::serialized_size(&model).unwrap();
+            if actual != predicted {
+                return Err(format!("ICQZ size {} != predicted {}", actual, predicted));
+            }
+
+            // ICQZ: decode path bit-identical to the in-memory path.
+            let back = container::load(&path).map_err(|e| format!("load: {}", e))?;
+            let cache = Arc::new(DecodeCache::new(1 << 26));
+            let stored = StoredModel::from_model(back, cache, "prop");
+            for (i, q) in originals.iter().enumerate() {
+                let loaded = stored
+                    .decode(&format!("t{}.wq", i))
+                    .map_err(|e| format!("decode: {}", e))?;
+                // Reference: the in-memory matrix with codebooks taken to
+                // the f16 precision serialization stores.
+                let mut reference = q.clone();
+                reference.inlier_cbs =
+                    q.inlier_cbs.iter().map(|c| c.to_f16_precision()).collect();
+                reference.outlier_cbs =
+                    q.outlier_cbs.iter().map(|c| c.to_f16_precision()).collect();
+                let want = reference.to_runtime().dequantize();
+                if loaded.data != want.data {
+                    return Err(format!("tensor t{}.wq decode not bit-identical", i));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The full acceptance path: `pack` a synthzoo model, register it,
+/// resolve by name@hash, and serve end-to-end through the coordinator
+/// with every weight plane pulled through the LRU decode cache.
+#[test]
+fn coordinator_serves_from_container_via_decode_cache() {
+    let dir = tmp_dir("serve");
+    let family = synthzoo::family("llama3.2-1b").unwrap();
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = icquant::store::synth_model(&family, &cfg, Some(2)).unwrap();
+    let reg = Registry::open(dir.join("registry")).unwrap();
+    let record = reg.put_model("serve-test", &model).unwrap();
+    let (_, path) = reg.resolve(&record.spec()).unwrap();
+    assert!(reg.verify("serve-test").unwrap().ok());
+
+    let cache = Arc::new(DecodeCache::new(64 << 20));
+    let stored = StoredModel::open(&path, cache.clone()).unwrap();
+    let n_quantized = stored.quantized_names().len() as u64;
+    assert_eq!(n_quantized, 14); // 7 projections × 2 blocks
+
+    /// Deterministic backend that, on every prefill and decode step,
+    /// reads all projection planes through the store's decode cache —
+    /// the access pattern of a per-batch weight consumer.
+    struct CachedStoreBackend {
+        stored: StoredModel,
+        names: Vec<String>,
+        hashes: Vec<u64>,
+    }
+
+    impl CachedStoreBackend {
+        fn weight_salt(&self) -> u64 {
+            let mut salt = 0u64;
+            for name in &self.names {
+                let plane = self.stored.decode(name).expect("cached decode");
+                salt ^= plane.data.len() as u64;
+                salt = salt.wrapping_mul(0x100000001b3);
+                salt ^= plane.data[0].to_bits() as u64;
+            }
+            salt
+        }
+    }
+
+    impl Backend for CachedStoreBackend {
+        fn prefill(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<DecodeState> {
+            let salt = self.weight_salt();
+            self.hashes = prompts
+                .iter()
+                .map(|p| {
+                    let mut h = salt ^ 0xcbf29ce484222325;
+                    for &t in p {
+                        h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+                    }
+                    h
+                })
+                .collect();
+            let last_tokens = self.hashes.iter().map(|&h| (h % 256) as i32).collect();
+            Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: None })
+        }
+
+        fn decode(&mut self, state: &mut DecodeState) -> anyhow::Result<Vec<i32>> {
+            let salt = self.weight_salt();
+            let step = state.pos as u64;
+            let next: Vec<i32> = self
+                .hashes
+                .iter()
+                .map(|&h| (((h ^ salt).rotate_left((step % 63) as u32 + 1) ^ step) % 256) as i32)
+                .collect();
+            state.pos += 1;
+            state.last_tokens = next.clone();
+            Ok(next)
+        }
+    }
+
+    let names: Vec<String> =
+        stored.quantized_names().iter().map(|s| s.to_string()).collect();
+    let server = Server::start(
+        ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            max_new_tokens: 8,
+            buckets: vec![1, 2, 4],
+            prefill_len: 16,
+        },
+        move || CachedStoreBackend { stored, names, hashes: Vec::new() },
+    );
+
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let (_, rx) = server.submit(vec![i as i32; 8], 6);
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        assert_eq!(resp.tokens.len(), 6);
+    }
+    server.shutdown();
+
+    // Each of the 14 planes decoded exactly once; every subsequent
+    // per-step weight read was a cache hit.
+    let stats = cache.stats();
+    assert_eq!(stats.misses, n_quantized, "planes decoded more than once");
+    assert!(
+        stats.hits >= n_quantized * 6,
+        "expected many cache hits across decode steps, got {}",
+        stats.hits
+    );
+    assert_eq!(server.metrics.snapshot().requests, 12);
+}
+
+/// Under a starved byte budget the cache still serves correct planes —
+/// it just re-decodes (evictions > 0, served data unchanged).
+#[test]
+fn starved_cache_still_serves_correct_planes() {
+    let family = synthzoo::family("llama3.2-1b").unwrap();
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = icquant::store::synth_model(&family, &cfg, Some(1)).unwrap();
+    let big = Arc::new(DecodeCache::new(64 << 20));
+    let small = Arc::new(DecodeCache::new(100 * 1024)); // ~1.5 planes
+    let dir = tmp_dir("starved");
+    let path = dir.join("m.icqz");
+    container::save(&model, &path).unwrap();
+    let a = StoredModel::open(&path, big.clone()).unwrap();
+    let b = StoredModel::open(&path, small.clone()).unwrap();
+    let names: Vec<String> = a.quantized_names().iter().map(|s| s.to_string()).collect();
+    for round in 0..3 {
+        for name in &names {
+            let pa = a.decode(name).unwrap();
+            let pb = b.decode(name).unwrap();
+            assert_eq!(pa.data, pb.data, "round {} tensor {}", round, name);
+        }
+    }
+    assert!(small.stats().evictions > 0, "starved cache never evicted");
+    assert!(small.bytes_used() <= 100 * 1024 || small.len() == 1);
+    assert_eq!(big.stats().misses, names.len() as u64);
+    assert!(big.stats().evictions == 0);
+}
+
+/// Registry garbage collection drops unreferenced objects but never a
+/// model the manifest still points at (and that model still loads).
+#[test]
+fn registry_gc_keeps_live_artifacts_loadable() {
+    let dir = tmp_dir("gc");
+    let family = synthzoo::family("llama3.2-1b").unwrap();
+    let cfg = IcqConfig {
+        bits: 3,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = icquant::store::synth_model(&family, &cfg, Some(1)).unwrap();
+    let reg = Registry::open(dir.join("registry")).unwrap();
+    let rec = reg.put_model("live", &model).unwrap();
+    // Simulate debris.
+    std::fs::write(
+        dir.join("registry/objects").join(format!("{}.icqz", "d".repeat(32))),
+        b"junk",
+    )
+    .unwrap();
+    let removed = reg.gc().unwrap();
+    assert_eq!(removed.len(), 1);
+    let (_, path) = reg.resolve("live").unwrap();
+    let loaded = container::load(&path).unwrap();
+    assert_eq!(loaded.entries.len(), model.entries.len());
+    assert!(reg.verify(&rec.spec()).unwrap().ok());
+}
