@@ -17,6 +17,21 @@ cargo fmt --check
 echo "=== cargo clippy -- -D warnings ==="
 cargo clippy --all-targets -- -D warnings
 
+echo "=== cargo doc --no-deps (broken intra-doc links fail) ==="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "=== kernels bench → BENCH_kernels.json ==="
+# Fused GEMV vs dequantize-then-matmul; asserts equal results and the
+# peak-resident-bytes win, records thread scaling.
+if cargo bench --bench kernels; then
+    if [ -f BENCH_kernels.json ]; then
+        mv BENCH_kernels.json ../BENCH_kernels.json
+        echo "recorded ../BENCH_kernels.json"
+    fi
+else
+    echo "WARNING: kernels bench failed; BENCH_kernels.json not refreshed" >&2
+fi
+
 echo "=== store bench → BENCH_store.json ==="
 # The bench binary writes BENCH_store.json into the working directory;
 # keep the recorded copy at the repo root next to this script.

@@ -7,8 +7,13 @@
 //!    through the PJRT-compiled eval graph.
 //! 3. Start the serving coordinator (dynamic batcher + prefill/decode
 //!    KV-cache scheduler over AOT-compiled HLO) **loading its weights
-//!    from the registered container through the LRU decode cache**, and
-//!    serve a batched workload of corpus prompts.
+//!    from the registered container through the LRU runtime-plane
+//!    cache**, and serve a batched workload of corpus prompts.
+//! 4. Serve the *same container* again through the **native fused-kernel
+//!    backend** (`icquant::kernels`): every projection is a gather+FMA
+//!    GEMM straight off the (n+1)-bit runtime planes — no PJRT, no f32
+//!    weight plane, and the decode cache is shared with step 3, so the
+//!    planes are not decoded twice.
 //!
 //!     cargo run --release --example serve_quantized
 //!
@@ -16,10 +21,11 @@
 //! ≈2.3 bits in a checksummed, content-addressed artifact; Python never
 //! runs at request time.
 
-use icquant::coordinator::backend::PjrtBackend;
+use icquant::coordinator::backend::{NativeBackend, PjrtBackend};
 use icquant::coordinator::{ServeConfig, Server};
 use icquant::eval::{load_corpus_tokens, perplexity, weight_literals};
 use icquant::icquant::IcqConfig;
+use icquant::kernels::NativeModel;
 use icquant::model::{artifacts_dir, TrainedModel};
 use icquant::quant::QuantizerKind;
 use icquant::runtime::Engine;
@@ -150,6 +156,49 @@ fn main() -> anyhow::Result<()> {
             .collect();
         println!("sample continuation    : {:?}", text);
     }
+    server.shutdown();
+
+    // --- serve the same container through the native fused kernels ---------
+    let stored = StoredModel::open(&container_path, cache.clone())?;
+    let native = NativeModel::from_stored(&stored, 0)?;
+    println!(
+        "\nstarting native fused-kernel coordinator ({} resident vs {} f32, {} threads)…",
+        human_bytes(native.quantized_bytes() as u64),
+        human_bytes(native.dequantized_bytes() as u64),
+        native.threads
+    );
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(15),
+        max_new_tokens: 24,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: 64,
+    };
+    let server = Server::start(cfg, move || NativeBackend::new(native));
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let start = (i * 5077) % (corpus.len() - 128);
+        let prompt = corpus[start..start + 48].to_vec();
+        rxs.push(server.submit(prompt, 24).1);
+    }
+    let mut total_tokens = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(600))?;
+        anyhow::ensure!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        total_tokens += resp.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    println!("\n=== native fused-kernel serving report ===");
+    println!("requests / tokens      : {} / {}", snap.requests, total_tokens);
+    println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
+    println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
+    let cstats = cache.stats();
+    println!(
+        "shared plane cache     : {} hits / {} misses — the PJRT phase's decodes were reused",
+        cstats.hits, cstats.misses
+    );
     server.shutdown();
     println!("\nserve_quantized OK");
     Ok(())

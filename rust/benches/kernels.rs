@@ -1,0 +1,258 @@
+//! Fused quantized-plane kernel benches (DESIGN.md §8) — the numbers the
+//! tentpole claims rest on, recorded as `BENCH_kernels.json` (ci.sh).
+//!
+//! Three comparisons, at 2/3/4 bits and 1/2/4 threads:
+//!
+//! * **hot GEMV**: fused gather+FMA off the runtime plane vs matvec over
+//!   a pre-dequantized f32 plane (pure bandwidth story).
+//! * **end-to-end cache miss**: storage artifact → serve one matvec —
+//!   fused path decodes to the runtime plane and runs the fused GEMV;
+//!   the baseline additionally dequantizes to f32 before its matvec.
+//!   Peak resident bytes are recorded for both; fused must win.
+//! * **thread scaling**: fused GEMV at 1/2/4 threads.
+//!
+//! Every compared pair is asserted bit-identical before timing.
+
+use icquant::bench::{bench_throughput, black_box, BenchResult};
+use icquant::icquant::{IcqConfig, IcqMatrix};
+use icquant::kernels::{available_threads, gemv, gemv_mt};
+use icquant::quant::QuantizerKind;
+use icquant::synthzoo;
+use icquant::util::json::Json;
+use icquant::util::tensor::Matrix;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: makes "peak resident bytes" a *measurement* of
+// what each path actually allocates, not an arithmetic identity.
+// ---------------------------------------------------------------------------
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, layout: Layout) {
+        System.dealloc(p, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Live heap bytes the closure adds at its peak, above its baseline.
+fn measure_peak<F: FnOnce()>(f: F) -> usize {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    f();
+    PEAK.load(Ordering::Relaxed).saturating_sub(base)
+}
+
+const ROWS: usize = 768;
+const COLS: usize = 2048;
+
+fn quantized(bits: u32) -> IcqMatrix {
+    let w = synthzoo::demo_matrix(ROWS, COLS, 7 + bits as u64);
+    let cfg = IcqConfig {
+        bits,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    IcqMatrix::quantize(&w, None, &cfg).unwrap()
+}
+
+/// Reference y: dequantize then dense matvec (the path being replaced).
+fn dequant_matvec(dense: &Matrix, x: &[f32], y: &mut [f32]) {
+    for r in 0..dense.rows {
+        let row = dense.row(r);
+        let mut acc = 0.0f32;
+        for (w, xv) in row.iter().zip(x) {
+            acc += *w * *xv;
+        }
+        y[r] = acc;
+    }
+}
+
+fn result_json(r: &BenchResult) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(r.name.clone())),
+        ("mean_ns", Json::num(r.mean_ns)),
+        ("p50_ns", Json::num(r.p50_ns)),
+        ("p99_ns", Json::num(r.p99_ns)),
+        ("iters", Json::num(r.iters as f64)),
+    ];
+    if let Some(b) = r.bytes_per_iter {
+        fields.push(("bytes_per_iter", Json::num(b as f64)));
+    }
+    Json::obj(fields)
+}
+
+fn main() {
+    let x: Vec<f32> = (0..COLS).map(|i| (i as f32 * 0.37).sin()).collect();
+    let cores = available_threads();
+    println!(
+        "fused kernels bench: {}x{} plane, {} cores available\n",
+        ROWS, COLS, cores
+    );
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut footprints: Vec<Json> = Vec::new();
+    let mut scaling: Vec<Json> = Vec::new();
+
+    for bits in [2u32, 3, 4] {
+        let q = quantized(bits);
+        let rt = q.to_runtime();
+        let dense = rt.dequantize();
+
+        // Equal results first: fused output is bit-identical to
+        // dequantize-then-matmul, single- and multi-threaded.
+        let mut y_fused = vec![0.0f32; ROWS];
+        let mut y_ref = vec![0.0f32; ROWS];
+        gemv(&rt, &x, &mut y_fused);
+        dequant_matvec(&dense, &x, &mut y_ref);
+        assert_eq!(
+            y_fused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "fused GEMV diverged from dequantize-then-matmul at {} bits",
+            bits
+        );
+        for threads in [2usize, 4] {
+            let mut y_mt = vec![0.0f32; ROWS];
+            gemv_mt(&rt, &x, &mut y_mt, threads);
+            assert_eq!(y_mt, y_fused, "mt path diverged at {} threads", threads);
+        }
+
+        // Hot path: weight bytes streamed per matvec.
+        let fused_bytes = rt.memory_bytes() as u64;
+        let f32_bytes = (ROWS * COLS * 4) as u64;
+        let mut y = vec![0.0f32; ROWS];
+        results.push(bench_throughput(
+            &format!("kernels/gemv_fused_{}bit (1 thread)", bits),
+            400,
+            fused_bytes,
+            || gemv(black_box(&rt), black_box(&x), black_box(&mut y)),
+        ));
+        println!("{}", results.last().unwrap().report());
+        results.push(bench_throughput(
+            &format!("kernels/matvec_dequantized_f32_{}bit", bits),
+            400,
+            f32_bytes,
+            || dequant_matvec(black_box(&dense), black_box(&x), black_box(&mut y)),
+        ));
+        println!("{}", results.last().unwrap().report());
+
+        // End-to-end cache miss: storage → one served matvec. The fused
+        // path's peak resident set is the runtime plane; the baseline
+        // holds runtime plane + f32 plane at its peak.
+        results.push(bench_throughput(
+            &format!("kernels/e2e_fused_decode+gemv_{}bit", bits),
+            600,
+            fused_bytes,
+            || {
+                let plane = black_box(&q).to_runtime();
+                gemv(&plane, black_box(&x), black_box(&mut y));
+            },
+        ));
+        println!("{}", results.last().unwrap().report());
+        results.push(bench_throughput(
+            &format!("kernels/e2e_dequant+matvec_{}bit", bits),
+            600,
+            f32_bytes,
+            || {
+                let plane = black_box(&q).to_runtime();
+                let dense = plane.dequantize();
+                dequant_matvec(&dense, black_box(&x), black_box(&mut y));
+            },
+        ));
+        println!("{}", results.last().unwrap().report());
+
+        // Measured peak heap growth of one cold serve (decode included),
+        // via the counting allocator: if the fused path ever secretly
+        // materialized an f32 plane, this assert would catch it.
+        let mut yp = vec![0.0f32; ROWS];
+        let peak_fused = measure_peak(|| {
+            let plane = black_box(&q).to_runtime();
+            gemv(&plane, &x, &mut yp);
+            black_box(&plane);
+        });
+        let peak_dequant = measure_peak(|| {
+            let plane = black_box(&q).to_runtime();
+            let dense = plane.dequantize();
+            dequant_matvec(&dense, &x, &mut yp);
+            black_box(&dense);
+        });
+        assert!(
+            peak_fused + ROWS * COLS * 2 < peak_dequant,
+            "fused path must win on measured peak resident bytes ({} vs {})",
+            peak_fused,
+            peak_dequant
+        );
+        println!(
+            "  measured peak heap: fused {} vs dequant {} ({:.2}x)\n",
+            peak_fused,
+            peak_dequant,
+            peak_dequant as f64 / peak_fused as f64
+        );
+        footprints.push(Json::obj(vec![
+            ("bits", Json::num(bits as f64)),
+            ("peak_resident_bytes_fused", Json::num(peak_fused as f64)),
+            ("peak_resident_bytes_dequant", Json::num(peak_dequant as f64)),
+            ("runtime_plane_bytes", Json::num(rt.memory_bytes() as f64)),
+            ("f32_plane_bytes", Json::num((ROWS * COLS * 4) as f64)),
+            ("storage_bytes", Json::num(q.storage_bytes() as f64)),
+            ("equal_results", Json::Bool(true)),
+        ]));
+    }
+
+    // Thread scaling on the 2-bit plane (the paper's headline regime).
+    let q = quantized(2);
+    let rt = q.to_runtime();
+    let mut per_thread_ns = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut y = vec![0.0f32; ROWS];
+        let r = bench_throughput(
+            &format!("kernels/gemv_fused_2bit ({} threads)", threads),
+            400,
+            rt.memory_bytes() as u64,
+            || gemv_mt(black_box(&rt), black_box(&x), black_box(&mut y), threads),
+        );
+        println!("{}", r.report());
+        per_thread_ns.push((threads, r.mean_ns));
+        results.push(r);
+    }
+    let speedup_2t = per_thread_ns[0].1 / per_thread_ns[1].1;
+    let speedup_4t = per_thread_ns[0].1 / per_thread_ns[2].1;
+    println!(
+        "\nthread scaling: 2t {:.2}x, 4t {:.2}x (1t baseline; {} cores)",
+        speedup_2t, speedup_4t, cores
+    );
+    scaling.push(Json::obj(vec![
+        ("cores_available", Json::num(cores as f64)),
+        ("speedup_2_threads", Json::num(speedup_2t)),
+        ("speedup_4_threads", Json::num(speedup_4t)),
+    ]));
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("rows", Json::num(ROWS as f64)),
+        ("cols", Json::num(COLS as f64)),
+        ("footprints", Json::arr(footprints)),
+        ("thread_scaling", Json::arr(scaling)),
+        ("results", Json::arr(results.iter().map(result_json).collect())),
+    ]);
+    std::fs::write("BENCH_kernels.json", json.to_string()).unwrap();
+    println!("\nwrote BENCH_kernels.json");
+}

@@ -19,6 +19,19 @@ pub struct PackedPlane {
 
 impl PackedPlane {
     /// Pack `codes` (len == rows*cols, each < 2^width).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use icquant::bitstream::PackedPlane;
+    ///
+    /// // A 2×3 grid of 2-bit codes packs into 12 bits (2 bytes).
+    /// let codes: Vec<u16> = vec![3, 0, 1, 2, 3, 1];
+    /// let plane = PackedPlane::pack(2, 3, 2, &codes);
+    /// assert_eq!(plane.storage_bits(), 12);
+    /// assert_eq!(plane.storage_bytes(), 2);
+    /// assert_eq!(plane.unpack(), codes);
+    /// ```
     pub fn pack(rows: usize, cols: usize, width: u32, codes: &[u16]) -> PackedPlane {
         assert_eq!(codes.len(), rows * cols);
         assert!(width >= 1 && width <= 16);
@@ -51,6 +64,19 @@ impl PackedPlane {
     }
 
     /// Unpack the whole plane into one `u16` code per weight.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use icquant::bitstream::PackedPlane;
+    ///
+    /// let plane = PackedPlane::pack(1, 4, 3, &[7, 1, 0, 5]);
+    /// assert_eq!(plane.unpack(), vec![7, 1, 0, 5]);
+    /// // The byte-level serving path unpacks into a caller buffer:
+    /// let mut bytes = [0u8; 4];
+    /// plane.unpack_into_u8(&mut bytes);
+    /// assert_eq!(bytes, [7, 1, 0, 5]);
+    /// ```
     pub fn unpack(&self) -> Vec<u16> {
         let n = self.rows * self.cols;
         let mut out = Vec::with_capacity(n);

@@ -10,7 +10,8 @@
 //! icquant store list|gc              artifact-registry maintenance
 //! icquant stats --family <name>      outlier statistics for a zoo family
 //! icquant bound [--gamma g]          Lemma 1 bound table + optimal b
-//! icquant serve [opts]               run the serving demo
+//! icquant serve [opts]               run the serving demo (PJRT or
+//!                                    native fused-kernel backend)
 //! icquant eval [--bits n ...]        perplexity of FP vs ICQuant model
 //! icquant zoo                        list synthetic model families
 //! icquant help
@@ -40,7 +41,11 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    // `--key=value` form (e.g. `serve --backend=native`).
+                    flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -133,7 +138,11 @@ fn print_help() {
     println!("  stats --family <name>         outlier stats for a zoo family");
     println!("  bound [--gamma g]             Lemma 1 bound + optimal b");
     println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
-    println!("                                batched serving demo (PJRT)");
+    println!("        [--backend pjrt|native] [--family f] [--bits n]");
+    println!("        [--threads t]           batched serving demo;");
+    println!("                                pjrt = AOT HLO (needs artifacts),");
+    println!("                                native = fused quantized-plane CPU");
+    println!("                                kernels, no artifacts needed");
     println!("  eval [--bits n] [--ratio g]   ppl: FP vs ICQuant^SK");
     println!("  zoo                           list synthetic model families");
 }
@@ -433,7 +442,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.usize_flag("requests", 16)?;
     let max_batch = args.usize_flag("batch", 8)?;
     let tokens = args.usize_flag("tokens", 16)?;
-    serve_demo::run(n_requests, max_batch, tokens, args.bool_flag("quantized"))
+    match args.flag("backend").unwrap_or("pjrt") {
+        "pjrt" => serve_demo::run(n_requests, max_batch, tokens, args.bool_flag("quantized")),
+        "native" => serve_demo::run_native(
+            n_requests,
+            max_batch,
+            tokens,
+            args.flag("family").unwrap_or("llama3.2-1b"),
+            args.usize_flag("bits", 2)? as u32,
+            args.usize_flag("threads", 0)?, // 0 ⇒ all cores
+        ),
+        other => bail!("unknown backend '{}' (expected pjrt|native)", other),
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -483,6 +503,15 @@ mod tests {
         assert!(a.bool_flag("fast"));
         assert_eq!(a.f64_flag("gamma", 0.1).unwrap(), 0.05);
         assert_eq!(a.usize_flag("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn parse_equals_form_flags() {
+        let a = args(&["serve", "--backend=native", "--threads=4", "--quantized"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.flag("backend"), Some("native"));
+        assert_eq!(a.usize_flag("threads", 0).unwrap(), 4);
+        assert!(a.bool_flag("quantized"));
     }
 
     #[test]

@@ -1,14 +1,133 @@
-//! Serving demo: load the trained model (optionally ICQuant-quantized),
-//! start the coordinator, fire a workload of prompts drawn from the test
-//! corpus, and report latency/throughput — the intro's deployment story.
+//! Serving demo: start the coordinator over either executor, fire a
+//! workload of prompts, and report latency/throughput — the intro's
+//! deployment story.
+//!
+//! Two backends (`serve --backend=pjrt|native`):
+//!
+//! * **pjrt** — the trained Llama-mini through AOT-compiled HLO
+//!   (requires `make artifacts`); optionally quantized first.
+//! * **native** — a SynthZoo family quantized into runtime planes and
+//!   served entirely by the fused CPU kernels ([`crate::kernels`]): no
+//!   artifacts, no PJRT, no Python — weights stay at (n+1) bits for the
+//!   whole request (DESIGN.md §8).
 
-use crate::coordinator::backend::PjrtBackend;
+use crate::coordinator::backend::{NativeBackend, PjrtBackend};
 use crate::coordinator::{ServeConfig, Server};
 use crate::eval::load_corpus_tokens;
 use crate::experiments::methods::Method;
+use crate::icquant::IcqConfig;
+use crate::kernels::NativeModel;
 use crate::model::{artifacts_dir, TrainedModel};
+use crate::quant::QuantizerKind;
+use crate::store::{synth_model, DecodeCache, StoredModel};
+use crate::util::human_bytes;
+use crate::util::prng::Rng;
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Serve a SynthZoo family through the native fused-kernel backend:
+/// quantize → runtime-plane cache → [`NativeBackend`]. Needs no
+/// artifacts directory and never materializes an f32 weight plane.
+pub fn run_native(
+    n_requests: usize,
+    max_batch: usize,
+    max_tokens: usize,
+    family_name: &str,
+    bits: u32,
+    threads: usize,
+) -> Result<()> {
+    let family = crate::synthzoo::family(family_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown family '{}' (see `icquant zoo`)", family_name)
+    })?;
+    let qcfg = IcqConfig {
+        bits,
+        outlier_ratio: 0.05,
+        gap_bits: 0, // Lemma-1-optimal b for γ
+        quantizer: QuantizerKind::Rtn,
+    };
+    let t0 = Instant::now();
+    let model = synth_model(&family, &qcfg, None)?;
+    let cache = Arc::new(DecodeCache::new(256 << 20));
+    let stored = StoredModel::from_model(model, cache.clone(), "serve-native");
+    // Built on the main thread for the footprint report; the planes it
+    // decodes are shared with the worker through the cache.
+    let native = NativeModel::from_stored(&stored, threads)?;
+    let threads = native.threads;
+    println!(
+        "native model [{}]: {} blocks, d={} | quantized in {:.2}s",
+        family.name,
+        native.config.n_layers,
+        native.config.d_model,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "  resident projections : {} quantized ({} dequantized f32) — {:.2}x smaller",
+        human_bytes(native.quantized_bytes() as u64),
+        human_bytes(native.dequantized_bytes() as u64),
+        native.dequantized_bytes() as f64 / native.quantized_bytes() as f64
+    );
+    println!(
+        "  kernel threads       : {} | backend: native fused GEMM (no PJRT)",
+        threads
+    );
+
+    // Unlike PJRT there are no pre-compiled bucket entries, so grow the
+    // bucket ladder to cover whatever batch size was requested.
+    let mut buckets = vec![1usize, 2, 4, 8];
+    while *buckets.last().unwrap() < max_batch {
+        let next = buckets.last().unwrap() * 2;
+        buckets.push(next);
+    }
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait: Duration::from_millis(15),
+        max_new_tokens: max_tokens,
+        buckets,
+        prefill_len: 32,
+    };
+    let server = Server::start(cfg, move || NativeBackend::new(native));
+
+    // Workload: synthetic printable-byte prompts (byte-level vocab).
+    let mut rng = Rng::new(0x5E2E);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..n_requests {
+        let prompt: Vec<i32> =
+            (0..24).map(|_| 32 + (rng.below(95)) as i32).collect();
+        let (_, rx) = server.submit(prompt, max_tokens);
+        rxs.push(rx);
+    }
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+        anyhow::ensure!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        total_tokens += resp.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = server.metrics.snapshot();
+    let cstats = cache.stats();
+    println!("\n=== native serving report ===");
+    println!("requests               : {}", snap.requests);
+    println!("generated tokens       : {}", total_tokens);
+    println!("wall time              : {:.2} s", wall);
+    println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
+    println!("batches                : {} (avg size {:.2}, avg bucket {:.2})",
+        snap.batches, snap.avg_batch_size, snap.avg_bucket);
+    println!("avg prefill latency    : {:.1} ms", snap.avg_prefill_ms);
+    println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
+    println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
+    println!(
+        "plane cache            : {} hits / {} misses ({} decoded, {} resident)",
+        cstats.hits,
+        cstats.misses,
+        human_bytes(cstats.decoded_bytes),
+        human_bytes(cache.bytes_used() as u64)
+    );
+    server.shutdown();
+    Ok(())
+}
 
 pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bool) -> Result<()> {
     let dir = artifacts_dir();

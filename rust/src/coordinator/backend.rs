@@ -1,14 +1,28 @@
 //! Model-executor abstraction for the serving loop.
 //!
-//! [`PjrtBackend`] is the real thing: prefill/decode HLO entries executed
-//! on the PJRT CPU client with resident weight literals. [`MockBackend`]
-//! is a deterministic stand-in for batcher tests and benches.
+//! [`PjrtBackend`] executes prefill/decode HLO entries on the PJRT CPU
+//! client with resident weight literals. [`NativeBackend`] serves the
+//! same contract with zero PJRT involvement: the forward runs on the
+//! fused quantized-plane kernels ([`crate::kernels`]), weights stay in
+//! their (n+1)-bit runtime form. [`MockBackend`] is a deterministic
+//! stand-in for batcher tests and benches.
 
+use crate::kernels::{KvCache, NativeModel};
 use crate::model::TrainedModel;
 use crate::runtime::{Engine, HostTensor};
 use crate::store::{DecodeCache, StoredModel};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+
+/// Backend-specific KV-cache payload carried inside [`DecodeState`].
+pub enum KvState {
+    /// No cache (mock backends, or a state consumed mid-step).
+    None,
+    /// PJRT k/v literals.
+    Pjrt(xla::Literal, xla::Literal),
+    /// Native host-memory cache for the fused-kernel forward.
+    Native(KvCache),
+}
 
 /// In-flight generation state for one batch.
 pub struct DecodeState {
@@ -16,8 +30,25 @@ pub struct DecodeState {
     pub pos: usize,
     /// Last emitted token per sequence (input to the next decode step).
     pub last_tokens: Vec<i32>,
-    /// Backend-specific cache payload (PJRT: k/v literals).
-    pub kv: Option<(xla::Literal, xla::Literal)>,
+    /// Backend-specific cache payload.
+    pub kv: KvState,
+}
+
+/// Greedy per-row argmax over a flat `(rows × c)` logits buffer.
+pub fn argmax_rows(logits: &[f32], rows: usize) -> Vec<i32> {
+    let cols = logits.len() / rows;
+    (0..rows)
+        .map(|r| {
+            let row = &logits[r * cols..(r + 1) * cols];
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for (i, &v) in row.iter().enumerate() {
+                if v > best.0 {
+                    best = (v, i);
+                }
+            }
+            best.1 as i32
+        })
+        .collect()
 }
 
 /// The serving contract: batch prefill, then repeated single-token decode.
@@ -85,22 +116,6 @@ impl PjrtBackend {
         }
         Ok(())
     }
-
-    fn argmax_rows(logits: &[f32], rows: usize) -> Vec<i32> {
-        let cols = logits.len() / rows;
-        (0..rows)
-            .map(|r| {
-                let row = &logits[r * cols..(r + 1) * cols];
-                let mut best = (f32::NEG_INFINITY, 0usize);
-                for (i, &v) in row.iter().enumerate() {
-                    if v > best.0 {
-                        best = (v, i);
-                    }
-                }
-                best.1 as i32
-            })
-            .collect()
-    }
 }
 
 impl Backend for PjrtBackend {
@@ -123,15 +138,18 @@ impl Backend for PjrtBackend {
         let v = out.pop().context("v")?;
         let k = out.pop().context("k")?;
         let logits = Engine::literal_f32(&out[0])?;
-        let last_tokens = Self::argmax_rows(&logits, bucket);
-        Ok(DecodeState { bucket, pos: s, last_tokens, kv: Some((k, v)) })
+        let last_tokens = argmax_rows(&logits, bucket);
+        Ok(DecodeState { bucket, pos: s, last_tokens, kv: KvState::Pjrt(k, v) })
     }
 
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
         anyhow::ensure!(state.pos < self.max_seq, "KV cache exhausted");
         let entry = format!("decode_b{}", state.bucket);
         self.engine.prepare(&entry)?; // compile before async uploads
-        let (k, v) = state.kv.take().context("kv state missing")?;
+        let (k, v) = match std::mem::replace(&mut state.kv, KvState::None) {
+            KvState::Pjrt(k, v) => (k, v),
+            _ => bail!("kv state missing or not a PJRT payload"),
+        };
         let data = [
             self.engine.upload(
                 HostTensor::I32(state.last_tokens.clone(), vec![state.bucket])
@@ -149,12 +167,77 @@ impl Backend for PjrtBackend {
         let nv = out.pop().context("v")?;
         let nk = out.pop().context("k")?;
         let logits = Engine::literal_f32(&out[0])?;
-        let next = Self::argmax_rows(&logits, state.bucket);
+        let next = argmax_rows(&logits, state.bucket);
         state.last_tokens = next.clone();
-        state.kv = Some((nk, nv));
+        state.kv = KvState::Pjrt(nk, nv);
         state.pos += 1;
         // The emitted token is the one the *previous* position predicted;
         // greedy generation returns it directly.
+        Ok(next)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native fused-kernel backend
+// ---------------------------------------------------------------------------
+
+/// CPU backend serving straight off the quantized runtime planes: every
+/// projection is a fused gather+accumulate GEMM
+/// ([`crate::kernels::gemm_mt`]) — no f32 weight plane, no PJRT, no
+/// Python at request time. Selected with `serve --backend=native`.
+pub struct NativeBackend {
+    model: NativeModel,
+}
+
+impl NativeBackend {
+    pub fn new(model: NativeModel) -> NativeBackend {
+        NativeBackend { model }
+    }
+
+    /// Build from an opened container, pulling every projection through
+    /// the store's shared runtime-plane cache. `threads` sizes the
+    /// scoped-thread fan-out of the fused kernels (0 ⇒ all cores).
+    pub fn from_stored(stored: &StoredModel, threads: usize) -> Result<NativeBackend> {
+        Ok(NativeBackend { model: NativeModel::from_stored(stored, threads)? })
+    }
+
+    /// Open an `ICQZ` container and build the native backend from it.
+    pub fn from_container(
+        container: &std::path::Path,
+        cache: Arc<DecodeCache>,
+        threads: usize,
+    ) -> Result<NativeBackend> {
+        let stored = StoredModel::open(container, cache)
+            .with_context(|| format!("open container {}", container.display()))?;
+        Self::from_stored(&stored, threads)
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+}
+
+impl Backend for NativeBackend {
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
+        let (last_tokens, kv) = self.model.prefill(prompts)?;
+        Ok(DecodeState {
+            bucket: prompts.len(),
+            pos: kv.len,
+            last_tokens,
+            kv: KvState::Native(kv),
+        })
+    }
+
+    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
+        anyhow::ensure!(state.pos < self.model.config.max_seq, "KV cache exhausted");
+        let mut kv = match std::mem::replace(&mut state.kv, KvState::None) {
+            KvState::Native(kv) => kv,
+            _ => bail!("kv state missing or not a native payload"),
+        };
+        let next = self.model.decode_step(&mut kv, &state.last_tokens)?;
+        state.pos = kv.len;
+        state.last_tokens = next.clone();
+        state.kv = KvState::Native(kv);
         Ok(next)
     }
 }
@@ -194,7 +277,7 @@ impl Backend for MockBackend {
             })
             .collect();
         let last_tokens = self.hashes.iter().map(|&h| (h % 256) as i32).collect();
-        Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: None })
+        Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: KvState::None })
     }
 
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
@@ -237,6 +320,46 @@ mod tests {
     #[test]
     fn argmax_rows_picks_max() {
         let logits = vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0];
-        assert_eq!(PjrtBackend::argmax_rows(&logits, 2), vec![1, 0]);
+        assert_eq!(argmax_rows(&logits, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn native_backend_round_trips_through_the_contract() {
+        use crate::icquant::IcqConfig;
+        use crate::quant::QuantizerKind;
+        use crate::store::synth_model;
+        use crate::synthzoo::FamilySpec;
+
+        let family = FamilySpec {
+            name: "tiny-backend-test",
+            d_model: 32,
+            d_ff: 64,
+            n_blocks: 1,
+            tail_frac: 0.02,
+            tail_scale: 2.5,
+            oproj_hot: 0.5,
+            seed: 0xBAC1,
+        };
+        let cfg = IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::Rtn,
+        };
+        let model = synth_model(&family, &cfg, None).unwrap();
+        let cache = Arc::new(DecodeCache::new(64 << 20));
+        let stored = StoredModel::from_model(model, cache, "native-backend");
+        let mut b = NativeBackend::from_stored(&stored, 2).unwrap();
+        let prompts = vec![vec![72, 105, 32, 116], vec![104, 101, 114, 101]];
+        let mut state = b.prefill(&prompts).unwrap();
+        assert_eq!(state.bucket, 2);
+        assert_eq!(state.pos, 4);
+        for step in 0..3 {
+            let toks = b.decode(&mut state).unwrap();
+            assert_eq!(toks.len(), 2);
+            assert_eq!(state.pos, 5 + step);
+            assert_eq!(toks, state.last_tokens);
+        }
+        assert!(matches!(state.kv, KvState::Native(_)));
     }
 }

@@ -18,7 +18,10 @@
 //! The PJRT engine lives *inside* the worker thread (xla handles are not
 //! `Send`); weight literals are built once at startup. [`backend`]
 //! abstracts the model executor so the batching logic is property-tested
-//! against a deterministic mock.
+//! against a deterministic mock — and so the same loop can serve through
+//! either the PJRT executor or the fused quantized-plane CPU kernels
+//! ([`backend::NativeBackend`], `serve --backend=native`), whose weights
+//! stay in (n+1)-bit runtime form for the whole request (DESIGN.md §7/§8).
 
 pub mod backend;
 pub mod batcher;
@@ -86,11 +89,16 @@ pub struct Server {
 impl Server {
     /// Start a server whose worker thread builds its own backend (PJRT
     /// handles are thread-local); `make_backend` runs on the worker.
-    pub fn start<B, F>(cfg: ServeConfig, make_backend: F) -> Server
+    pub fn start<B, F>(mut cfg: ServeConfig, make_backend: F) -> Server
     where
         B: Backend,
         F: FnOnce() -> B + Send + 'static,
     {
+        // A batch larger than the largest bucket cannot be served (the
+        // bucket pick would truncate outputs below the batch size), so
+        // clamp the policy rather than panic mid-flight.
+        assert!(!cfg.buckets.is_empty(), "ServeConfig.buckets must be non-empty");
+        cfg.max_batch = cfg.max_batch.min(*cfg.buckets.last().unwrap());
         let (tx, rx) = channel::<WorkItem>();
         let metrics = Arc::new(Metrics::default());
         let m = metrics.clone();
@@ -360,6 +368,25 @@ mod tests {
         let _ = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
         let r3 = rx3.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r1.tokens, r3.tokens);
+        server.shutdown();
+    }
+
+    #[test]
+    fn max_batch_clamped_to_largest_bucket() {
+        // Regression: max_batch beyond the largest bucket used to form
+        // batches the bucket pick truncated, panicking on outputs[i].
+        let server = mock_server(16, 30); // buckets top out at 8
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            let (id, rx) = server.submit(vec![i as i32; 4], 2);
+            rxs.push((id, rx));
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.tokens.len(), 2);
+            assert!(resp.timing.error.is_none());
+        }
         server.shutdown();
     }
 

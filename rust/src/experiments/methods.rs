@@ -100,7 +100,7 @@ impl Method {
             }
             Method::QuipLite { bits } => {
                 // Diagonal Hessian proxy from sensitivity column means
-                // (activations are not exported; documented in DESIGN.md).
+                // (activations are not exported; documented in DESIGN.md §5).
                 let h = diag_hessian(w, sens);
                 let rec = gptq::quantize_quip_lite(w, &h, bits, seed);
                 (rec, bits as f64 + 32.0 / w.cols as f64)

@@ -4,10 +4,10 @@
 //! is fused into the code as its MSB, producing one byte-aligned
 //! (n+1)-bit code per weight plus a fused per-row codebook of `2^(n+1)`
 //! entries (inliers at codes `0..2^n`, outliers at `2^n..2^(n+1)`).
-//! This is the plane the L1 Pallas kernel and the CPU dequant path
-//! consume: a pure gather, no bit twiddling on the request path
-//! (DESIGN.md §4, §8 — on TPU the VPU has no per-lane variable shift, so
-//! byte-aligned codes are the right runtime layout).
+//! This is the plane the L1 Pallas kernel and the fused CPU kernels
+//! ([`crate::kernels`]) consume: a pure gather, no bit twiddling on the
+//! request path (DESIGN.md §4, §8 — on TPU the VPU has no per-lane
+//! variable shift, so byte-aligned codes are the right runtime layout).
 
 use super::IcqMatrix;
 use crate::util::tensor::Matrix;
@@ -77,8 +77,10 @@ impl RuntimePlane {
     }
 
     /// `y = W x` straight off the quantized plane (gather + FMA per
-    /// element) — the memory-bound deployment kernel shape, used by the
-    /// CPU fallback path and the perf benches.
+    /// element) — the memory-bound deployment kernel shape. The
+    /// production form (blocked, multi-threaded, batched) lives in
+    /// [`crate::kernels`]; this single-pass version stays as the
+    /// smallest readable statement of the kernel and for the benches.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);

@@ -1,0 +1,340 @@
+//! Fused quantized-plane GEMV/GEMM (DESIGN.md §8).
+//!
+//! `y = W x` computed **directly from the fused (n+1)-bit
+//! [`RuntimePlane`]** — per-row codebook gather + accumulate, no f32
+//! weight materialization. The weight bytes touched per output element
+//! are one code byte plus the (L1-resident) `2^(n+1)`-entry codebook, so
+//! the kernel moves ≈¼ of the bytes the dequantize-then-matmul path
+//! moves; on the memory-bound shapes the paper targets that is the whole
+//! latency story.
+//!
+//! Accumulation contract: every output element is produced by **one f32
+//! accumulator walking columns in order**, exactly like
+//! [`RuntimePlane::dequantize`] followed by [`Matrix::matmul`]. The
+//! blocked inner loop only stages decoded levels into a stack buffer —
+//! it never reassociates the sum — so fused output is bit-identical to
+//! the dequantize-then-matmul reference (property-tested in
+//! `tests/kernels_prop.rs`). Scope: the contract holds for **finite**
+//! activations — [`Matrix::matmul`] skips exact-0.0 weights, so a ±∞/NaN
+//! activation at a column whose dequantized level is exactly 0.0 would
+//! propagate here (0·∞ = NaN) but be skipped by the dense reference.
+//!
+//! Threading: row-partitioned (GEMV) or batch-partitioned (GEMM)
+//! `std::thread::scope` fan-out — no pool state, no extra deps, and each
+//! output element is still written by exactly one thread, so the
+//! bit-identity contract survives multi-threading unchanged.
+
+use crate::icquant::runtime::RuntimePlane;
+use crate::util::tensor::Matrix;
+
+/// Codes decoded per gather block. Sized so the staged levels
+/// (`BLOCK × 4 B`) plus the source codes stay well inside L1 alongside
+/// the codebook.
+const BLOCK: usize = 512;
+
+/// Threads worth using for the multi-threaded paths: the machine's
+/// available parallelism, or 1 when it cannot be queried.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Single-threaded fused GEMV: `y[r] = Σ_c cb_r[code(r,c)] · x[c]`.
+///
+/// Bit-identical to `plane.dequantize()` then dense matvec (same
+/// accumulation order, see module docs).
+pub fn gemv(plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
+    assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
+    gemv_rows(plane, x, 0, y);
+}
+
+/// Fused GEMV over the row range `[row0, row0 + y.len())` — the unit the
+/// multi-threaded path hands to each worker.
+fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
+    let cols = plane.cols;
+    let mut levels = [0.0f32; BLOCK];
+    for (i, out) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let cb = plane.codebooks[r].as_slice();
+        let codes = &plane.codes[r * cols..(r + 1) * cols];
+        let mut acc = 0.0f32;
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let len = BLOCK.min(cols - c0);
+            let blk = &codes[c0..c0 + len];
+            // Gather pass: LUT lookups only (codebook stays hot in L1).
+            for (l, &code) in levels[..len].iter_mut().zip(blk) {
+                *l = cb[code as usize];
+            }
+            // Accumulate pass: sequential, single accumulator — the
+            // order [`Matrix::matmul`] uses, so bits match.
+            for (l, xv) in levels[..len].iter().zip(&x[c0..c0 + len]) {
+                acc += *l * *xv;
+            }
+            c0 += len;
+        }
+        *out = acc;
+    }
+}
+
+/// Multi-threaded fused GEMV: contiguous row chunks, one scoped thread
+/// per chunk. `threads ≤ 1` (or a single-chunk split) runs inline.
+pub fn gemv_mt(plane: &RuntimePlane, x: &[f32], y: &mut [f32], threads: usize) {
+    assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
+    assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
+    let threads = threads.max(1).min(plane.rows.max(1));
+    if threads == 1 {
+        return gemv_rows(plane, x, 0, y);
+    }
+    let chunk = plane.rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, ychunk) in y.chunks_mut(chunk).enumerate() {
+            s.spawn(move || gemv_rows(plane, x, ti * chunk, ychunk));
+        }
+    });
+}
+
+/// Single-threaded fused GEMM: `y = x Wᵀ` with `x: (m × cols)` row-major
+/// activations and `y: (m × rows)` — the serving shape (each `x` row is
+/// one token's activation vector). `y` is overwritten, not accumulated
+/// into.
+///
+/// Each weight row's levels are decoded once per block and reused across
+/// all `m` activation rows; every `y[i][r]` still accumulates in column
+/// order with a single accumulator (bit-identical to the dense path).
+pub fn gemm(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
+    assert_eq!(x.cols, plane.cols, "x cols must equal plane cols");
+    assert_eq!((y.rows, y.cols), (x.rows, plane.rows), "y must be (m × rows)");
+    gemm_slice(plane, x, 0, x.rows, &mut y.data);
+}
+
+/// Multi-threaded fused GEMM. `y` is overwritten.
+///
+/// Partitioning adapts to the shape: with enough activation rows each
+/// thread takes a contiguous `x`-row chunk (reads shared, writes
+/// disjoint `y` rows); when the batch is smaller than the thread count
+/// — the bucket-1 decode step, exactly where latency matters — threads
+/// take contiguous *weight-row* bands instead, each computing a column
+/// band of `y` into a private buffer that is stitched afterwards.
+pub fn gemm_mt(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix, threads: usize) {
+    assert_eq!(x.cols, plane.cols, "x cols must equal plane cols");
+    assert_eq!((y.rows, y.cols), (x.rows, plane.rows), "y must be (m × rows)");
+    let threads = threads.max(1);
+    let m = x.rows;
+    if threads == 1 || m == 0 {
+        return gemm_slice(plane, x, 0, m, &mut y.data);
+    }
+    let rows_w = plane.rows;
+    if m >= threads {
+        let chunk = m.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ti, yslice) in y.data.chunks_mut(chunk * rows_w).enumerate() {
+                s.spawn(move || {
+                    let mc = yslice.len() / rows_w;
+                    gemm_slice(plane, x, ti * chunk, mc, yslice);
+                });
+            }
+        });
+        return;
+    }
+    // Batch smaller than the thread pool: band over weight rows.
+    let t = threads.min(rows_w);
+    if t <= 1 {
+        return gemm_slice(plane, x, 0, m, &mut y.data);
+    }
+    let chunk = rows_w.div_ceil(t);
+    let bands: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..rows_w.div_ceil(chunk))
+            .map(|ti| {
+                let r0 = ti * chunk;
+                let r1 = ((ti + 1) * chunk).min(rows_w);
+                s.spawn(move || (r0, gemm_band(plane, x, r0, r1)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("gemm band worker")).collect()
+    });
+    for (r0, band) in bands {
+        let bw = band.len() / m;
+        for i in 0..m {
+            y.data[i * rows_w + r0..i * rows_w + r0 + bw]
+                .copy_from_slice(&band[i * bw..(i + 1) * bw]);
+        }
+    }
+}
+
+/// Fused GEMM over activation rows `i0..i0+m` of `x`, writing `y` (the
+/// matching `m × plane.rows` row-major output slice; overwritten).
+fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), m * plane.rows);
+    let cols = plane.cols;
+    let rows_w = plane.rows;
+    for v in y.iter_mut() {
+        *v = 0.0;
+    }
+    let mut levels = [0.0f32; BLOCK];
+    for r in 0..rows_w {
+        let cb = plane.codebooks[r].as_slice();
+        let codes = &plane.codes[r * cols..(r + 1) * cols];
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let len = BLOCK.min(cols - c0);
+            for (l, &code) in levels[..len].iter_mut().zip(&codes[c0..c0 + len]) {
+                *l = cb[code as usize];
+            }
+            for i in 0..m {
+                let xrow = &x.row(i0 + i)[c0..c0 + len];
+                let cell = &mut y[i * rows_w + r];
+                let mut acc = *cell;
+                for (l, xv) in levels[..len].iter().zip(xrow) {
+                    acc += *l * *xv;
+                }
+                *cell = acc;
+            }
+            c0 += len;
+        }
+    }
+}
+
+/// Fused GEMM restricted to weight rows `r0..r1`: returns the
+/// `(m × (r1-r0))` column band of `y`, each element accumulated in
+/// column order by one thread (the bit-identity contract holds).
+fn gemm_band(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize) -> Vec<f32> {
+    let cols = plane.cols;
+    let m = x.rows;
+    let bw = r1 - r0;
+    let mut band = vec![0.0f32; m * bw];
+    let mut levels = [0.0f32; BLOCK];
+    for r in r0..r1 {
+        let cb = plane.codebooks[r].as_slice();
+        let codes = &plane.codes[r * cols..(r + 1) * cols];
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let len = BLOCK.min(cols - c0);
+            for (l, &code) in levels[..len].iter_mut().zip(&codes[c0..c0 + len]) {
+                *l = cb[code as usize];
+            }
+            for i in 0..m {
+                let xrow = &x.row(i)[c0..c0 + len];
+                let cell = &mut band[i * bw + (r - r0)];
+                let mut acc = *cell;
+                for (l, xv) in levels[..len].iter().zip(xrow) {
+                    acc += *l * *xv;
+                }
+                *cell = acc;
+            }
+            c0 += len;
+        }
+    }
+    band
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::icquant::{IcqConfig, IcqMatrix};
+    use crate::synthzoo;
+
+    fn runtime(rows: usize, cols: usize, bits: u32, seed: u64) -> RuntimePlane {
+        let w = synthzoo::demo_matrix(rows, cols, seed);
+        let cfg = IcqConfig { bits, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
+        IcqMatrix::quantize(&w, None, &cfg).unwrap().to_runtime()
+    }
+
+    fn xvec(cols: usize) -> Vec<f32> {
+        (0..cols).map(|i| (i as f32 * 0.37).sin()).collect()
+    }
+
+    /// Reference: dequantize to f32, then dense matmul.
+    fn dequant_matvec(plane: &RuntimePlane, x: &[f32]) -> Vec<f32> {
+        let dense = plane.dequantize();
+        let xm = Matrix::from_vec(x.len(), 1, x.to_vec());
+        dense.matmul(&xm).data
+    }
+
+    #[test]
+    fn gemv_bit_identical_to_dequant_matmul() {
+        for bits in [2u32, 3, 4] {
+            let plane = runtime(64, 777, bits, 41 + bits as u64);
+            let x = xvec(777);
+            let mut y = vec![0.0f32; 64];
+            gemv(&plane, &x, &mut y);
+            let want = dequant_matvec(&plane, &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={}", bits);
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_mt_matches_single_thread_exactly() {
+        // Odd row count vs thread count exercises the remainder chunk.
+        let plane = runtime(13, 256, 2, 7);
+        let x = xvec(256);
+        let mut y1 = vec![0.0f32; 13];
+        gemv(&plane, &x, &mut y1);
+        for threads in [1usize, 2, 3, 4, 13, 64] {
+            let mut yt = vec![0.0f32; 13];
+            gemv_mt(&plane, &x, &mut yt, threads);
+            assert_eq!(
+                y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                yt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={}",
+                threads
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_bit_identical_to_dequant_matmul() {
+        let plane = runtime(24, 300, 3, 11);
+        let m = 5;
+        let x = Matrix::from_vec(
+            m,
+            300,
+            (0..m * 300).map(|i| (i as f32 * 0.11).cos()).collect(),
+        );
+        let mut y = Matrix::zeros(m, 24);
+        gemm(&plane, &x, &mut y);
+        let want = x.matmul(&plane.dequantize().transpose());
+        assert_eq!(
+            y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Multi-threaded path, including more threads than rows.
+        for threads in [2usize, 3, 8] {
+            let mut yt = Matrix::zeros(m, 24);
+            gemm_mt(&plane, &x, &mut yt, threads);
+            assert_eq!(yt.data, y.data, "threads={}", threads);
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // 1×1 and 1×N planes (the smallest serving shapes).
+        for (rows, cols) in [(1usize, 1usize), (1, 97), (3, 1)] {
+            let plane = runtime(rows, cols, 2, 99);
+            let x = xvec(cols);
+            let mut y = vec![0.0f32; rows];
+            gemv_mt(&plane, &x, &mut y, 4);
+            let want = dequant_matvec(&plane, &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}x{}", rows, cols);
+            }
+        }
+    }
+
+    #[test]
+    fn block_boundary_shapes() {
+        // cols exactly at, one under, and one over the gather block.
+        for cols in [BLOCK - 1, BLOCK, BLOCK + 1] {
+            let plane = runtime(4, cols, 2, 3);
+            let x = xvec(cols);
+            let mut y = vec![0.0f32; 4];
+            gemv(&plane, &x, &mut y);
+            let want = dequant_matvec(&plane, &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "cols={}", cols);
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Fused quantized-plane CPU kernels (DESIGN.md §8).
+//!
+//! The paper's deployment argument is that low-bit inference is
+//! memory-bound: latency is set by the weight bytes a matmul must
+//! stream, so a server that dequantizes every layer to f32 before the
+//! GEMV throws the 2.3-bit footprint away exactly where it pays. This
+//! subsystem keeps weights in the fused (n+1)-bit
+//! [`RuntimePlane`](crate::icquant::runtime::RuntimePlane) form all the
+//! way through the matmul:
+//!
+//! * [`gemv`] / [`gemv_mt`] — `y = Wx` via per-row codebook gather +
+//!   accumulate, row-partitioned across scoped `std::thread`s.
+//! * [`gemm`] / [`gemm_mt`] — the batched form `y = xWᵀ`, decoding each
+//!   weight block once and reusing it across the batch.
+//! * [`model`] — a full native CPU Llama-mini forward (RMSNorm, RoPE
+//!   attention, SwiGLU) whose every projection runs through the fused
+//!   kernels: the zero-PJRT serving path behind
+//!   [`NativeBackend`](crate::coordinator::backend::NativeBackend).
+//!
+//! All kernels are **bit-identical** to dequantize-then-matmul (see the
+//! accumulation contract in [`gemv`]'s module docs and the property
+//! tests in `tests/kernels_prop.rs`); `benches/kernels.rs` records the
+//! latency/footprint wins as `BENCH_kernels.json`.
+
+mod gemv;
+pub mod model;
+
+pub use gemv::{available_threads, gemm, gemm_mt, gemv, gemv_mt};
+pub use model::{KvCache, NativeModel};

@@ -5,7 +5,7 @@
 //! where outlier **positions** are stored as b-bit gaps with an escape
 //! flag, costing ≈0.3 bits/weight instead of the ≈1 bit of a binary mask.
 //!
-//! The crate is organized as a three-layer stack (see `DESIGN.md`):
+//! The crate is organized as a three-layer stack (see DESIGN.md §1):
 //!
 //! * **Substrate** — [`util`], [`bitstream`]: PRNG, JSON, f16, special
 //!   functions, bit-level packing. Everything is `std`-only; the offline
@@ -17,11 +17,12 @@
 //!   [`stats`] (§2 statistics), [`synthzoo`] (synthetic model families).
 //! * **System** — [`model`] (weight/sensitivity artifacts), [`store`]
 //!   (the `ICQZ` checkpoint container, the content-addressed artifact
-//!   registry, and the LRU decode cache the serving stack loads through),
-//!   [`runtime`] (PJRT executor for AOT-lowered JAX/Pallas HLO), [`eval`]
-//!   (perplexity + zero-shot tasks), [`coordinator`] (dynamic-batching
-//!   serving stack), [`experiments`] (one harness per paper table/figure),
-//!   [`bench`] (timing harness).
+//!   registry, and the LRU decode cache holding fused runtime planes),
+//!   [`kernels`] (fused quantized-plane CPU GEMV/GEMM + the native
+//!   serving forward), [`runtime`] (PJRT executor for AOT-lowered
+//!   JAX/Pallas HLO), [`eval`] (perplexity + zero-shot tasks),
+//!   [`coordinator`] (dynamic-batching serving stack), [`experiments`]
+//!   (one harness per paper table/figure), [`bench`] (timing harness).
 
 pub mod util;
 pub mod bitstream;
@@ -32,6 +33,7 @@ pub mod stats;
 pub mod synthzoo;
 pub mod model;
 pub mod store;
+pub mod kernels;
 pub mod runtime;
 pub mod eval;
 pub mod coordinator;

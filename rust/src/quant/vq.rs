@@ -8,7 +8,7 @@
 //!
 //! Codebook sizes are capped at 4096 entries (dim·bits ≤ 12), matching
 //! what's tractable for plain k-means; real AQLM's 2^16-entry codebooks
-//! are noted in DESIGN.md as a fidelity cap.
+//! are noted in DESIGN.md §3 as a fidelity cap.
 
 use super::incoherence::Incoherence;
 use crate::util::prng::Rng;

@@ -1,21 +1,32 @@
-//! Byte-budget LRU cache for dequantized weight planes.
+//! Byte-budget LRU cache for fused runtime weight planes.
 //!
-//! The serving hot loop wants dense f32 planes; the store keeps layers
-//! in their ≈2.3-bit packed form. [`DecodeCache`] sits between them:
-//! `get_or_decode` runs the fused runtime decode
-//! ([`IcqMatrix::to_runtime`] → dequantize) at most once per key while
-//! the entry is resident, so repeated prefill/decode batches — and
-//! multiple consumers of the same artifact — share one decode.
+//! The serving hot loop consumes quantized layers through the fused
+//! kernels ([`crate::kernels`]), so what is worth caching is the
+//! **runtime plane** — byte-aligned (n+1)-bit codes plus per-row fused
+//! codebooks ([`IcqMatrix::to_runtime`]), ≈¼ the bytes of a dequantized
+//! f32 plane. [`DecodeCache`] sits between the ≈2.3-bit storage form and
+//! the kernels: `get_or_decode` runs the storage→runtime decode at most
+//! once per key while the entry is resident, so repeated prefill/decode
+//! batches — and multiple consumers of the same artifact — share one
+//! decode. Holding planes instead of f32 stretches the same byte budget
+//! ≈4× at LLM widths (DESIGN.md §6); consumers that do need f32 (the
+//! PJRT weight-upload path) dequantize transiently from the cached
+//! plane and drop the f32 copy after use.
+//!
+//! Each entry is charged its **true** resident size,
+//! [`RuntimePlane::memory_bytes`] (codes + codebooks) — not the f32
+//! plane size and not the storage size.
 //!
 //! Eviction is least-recently-used over a *byte* budget (weight planes
 //! vary by orders of magnitude across layers, so an entry-count bound
 //! would be meaningless). Victim selection scans the table; the table
 //! holds one entry per model layer (dozens), so the scan is noise next
-//! to a single plane decode. Entries are handed out as `Arc<Matrix>` —
-//! eviction never invalidates a plane a consumer still holds.
+//! to a single plane decode. Entries are handed out as
+//! `Arc<RuntimePlane>` — eviction never invalidates a plane a consumer
+//! still holds.
 
+use crate::icquant::runtime::RuntimePlane;
 use crate::icquant::IcqMatrix;
-use crate::util::tensor::Matrix;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -25,7 +36,8 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
-    /// Total bytes produced by decodes (including later-evicted planes).
+    /// Total runtime-plane bytes produced by decodes (including
+    /// later-evicted planes).
     pub decoded_bytes: u64,
 }
 
@@ -41,7 +53,7 @@ impl CacheStats {
 }
 
 struct Entry {
-    plane: Arc<Matrix>,
+    plane: Arc<RuntimePlane>,
     bytes: usize,
     last_used: u64,
 }
@@ -53,7 +65,7 @@ struct Inner {
     stats: CacheStats,
 }
 
-/// Thread-safe byte-budget LRU decode cache (shared via `Arc`).
+/// Thread-safe byte-budget LRU runtime-plane cache (shared via `Arc`).
 pub struct DecodeCache {
     inner: Mutex<Inner>,
     budget_bytes: usize,
@@ -76,17 +88,17 @@ impl DecodeCache {
         self.budget_bytes
     }
 
-    /// The dense plane for `key`, decoding `m` on a miss.
-    pub fn get_or_decode(&self, key: &str, m: &IcqMatrix) -> Arc<Matrix> {
-        self.get_or_insert_with(key, || m.to_runtime().dequantize())
+    /// The runtime plane for `key`, decoding `m` on a miss.
+    pub fn get_or_decode(&self, key: &str, m: &IcqMatrix) -> Arc<RuntimePlane> {
+        self.get_or_insert_with(key, || m.to_runtime())
     }
 
     /// General form: `decode` runs only on a miss. It executes under the
     /// cache lock (decodes are CPU-bound and the lock is per-cache, not
     /// per-request); `decode` must not touch this cache.
-    pub fn get_or_insert_with<F>(&self, key: &str, decode: F) -> Arc<Matrix>
+    pub fn get_or_insert_with<F>(&self, key: &str, decode: F) -> Arc<RuntimePlane>
     where
-        F: FnOnce() -> Matrix,
+        F: FnOnce() -> RuntimePlane,
     {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
@@ -98,7 +110,9 @@ impl DecodeCache {
             return e.plane.clone();
         }
         let plane = Arc::new(decode());
-        let bytes = plane.numel() * 4;
+        // Charge the true resident size: codes + per-row codebooks —
+        // NOT the f32 plane this entry can be dequantized into.
+        let bytes = plane.memory_bytes();
         inner.stats.misses += 1;
         inner.stats.decoded_bytes += bytes as u64;
         inner.bytes += bytes;
@@ -159,49 +173,73 @@ mod tests {
     use crate::icquant::IcqConfig;
     use crate::synthzoo;
 
-    fn plane(seed: u64) -> Matrix {
-        synthzoo::demo_matrix(8, 32, seed) // 1 KiB each
+    /// A synthetic runtime plane with an exactly-known byte footprint:
+    /// `rows·cols` code bytes + `rows · 2^(bits+1) · 4` codebook bytes.
+    fn plane(rows: usize, cols: usize, seed: u64) -> RuntimePlane {
+        let bits = 1u32;
+        RuntimePlane {
+            rows,
+            cols,
+            codes: (0..rows * cols).map(|i| ((i as u64 ^ seed) % 4) as u8).collect(),
+            codebooks: (0..rows).map(|r| vec![r as f32; 1 << (bits + 1)]).collect(),
+            bits,
+        }
     }
+
+    /// plane(8, 224, _) → 8·224 + 8·4·4 = 1920 bytes.
+    const PLANE_BYTES: usize = 8 * 224 + 8 * 4 * 4;
 
     #[test]
     fn hit_returns_same_arc_and_counts() {
         let c = DecodeCache::new(1 << 20);
-        let a = c.get_or_insert_with("x", || plane(1));
+        let a = c.get_or_insert_with("x", || plane(8, 224, 1));
         let b = c.get_or_insert_with("x", || panic!("decode ran on a hit"));
         assert!(Arc::ptr_eq(&a, &b));
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.bytes_used(), 8 * 32 * 4);
+        assert_eq!(c.bytes_used(), PLANE_BYTES);
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
-    fn lru_eviction_respects_byte_budget() {
-        // Budget fits exactly two 1 KiB planes.
-        let c = DecodeCache::new(2 * 1024);
-        c.get_or_insert_with("a", || plane(1));
-        c.get_or_insert_with("b", || plane(2));
-        // Touch "a" so "b" is the LRU victim.
+    fn charges_runtime_plane_bytes_not_f32() {
+        // Regression (the original accounting bug): the entry must be
+        // charged codes + codebooks, not the 4·rows·cols f32 plane.
+        let c = DecodeCache::new(1 << 20);
+        let p = c.get_or_insert_with("p", || plane(8, 224, 3));
+        assert_eq!(c.bytes_used(), p.memory_bytes());
+        assert!(c.bytes_used() < p.rows * p.cols * 4, "charged like f32");
+        assert_eq!(c.stats().decoded_bytes, p.memory_bytes() as u64);
+    }
+
+    #[test]
+    fn eviction_triggers_at_runtime_byte_budget() {
+        // Regression: budget sized in *runtime-plane* bytes. Two planes
+        // fit exactly; under f32 accounting (≈3.7× larger) the second
+        // insert would evict immediately and the third would not.
+        let c = DecodeCache::new(2 * PLANE_BYTES);
+        c.get_or_insert_with("a", || plane(8, 224, 1));
+        c.get_or_insert_with("b", || plane(8, 224, 2));
+        assert_eq!(c.len(), 2, "two planes must fit the two-plane budget");
+        assert_eq!(c.stats().evictions, 0);
+        // Touch "a" so "b" is the LRU victim when "c" arrives.
         c.get_or_insert_with("a", || panic!("hit expected"));
-        c.get_or_insert_with("c", || plane(3));
+        c.get_or_insert_with("c", || plane(8, 224, 3));
         assert_eq!(c.len(), 2);
-        assert!(c.bytes_used() <= 2 * 1024);
-        let s = c.stats();
-        assert_eq!(s.evictions, 1);
-        // "a" survived (and is refreshed again by this touch).
+        assert!(c.bytes_used() <= 2 * PLANE_BYTES);
+        assert_eq!(c.stats().evictions, 1);
+        // "a" survived; "b" was the victim and re-decodes on re-fetch.
         c.get_or_insert_with("a", || panic!("'a' should still be resident"));
-        // "b" was evicted; re-fetching decodes again (evicting "c",
-        // which is now the least recently used).
         let before = c.stats().misses;
-        c.get_or_insert_with("b", || plane(2));
+        c.get_or_insert_with("b", || plane(8, 224, 2));
         assert_eq!(c.stats().misses, before + 1);
     }
 
     #[test]
     fn oversized_single_entry_stays_resident() {
         let c = DecodeCache::new(16); // absurdly small budget
-        let a = c.get_or_insert_with("big", || plane(7));
+        let a = c.get_or_insert_with("big", || plane(8, 224, 7));
         assert_eq!(c.len(), 1);
         let b = c.get_or_insert_with("big", || panic!("must hit"));
         assert!(Arc::ptr_eq(&a, &b));
@@ -215,14 +253,17 @@ mod tests {
         let d1 = c.get_or_decode("m", &q);
         let d2 = c.get_or_decode("m", &q);
         assert!(Arc::ptr_eq(&d1, &d2));
-        assert_eq!(d1.data, q.to_runtime().dequantize().data);
+        let rt = q.to_runtime();
+        assert_eq!(d1.codes, rt.codes);
+        assert_eq!(d1.dequantize().data, rt.dequantize().data);
         assert_eq!(c.stats().misses, 1);
+        assert_eq!(c.bytes_used(), rt.memory_bytes());
     }
 
     #[test]
     fn clear_preserves_stats() {
         let c = DecodeCache::new(1 << 20);
-        c.get_or_insert_with("a", || plane(1));
+        c.get_or_insert_with("a", || plane(8, 224, 1));
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.bytes_used(), 0);
@@ -237,7 +278,7 @@ mod tests {
             let c = c.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..8 {
-                    let _ = c.get_or_insert_with(&format!("k{}", i), || plane(i as u64));
+                    let _ = c.get_or_insert_with(&format!("k{}", i), || plane(8, 224, i as u64));
                 }
                 t
             }));

@@ -15,18 +15,23 @@
 //!   container files plus a manifest JSON, so the coordinator and eval
 //!   harnesses resolve models by `name@hash` instead of ad-hoc paths
 //!   (`put` / `get` / `list` / `verify` / `gc`).
-//! * [`cache`] — a byte-budget **LRU decode cache** serving dequantized
-//!   planes (the [`crate::icquant::runtime`] fused decode) so repeated
-//!   prefill/decode batches never re-decode the same layer.
+//! * [`cache`] — a byte-budget **LRU decode cache** holding fused
+//!   *runtime planes* (the [`crate::icquant::runtime`] decode: codes +
+//!   codebooks, ≈¼ of f32) so repeated prefill/decode batches never
+//!   re-decode the same layer and the byte budget stretches ≈4× further
+//!   than caching dequantized f32 would (DESIGN.md §6).
 //!
 //! [`StoredModel`] ties the three together for the serving stack: open a
 //! container (usually resolved through the registry), keep the quantized
-//! form resident, and hand out dense planes through the shared cache.
+//! form resident, and hand out runtime planes through the shared cache —
+//! the native kernels ([`crate::kernels`]) consume them directly; the
+//! PJRT weight-upload path dequantizes transiently.
 //!
 //! ```text
 //! quantize ─► IcqzModel ─► container::save ─► registry::put ─┐
 //!                                                            ▼
-//! coordinator ◄─ TrainedModel ◄─ DecodeCache ◄─ StoredModel::open
+//!       native kernels ◄─ RuntimePlane ◄─ DecodeCache ◄─ StoredModel::open
+//!   PJRT ◄─ TrainedModel ◄─ (transient dequantize) ◄┘
 //! ```
 
 pub mod cache;
@@ -37,6 +42,7 @@ pub use cache::{CacheStats, DecodeCache};
 pub use container::{IcqzModel, TensorPayload};
 pub use registry::Registry;
 
+use crate::icquant::runtime::RuntimePlane;
 use crate::icquant::{IcqConfig, IcqMatrix};
 use crate::model::{ModelConfig, NamedTensor, TrainedModel};
 use crate::synthzoo::{FamilySpec, LayerType};
@@ -113,10 +119,11 @@ impl StoredModel {
             .collect()
     }
 
-    /// Dense plane for a quantized layer, through the LRU cache: a hit
-    /// is a map lookup; a miss runs the fused runtime decode
-    /// ([`IcqMatrix::to_runtime`] → dequantize) exactly once.
-    pub fn decode(&self, name: &str) -> Result<Arc<Matrix>> {
+    /// Fused runtime plane for a quantized layer, through the LRU cache:
+    /// a hit is a map lookup; a miss runs the fused runtime decode
+    /// ([`IcqMatrix::to_runtime`]) exactly once. This is what the native
+    /// serving kernels ([`crate::kernels`]) consume.
+    pub fn runtime_plane(&self, name: &str) -> Result<Arc<RuntimePlane>> {
         let (_, payload) = self
             .entries
             .iter()
@@ -133,10 +140,34 @@ impl StoredModel {
         }
     }
 
+    /// Dense f32 plane for a quantized layer: the cached runtime plane
+    /// dequantized **transiently** — the f32 copy belongs to the caller
+    /// and is never held (or byte-charged) by the cache.
+    pub fn decode(&self, name: &str) -> Result<Matrix> {
+        Ok(self.runtime_plane(name)?.dequantize())
+    }
+
+    /// Shape + data of a dense (non-quantized) side tensor.
+    pub fn dense(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let (_, payload) = self
+            .entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .with_context(|| format!("no tensor '{}' in container", name))?;
+        match payload {
+            StoredPayload::Dense { shape, data } => Ok((shape.as_slice(), data.as_slice())),
+            StoredPayload::Quantized(_) => {
+                bail!("tensor '{}' is quantized; use runtime_plane/decode", name)
+            }
+        }
+    }
+
     /// Materialize the full f32 model for a backend that consumes
     /// [`TrainedModel`] (the PJRT weight-upload path). Quantized layers
-    /// go through the decode cache; container order is preserved — it is
-    /// the positional ABI the AOT-compiled HLO entries expect.
+    /// go through the runtime-plane cache and are dequantized
+    /// transiently into the returned model (the cache keeps only the
+    /// quantized form); container order is preserved — it is the
+    /// positional ABI the AOT-compiled HLO entries expect.
     pub fn to_trained_model(&self) -> Result<TrainedModel> {
         let config = self
             .config
@@ -156,7 +187,7 @@ impl StoredModel {
                     NamedTensor {
                         name: name.clone(),
                         shape: vec![m.rows, m.cols],
-                        data: plane.data.clone(),
+                        data: plane.dequantize().data,
                     }
                 }
             };
@@ -300,14 +331,24 @@ mod tests {
         let model = synth_model(&f, &tiny_cfg(), Some(1)).unwrap();
         let cache = Arc::new(DecodeCache::new(64 << 20));
         let stored = StoredModel::from_model(model, cache.clone(), "t");
-        let a = stored.decode("l0.wq").unwrap();
-        let b = stored.decode("l0.wq").unwrap();
+        let a = stored.runtime_plane("l0.wq").unwrap();
+        let b = stored.runtime_plane("l0.wq").unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         let s = cache.stats();
         assert_eq!(s.misses, 1);
         assert_eq!(s.hits, 1);
-        // Dense tensors are not cacheable decodes.
+        // The cache is charged the runtime-plane size, not f32.
+        assert_eq!(cache.bytes_used(), a.memory_bytes());
+        assert!(cache.bytes_used() < a.rows * a.cols * 4);
+        // decode() dequantizes transiently off the same cached plane.
+        let d1 = stored.decode("l0.wq").unwrap();
+        assert_eq!(d1.data, a.dequantize().data);
+        assert_eq!(cache.stats().misses, 1, "decode must reuse the plane");
+        // Dense tensors are not cacheable decodes (but readable raw).
         assert!(stored.decode("tok_emb").is_err());
+        assert!(stored.runtime_plane("tok_emb").is_err());
+        assert!(stored.dense("tok_emb").is_ok());
+        assert!(stored.dense("l0.wq").is_err());
         assert!(stored.decode("nope").is_err());
     }
 

@@ -237,6 +237,34 @@ impl Registry {
     }
 
     /// Serialize an in-memory model straight into the registry.
+    ///
+    /// # Examples
+    ///
+    /// The pack → resolve flow the CLI (`icquant pack --name …`) and the
+    /// serving stack ride on:
+    ///
+    /// ```
+    /// use icquant::icquant::IcqConfig;
+    /// use icquant::store::{synth_model, Registry};
+    ///
+    /// let root = std::env::temp_dir()
+    ///     .join(format!("icq_registry_doctest_{}", std::process::id()));
+    /// let _ = std::fs::remove_dir_all(&root);
+    /// let reg = Registry::open(&root).unwrap();
+    ///
+    /// // Quantize a one-block zoo model and register it under a name.
+    /// let family = icquant::synthzoo::family("llama3.2-1b").unwrap();
+    /// let model = synth_model(&family, &IcqConfig::default(), Some(1)).unwrap();
+    /// let record = reg.put_model("demo", &model).unwrap();
+    ///
+    /// // Consumers get it back by name (newest) or name@hashprefix.
+    /// let (rec, path) = reg.resolve("demo").unwrap();
+    /// assert_eq!(rec.spec(), record.spec());
+    /// assert!(path.exists());
+    /// let (rec2, _) = reg.resolve(&record.spec()).unwrap();
+    /// assert_eq!(rec2.hash, record.hash);
+    /// # let _ = std::fs::remove_dir_all(&root);
+    /// ```
     pub fn put_model(&self, name: &str, model: &container::IcqzModel) -> Result<ArtifactRecord> {
         // Unique temp name so concurrent puts of the same model name
         // never interleave writes into one file.

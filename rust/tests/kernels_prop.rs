@@ -1,0 +1,173 @@
+//! Property tests for the fused quantized-plane kernels: the fused GEMV
+//! (and GEMM, and their multi-threaded variants) must be **bit-identical**
+//! to `RuntimePlane::dequantize()` followed by a dense matmul, across
+//! bit-widths, outlier ratios (including γ = 0, where the outlier
+//! codebook is all padding), and odd shapes (1×1, 1×N, row counts that
+//! leave remainder chunks under every thread split).
+
+use icquant::icquant::{IcqConfig, IcqMatrix};
+use icquant::kernels::{gemm, gemm_mt, gemv, gemv_mt};
+use icquant::quant::QuantizerKind;
+use icquant::synthzoo;
+use icquant::util::miniprop::{check, Config};
+use icquant::util::tensor::Matrix;
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_fused_gemv_bit_identical_to_dequant_matmul() {
+    check(
+        "fused-gemv-bit-identity",
+        Config::with_cases(48),
+        |rng, size| {
+            let rows = 1 + (size * 40.0 * rng.f64()) as usize;
+            let cols = 1 + (size * 900.0 * rng.f64()) as usize;
+            let bits = rng.range_inclusive(2, 4) as u32;
+            let gamma = if rng.bool(0.5) { 0.05 } else { 0.0 };
+            let threads = rng.range_inclusive(1, 7) as usize;
+            let seed = rng.next_u64();
+            (rows, cols, bits, gamma, threads, seed)
+        },
+        |&(rows, cols, bits, gamma, threads, seed)| {
+            let w = synthzoo::demo_matrix(rows, cols, seed);
+            let cfg = IcqConfig {
+                bits,
+                outlier_ratio: gamma,
+                gap_bits: 6,
+                quantizer: QuantizerKind::Rtn,
+            };
+            let q = IcqMatrix::quantize(&w, None, &cfg)
+                .map_err(|e| format!("quantize: {}", e))?;
+            let rt = q.to_runtime();
+            let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.31).sin()).collect();
+
+            // Reference: dequantize, then dense matmul (x as cols×1).
+            let dense = rt.dequantize();
+            let want = dense.matmul(&Matrix::from_vec(cols, 1, x.clone())).data;
+
+            let mut y = vec![0.0f32; rows];
+            gemv(&rt, &x, &mut y);
+            if bits_of(&y) != bits_of(&want) {
+                return Err(format!(
+                    "single-thread fused GEMV not bit-identical ({}x{} {}bit γ={})",
+                    rows, cols, bits, gamma
+                ));
+            }
+            // Thread splits, including thread counts that do not divide
+            // the row count (remainder chunks) and exceed it.
+            for t in [threads, rows, rows + 3] {
+                let mut ymt = vec![0.0f32; rows];
+                gemv_mt(&rt, &x, &mut ymt, t);
+                if bits_of(&ymt) != bits_of(&want) {
+                    return Err(format!(
+                        "{}-thread fused GEMV not bit-identical ({}x{} {}bit)",
+                        t, rows, cols, bits
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_gemm_bit_identical_to_dequant_matmul() {
+    check(
+        "fused-gemm-bit-identity",
+        Config::with_cases(32),
+        |rng, size| {
+            let rows = 1 + (size * 24.0 * rng.f64()) as usize;
+            let cols = 1 + (size * 500.0 * rng.f64()) as usize;
+            let batch = 1 + rng.below(7) as usize;
+            let bits = rng.range_inclusive(2, 4) as u32;
+            let gamma = if rng.bool(0.5) { 0.05 } else { 0.0 };
+            let threads = rng.range_inclusive(1, 5) as usize;
+            let seed = rng.next_u64();
+            (rows, cols, batch, bits, gamma, threads, seed)
+        },
+        |&(rows, cols, batch, bits, gamma, threads, seed)| {
+            let w = synthzoo::demo_matrix(rows, cols, seed);
+            let cfg = IcqConfig {
+                bits,
+                outlier_ratio: gamma,
+                gap_bits: 6,
+                quantizer: QuantizerKind::Rtn,
+            };
+            let q = IcqMatrix::quantize(&w, None, &cfg)
+                .map_err(|e| format!("quantize: {}", e))?;
+            let rt = q.to_runtime();
+            let x = Matrix::from_vec(
+                batch,
+                cols,
+                (0..batch * cols).map(|i| (i as f32 * 0.17).cos()).collect(),
+            );
+
+            // Reference: y = x · dequantize(W)ᵀ via the dense matmul.
+            let want = x.matmul(&rt.dequantize().transpose());
+
+            let mut y = Matrix::zeros(batch, rows);
+            gemm(&rt, &x, &mut y);
+            if bits_of(&y.data) != bits_of(&want.data) {
+                return Err(format!(
+                    "fused GEMM not bit-identical ({}x{} batch {} {}bit γ={})",
+                    rows, cols, batch, bits, gamma
+                ));
+            }
+            for t in [threads, batch + 2] {
+                let mut ymt = Matrix::zeros(batch, rows);
+                gemm_mt(&rt, &x, &mut ymt, t);
+                if bits_of(&ymt.data) != bits_of(&want.data) {
+                    return Err(format!(
+                        "{}-thread fused GEMM not bit-identical ({}x{} batch {})",
+                        t, rows, cols, batch
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The explicit corner shapes called out in the issue, pinned (the
+/// property above covers them probabilistically).
+#[test]
+fn fused_gemv_corner_shapes_pinned() {
+    for &(rows, cols) in &[(1usize, 1usize), (1, 513), (5, 2), (7, 64)] {
+        for bits in [2u32, 3, 4] {
+            for gamma in [0.0, 0.05] {
+                let w = synthzoo::demo_matrix(rows, cols, 0xC0 + bits as u64);
+                let cfg = IcqConfig {
+                    bits,
+                    outlier_ratio: gamma,
+                    gap_bits: 6,
+                    quantizer: QuantizerKind::Rtn,
+                };
+                let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+                let rt = q.to_runtime();
+                let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.7).sin()).collect();
+                let want = rt
+                    .dequantize()
+                    .matmul(&Matrix::from_vec(cols, 1, x.clone()))
+                    .data;
+                // Thread counts around the row count hit every split
+                // (empty-tail, remainder, one-row-per-thread).
+                for threads in 1..=rows + 2 {
+                    let mut y = vec![0.0f32; rows];
+                    gemv_mt(&rt, &x, &mut y, threads);
+                    assert_eq!(
+                        bits_of(&y),
+                        bits_of(&want),
+                        "{}x{} {}bit γ={} threads={}",
+                        rows,
+                        cols,
+                        bits,
+                        gamma,
+                        threads
+                    );
+                }
+            }
+        }
+    }
+}

@@ -2,7 +2,7 @@
 //! and the LRU decode cache feeding the serving coordinator. These run
 //! without PJRT artifacts (pure library + a deterministic backend).
 
-use icquant::coordinator::backend::{Backend, DecodeState};
+use icquant::coordinator::backend::{Backend, DecodeState, KvState};
 use icquant::coordinator::{ServeConfig, Server};
 use icquant::icquant::{packed, IcqConfig, IcqMatrix};
 use icquant::quant::QuantizerKind;
@@ -179,7 +179,7 @@ fn coordinator_serves_from_container_via_decode_cache() {
                 })
                 .collect();
             let last_tokens = self.hashes.iter().map(|&h| (h % 256) as i32).collect();
-            Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: None })
+            Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: KvState::None })
         }
 
         fn decode(&mut self, state: &mut DecodeState) -> anyhow::Result<Vec<i32>> {
