@@ -32,6 +32,19 @@ else
     echo "WARNING: kernels bench failed; BENCH_kernels.json not refreshed" >&2
 fi
 
+echo "=== serving bench → BENCH_serving.json ==="
+# Continuous-batching vs run-to-completion on the mixed-length staggered
+# workload; asserts identical per-request outputs across schedulers and
+# records the throughput / short-request-p50 trajectory per PR.
+if cargo bench --bench serving; then
+    if [ -f BENCH_serving.json ]; then
+        mv BENCH_serving.json ../BENCH_serving.json
+        echo "recorded ../BENCH_serving.json"
+    fi
+else
+    echo "WARNING: serving bench failed; BENCH_serving.json not refreshed" >&2
+fi
+
 echo "=== store bench → BENCH_store.json ==="
 # The bench binary writes BENCH_store.json into the working directory;
 # keep the recorded copy at the repo root next to this script.

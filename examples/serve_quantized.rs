@@ -22,7 +22,7 @@
 //! runs at request time.
 
 use icquant::coordinator::backend::{NativeBackend, PjrtBackend};
-use icquant::coordinator::{ServeConfig, Server};
+use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
 use icquant::eval::{load_corpus_tokens, perplexity, weight_literals};
 use icquant::icquant::IcqConfig;
 use icquant::kernels::NativeModel;
@@ -101,15 +101,19 @@ fn main() -> anyhow::Result<()> {
         max_new_tokens: 24,
         buckets: vec![1, 2, 4, 8],
         prefill_len: 64,
+        pad_id: b' ' as i32,
+        // PJRT's compiled buckets are served in run-to-completion waves
+        // (the backend cannot splice a sequence into live batch KV).
+        scheduler: SchedulerKind::RunToCompletion,
     };
     println!("\nstarting coordinator from {} (buckets {:?})…", record.spec(), cfg.buckets);
     let dir2 = dir.clone();
     let cpath = container_path.clone();
     let serve_cache = cache.clone();
     let server = Server::start(cfg, move || {
-        let mut b = PjrtBackend::from_container(&dir2, &cpath, serve_cache).expect("backend");
-        b.warmup().expect("warmup");
-        b
+        let mut b = PjrtBackend::from_container(&dir2, &cpath, serve_cache)?;
+        b.warmup()?;
+        Ok(b)
     });
 
     let corpus = load_corpus_tokens(&dir, "test")?;
@@ -119,7 +123,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..n_requests {
         let start = (i * 5077) % (corpus.len() - 128);
         let prompt = corpus[start..start + 48].to_vec();
-        rxs.push(server.submit(prompt, 24).1);
+        rxs.push(server.submit(prompt, 24)?.1);
     }
     let mut sample = None;
     let mut total_tokens = 0;
@@ -173,14 +177,18 @@ fn main() -> anyhow::Result<()> {
         max_new_tokens: 24,
         buckets: vec![1, 2, 4, 8],
         prefill_len: 64,
+        pad_id: b' ' as i32,
+        // The native backend admits mid-decode: freed KV slots refill
+        // from the queue between decode steps (DESIGN.md §9).
+        scheduler: SchedulerKind::Continuous,
     };
-    let server = Server::start(cfg, move || NativeBackend::new(native));
+    let server = Server::start(cfg, move || Ok(NativeBackend::new(native)));
     let t0 = Instant::now();
     let mut rxs = Vec::new();
     for i in 0..n_requests {
         let start = (i * 5077) % (corpus.len() - 128);
         let prompt = corpus[start..start + 48].to_vec();
-        rxs.push(server.submit(prompt, 24).1);
+        rxs.push(server.submit(prompt, 24)?.1);
     }
     let mut total_tokens = 0;
     for rx in rxs {

@@ -1,16 +1,135 @@
-//! Coordinator benches: batching overhead with the mock backend (pure
-//! L3 cost) and, when artifacts exist, the end-to-end PJRT decode step —
-//! the paper-table analogue of tokens/s serving throughput.
+//! Coordinator benches, recorded as `BENCH_serving.json` (ci.sh).
+//!
+//! Three tiers:
+//!
+//! 1. **Coordinator overhead** — full submit→respond loop over the mock
+//!    backend (queueing, batching, channels; zero model cost).
+//! 2. **Scheduler A/B** — the PR-acceptance workload: mixed request
+//!    lengths (`max_new_tokens ∈ {2, 32}`) with staggered arrivals,
+//!    served by [`SimBackend`] (deterministic mock streams + a simulated
+//!    per-active-slot step cost) under both the continuous-batching
+//!    scheduler and the legacy run-to-completion wave scheduler. The
+//!    bench asserts per-request outputs are identical across schedulers
+//!    and that continuous batching wins on throughput and short-request
+//!    p50 latency.
+//! 3. **PJRT decode/prefill latency** per bucket (needs `make
+//!    artifacts`) — the paper-table analogue of tokens/s serving
+//!    throughput.
 
-use icquant::bench::{bench_fn, black_box};
-use icquant::coordinator::backend::{Backend, MockBackend, PjrtBackend};
-use icquant::coordinator::{ServeConfig, Server};
+use icquant::bench::{bench_fn, black_box, BenchResult};
+use icquant::coordinator::backend::{Backend, MockBackend, PjrtBackend, SimBackend};
+use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
 use icquant::model::{artifacts_dir, TrainedModel};
-use std::time::Duration;
+use icquant::util::json::Json;
+use std::time::{Duration, Instant};
+
+const N_REQUESTS: usize = 32;
+const SHORT_TOKENS: usize = 2;
+const LONG_TOKENS: usize = 32;
+const SLOTS: usize = 4;
+const STAGGER: Duration = Duration::from_micros(500);
+const SIM_PREFILL: Duration = Duration::from_micros(300);
+const SIM_STEP_PER_SLOT: Duration = Duration::from_micros(150);
+
+struct WorkloadReport {
+    tokens: usize,
+    wall_s: f64,
+    tokens_per_s: f64,
+    short_p50_ms: f64,
+    long_p50_ms: f64,
+    avg_ttft_ms: f64,
+    avg_active_slots: f64,
+    /// Per-request token streams, in submission order.
+    outputs: Vec<Vec<i32>>,
+}
+
+fn p50(mut xs: Vec<f64>) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[(xs.len() - 1) / 2]
+}
+
+/// Mixed-length, staggered-arrival workload through one scheduler.
+fn run_mixed_workload(scheduler: SchedulerKind) -> WorkloadReport {
+    let cfg = ServeConfig {
+        max_batch: SLOTS,
+        max_wait: Duration::from_millis(3),
+        max_new_tokens: LONG_TOKENS,
+        buckets: vec![1, 2, SLOTS],
+        prefill_len: 16,
+        pad_id: b' ' as i32,
+        scheduler,
+    };
+    let server = Server::start(cfg, || {
+        Ok(SimBackend::new(SIM_PREFILL, SIM_STEP_PER_SLOT))
+    });
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..N_REQUESTS {
+        let want = if i % 2 == 0 { SHORT_TOKENS } else { LONG_TOKENS };
+        let prompt: Vec<i32> = (0..8).map(|j| ((i * 13 + j) % 256) as i32).collect();
+        let (_, rx) = server.submit(prompt, want).unwrap();
+        rxs.push((rx, want));
+        std::thread::sleep(STAGGER); // arrivals land mid-decode
+    }
+    let mut outputs = Vec::new();
+    let mut short_lat = Vec::new();
+    let mut long_lat = Vec::new();
+    let mut tokens = 0usize;
+    for (rx, want) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        assert_eq!(resp.tokens.len(), want);
+        tokens += resp.tokens.len();
+        if want == SHORT_TOKENS {
+            short_lat.push(resp.timing.total_ms());
+        } else {
+            long_lat.push(resp.timing.total_ms());
+        }
+        outputs.push(resp.tokens);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    server.shutdown();
+    WorkloadReport {
+        tokens,
+        wall_s,
+        tokens_per_s: tokens as f64 / wall_s,
+        short_p50_ms: p50(short_lat),
+        long_p50_ms: p50(long_lat),
+        avg_ttft_ms: snap.avg_ttft_ms,
+        avg_active_slots: snap.avg_active_slots,
+        outputs,
+    }
+}
+
+fn workload_json(r: &WorkloadReport) -> Json {
+    Json::obj(vec![
+        ("tokens", Json::num(r.tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tokens_per_s", Json::num(r.tokens_per_s)),
+        ("short_p50_ms", Json::num(r.short_p50_ms)),
+        ("long_p50_ms", Json::num(r.long_p50_ms)),
+        ("avg_ttft_ms", Json::num(r.avg_ttft_ms)),
+        ("avg_active_slots", Json::num(r.avg_active_slots)),
+    ])
+}
+
+fn result_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("mean_ns", Json::num(r.mean_ns)),
+        ("p50_ns", Json::num(r.p50_ns)),
+        ("p99_ns", Json::num(r.p99_ns)),
+        ("iters", Json::num(r.iters as f64)),
+    ])
+}
 
 fn main() {
     // L3-only: full submit→respond loop over the mock backend measures
-    // pure coordinator overhead per request (queueing, batching,
+    // pure coordinator overhead per request (queueing, scheduling,
     // channels) — target: negligible vs a multi-ms model step.
     let cfg = ServeConfig {
         max_batch: 8,
@@ -18,15 +137,93 @@ fn main() {
         max_new_tokens: 4,
         buckets: vec![1, 2, 4, 8],
         prefill_len: 16,
+        ..ServeConfig::default()
     };
-    let server = Server::start(cfg, MockBackend::new);
+    let server = Server::start(cfg, || Ok(MockBackend::new()));
     let prompt: Vec<i32> = (0..16).collect();
-    let r = bench_fn("serving/coordinator_overhead (1 req roundtrip)", 400, || {
-        let (_, rx) = server.submit(black_box(prompt.clone()), 4);
+    let overhead = bench_fn("serving/coordinator_overhead (1 req roundtrip)", 400, || {
+        let (_, rx) = server.submit(black_box(prompt.clone()), 4).unwrap();
         black_box(rx.recv().unwrap());
     });
-    println!("{}", r.report());
+    println!("{}", overhead.report());
     server.shutdown();
+
+    // Scheduler A/B on the acceptance workload.
+    println!(
+        "\nmixed workload: {} requests, max_new_tokens ∈ {{{}, {}}}, \
+         {}µs stagger, {} KV slots, sim step {}µs/slot",
+        N_REQUESTS,
+        SHORT_TOKENS,
+        LONG_TOKENS,
+        STAGGER.as_micros(),
+        SLOTS,
+        SIM_STEP_PER_SLOT.as_micros()
+    );
+    let wave = run_mixed_workload(SchedulerKind::RunToCompletion);
+    let cont = run_mixed_workload(SchedulerKind::Continuous);
+    // Continuous batching must change scheduling, never results.
+    assert_eq!(
+        cont.outputs, wave.outputs,
+        "per-request outputs differ between schedulers"
+    );
+    let report = |name: &str, r: &WorkloadReport| {
+        println!(
+            "{:<24} {:>8.1} tok/s  short p50 {:>7.2} ms  long p50 {:>7.2} ms  \
+             ttft {:>6.2} ms  occupancy {:>4.2}",
+            name, r.tokens_per_s, r.short_p50_ms, r.long_p50_ms, r.avg_ttft_ms, r.avg_active_slots
+        );
+    };
+    report("run-to-completion", &wave);
+    report("continuous", &cont);
+    println!(
+        "speedup: {:.2}x throughput, {:.2}x short-request p50",
+        cont.tokens_per_s / wave.tokens_per_s,
+        wave.short_p50_ms / cont.short_p50_ms
+    );
+    assert!(
+        cont.tokens_per_s > wave.tokens_per_s,
+        "continuous batching lost on throughput: {:.1} vs {:.1} tok/s",
+        cont.tokens_per_s,
+        wave.tokens_per_s
+    );
+    assert!(
+        cont.short_p50_ms < wave.short_p50_ms,
+        "continuous batching lost on short-request p50: {:.2} vs {:.2} ms",
+        cont.short_p50_ms,
+        wave.short_p50_ms
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("requests", Json::num(N_REQUESTS as f64)),
+                ("short_tokens", Json::num(SHORT_TOKENS as f64)),
+                ("long_tokens", Json::num(LONG_TOKENS as f64)),
+                ("stagger_us", Json::num(STAGGER.as_micros() as f64)),
+                ("kv_slots", Json::num(SLOTS as f64)),
+                ("sim_prefill_us", Json::num(SIM_PREFILL.as_micros() as f64)),
+                (
+                    "sim_step_per_slot_us",
+                    Json::num(SIM_STEP_PER_SLOT.as_micros() as f64),
+                ),
+            ]),
+        ),
+        ("continuous", workload_json(&cont)),
+        ("run_to_completion", workload_json(&wave)),
+        (
+            "throughput_speedup",
+            Json::num(cont.tokens_per_s / wave.tokens_per_s),
+        ),
+        (
+            "short_p50_speedup",
+            Json::num(wave.short_p50_ms / cont.short_p50_ms),
+        ),
+        ("coordinator_overhead", result_json(&overhead)),
+    ]);
+    std::fs::write("BENCH_serving.json", json.to_string()).unwrap();
+    println!("\nwrote BENCH_serving.json");
 
     // End-to-end PJRT decode-step latency per bucket (needs artifacts).
     if !artifacts_dir().join("aot_manifest.json").exists() {
@@ -40,9 +237,12 @@ fn main() {
         let prompts: Vec<Vec<i32>> = (0..bucket).map(|i| vec![(i as i32) + 65; 64]).collect();
         let mut state = backend.prefill(&prompts).unwrap();
         let r = bench_fn(&format!("serving/pjrt_decode_step_b{}", bucket), 2500, || {
-            // Reset pos to keep the KV cache in range across iterations.
-            if state.pos >= 120 {
-                state.pos = 64;
+            // Reset positions to keep the KV cache in range across
+            // iterations (wave-uniform across lanes).
+            if state.pos[0] >= 120 {
+                for p in state.pos.iter_mut() {
+                    *p = 64;
+                }
             }
             black_box(backend.decode(&mut state).unwrap());
         });

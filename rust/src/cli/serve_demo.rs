@@ -12,7 +12,7 @@
 //!   whole request (DESIGN.md §8).
 
 use crate::coordinator::backend::{NativeBackend, PjrtBackend};
-use crate::coordinator::{ServeConfig, Server};
+use crate::coordinator::{SchedulerKind, ServeConfig, Server};
 use crate::eval::load_corpus_tokens;
 use crate::experiments::methods::Method;
 use crate::icquant::IcqConfig;
@@ -85,8 +85,12 @@ pub fn run_native(
         max_new_tokens: max_tokens,
         buckets,
         prefill_len: 32,
+        // Clamped to the model vocab by the worker; the byte-vocab
+        // space token is the natural pad here.
+        pad_id: b' ' as i32,
+        scheduler: SchedulerKind::Continuous,
     };
-    let server = Server::start(cfg, move || NativeBackend::new(native));
+    let server = Server::start(cfg, move || Ok(NativeBackend::new(native)));
 
     // Workload: synthetic printable-byte prompts (byte-level vocab).
     let mut rng = Rng::new(0x5E2E);
@@ -95,7 +99,7 @@ pub fn run_native(
     for _ in 0..n_requests {
         let prompt: Vec<i32> =
             (0..24).map(|_| 32 + (rng.below(95)) as i32).collect();
-        let (_, rx) = server.submit(prompt, max_tokens);
+        let (_, rx) = server.submit(prompt, max_tokens)?;
         rxs.push(rx);
     }
     let mut total_tokens = 0usize;
@@ -113,9 +117,12 @@ pub fn run_native(
     println!("generated tokens       : {}", total_tokens);
     println!("wall time              : {:.2} s", wall);
     println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
-    println!("batches                : {} (avg size {:.2}, avg bucket {:.2})",
+    println!("admissions             : {} (avg size {:.2}, avg occupancy after {:.2})",
         snap.batches, snap.avg_batch_size, snap.avg_bucket);
+    println!("decode steps           : {} (avg {:.2} active slots)",
+        snap.decode_steps, snap.avg_active_slots);
     println!("avg prefill latency    : {:.1} ms", snap.avg_prefill_ms);
+    println!("avg time-to-1st-token  : {:.1} ms", snap.avg_ttft_ms);
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
     println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
     println!(
@@ -152,15 +159,19 @@ pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bo
         max_new_tokens: max_tokens,
         buckets: vec![1, 2, 4, 8],
         prefill_len: 64,
+        pad_id: b' ' as i32,
+        // The compiled buckets force wave scheduling either way; being
+        // explicit keeps the report's batch lines honest.
+        scheduler: SchedulerKind::RunToCompletion,
     };
     println!("starting server: {} | max_batch={} max_wait=15ms", storage_note, max_batch);
 
     let dir2 = dir.clone();
     let model2 = model.clone();
     let server = Server::start(cfg, move || {
-        let mut b = PjrtBackend::new(&dir2, &model2).expect("backend init");
-        b.warmup().expect("warmup");
-        b
+        let mut b = PjrtBackend::new(&dir2, &model2)?;
+        b.warmup()?;
+        Ok(b)
     });
 
     // Workload: prompts sampled from the test corpus.
@@ -170,7 +181,7 @@ pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bo
     for i in 0..n_requests {
         let start = (i * 4099) % (corpus.len() - 80);
         let prompt = corpus[start..start + 48].to_vec();
-        let (_, rx) = server.submit(prompt, max_tokens);
+        let (_, rx) = server.submit(prompt, max_tokens)?;
         rxs.push(rx);
     }
     let mut total_tokens = 0usize;
@@ -191,6 +202,7 @@ pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bo
         snap.batches, snap.avg_batch_size, snap.avg_bucket);
     println!("avg queue latency      : {:.1} ms", snap.avg_queue_ms);
     println!("avg prefill latency    : {:.1} ms", snap.avg_prefill_ms);
+    println!("avg time-to-1st-token  : {:.1} ms", snap.avg_ttft_ms);
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
     println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
     server.shutdown();

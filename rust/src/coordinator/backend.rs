@@ -1,37 +1,87 @@
 //! Model-executor abstraction for the serving loop.
 //!
-//! [`PjrtBackend`] executes prefill/decode HLO entries on the PJRT CPU
-//! client with resident weight literals. [`NativeBackend`] serves the
-//! same contract with zero PJRT involvement: the forward runs on the
-//! fused quantized-plane kernels ([`crate::kernels`]), weights stay in
-//! their (n+1)-bit runtime form. [`MockBackend`] is a deterministic
-//! stand-in for batcher tests and benches.
+//! The contract is **slot-level** (DESIGN.md §9): a [`DecodeState`]
+//! owns `cap` KV slots; the scheduler prefills single requests into
+//! free slots ([`Backend::prefill_into`]), decodes whatever subset is
+//! active, and retires slots the moment their sequence finishes
+//! ([`Backend::retire`]). Backends that execute compiled fixed-bucket
+//! graphs — [`PjrtBackend`] — cannot splice one sequence's KV into a
+//! live batch literal, so they report
+//! [`admits_mid_decode`](Backend::admits_mid_decode)` == false` and are
+//! driven in *waves* through the batch-shaped [`Backend::prefill`]
+//! shim: admission happens a whole bucket at a time, retirement only
+//! masks the lane (the compiled graph keeps computing it), and
+//! responses still leave the moment each lane finishes.
+//!
+//! [`NativeBackend`] serves the same contract with zero PJRT
+//! involvement: the forward runs on the fused quantized-plane kernels
+//! ([`crate::kernels`]), weights stay in their (n+1)-bit runtime form,
+//! and slot admission/retirement map 1:1 onto the slot-addressed host
+//! [`KvCache`]. [`MockBackend`] is a deterministic stand-in for batcher
+//! tests; [`SimBackend`] adds a simulated per-slot step cost so benches
+//! can compare scheduler policies on one machine.
 
 use crate::kernels::{KvCache, NativeModel};
 use crate::model::TrainedModel;
 use crate::runtime::{Engine, HostTensor};
 use crate::store::{DecodeCache, StoredModel};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Backend-specific KV-cache payload carried inside [`DecodeState`].
 pub enum KvState {
     /// No cache (mock backends, or a state consumed mid-step).
     None,
-    /// PJRT k/v literals.
+    /// PJRT k/v literals (whole-bucket granularity).
     Pjrt(xla::Literal, xla::Literal),
-    /// Native host-memory cache for the fused-kernel forward.
+    /// Native slot-addressed host cache for the fused-kernel forward.
     Native(KvCache),
 }
 
-/// In-flight generation state for one batch.
+/// In-flight generation state: `cap` KV slots, each holding at most one
+/// sequence. For wave-mode backends `cap` doubles as the compiled
+/// bucket size (their `prefill` creates one state per wave).
 pub struct DecodeState {
-    pub bucket: usize,
-    pub pos: usize,
-    /// Last emitted token per sequence (input to the next decode step).
+    /// Total KV slots this state owns.
+    pub cap: usize,
+    /// Slot occupancy, maintained by `prefill_into`/`retire`.
+    pub active: Vec<bool>,
+    /// Per-slot sequence position (backend-interpreted: KV length for
+    /// model backends, decode-step counter for mocks).
+    pub pos: Vec<usize>,
+    /// Last emitted token per slot (input to the next decode step).
     pub last_tokens: Vec<i32>,
     /// Backend-specific cache payload.
     pub kv: KvState,
+}
+
+impl DecodeState {
+    /// An empty state with every slot free and no cache payload.
+    pub fn empty(cap: usize) -> DecodeState {
+        DecodeState {
+            cap,
+            active: vec![false; cap],
+            pos: vec![0; cap],
+            last_tokens: vec![0; cap],
+            kv: KvState::None,
+        }
+    }
+
+    /// Occupied slot count.
+    pub fn n_active(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Ascending indices of occupied slots.
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.cap).filter(|&i| self.active[i]).collect()
+    }
+
+    /// Lowest free slot, if any.
+    pub fn first_free(&self) -> Option<usize> {
+        (0..self.cap).find(|&i| !self.active[i])
+    }
 }
 
 /// Greedy per-row argmax over a flat `(rows × c)` logits buffer.
@@ -51,20 +101,92 @@ pub fn argmax_rows(logits: &[f32], rows: usize) -> Vec<i32> {
         .collect()
 }
 
-/// The serving contract: batch prefill, then repeated single-token decode.
+/// The serving contract: slot-level prefill/decode/retire, with a
+/// batch-shaped [`prefill`](Backend::prefill) entry point for wave-mode
+/// executors and benches.
 ///
 /// Deliberately *not* `Send`: PJRT handles are thread-local, so the
 /// backend is constructed inside the worker thread (the factory closure
 /// is what crosses the thread boundary — see [`super::Server::start`]).
 pub trait Backend {
-    /// Run the prompt pass for a bucket-sized batch of equal-length
-    /// prompts; returns the decode state primed with the first sampled
-    /// token per sequence.
-    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState>;
+    /// Create an empty decode state owning `cap` KV slots.
+    fn new_state(&mut self, cap: usize) -> Result<DecodeState>;
 
-    /// One greedy decode step: returns the next token per sequence and
-    /// advances the state.
+    /// Run the prompt pass for one sequence into free slot `slot`:
+    /// primes `last_tokens[slot]` with the first greedily sampled token
+    /// and marks the slot active. Callable while other slots are
+    /// mid-decode iff [`admits_mid_decode`](Backend::admits_mid_decode).
+    fn prefill_into(
+        &mut self,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<()>;
+
+    /// Admit several sequences in one backend call; each `(slot,
+    /// prompt)` pair lands in a free slot. The default loops
+    /// [`Backend::prefill_into`]; model backends override it to share
+    /// one pass over the weights across the whole admission round
+    /// (admission is memory-bound, like everything else here).
+    fn prefill_into_many(
+        &mut self,
+        state: &mut DecodeState,
+        admissions: &[(usize, Vec<i32>)],
+    ) -> Result<()> {
+        for (slot, prompt) in admissions {
+            self.prefill_into(state, *slot, prompt)?;
+        }
+        Ok(())
+    }
+
+    /// One greedy decode step over the active slots: returns a
+    /// `cap`-length token vec (inactive entries are unspecified) and
+    /// advances the state. Slot backends only spend kernel time on
+    /// active slots.
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>>;
+
+    /// Release `slot` for reuse. The default masks the lane and resets
+    /// its position, which suits stateless mocks; model backends also
+    /// free their cache lane.
+    fn retire(&mut self, state: &mut DecodeState, slot: usize) -> Result<()> {
+        ensure!(slot < state.cap, "retire: slot {} out of range", slot);
+        state.active[slot] = false;
+        state.pos[slot] = 0;
+        Ok(())
+    }
+
+    /// Whether `prefill_into` may target a free slot while other slots
+    /// are mid-decode. Compiled fixed-bucket executors return `false`
+    /// and are scheduled in waves.
+    fn admits_mid_decode(&self) -> bool {
+        true
+    }
+
+    /// Vocabulary size, when the backend knows it — used by the worker
+    /// to clamp the configured pad token into range.
+    fn vocab(&self) -> Option<usize> {
+        None
+    }
+
+    /// Highest KV position a slot can reach, when the backend's cache
+    /// is bounded. The scheduler clamps each request's token target to
+    /// its slot's remaining headroom at admission, so one over-long
+    /// request runs out of room quietly (short response) instead of
+    /// erroring the whole batch mid-decode.
+    fn max_positions(&self) -> Option<usize> {
+        None
+    }
+
+    /// Batch prefill: a state with one slot per prompt, all prefilled.
+    /// Wave-mode backends override this with their compiled batch entry.
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
+        ensure!(!prompts.is_empty(), "empty batch");
+        let mut state = self.new_state(prompts.len())?;
+        for (slot, p) in prompts.iter().enumerate() {
+            self.prefill_into(&mut state, slot, p)?;
+        }
+        Ok(state)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -77,10 +199,18 @@ pub trait Backend {
 /// (`upload_all`) and borrowed by every prefill/decode call — the
 /// coordinator never re-copies the model (§Perf: 4.5× faster decode
 /// steps vs the literal path).
+///
+/// The compiled HLO fixes both the bucket size and the KV layout, so
+/// this backend cannot splice one new sequence into a live batch: it
+/// admits whole waves via [`Backend::prefill`] and its
+/// [`Backend::retire`] only masks the lane (the graph keeps computing
+/// it — exactly what the pre-slot scheduler did, minus the delayed
+/// responses).
 pub struct PjrtBackend {
     engine: Engine,
     weights: Vec<crate::runtime::ResidentBuffer>,
     max_seq: usize,
+    vocab: usize,
     prefill_len: usize,
 }
 
@@ -90,7 +220,13 @@ impl PjrtBackend {
         let weight_lits = crate::eval::weight_literals(model)?;
         let weights = engine.upload_all(weight_lits)?;
         let prefill_len = engine.manifest().prefill_len;
-        Ok(PjrtBackend { engine, weights, max_seq: model.config.max_seq, prefill_len })
+        Ok(PjrtBackend {
+            engine,
+            weights,
+            max_seq: model.config.max_seq,
+            vocab: model.config.vocab,
+            prefill_len,
+        })
     }
 
     /// Serve straight from an `ICQZ` container: quantized layers are
@@ -119,6 +255,39 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
+    fn new_state(&mut self, _cap: usize) -> Result<DecodeState> {
+        bail!("PjrtBackend admits at wave granularity; use prefill()")
+    }
+
+    fn prefill_into(
+        &mut self,
+        _state: &mut DecodeState,
+        _slot: usize,
+        _prompt: &[i32],
+    ) -> Result<()> {
+        bail!("PjrtBackend cannot splice a sequence into compiled batch KV")
+    }
+
+    fn admits_mid_decode(&self) -> bool {
+        false
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        Some(self.vocab)
+    }
+
+    fn max_positions(&self) -> Option<usize> {
+        Some(self.max_seq)
+    }
+
+    fn retire(&mut self, state: &mut DecodeState, slot: usize) -> Result<()> {
+        ensure!(slot < state.cap, "retire: slot {} out of range", slot);
+        // Mask only: the compiled graph still computes the lane, and the
+        // wave-uniform position must not be disturbed.
+        state.active[slot] = false;
+        Ok(())
+    }
+
     fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
         let bucket = prompts.len();
         let entry = format!("prefill_b{}", bucket);
@@ -138,13 +307,21 @@ impl Backend for PjrtBackend {
         let v = out.pop().context("v")?;
         let k = out.pop().context("k")?;
         let logits = Engine::literal_f32(&out[0])?;
-        let last_tokens = argmax_rows(&logits, bucket);
-        Ok(DecodeState { bucket, pos: s, last_tokens, kv: KvState::Pjrt(k, v) })
+        Ok(DecodeState {
+            cap: bucket,
+            active: vec![true; bucket],
+            pos: vec![s; bucket],
+            last_tokens: argmax_rows(&logits, bucket),
+            kv: KvState::Pjrt(k, v),
+        })
     }
 
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
-        anyhow::ensure!(state.pos < self.max_seq, "KV cache exhausted");
-        let entry = format!("decode_b{}", state.bucket);
+        // Wave-uniform position: every lane advanced together since the
+        // shared prefill.
+        anyhow::ensure!(state.pos[0] < self.max_seq, "KV cache exhausted");
+        // `cap` is the wave's compiled bucket size (set by prefill).
+        let entry = format!("decode_b{}", state.cap);
         self.engine.prepare(&entry)?; // compile before async uploads
         let (k, v) = match std::mem::replace(&mut state.kv, KvState::None) {
             KvState::Pjrt(k, v) => (k, v),
@@ -152,11 +329,11 @@ impl Backend for PjrtBackend {
         };
         let data = [
             self.engine.upload(
-                HostTensor::I32(state.last_tokens.clone(), vec![state.bucket])
+                HostTensor::I32(state.last_tokens.clone(), vec![state.cap])
                     .to_literal()?,
             )?,
             self.engine
-                .upload(HostTensor::scalar_i32(state.pos as i32).to_literal()?)?,
+                .upload(HostTensor::scalar_i32(state.pos[0] as i32).to_literal()?)?,
             self.engine.upload(k)?,
             self.engine.upload(v)?,
         ];
@@ -167,10 +344,12 @@ impl Backend for PjrtBackend {
         let nv = out.pop().context("v")?;
         let nk = out.pop().context("k")?;
         let logits = Engine::literal_f32(&out[0])?;
-        let next = argmax_rows(&logits, state.bucket);
+        let next = argmax_rows(&logits, state.cap);
         state.last_tokens = next.clone();
         state.kv = KvState::Pjrt(nk, nv);
-        state.pos += 1;
+        for p in state.pos.iter_mut() {
+            *p += 1;
+        }
         // The emitted token is the one the *previous* position predicted;
         // greedy generation returns it directly.
         Ok(next)
@@ -185,6 +364,11 @@ impl Backend for PjrtBackend {
 /// projection is a fused gather+accumulate GEMM
 /// ([`crate::kernels::gemm_mt`]) — no f32 weight plane, no PJRT, no
 /// Python at request time. Selected with `serve --backend=native`.
+///
+/// Slot operations map directly onto the slot-addressed host
+/// [`KvCache`]: admission is a batch-1 prefill into a freed lane,
+/// decode runs the fused kernels over the active lanes only, and
+/// retirement is a position reset.
 pub struct NativeBackend {
     model: NativeModel,
 }
@@ -218,36 +402,149 @@ impl NativeBackend {
 }
 
 impl Backend for NativeBackend {
-    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
-        let (last_tokens, kv) = self.model.prefill(prompts)?;
-        Ok(DecodeState {
-            bucket: prompts.len(),
-            pos: kv.len,
-            last_tokens,
-            kv: KvState::Native(kv),
-        })
+    fn new_state(&mut self, cap: usize) -> Result<DecodeState> {
+        ensure!(cap > 0, "state needs at least one slot");
+        let mut state = DecodeState::empty(cap);
+        state.kv = KvState::Native(KvCache::new(&self.model.config, cap));
+        Ok(state)
     }
 
-    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
-        anyhow::ensure!(state.pos < self.model.config.max_seq, "KV cache exhausted");
+    fn prefill_into(
+        &mut self,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<()> {
+        ensure!(slot < state.cap, "prefill_into: slot {} out of range", slot);
+        ensure!(!state.active[slot], "prefill_into: slot {} is occupied", slot);
+        let kv = match &mut state.kv {
+            KvState::Native(kv) => kv,
+            _ => bail!("kv state is not a native payload"),
+        };
+        let first = self.model.prefill_slot(kv, slot, prompt)?;
+        state.last_tokens[slot] = first;
+        state.pos[slot] = kv.pos(slot);
+        state.active[slot] = true;
+        Ok(())
+    }
+
+    fn prefill_into_many(
+        &mut self,
+        state: &mut DecodeState,
+        admissions: &[(usize, Vec<i32>)],
+    ) -> Result<()> {
+        let (first, rest) = match admissions.split_first() {
+            Some(parts) => parts,
+            None => return Ok(()),
+        };
+        let seq = first.1.len();
+        // Mixed prompt lengths (possible only for direct trait users —
+        // the scheduler normalizes to prefill_len) fall back to
+        // per-slot passes.
+        if rest.iter().any(|(_, p)| p.len() != seq) {
+            for (slot, prompt) in admissions {
+                self.prefill_into(state, *slot, prompt)?;
+            }
+            return Ok(());
+        }
+        for &(slot, _) in admissions {
+            ensure!(slot < state.cap, "prefill_into_many: slot {} out of range", slot);
+            ensure!(!state.active[slot], "prefill_into_many: slot {} is occupied", slot);
+        }
         let mut kv = match std::mem::replace(&mut state.kv, KvState::None) {
             KvState::Native(kv) => kv,
             _ => bail!("kv state missing or not a native payload"),
         };
-        let next = self.model.decode_step(&mut kv, &state.last_tokens)?;
-        state.pos = kv.len;
-        state.last_tokens = next.clone();
+        let slots: Vec<usize> = admissions.iter().map(|&(s, _)| s).collect();
+        let mut tokens = Vec::with_capacity(slots.len() * seq);
+        for (_, p) in admissions {
+            tokens.extend_from_slice(p);
+        }
+        // One forward pass decodes each weight block once for every
+        // admitted lane.
+        let firsts = self.model.prefill_slots(&mut kv, &slots, &tokens, seq);
         state.kv = KvState::Native(kv);
-        Ok(next)
+        let firsts = firsts?;
+        if let KvState::Native(kv) = &state.kv {
+            for (i, &slot) in slots.iter().enumerate() {
+                state.last_tokens[slot] = firsts[i];
+                state.pos[slot] = kv.pos(slot);
+                state.active[slot] = true;
+            }
+        }
+        Ok(())
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        Some(self.model.config.vocab)
+    }
+
+    fn max_positions(&self) -> Option<usize> {
+        Some(self.model.config.max_seq)
+    }
+
+    fn retire(&mut self, state: &mut DecodeState, slot: usize) -> Result<()> {
+        ensure!(slot < state.cap, "retire: slot {} out of range", slot);
+        state.active[slot] = false;
+        state.pos[slot] = 0;
+        if let KvState::Native(kv) = &mut state.kv {
+            kv.free_slot(slot);
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
+        let slots = state.active_slots();
+        ensure!(!slots.is_empty(), "decode with no active slots");
+        let mut kv = match std::mem::replace(&mut state.kv, KvState::None) {
+            KvState::Native(kv) => kv,
+            _ => bail!("kv state missing or not a native payload"),
+        };
+        let lasts: Vec<i32> = slots.iter().map(|&s| state.last_tokens[s]).collect();
+        let step = self.model.decode_slots(&mut kv, &lasts, &slots);
+        // Restore the cache even on error so the state stays usable.
+        let next = match step {
+            Ok(n) => n,
+            Err(e) => {
+                state.kv = KvState::Native(kv);
+                return Err(e);
+            }
+        };
+        let mut out = vec![0i32; state.cap];
+        for (i, &slot) in slots.iter().enumerate() {
+            out[slot] = next[i];
+            state.last_tokens[slot] = next[i];
+            state.pos[slot] = kv.pos(slot);
+        }
+        state.kv = KvState::Native(kv);
+        Ok(out)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Mock backend (tests/benches)
+// Mock backends (tests/benches)
 // ---------------------------------------------------------------------------
 
-/// Deterministic mock: token stream derived from a per-sequence hash of
-/// the prompt. Decode latency is zero — batcher behaviour only.
+/// FNV-style hash of a (normalized) prompt — the seed of a mock token
+/// stream.
+fn mock_hash(prompt: &[i32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in prompt {
+        h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Deterministic token for decode step `step` of stream `h`.
+fn mock_token(h: u64, step: u64) -> i32 {
+    ((h.rotate_left((step % 63) as u32 + 1) ^ step) % 256) as i32
+}
+
+/// Deterministic mock: token stream derived from a per-slot hash of the
+/// prompt, advanced by a per-slot step counter — so a sequence's stream
+/// does not depend on when it was admitted or who its batchmates are,
+/// exactly like the real backends. Decode latency is zero — scheduler
+/// behaviour only. One in-flight [`DecodeState`] at a time.
 pub struct MockBackend {
     hashes: Vec<u64>,
 }
@@ -265,31 +562,95 @@ impl Default for MockBackend {
 }
 
 impl Backend for MockBackend {
-    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
-        self.hashes = prompts
-            .iter()
-            .map(|p| {
-                let mut h = 0xcbf29ce484222325u64;
-                for &t in p {
-                    h = (h ^ t as u64).wrapping_mul(0x100000001b3);
-                }
-                h
-            })
-            .collect();
-        let last_tokens = self.hashes.iter().map(|&h| (h % 256) as i32).collect();
-        Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: KvState::None })
+    fn new_state(&mut self, cap: usize) -> Result<DecodeState> {
+        ensure!(cap > 0, "state needs at least one slot");
+        self.hashes = vec![0; cap];
+        Ok(DecodeState::empty(cap))
+    }
+
+    fn prefill_into(
+        &mut self,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<()> {
+        ensure!(slot < state.cap, "prefill_into: slot {} out of range", slot);
+        ensure!(!state.active[slot], "prefill_into: slot {} is occupied", slot);
+        let h = mock_hash(prompt);
+        self.hashes[slot] = h;
+        state.last_tokens[slot] = (h % 256) as i32;
+        state.pos[slot] = 0; // decode-step counter for mock streams
+        state.active[slot] = true;
+        Ok(())
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        Some(256)
     }
 
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
-        let step = state.pos as u64;
-        let next: Vec<i32> = self
-            .hashes
-            .iter()
-            .map(|&h| ((h.rotate_left((step % 63) as u32 + 1) ^ step) % 256) as i32)
-            .collect();
-        state.pos += 1;
-        state.last_tokens = next.clone();
-        Ok(next)
+        let mut out = vec![0i32; state.cap];
+        for slot in 0..state.cap {
+            if !state.active[slot] {
+                continue;
+            }
+            let t = mock_token(self.hashes[slot], state.pos[slot] as u64);
+            out[slot] = t;
+            state.last_tokens[slot] = t;
+            state.pos[slot] += 1;
+        }
+        Ok(out)
+    }
+}
+
+/// [`MockBackend`] streams plus a simulated compute cost: each decode
+/// step busy-waits `step_cost` per **active** slot, each slot prefill
+/// busy-waits `prefill_cost`. This makes scheduler-policy differences
+/// measurable on one machine — a run-to-completion wave keeps paying
+/// for finished and padding lanes, the continuous scheduler does not —
+/// while keeping token streams bit-identical to [`MockBackend`].
+pub struct SimBackend {
+    inner: MockBackend,
+    prefill_cost: Duration,
+    step_cost: Duration,
+}
+
+impl SimBackend {
+    pub fn new(prefill_cost: Duration, step_cost_per_slot: Duration) -> SimBackend {
+        SimBackend { inner: MockBackend::new(), prefill_cost, step_cost: step_cost_per_slot }
+    }
+}
+
+/// Spin (not sleep) so simulated kernel time has microsecond resolution.
+fn busy_wait(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+impl Backend for SimBackend {
+    fn new_state(&mut self, cap: usize) -> Result<DecodeState> {
+        self.inner.new_state(cap)
+    }
+
+    fn prefill_into(
+        &mut self,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<()> {
+        busy_wait(self.prefill_cost);
+        self.inner.prefill_into(state, slot, prompt)
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        self.inner.vocab()
+    }
+
+    fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
+        busy_wait(self.step_cost * state.n_active() as u32);
+        self.inner.decode(state)
     }
 }
 
@@ -315,6 +676,54 @@ mod tests {
         let mut s = b.prefill(&vec![vec![1], vec![2]]).unwrap();
         let toks = b.decode(&mut s).unwrap();
         assert_ne!(toks[0], toks[1]);
+    }
+
+    #[test]
+    fn mock_stream_is_admission_time_invariant() {
+        // A prompt admitted into a freed slot mid-flight yields the same
+        // stream as the same prompt in a fresh uniform batch.
+        let mut b1 = MockBackend::new();
+        let mut s1 = b1.prefill(&[vec![9, 9, 9]]).unwrap();
+        let reference: Vec<i32> =
+            (0..4).map(|_| b1.decode(&mut s1).unwrap()[0]).collect();
+
+        let mut b2 = MockBackend::new();
+        let mut s2 = b2.new_state(2).unwrap();
+        b2.prefill_into(&mut s2, 0, &[1, 2, 3]).unwrap();
+        for _ in 0..3 {
+            b2.decode(&mut s2).unwrap();
+        }
+        b2.prefill_into(&mut s2, 1, &[9, 9, 9]).unwrap();
+        let got: Vec<i32> = (0..4).map(|_| b2.decode(&mut s2).unwrap()[1]).collect();
+        assert_eq!(got, reference);
+    }
+
+    #[test]
+    fn retire_frees_and_prefill_into_reuses_slot() {
+        let mut b = MockBackend::new();
+        let mut s = b.prefill(&[vec![5], vec![6]]).unwrap();
+        b.decode(&mut s).unwrap();
+        b.retire(&mut s, 0).unwrap();
+        assert!(!s.active[0]);
+        assert_eq!(s.n_active(), 1);
+        assert_eq!(s.first_free(), Some(0));
+        b.prefill_into(&mut s, 0, &[7]).unwrap();
+        assert_eq!(s.n_active(), 2);
+        // Occupied slot rejects admission.
+        assert!(b.prefill_into(&mut s, 1, &[8]).is_err());
+    }
+
+    #[test]
+    fn sim_backend_matches_mock_streams() {
+        let mut mock = MockBackend::new();
+        let mut sim =
+            SimBackend::new(Duration::from_micros(10), Duration::from_micros(10));
+        let prompts = vec![vec![1, 2], vec![3, 4]];
+        let mut sm = mock.prefill(&prompts).unwrap();
+        let mut ss = sim.prefill(&prompts).unwrap();
+        for _ in 0..4 {
+            assert_eq!(mock.decode(&mut sm).unwrap(), sim.decode(&mut ss).unwrap());
+        }
     }
 
     #[test]
@@ -352,14 +761,91 @@ mod tests {
         let mut b = NativeBackend::from_stored(&stored, 2).unwrap();
         let prompts = vec![vec![72, 105, 32, 116], vec![104, 101, 114, 101]];
         let mut state = b.prefill(&prompts).unwrap();
-        assert_eq!(state.bucket, 2);
-        assert_eq!(state.pos, 4);
+        assert_eq!(state.cap, 2);
+        assert_eq!(state.pos, vec![4, 4]);
+        assert_eq!(state.n_active(), 2);
         for step in 0..3 {
             let toks = b.decode(&mut state).unwrap();
             assert_eq!(toks.len(), 2);
-            assert_eq!(state.pos, 5 + step);
+            assert_eq!(state.pos, vec![5 + step, 5 + step]);
             assert_eq!(toks, state.last_tokens);
         }
         assert!(matches!(state.kv, KvState::Native(_)));
+
+        // Slot lifecycle on the same state: retire one lane, decode the
+        // survivor alone, admit a new sequence into the freed lane.
+        b.retire(&mut state, 0).unwrap();
+        assert_eq!(state.n_active(), 1);
+        let toks = b.decode(&mut state).unwrap();
+        assert_eq!(state.active_slots(), vec![1]);
+        assert_eq!(toks[1], state.last_tokens[1]);
+        b.prefill_into(&mut state, 0, &[65, 66, 67]).unwrap();
+        assert_eq!(state.n_active(), 2);
+        assert_eq!(state.pos[0], 3);
+        let toks = b.decode(&mut state).unwrap();
+        assert_eq!(toks.len(), 2);
+    }
+
+    /// The continuous slot path must reproduce the uniform batch path
+    /// token-for-token on the native backend.
+    #[test]
+    fn native_slot_scheduling_is_stream_invariant() {
+        use crate::icquant::IcqConfig;
+        use crate::quant::QuantizerKind;
+        use crate::store::synth_model;
+        use crate::synthzoo::FamilySpec;
+
+        let family = FamilySpec {
+            name: "tiny-backend-inv",
+            d_model: 32,
+            d_ff: 64,
+            n_blocks: 1,
+            tail_frac: 0.02,
+            tail_scale: 2.5,
+            oproj_hot: 0.5,
+            seed: 0xBAC2,
+        };
+        let cfg = IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::Rtn,
+        };
+        let model = synth_model(&family, &cfg, None).unwrap();
+        let cache = Arc::new(DecodeCache::new(64 << 20));
+        let stored = StoredModel::from_model(model, cache, "native-inv");
+        let mut b = NativeBackend::from_stored(&stored, 2).unwrap();
+        let prompt = vec![10, 20, 30, 40];
+
+        let mut state = b.prefill(&[prompt.clone()]).unwrap();
+        let reference: Vec<i32> =
+            (0..4).map(|_| b.decode(&mut state).unwrap()[0]).collect();
+
+        // Same prompt admitted into slot 1 while slot 0 is mid-flight.
+        let mut state = b.new_state(2).unwrap();
+        b.prefill_into(&mut state, 0, &[99, 98, 97, 96, 95]).unwrap();
+        b.decode(&mut state).unwrap();
+        b.decode(&mut state).unwrap();
+        b.prefill_into(&mut state, 1, &prompt).unwrap();
+        let got: Vec<i32> = (0..4).map(|_| b.decode(&mut state).unwrap()[1]).collect();
+        assert_eq!(got, reference);
+
+        // Batched admission (one weight pass for the round) must match
+        // the per-slot path token-for-token.
+        let other = vec![7, 6, 5, 4];
+        let mut state = b.new_state(2).unwrap();
+        b.prefill_into_many(
+            &mut state,
+            &[(0, prompt.clone()), (1, other.clone())],
+        )
+        .unwrap();
+        assert_eq!(state.n_active(), 2);
+        assert_eq!(state.pos, vec![4, 4]);
+        let got: Vec<i32> = (0..4).map(|_| b.decode(&mut state).unwrap()[0]).collect();
+        assert_eq!(got, reference);
+        // Occupied slots reject a batched admission.
+        assert!(b.prefill_into_many(&mut state, &[(0, other)]).is_err());
+        // KV headroom is reported for the scheduler's target clamp.
+        assert_eq!(b.max_positions(), Some(b.model().config.max_seq));
     }
 }

@@ -1,5 +1,13 @@
-//! Pure batching policy + prompt normalization — the logic the property
-//! tests pin down independently of any backend.
+//! Pure scheduling policy + prompt normalization — the logic the
+//! property tests pin down independently of any backend.
+//!
+//! Two policies live here, one per scheduler mode (DESIGN.md §9):
+//!
+//! * [`BatchPolicy`] — size-or-deadline flush for the *wave* path
+//!   (bucket-compiled backends admit whole batches at a time).
+//! * [`AdmissionPolicy`] — work-conserving slot admission for the
+//!   *continuous* path: a freed KV slot is refilled from the queue
+//!   immediately, with no artificial wait.
 
 use super::{GenerateRequest, GenerateResponse};
 use std::sync::mpsc::Sender;
@@ -13,7 +21,8 @@ pub struct PendingRequest {
 }
 
 /// Flush policy: emit the batch when it is full or the oldest member has
-/// waited long enough. Classic size-or-deadline dynamic batching.
+/// waited long enough. Classic size-or-deadline dynamic batching — used
+/// by the wave scheduler (PJRT's compiled fixed-bucket entries).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
@@ -26,20 +35,55 @@ impl BatchPolicy {
     }
 }
 
+/// Admission policy for the continuous-batching scheduler: between two
+/// decode steps, how many queued requests enter freed KV slots.
+///
+/// The policy is deliberately work-conserving — every free slot fills
+/// as soon as a request is queued. The whole admission round is served
+/// by **one** batched prefill (`Backend::prefill_into_many` decodes
+/// each weight block once for all admitted lanes), so coalescing
+/// happens for whatever is queued *now*; holding requests back to
+/// coalesce with hypothetical future arrivals would only add queue
+/// latency.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Total KV slots the worker owns.
+    pub slots: usize,
+}
+
+impl AdmissionPolicy {
+    /// How many requests to admit given current occupancy and queue depth.
+    pub fn admit_now(&self, occupied: usize, queued: usize) -> usize {
+        self.slots.saturating_sub(occupied).min(queued)
+    }
+}
+
 /// Smallest compiled bucket that fits `n` requests.
 pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
     buckets.iter().copied().find(|&b| b >= n)
 }
 
 /// Fit a prompt into the fixed prefill window: left-truncate if too long
-/// (keep the generation-relevant suffix), left-pad with spaces if short.
-pub fn fit_prompt(prompt: &[i32], window: usize) -> Vec<i32> {
+/// (keep the generation-relevant suffix), left-pad with `pad_id` if
+/// short. `pad_id` comes from `ServeConfig` and is clamped to the
+/// backend's vocab by the worker before any prompt is normalized — an
+/// out-of-vocab pad would pollute attention and, on the native backend,
+/// index past the embedding table.
+pub fn fit_prompt(prompt: &[i32], window: usize, pad_id: i32) -> Vec<i32> {
     if prompt.len() >= window {
         prompt[prompt.len() - window..].to_vec()
     } else {
-        let mut out = vec![b' ' as i32; window - prompt.len()];
+        let mut out = vec![pad_id; window - prompt.len()];
         out.extend_from_slice(prompt);
         out
+    }
+}
+
+/// Clamp a configured pad token into `[0, vocab)`.
+pub fn clamp_pad_id(pad_id: i32, vocab: Option<usize>) -> i32 {
+    match vocab {
+        Some(v) if v > 0 => pad_id.clamp(0, (v - 1) as i32),
+        _ => pad_id.max(0),
     }
 }
 
@@ -64,6 +108,16 @@ mod tests {
     }
 
     #[test]
+    fn admission_is_work_conserving() {
+        let p = AdmissionPolicy { slots: 4 };
+        assert_eq!(p.admit_now(0, 10), 4); // empty worker fills up
+        assert_eq!(p.admit_now(3, 10), 1); // one freed slot refills
+        assert_eq!(p.admit_now(4, 10), 0); // full worker admits nothing
+        assert_eq!(p.admit_now(2, 1), 1); // short queue drains fully
+        assert_eq!(p.admit_now(5, 1), 0); // over-occupied (clamped) is safe
+    }
+
+    #[test]
     fn bucket_selection() {
         let buckets = [1usize, 2, 4, 8];
         assert_eq!(pick_bucket(&buckets, 1), Some(1));
@@ -74,12 +128,26 @@ mod tests {
 
     #[test]
     fn fit_prompt_window() {
-        assert_eq!(fit_prompt(&[1, 2, 3], 2), vec![2, 3]);
-        let padded = fit_prompt(&[7], 4);
+        assert_eq!(fit_prompt(&[1, 2, 3], 2, 32), vec![2, 3]);
+        let padded = fit_prompt(&[7], 4, 32);
         assert_eq!(padded.len(), 4);
         assert_eq!(padded[3], 7);
-        assert_eq!(padded[0], b' ' as i32);
-        assert_eq!(fit_prompt(&[1, 2], 2), vec![1, 2]);
+        assert_eq!(padded[0], 32);
+        assert_eq!(fit_prompt(&[1, 2], 2, 32), vec![1, 2]);
+        // The pad id is honoured, not hard-coded.
+        assert_eq!(fit_prompt(&[5], 3, 0), vec![0, 0, 5]);
+    }
+
+    #[test]
+    fn pad_id_clamps_to_vocab() {
+        // Regression: the old scheduler padded with `b' ' as i32` (= 32)
+        // unconditionally, which is out of range for vocab_size <= 32.
+        assert_eq!(clamp_pad_id(32, Some(256)), 32);
+        assert_eq!(clamp_pad_id(32, Some(16)), 15);
+        assert_eq!(clamp_pad_id(-7, Some(16)), 0);
+        assert_eq!(clamp_pad_id(-7, None), 0);
+        assert_eq!(clamp_pad_id(1000, Some(256)), 255);
+        assert_eq!(clamp_pad_id(9, Some(0)), 9); // degenerate vocab: leave as-is
     }
 
     #[test]
@@ -90,18 +158,24 @@ mod tests {
             |rng, size| {
                 let plen = (size * 300.0) as usize + 1;
                 let window = 1 + rng.below(128) as usize;
+                let pad = rng.below(256) as i32;
                 let prompt: Vec<i32> =
                     (0..plen).map(|_| rng.below(256) as i32).collect();
-                (prompt, window)
+                (prompt, window, pad)
             },
-            |(prompt, window)| {
-                let out = fit_prompt(prompt, *window);
+            |(prompt, window, pad)| {
+                let out = fit_prompt(prompt, *window, *pad);
                 crate::prop_assert!(out.len() == *window, "length");
                 // The suffix of the prompt is always preserved.
                 let keep = prompt.len().min(*window);
                 crate::prop_assert!(
                     out[*window - keep..] == prompt[prompt.len() - keep..],
                     "suffix preserved"
+                );
+                // Everything before it is the pad token.
+                crate::prop_assert!(
+                    out[..*window - keep].iter().all(|&t| t == *pad),
+                    "prefix is pad"
                 );
                 Ok(())
             },

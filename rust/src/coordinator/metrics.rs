@@ -1,13 +1,34 @@
 //! Serving metrics: per-request timing + aggregate counters, lock-shared
 //! between the worker and observers.
+//!
+//! Latency percentiles come from a **bounded reservoir** (Vitter's
+//! algorithm R over [`crate::util::prng::Rng`]), so memory stays
+//! constant under sustained traffic — the previous implementation kept
+//! every latency in a `Vec<f64>` forever, which is an OOM under the
+//! ROADMAP's heavy-traffic north star. Percentiles use nearest-rank
+//! rounding with NaN-safe `total_cmp` ordering (the old `as usize`
+//! truncation floored the rank, biasing p99 low on small samples).
 
+use crate::util::prng::Rng;
 use std::sync::Mutex;
+
+/// Latency samples kept for percentile estimation (~32 KiB of f64s).
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
 
 /// Timing of one request's lifecycle.
 #[derive(Clone, Debug, Default)]
 pub struct RequestTiming {
+    /// Arrival → admission into a KV slot (or wave prefill start).
     pub queue_ms: f64,
+    /// Prompt pass for this request (per-slot on the continuous path,
+    /// shared across the wave on the batch path).
     pub prefill_ms: f64,
+    /// Arrival → first generated token available (time-to-first-token).
+    pub ttft_ms: f64,
+    /// Decode wall time attributed to this request: the sum of the
+    /// decode steps it participated in, ending at its retirement — not
+    /// the whole batch's run, as the run-to-completion scheduler used
+    /// to report.
     pub decode_ms: f64,
     pub tokens: usize,
     pub error: Option<String>,
@@ -24,7 +45,48 @@ impl RequestTiming {
     }
 }
 
-#[derive(Default)]
+/// Fixed-size uniform sample of a stream (algorithm R).
+struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    fn new() -> Reservoir {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            // Fixed seed: metrics are an estimate either way, and a
+            // deterministic stream keeps test runs reproducible.
+            rng: Rng::new(0x1A7E_9C1E),
+        }
+    }
+
+    fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen) as usize;
+            if j < LATENCY_RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+}
+
+/// Nearest-rank percentile of a sorted slice: the smallest value with at
+/// least `p` of the sample at or below it. No interpolation, no
+/// truncation bias — `percentile(&[1..=10], 0.99)` is 10, not 9.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (sorted.len() as f64 * p).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 struct Inner {
     requests: u64,
     batches: u64,
@@ -33,8 +95,32 @@ struct Inner {
     tokens: u64,
     queue_ms_sum: f64,
     prefill_ms_sum: f64,
+    ttft_ms_sum: f64,
     decode_ms_sum: f64,
-    latencies_ms: Vec<f64>,
+    /// Decode steps executed and the KV-slot occupancy at each — the
+    /// continuous scheduler's utilization signal.
+    decode_steps: u64,
+    active_slot_sum: u64,
+    latencies: Reservoir,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            requests: 0,
+            batches: 0,
+            batch_size_sum: 0,
+            bucket_sum: 0,
+            tokens: 0,
+            queue_ms_sum: 0.0,
+            prefill_ms_sum: 0.0,
+            ttft_ms_sum: 0.0,
+            decode_ms_sum: 0.0,
+            decode_steps: 0,
+            active_slot_sum: 0,
+            latencies: Reservoir::new(),
+        }
+    }
 }
 
 /// Aggregate serving metrics.
@@ -47,23 +133,40 @@ pub struct Metrics {
 #[derive(Clone, Debug, Default)]
 pub struct Snapshot {
     pub requests: u64,
+    /// Admission rounds (continuous) or waves (batch path).
     pub batches: u64,
     pub avg_batch_size: f64,
     pub avg_bucket: f64,
     pub tokens: u64,
     pub avg_queue_ms: f64,
     pub avg_prefill_ms: f64,
+    pub avg_ttft_ms: f64,
     pub avg_decode_ms_per_token: f64,
+    pub decode_steps: u64,
+    /// Mean KV slots occupied per decode step.
+    pub avg_active_slots: f64,
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
+    /// Latencies observed / currently held in the reservoir.
+    pub latencies_seen: u64,
+    pub latency_samples: usize,
 }
 
 impl Metrics {
+    /// One admission event: `size` requests entered, `bucket` = compiled
+    /// bucket (waves) or total occupancy after admission (continuous).
     pub fn record_batch(&self, size: usize, bucket: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batch_size_sum += size as u64;
         m.bucket_sum += bucket as u64;
+    }
+
+    /// One decode step over `active` occupied slots.
+    pub fn record_step(&self, active: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.decode_steps += 1;
+        m.active_slot_sum += active as u64;
     }
 
     pub fn record_request(&self, t: &RequestTiming) {
@@ -72,21 +175,15 @@ impl Metrics {
         m.tokens += t.tokens as u64;
         m.queue_ms_sum += t.queue_ms;
         m.prefill_ms_sum += t.prefill_ms;
+        m.ttft_ms_sum += t.ttft_ms;
         m.decode_ms_sum += t.decode_ms;
-        m.latencies_ms.push(t.total_ms());
+        m.latencies.record(t.total_ms());
     }
 
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
-        let mut lat = m.latencies_ms.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                lat[((lat.len() as f64 - 1.0) * p) as usize]
-            }
-        };
+        let mut lat = m.latencies.samples.clone();
+        lat.sort_by(|a, b| a.total_cmp(b));
         Snapshot {
             requests: m.requests,
             batches: m.batches,
@@ -95,9 +192,14 @@ impl Metrics {
             tokens: m.tokens,
             avg_queue_ms: m.queue_ms_sum / m.requests.max(1) as f64,
             avg_prefill_ms: m.prefill_ms_sum / m.requests.max(1) as f64,
+            avg_ttft_ms: m.ttft_ms_sum / m.requests.max(1) as f64,
             avg_decode_ms_per_token: m.decode_ms_sum / m.tokens.max(1) as f64,
-            p50_latency_ms: pct(0.5),
-            p99_latency_ms: pct(0.99),
+            decode_steps: m.decode_steps,
+            avg_active_slots: m.active_slot_sum as f64 / m.decode_steps.max(1) as f64,
+            p50_latency_ms: percentile(&lat, 0.5),
+            p99_latency_ms: percentile(&lat, 0.99),
+            latencies_seen: m.latencies.seen,
+            latency_samples: lat.len(),
         }
     }
 }
@@ -111,15 +213,17 @@ mod tests {
         let m = Metrics::default();
         m.record_batch(3, 4);
         m.record_batch(1, 1);
-        for i in 0..4 {
+        m.record_step(4);
+        m.record_step(2);
+        for _ in 0..4 {
             m.record_request(&RequestTiming {
                 queue_ms: 1.0,
                 prefill_ms: 2.0,
+                ttft_ms: 4.0,
                 decode_ms: 10.0,
                 tokens: 5,
                 error: None,
             });
-            let _ = i;
         }
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
@@ -128,6 +232,9 @@ mod tests {
         assert_eq!(s.tokens, 20);
         // 4 × 10 ms decode over 20 tokens = 2 ms/token.
         assert!((s.avg_decode_ms_per_token - 2.0).abs() < 1e-9);
+        assert!((s.avg_ttft_ms - 4.0).abs() < 1e-9);
+        assert_eq!(s.decode_steps, 2);
+        assert!((s.avg_active_slots - 3.0).abs() < 1e-9);
         assert!((s.p50_latency_ms - 13.0).abs() < 1e-9);
     }
 
@@ -136,5 +243,74 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_latency_ms, 0.0);
+        assert_eq!(s.latency_samples, 0);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_under_sustained_traffic() {
+        // Regression: latencies used to accumulate without bound.
+        let m = Metrics::default();
+        for i in 0..(LATENCY_RESERVOIR_CAP as u64 * 4) {
+            m.record_request(&RequestTiming {
+                decode_ms: i as f64,
+                tokens: 1,
+                ..Default::default()
+            });
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latencies_seen, LATENCY_RESERVOIR_CAP as u64 * 4);
+        assert_eq!(s.latency_samples, LATENCY_RESERVOIR_CAP);
+        // The sample still spans the stream, so percentiles are sane.
+        assert!(s.p50_latency_ms > 0.0);
+        assert!(s.p99_latency_ms > s.p50_latency_ms);
+    }
+
+    #[test]
+    fn nearest_rank_does_not_floor_small_samples() {
+        // Regression: `(n-1) * p as usize` truncated — on 10 samples the
+        // old p99 was the 9th value, not the max.
+        let m = Metrics::default();
+        for i in 1..=10 {
+            m.record_request(&RequestTiming {
+                decode_ms: i as f64,
+                tokens: 1,
+                ..Default::default()
+            });
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p99_latency_ms, 10.0);
+        assert_eq!(s.p50_latency_ms, 5.0);
+    }
+
+    #[test]
+    fn nan_latency_does_not_poison_percentiles() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on NaN.
+        let m = Metrics::default();
+        m.record_request(&RequestTiming {
+            decode_ms: f64::NAN,
+            tokens: 1,
+            ..Default::default()
+        });
+        for i in 0..9 {
+            m.record_request(&RequestTiming {
+                decode_ms: i as f64,
+                tokens: 1,
+                ..Default::default()
+            });
+        }
+        let s = m.snapshot(); // must not panic
+        assert_eq!(s.latency_samples, 10);
+        assert!(s.p50_latency_ms.is_finite());
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.01), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.5), 50.0);
     }
 }

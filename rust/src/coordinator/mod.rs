@@ -1,49 +1,85 @@
-//! Serving coordinator: request router, dynamic batcher, decode scheduler.
+//! Serving coordinator: request router, slot scheduler, decode loop.
 //!
 //! The paper's motivation is deployment (memory-bound LLM inference);
 //! this module is the vLLM-router-shaped consumer of the quantized
 //! artifacts. Architecture (std threads — tokio is not in the offline
-//! registry, and a single-worker PJRT CPU pipeline doesn't need it):
+//! registry, and a single-worker CPU pipeline doesn't need it):
 //!
 //! ```text
 //! clients ── submit() ──► mpsc queue ──► worker thread
-//!                                         │ 1. drain queue into a batch
-//!                                         │    (max_batch / max_wait)
-//!                                         │ 2. pick bucket (≥ batch len)
-//!                                         │ 3. prefill (prompt → KV)
-//!                                         │ 4. greedy decode loop
+//!                                         │ owns `max_batch` KV slots
+//!                                         │ between decode steps:
+//!                                         │  1. retire finished slots
+//!                                         │     (respond immediately)
+//!                                         │  2. admit queued requests
+//!                                         │     into freed slots
+//!                                         │     (per-slot prefill)
+//!                                         │  3. decode active slots
 //!                                         └─► per-request response chans
 //! ```
 //!
-//! The PJRT engine lives *inside* the worker thread (xla handles are not
-//! `Send`); weight literals are built once at startup. [`backend`]
-//! abstracts the model executor so the batching logic is property-tested
-//! against a deterministic mock — and so the same loop can serve through
+//! This is **continuous batching** (DESIGN.md §9): a 2-token request
+//! never waits for a 32-token batchmate, arrivals join mid-flight, and
+//! finished slots stop burning kernel time. Backends whose compiled
+//! graphs fix the batch shape ([`backend::PjrtBackend`]) are driven in
+//! *waves* instead — run-to-completion admission, but responses still
+//! leave the moment each lane finishes.
+//!
+//! The model executor lives *inside* the worker thread (xla handles are
+//! not `Send`); weight literals are built once at startup. [`backend`]
+//! abstracts the executor so the scheduling logic is property-tested
+//! against deterministic mocks — and so the same loop can serve through
 //! either the PJRT executor or the fused quantized-plane CPU kernels
 //! ([`backend::NativeBackend`], `serve --backend=native`), whose weights
-//! stay in (n+1)-bit runtime form for the whole request (DESIGN.md §7/§8).
+//! stay in (n+1)-bit runtime form for the whole request (DESIGN.md §7–§9).
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 
-use backend::Backend;
-use batcher::{BatchPolicy, PendingRequest};
+use anyhow::{anyhow, Result};
+use backend::{Backend, DecodeState};
+use batcher::{AdmissionPolicy, BatchPolicy, PendingRequest};
 use metrics::{Metrics, RequestTiming};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Which decode scheduler the worker runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Slot-based continuous batching (default): per-request retirement
+    /// and mid-flight admission. Requires a backend that
+    /// [`Backend::admits_mid_decode`]; others fall back to waves.
+    Continuous,
+    /// Legacy run-to-completion waves: a batch is admitted whole and
+    /// decodes until its longest member finishes. Kept for
+    /// bucket-compiled backends and as the benchmark baseline.
+    RunToCompletion,
+}
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// KV slots the worker owns (continuous) / largest wave (waves).
+    /// Clamped to the largest bucket at startup.
     pub max_batch: usize,
+    /// Wave-mode batch formation deadline (unused by the continuous
+    /// scheduler, whose admission is immediate).
     pub max_wait: Duration,
+    /// Hard per-request cap on generated tokens.
     pub max_new_tokens: usize,
     /// Available batch buckets (compiled HLO variants), ascending.
     pub buckets: Vec<usize>,
     pub prefill_len: usize,
+    /// Token id used to left-pad short prompts to `prefill_len`. The
+    /// worker clamps it into the backend's vocab before use — an
+    /// out-of-range pad would pollute attention and index past the
+    /// native embedding table.
+    pub pad_id: i32,
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for ServeConfig {
@@ -54,6 +90,8 @@ impl Default for ServeConfig {
             max_new_tokens: 32,
             buckets: vec![1, 2, 4, 8],
             prefill_len: 64,
+            pad_id: b' ' as i32,
+            scheduler: SchedulerKind::Continuous,
         }
     }
 }
@@ -83,45 +121,73 @@ pub struct Server {
     tx: Sender<WorkItem>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
+    /// Why the worker died, when it did (e.g. backend construction).
+    worker_err: Arc<Mutex<Option<String>>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Start a server whose worker thread builds its own backend (PJRT
     /// handles are thread-local); `make_backend` runs on the worker.
+    /// `start` blocks until the backend is constructed, so a failed
+    /// build is observable from the very first [`Server::submit`].
     pub fn start<B, F>(mut cfg: ServeConfig, make_backend: F) -> Server
     where
         B: Backend,
-        F: FnOnce() -> B + Send + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
     {
         // A batch larger than the largest bucket cannot be served (the
         // bucket pick would truncate outputs below the batch size), so
         // clamp the policy rather than panic mid-flight.
         assert!(!cfg.buckets.is_empty(), "ServeConfig.buckets must be non-empty");
-        cfg.max_batch = cfg.max_batch.min(*cfg.buckets.last().unwrap());
+        cfg.max_batch = cfg.max_batch.clamp(1, *cfg.buckets.last().unwrap());
         let (tx, rx) = channel::<WorkItem>();
         let metrics = Arc::new(Metrics::default());
+        let worker_err = Arc::new(Mutex::new(None));
+        let (ready_tx, ready_rx) = channel::<()>();
         let m = metrics.clone();
+        let we = worker_err.clone();
         let worker = std::thread::spawn(move || {
-            let backend = make_backend();
+            let backend = match make_backend() {
+                Ok(b) => {
+                    let _ = ready_tx.send(());
+                    b
+                }
+                Err(e) => {
+                    *we.lock().unwrap() =
+                        Some(format!("backend construction failed: {:#}", e));
+                    // Close the queue *before* unblocking `start`, so a
+                    // submit racing this return fails deterministically.
+                    drop(rx);
+                    let _ = ready_tx.send(());
+                    return;
+                }
+            };
             worker_loop(cfg, backend, rx, m);
         });
-        Server { tx, next_id: AtomicU64::new(1), metrics, worker: Some(worker) }
+        let _ = ready_rx.recv();
+        Server { tx, next_id: AtomicU64::new(1), metrics, worker_err, worker: Some(worker) }
     }
 
-    /// Submit a prompt; returns the response receiver and the request id.
+    /// Submit a prompt; returns the request id and the response
+    /// receiver, or the reason the worker is gone (e.g. its backend
+    /// failed to build) — the old implementation panicked here,
+    /// poisoning every client of a dead server.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
-    ) -> (u64, Receiver<GenerateResponse>) {
+    ) -> Result<(u64, Receiver<GenerateResponse>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
         let req = GenerateRequest { id, prompt, max_new_tokens };
         self.tx
             .send(WorkItem::Request(req, rtx, Instant::now()))
-            .expect("server worker gone");
-        (id, rrx)
+            .map_err(|_| match self.worker_err.lock().unwrap().as_ref() {
+                Some(e) => anyhow!("server worker is gone: {}", e),
+                None => anyhow!("server worker is gone (channel closed)"),
+            })?;
+        Ok((id, rrx))
     }
 
     pub fn shutdown(mut self) {
@@ -146,6 +212,252 @@ fn worker_loop<B: Backend>(
     mut backend: B,
     rx: Receiver<WorkItem>,
     metrics: Arc<Metrics>,
+) {
+    let pad_id = batcher::clamp_pad_id(cfg.pad_id, backend.vocab());
+    if backend.admits_mid_decode() && cfg.scheduler == SchedulerKind::Continuous {
+        slot_loop(&cfg, pad_id, &mut backend, &rx, &metrics);
+    } else {
+        wave_loop(&cfg, pad_id, &mut backend, &rx, &metrics);
+    }
+}
+
+fn fail(p: &PendingRequest, msg: String) {
+    let _ = p.tx.send(GenerateResponse {
+        id: p.req.id,
+        tokens: vec![],
+        timing: RequestTiming::failed(msg),
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Continuous-batching slot scheduler
+// ---------------------------------------------------------------------------
+
+/// One sequence occupying a KV slot.
+struct SlotSeq {
+    p: PendingRequest,
+    target: usize,
+    admitted: Instant,
+    prefill_ms: f64,
+    first_token_at: Option<Instant>,
+    decode_ms: f64,
+    tokens: Vec<i32>,
+}
+
+/// The continuous scheduler: the worker owns `max_batch` KV slots and,
+/// between single decode steps, retires finished sequences (responding
+/// immediately), admits queued requests into freed slots via per-slot
+/// prefill, and decodes only the active slots.
+fn slot_loop<B: Backend>(
+    cfg: &ServeConfig,
+    pad_id: i32,
+    backend: &mut B,
+    rx: &Receiver<WorkItem>,
+    metrics: &Metrics,
+) {
+    let cap = cfg.max_batch;
+    let policy = AdmissionPolicy { slots: cap };
+    let mut state = match backend.new_state(cap) {
+        Ok(s) => s,
+        Err(e) => {
+            // No scheduler state — fail every request until shutdown.
+            let msg = format!("scheduler state: {:#}", e);
+            while let Ok(WorkItem::Request(r, tx, t)) = rx.recv() {
+                fail(&PendingRequest { req: r, tx, arrived: t }, msg.clone());
+            }
+            return;
+        }
+    };
+    let mut slots: Vec<Option<SlotSeq>> = (0..cap).map(|_| None).collect();
+    let mut queue: VecDeque<PendingRequest> = VecDeque::new();
+    let mut draining = false;
+
+    loop {
+        let occupied = slots.iter().filter(|s| s.is_some()).count();
+
+        // --- intake ------------------------------------------------------
+        if !draining {
+            if occupied == 0 && queue.is_empty() {
+                // Idle: block for work.
+                match rx.recv() {
+                    Ok(WorkItem::Request(r, tx, t)) => {
+                        queue.push_back(PendingRequest { req: r, tx, arrived: t })
+                    }
+                    Ok(WorkItem::Shutdown) | Err(_) => draining = true,
+                }
+            }
+            // Non-blocking drain between decode steps.
+            loop {
+                match rx.try_recv() {
+                    Ok(WorkItem::Request(r, tx, t)) => {
+                        queue.push_back(PendingRequest { req: r, tx, arrived: t })
+                    }
+                    Ok(WorkItem::Shutdown) | Err(TryRecvError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                }
+            }
+        }
+        if draining && occupied == 0 && queue.is_empty() {
+            break; // in-flight and already-queued work finished
+        }
+
+        // --- admission: freed slots refill immediately, and the whole
+        // round shares one batched prefill pass over the weights ------------
+        let to_admit = policy.admit_now(occupied, queue.len());
+        if to_admit > 0 {
+            let mut round: Vec<(usize, PendingRequest)> = Vec::with_capacity(to_admit);
+            for slot in 0..cap {
+                if round.len() == to_admit {
+                    break;
+                }
+                if slots[slot].is_none() {
+                    round.push((slot, queue.pop_front().expect("admit count within queue")));
+                }
+            }
+            let admissions: Vec<(usize, Vec<i32>)> = round
+                .iter()
+                .map(|(slot, p)| {
+                    (*slot, batcher::fit_prompt(&p.req.prompt, cfg.prefill_len, pad_id))
+                })
+                .collect();
+            let t0 = Instant::now();
+            match backend.prefill_into_many(&mut state, &admissions) {
+                Ok(()) => {
+                    // The pass is shared, so each request is charged the
+                    // round's wall time (same accounting as a wave).
+                    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let n = round.len();
+                    for (slot, p) in round {
+                        let mut target = p.req.max_new_tokens.min(cfg.max_new_tokens);
+                        if let Some(max_pos) = backend.max_positions() {
+                            // Clamp to the slot's KV headroom: an
+                            // over-long request ends early instead of
+                            // exhausting the cache mid-decode and
+                            // erroring its whole batch.
+                            target = target.min(max_pos.saturating_sub(state.pos[slot]));
+                        }
+                        slots[slot] = Some(SlotSeq {
+                            p,
+                            target,
+                            admitted: t0,
+                            prefill_ms,
+                            first_token_at: None,
+                            decode_ms: 0.0,
+                            tokens: Vec::new(),
+                        });
+                    }
+                    metrics.record_batch(n, occupied + n);
+                }
+                Err(e) => {
+                    let msg = format!("prefill: {:#}", e);
+                    for (slot, p) in round {
+                        // A partially-failed round may have activated
+                        // earlier slots in the backend state; retire is
+                        // idempotent, so free them unconditionally to
+                        // keep scheduler and backend occupancy in sync.
+                        let _ = backend.retire(&mut state, slot);
+                        fail(&p, msg.clone());
+                    }
+                }
+            }
+        }
+
+        // Retire immediately-satisfiable admissions (max_new_tokens = 0).
+        retire_finished(backend, &mut state, &mut slots, metrics);
+        if slots.iter().all(|s| s.is_none()) {
+            continue;
+        }
+
+        // --- one decode step over the active slots ------------------------
+        let t0 = Instant::now();
+        match backend.decode(&mut state) {
+            Ok(next) => {
+                let now = Instant::now();
+                let step_ms = (now - t0).as_secs_f64() * 1e3;
+                let mut n_active = 0usize;
+                for (slot, entry) in slots.iter_mut().enumerate() {
+                    if let Some(seq) = entry.as_mut() {
+                        n_active += 1;
+                        seq.tokens.push(next[slot]);
+                        seq.decode_ms += step_ms;
+                        if seq.first_token_at.is_none() {
+                            seq.first_token_at = Some(now);
+                        }
+                    }
+                }
+                metrics.record_step(n_active);
+            }
+            Err(e) => {
+                // Fail everything in flight and start from fresh state.
+                let msg = format!("decode: {:#}", e);
+                for (slot, entry) in slots.iter_mut().enumerate() {
+                    if let Some(seq) = entry.take() {
+                        fail(&seq.p, msg.clone());
+                        let _ = backend.retire(&mut state, slot);
+                    }
+                }
+                if let Ok(fresh) = backend.new_state(cap) {
+                    state = fresh;
+                }
+                continue;
+            }
+        }
+
+        // --- retirement: deliver the moment a sequence finishes -----------
+        retire_finished(backend, &mut state, &mut slots, metrics);
+    }
+}
+
+/// Deliver and free every slot whose sequence reached its target.
+fn retire_finished<B: Backend>(
+    backend: &mut B,
+    state: &mut DecodeState,
+    slots: &mut [Option<SlotSeq>],
+    metrics: &Metrics,
+) {
+    for slot in 0..slots.len() {
+        let done = matches!(&slots[slot], Some(seq) if seq.tokens.len() >= seq.target);
+        if !done {
+            continue;
+        }
+        let seq = slots[slot].take().expect("checked above");
+        let _ = backend.retire(state, slot);
+        let timing = RequestTiming {
+            queue_ms: (seq.admitted - seq.p.arrived).as_secs_f64() * 1e3,
+            prefill_ms: seq.prefill_ms,
+            ttft_ms: seq
+                .first_token_at
+                .map(|t| (t - seq.p.arrived).as_secs_f64() * 1e3)
+                .unwrap_or(0.0),
+            decode_ms: seq.decode_ms,
+            tokens: seq.tokens.len(),
+            error: None,
+        };
+        metrics.record_request(&timing);
+        let _ = seq.p.tx.send(GenerateResponse {
+            id: seq.p.req.id,
+            tokens: seq.tokens,
+            timing,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wave scheduler (bucket-compiled backends / benchmark baseline)
+// ---------------------------------------------------------------------------
+
+/// The wave scheduler: size-or-deadline batch formation, whole-bucket
+/// prefill, run-to-completion decode. Responses are still delivered the
+/// moment each lane reaches its target — only admission is coarse.
+fn wave_loop<B: Backend>(
+    cfg: &ServeConfig,
+    pad_id: i32,
+    backend: &mut B,
+    rx: &Receiver<WorkItem>,
+    metrics: &Metrics,
 ) {
     let policy = BatchPolicy { max_batch: cfg.max_batch, max_wait: cfg.max_wait };
     let mut shutdown = false;
@@ -175,11 +487,11 @@ fn worker_loop<B: Backend>(
                     shutdown = true;
                     break;
                 }
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Err(TryRecvError::Disconnected) => {
                     shutdown = true;
                     break;
                 }
-                Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                Err(TryRecvError::Empty) => {}
             }
             // Queue empty: block for the remaining wait budget.
             let budget = policy.max_wait.saturating_sub(batch_start.elapsed());
@@ -194,13 +506,15 @@ fn worker_loop<B: Backend>(
                 Err(_) => break, // timeout — flush what we have
             }
         }
-        serve_batch(&cfg, &mut backend, batch, &metrics);
+        serve_wave(cfg, pad_id, backend, batch, metrics);
     }
 }
 
-/// Run one batch through prefill + decode and deliver responses.
-fn serve_batch<B: Backend>(
+/// Run one wave through prefill + decode, delivering each response as
+/// its lane finishes.
+fn serve_wave<B: Backend>(
     cfg: &ServeConfig,
+    pad_id: i32,
     backend: &mut B,
     batch: Vec<PendingRequest>,
     metrics: &Metrics,
@@ -211,10 +525,10 @@ fn serve_batch<B: Backend>(
     metrics.record_batch(n, bucket);
 
     // Normalize prompts to the prefill window (left-truncate / left-pad
-    // with spaces so the generation-relevant suffix survives).
+    // so the generation-relevant suffix survives).
     let mut prompts = Vec::with_capacity(bucket);
     for p in batch.iter() {
-        prompts.push(batcher::fit_prompt(&p.req.prompt, cfg.prefill_len));
+        prompts.push(batcher::fit_prompt(&p.req.prompt, cfg.prefill_len, pad_id));
     }
     // Pad the bucket with copies of the first prompt (outputs discarded).
     while prompts.len() < bucket {
@@ -225,92 +539,150 @@ fn serve_batch<B: Backend>(
     let mut state = match backend.prefill(&prompts) {
         Ok(s) => s,
         Err(e) => {
-            for p in batch {
-                let _ = p.tx.send(GenerateResponse {
-                    id: p.req.id,
-                    tokens: vec![],
-                    timing: RequestTiming::failed(format!("prefill: {}", e)),
-                });
+            let msg = format!("prefill: {:#}", e);
+            for p in &batch {
+                fail(p, msg.clone());
             }
             return;
         }
     };
     let prefill_ms = t_prefill.elapsed().as_secs_f64() * 1e3;
 
-    let max_steps = batch
-        .iter()
-        .map(|p| p.req.max_new_tokens)
-        .max()
-        .unwrap_or(0)
-        .min(cfg.max_new_tokens);
-    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); bucket];
-    let t_decode = Instant::now();
-    let mut steps_done = 0usize;
-    for _ in 0..max_steps {
-        match backend.decode(&mut state) {
-            Ok(next) => {
-                for (o, &t) in outputs.iter_mut().zip(&next) {
-                    o.push(t);
-                }
-                steps_done += 1;
-            }
-            Err(e) => {
-                for p in batch {
-                    let _ = p.tx.send(GenerateResponse {
-                        id: p.req.id,
-                        tokens: vec![],
-                        timing: RequestTiming::failed(format!("decode: {}", e)),
-                    });
-                }
-                return;
-            }
+    struct WaveSeq {
+        p: Option<PendingRequest>,
+        target: usize,
+        tokens: Vec<i32>,
+    }
+    let mut seqs: Vec<WaveSeq> = batch
+        .into_iter()
+        .map(|p| WaveSeq {
+            target: p.req.max_new_tokens.min(cfg.max_new_tokens),
+            p: Some(p),
+            tokens: Vec::new(),
+        })
+        .collect();
+    if let Some(max_pos) = backend.max_positions() {
+        // Clamp to the wave-uniform KV headroom after prefill: an
+        // over-long request ends early instead of exhausting the cache
+        // mid-decode and erroring the whole wave.
+        let headroom = max_pos.saturating_sub(state.pos[0]);
+        for seq in seqs.iter_mut() {
+            seq.target = seq.target.min(headroom);
         }
     }
-    let decode_ms = t_decode.elapsed().as_secs_f64() * 1e3;
 
-    for (i, p) in batch.into_iter().enumerate() {
-        let n_tok = p.req.max_new_tokens.min(steps_done);
+    let mut decode_elapsed_ms = 0.0f64;
+    let mut deliver = |seq: &mut WaveSeq,
+                       first_token_at: Option<Instant>,
+                       decode_elapsed_ms: f64| {
+        let p = seq.p.take().expect("delivered once");
         let timing = RequestTiming {
             queue_ms: (t_prefill - p.arrived).as_secs_f64() * 1e3,
             prefill_ms,
-            decode_ms,
-            tokens: n_tok,
+            ttft_ms: first_token_at
+                .map(|t| (t - p.arrived).as_secs_f64() * 1e3)
+                .unwrap_or(0.0),
+            decode_ms: decode_elapsed_ms,
+            tokens: seq.tokens.len(),
             error: None,
         };
         metrics.record_request(&timing);
         let _ = p.tx.send(GenerateResponse {
             id: p.req.id,
-            tokens: outputs[i][..n_tok].to_vec(),
+            tokens: std::mem::take(&mut seq.tokens),
             timing,
         });
+    };
+
+    // Requests asking for zero tokens are satisfied by prefill alone.
+    for seq in seqs.iter_mut() {
+        if seq.target == 0 {
+            deliver(seq, None, 0.0);
+        }
+    }
+
+    let max_steps = seqs.iter().filter(|s| s.p.is_some()).map(|s| s.target).max();
+    let mut first_token_at = None;
+    for _ in 0..max_steps.unwrap_or(0) {
+        if seqs.iter().all(|s| s.p.is_none()) {
+            break;
+        }
+        let t0 = Instant::now();
+        match backend.decode(&mut state) {
+            Ok(next) => {
+                let now = Instant::now();
+                decode_elapsed_ms += (now - t0).as_secs_f64() * 1e3;
+                if first_token_at.is_none() {
+                    first_token_at = Some(now);
+                }
+                // The compiled graph computes the whole bucket, finished
+                // or not — record true occupancy, i.e. the bucket.
+                metrics.record_step(bucket);
+                for (i, seq) in seqs.iter_mut().enumerate() {
+                    if seq.p.is_none() {
+                        continue;
+                    }
+                    seq.tokens.push(next[i]);
+                    if seq.tokens.len() >= seq.target {
+                        // Early retirement: respond now, even though the
+                        // wave keeps decoding for its longest member.
+                        deliver(seq, first_token_at, decode_elapsed_ms);
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("decode: {:#}", e);
+                for seq in seqs.iter_mut() {
+                    if let Some(p) = seq.p.take() {
+                        fail(&p, msg.clone());
+                    }
+                }
+                return;
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::backend::MockBackend;
+    use super::backend::{MockBackend, SimBackend};
     use super::*;
     use std::collections::HashSet;
 
-    fn mock_server(max_batch: usize, max_wait_ms: u64) -> Server {
-        let cfg = ServeConfig {
+    fn cfg_with(scheduler: SchedulerKind, max_batch: usize, max_wait_ms: u64) -> ServeConfig {
+        ServeConfig {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
             max_new_tokens: 8,
             buckets: vec![1, 2, 4, 8],
             prefill_len: 16,
-        };
-        Server::start(cfg, MockBackend::new)
+            ..ServeConfig::default()
+        }
+        .with_scheduler(scheduler)
+    }
+
+    impl ServeConfig {
+        fn with_scheduler(mut self, s: SchedulerKind) -> ServeConfig {
+            self.scheduler = s;
+            self
+        }
+    }
+
+    fn mock_server(max_batch: usize, max_wait_ms: u64) -> Server {
+        Server::start(cfg_with(SchedulerKind::Continuous, max_batch, max_wait_ms), || {
+            Ok(MockBackend::new())
+        })
     }
 
     #[test]
     fn single_request_roundtrip() {
         let server = mock_server(4, 5);
-        let (id, rx) = server.submit(vec![1, 2, 3], 4);
+        let (id, rx) = server.submit(vec![1, 2, 3], 4).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.id, id);
         assert_eq!(resp.tokens.len(), 4);
         assert!(resp.timing.error.is_none());
+        assert!(resp.timing.ttft_ms <= resp.timing.total_ms() + 1e-9);
         server.shutdown();
     }
 
@@ -319,7 +691,7 @@ mod tests {
         let server = mock_server(8, 2);
         let mut rxs = Vec::new();
         for i in 0..50 {
-            let (id, rx) = server.submit(vec![i as i32; 10], 3);
+            let (id, rx) = server.submit(vec![i as i32; 10], 3).unwrap();
             rxs.push((id, rx));
         }
         let mut seen = HashSet::new();
@@ -336,12 +708,47 @@ mod tests {
     }
 
     #[test]
-    fn batching_actually_batches() {
-        // With a generous wait, concurrent submissions coalesce.
-        let server = mock_server(8, 50);
+    fn staggered_arrivals_are_neither_lost_nor_duplicated() {
+        // Arrivals land mid-decode: each burst joins while earlier
+        // requests are still generating.
+        let server = Server::start(
+            cfg_with(SchedulerKind::Continuous, 4, 1),
+            || Ok(SimBackend::new(Duration::from_micros(50), Duration::from_micros(200))),
+        );
+        let mut rxs = Vec::new();
+        for burst in 0..5 {
+            for i in 0..4 {
+                let want = if i % 2 == 0 { 2 } else { 8 };
+                let (id, rx) =
+                    server.submit(vec![burst * 4 + i; 6], want as usize).unwrap();
+                rxs.push((id, rx, want as usize));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut seen = HashSet::new();
+        for (id, rx, want) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.tokens.len(), want);
+            assert!(resp.timing.error.is_none());
+            assert!(seen.insert(id), "duplicate response for {}", id);
+        }
+        assert_eq!(seen.len(), 20);
+        assert_eq!(server.metrics.snapshot().requests, 20);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wave_mode_coalesces_concurrent_submissions() {
+        // With a generous wait, concurrent submissions coalesce into few
+        // waves — the size-or-deadline policy the PJRT path relies on.
+        let server = Server::start(
+            cfg_with(SchedulerKind::RunToCompletion, 8, 50),
+            || Ok(MockBackend::new()),
+        );
         let mut rxs = Vec::new();
         for i in 0..8 {
-            let (_, rx) = server.submit(vec![i], 2);
+            let (_, rx) = server.submit(vec![i], 2).unwrap();
             rxs.push(rx);
         }
         for rx in rxs {
@@ -361,13 +768,107 @@ mod tests {
         // The mock derives tokens from the prompt — responses must match
         // between two identical submissions even when batched with others.
         let server = mock_server(8, 10);
-        let (_, rx1) = server.submit(vec![42, 43], 5);
-        let (_, rx2) = server.submit(vec![99], 5);
-        let (_, rx3) = server.submit(vec![42, 43], 5);
+        let (_, rx1) = server.submit(vec![42, 43], 5).unwrap();
+        let (_, rx2) = server.submit(vec![99], 5).unwrap();
+        let (_, rx3) = server.submit(vec![42, 43], 5).unwrap();
         let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
         let _ = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
         let r3 = rx3.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r1.tokens, r3.tokens);
+        server.shutdown();
+    }
+
+    /// The tentpole equivalence check: both schedulers must produce the
+    /// same tokens for the same requests — continuous batching changes
+    /// scheduling, never results.
+    #[test]
+    fn schedulers_produce_identical_outputs() {
+        let run = |scheduler: SchedulerKind| -> Vec<Vec<i32>> {
+            let server = Server::start(cfg_with(scheduler, 4, 3), || Ok(MockBackend::new()));
+            let mut rxs = Vec::new();
+            for i in 0..12 {
+                let want = [2usize, 5, 8][i % 3];
+                let (_, rx) = server.submit(vec![i as i32 * 7 + 1; 5], want).unwrap();
+                rxs.push((rx, want));
+            }
+            let outs: Vec<Vec<i32>> = rxs
+                .into_iter()
+                .map(|(rx, want)| {
+                    let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                    assert_eq!(resp.tokens.len(), want);
+                    resp.tokens
+                })
+                .collect();
+            server.shutdown();
+            outs
+        };
+        assert_eq!(run(SchedulerKind::Continuous), run(SchedulerKind::RunToCompletion));
+    }
+
+    #[test]
+    fn short_request_finishes_before_long_batchmate() {
+        // cap = 2: the long and short run side by side; the short must
+        // retire and respond while the long is still decoding.
+        let mut cfg = cfg_with(SchedulerKind::Continuous, 2, 1);
+        cfg.max_new_tokens = 32;
+        cfg.buckets = vec![1, 2];
+        let server = Server::start(cfg, || {
+            Ok(SimBackend::new(Duration::from_micros(200), Duration::from_millis(2)))
+        });
+        let (_, rx_long) = server.submit(vec![1, 2, 3], 32).unwrap();
+        let (_, rx_short) = server.submit(vec![4, 5, 6], 2).unwrap();
+        let short = rx_short.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(short.tokens.len(), 2);
+        // The long batchmate needs ≥ 30 more 2ms steps: it cannot have
+        // finished yet.
+        assert!(
+            rx_long.try_recv().is_err(),
+            "long request finished with the short one — run-to-completion behaviour"
+        );
+        let long = rx_long.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(long.tokens.len(), 32);
+        server.shutdown();
+    }
+
+    #[test]
+    fn early_retire_frees_slot_for_queued_request() {
+        // cap = 2, three requests: long + short fill the slots, the
+        // second short waits in the queue and must enter the slot the
+        // first short freed — completing long before the long request.
+        let mut cfg = cfg_with(SchedulerKind::Continuous, 2, 1);
+        cfg.max_new_tokens = 32;
+        cfg.buckets = vec![1, 2];
+        let server = Server::start(cfg, || {
+            Ok(SimBackend::new(Duration::from_micros(200), Duration::from_millis(2)))
+        });
+        let (_, rx_long) = server.submit(vec![1], 32).unwrap();
+        let (_, rx_short1) = server.submit(vec![2], 2).unwrap();
+        let (_, rx_short2) = server.submit(vec![3], 2).unwrap();
+        let s1 = rx_short1.recv_timeout(Duration::from_secs(10)).unwrap();
+        let s2 = rx_short2.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(s1.tokens.len(), 2);
+        assert_eq!(s2.tokens.len(), 2);
+        assert!(
+            rx_long.try_recv().is_err(),
+            "long request finished before the re-admitted short — no slot reuse happened"
+        );
+        assert_eq!(rx_long.recv_timeout(Duration::from_secs(10)).unwrap().tokens.len(), 32);
+        server.shutdown();
+    }
+
+    #[test]
+    fn single_slot_server_reuses_its_slot_serially() {
+        let mut cfg = cfg_with(SchedulerKind::Continuous, 1, 1);
+        cfg.buckets = vec![1];
+        let server = Server::start(cfg, || Ok(MockBackend::new()));
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            rxs.push(server.submit(vec![i], 2).unwrap().1);
+        }
+        for rx in rxs {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().tokens.len(), 2);
+        }
+        assert_eq!(server.metrics.snapshot().requests, 3);
         server.shutdown();
     }
 
@@ -378,7 +879,7 @@ mod tests {
         let server = mock_server(16, 30); // buckets top out at 8
         let mut rxs = Vec::new();
         for i in 0..16 {
-            let (id, rx) = server.submit(vec![i as i32; 4], 2);
+            let (id, rx) = server.submit(vec![i as i32; 4], 2).unwrap();
             rxs.push((id, rx));
         }
         for (id, rx) in rxs {
@@ -393,10 +894,125 @@ mod tests {
     #[test]
     fn respects_max_new_tokens_per_request() {
         let server = mock_server(8, 20);
-        let (_, rx_short) = server.submit(vec![1], 2);
-        let (_, rx_long) = server.submit(vec![2], 7);
+        let (_, rx_short) = server.submit(vec![1], 2).unwrap();
+        let (_, rx_long) = server.submit(vec![2], 7).unwrap();
         assert_eq!(rx_short.recv_timeout(Duration::from_secs(5)).unwrap().tokens.len(), 2);
         assert_eq!(rx_long.recv_timeout(Duration::from_secs(5)).unwrap().tokens.len(), 7);
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_token_request_completes_without_decoding() {
+        for scheduler in [SchedulerKind::Continuous, SchedulerKind::RunToCompletion] {
+            let server = Server::start(cfg_with(scheduler, 4, 2), || Ok(MockBackend::new()));
+            let (_, rx) = server.submit(vec![1, 2], 0).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(resp.tokens.is_empty());
+            assert!(resp.timing.error.is_none());
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn submit_surfaces_backend_construction_error() {
+        // Regression: a dead worker used to panic every subsequent
+        // submit ("server worker gone").
+        let server = Server::start::<MockBackend, _>(cfg_with(SchedulerKind::Continuous, 4, 5), || {
+            anyhow::bail!("PJRT artifacts missing")
+        });
+        let err = server.submit(vec![1, 2, 3], 4).unwrap_err();
+        let msg = format!("{}", err);
+        assert!(msg.contains("PJRT artifacts missing"), "got: {}", msg);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pad_id_is_threaded_and_clamped() {
+        // Two servers whose pad differs only before clamping must serve
+        // identical streams; a genuinely different pad must not.
+        let run = |pad_id: i32| -> Vec<i32> {
+            let mut cfg = cfg_with(SchedulerKind::Continuous, 2, 2);
+            cfg.pad_id = pad_id;
+            let server = Server::start(cfg, || Ok(MockBackend::new()));
+            let (_, rx) = server.submit(vec![1, 2, 3], 4).unwrap(); // shorter than prefill_len → padded
+            let toks = rx.recv_timeout(Duration::from_secs(5)).unwrap().tokens;
+            server.shutdown();
+            toks
+        };
+        // MockBackend reports vocab 256: 9999 clamps to 255, -5 to 0.
+        assert_eq!(run(9999), run(255));
+        assert_eq!(run(-5), run(0));
+        assert_ne!(run(255), run(0));
+    }
+
+    /// A mock whose KV "cache" holds only 5 positions: the scheduler
+    /// must clamp over-long requests to the headroom instead of letting
+    /// a mid-decode exhaustion error take down the batch.
+    struct BoundedMock(MockBackend);
+
+    impl Backend for BoundedMock {
+        fn new_state(&mut self, cap: usize) -> Result<backend::DecodeState> {
+            self.0.new_state(cap)
+        }
+        fn prefill_into(
+            &mut self,
+            state: &mut backend::DecodeState,
+            slot: usize,
+            prompt: &[i32],
+        ) -> Result<()> {
+            self.0.prefill_into(state, slot, prompt)
+        }
+        fn decode(&mut self, state: &mut backend::DecodeState) -> Result<Vec<i32>> {
+            self.0.decode(state)
+        }
+        fn vocab(&self) -> Option<usize> {
+            self.0.vocab()
+        }
+        fn max_positions(&self) -> Option<usize> {
+            Some(5)
+        }
+    }
+
+    #[test]
+    fn over_long_request_is_clamped_to_kv_headroom_not_fatal() {
+        for scheduler in [SchedulerKind::Continuous, SchedulerKind::RunToCompletion] {
+            let mut cfg = cfg_with(scheduler, 2, 2);
+            cfg.max_new_tokens = 100;
+            let server = Server::start(cfg, || Ok(BoundedMock(MockBackend::new())));
+            let (_, rx_long) = server.submit(vec![1, 2], 50).unwrap();
+            let (_, rx_short) = server.submit(vec![3, 4], 3).unwrap();
+            let long = rx_long.recv_timeout(Duration::from_secs(5)).unwrap();
+            let short = rx_short.recv_timeout(Duration::from_secs(5)).unwrap();
+            // Mock slots start at position 0, so headroom is 5 tokens.
+            assert_eq!(long.tokens.len(), 5, "{:?}", scheduler);
+            assert!(long.timing.error.is_none());
+            // The batchmate is untouched by the clamp.
+            assert_eq!(short.tokens.len(), 3);
+            assert!(short.timing.error.is_none());
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn continuous_metrics_track_occupancy_and_ttft() {
+        let server = Server::start(
+            cfg_with(SchedulerKind::Continuous, 4, 1),
+            || Ok(SimBackend::new(Duration::from_micros(50), Duration::from_micros(100))),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(server.submit(vec![i; 4], 6).unwrap().1);
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 8);
+        assert_eq!(snap.tokens, 48);
+        assert!(snap.decode_steps >= 12, "8 seqs × 6 tokens over ≤4 slots");
+        assert!(snap.avg_active_slots >= 1.0);
+        assert!(snap.avg_active_slots <= 4.0 + 1e-9);
+        assert!(snap.avg_ttft_ms > 0.0);
         server.shutdown();
     }
 }

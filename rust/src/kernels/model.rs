@@ -9,6 +9,14 @@
 //! side tensors (embeddings, norms, `lm_head`) stay f32; they are <2 %
 //! of the weight bytes.
 //!
+//! The KV cache is **slot-addressed** (DESIGN.md §9): each of its lanes
+//! tracks its own position, so the continuous-batching scheduler can
+//! prefill one request into a freed lane ([`NativeModel::prefill_slot`])
+//! and decode an arbitrary subset of lanes ([`NativeModel::decode_slots`])
+//! while the rest of the batch is mid-generation. Lanes never attend
+//! across each other, so a sequence's tokens are bit-identical whether it
+//! runs alone, in a uniform batch, or interleaved with strangers.
+//!
 //! This is the deployment story the paper's intro argues for: the
 //! serving working set is codes + codebooks (≈¼ of f32), and the
 //! per-token cost is a memory-bound sweep of those bytes. The PJRT
@@ -43,48 +51,81 @@ struct BlockWeights {
     w_down: Arc<RuntimePlane>,
 }
 
-/// KV cache for one in-flight batch: per layer, `[B, H, max_seq, hd]`
-/// flat f32 — plain host memory, unlike the PJRT path's device literals.
+/// Slot-addressed KV cache: per layer, `[slots, H, max_seq, hd]` flat
+/// f32 — plain host memory, unlike the PJRT path's device literals.
+///
+/// Each slot holds one independent sequence and advances its own
+/// [`pos`](KvCache::pos). Retiring a sequence is `free_slot` (a position
+/// reset — no zeroing needed, since attention never reads past a slot's
+/// position); the next occupant overwrites from position 0.
 pub struct KvCache {
-    batch: usize,
-    /// Positions cached so far (the next token writes at this index).
-    pub len: usize,
+    slots: usize,
     max_seq: usize,
     n_heads: usize,
     head_dim: usize,
+    /// Per-slot next-write position (0 = free/fresh).
+    pos: Vec<usize>,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
 
 impl KvCache {
-    fn new(cfg: &ModelConfig, batch: usize) -> KvCache {
-        let per_layer = batch * cfg.n_heads * cfg.max_seq * cfg.head_dim();
+    /// An empty cache with `slots` independent lanes.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> KvCache {
+        let per_layer = slots * cfg.n_heads * cfg.max_seq * cfg.head_dim();
         KvCache {
-            batch,
-            len: 0,
+            slots,
             max_seq: cfg.max_seq,
             n_heads: cfg.n_heads,
             head_dim: cfg.head_dim(),
+            pos: vec![0; slots],
             k: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
             v: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
         }
     }
 
-    #[inline]
-    fn idx(&self, b: usize, head: usize, pos: usize) -> usize {
-        ((b * self.n_heads + head) * self.max_seq + pos) * self.head_dim
+    /// Number of KV lanes.
+    pub fn slots(&self) -> usize {
+        self.slots
     }
 
-    /// Append `seq` new positions (starting at `pos0`) from per-token
-    /// projection outputs `k`/`v` of shape `(batch·seq × d_model)`.
-    fn store(&mut self, layer: usize, seq: usize, pos0: usize, k: &Matrix, v: &Matrix) {
+    /// Cached positions in `slot` (the next token writes at this index).
+    pub fn pos(&self, slot: usize) -> usize {
+        self.pos[slot]
+    }
+
+    /// Release `slot` for reuse by a new sequence. The lane's data is
+    /// left in place — the position gate makes it unreachable, and the
+    /// next `prefill_slot` overwrites from 0.
+    pub fn free_slot(&mut self, slot: usize) {
+        self.pos[slot] = 0;
+    }
+
+    #[inline]
+    fn idx(&self, slot: usize, head: usize, pos: usize) -> usize {
+        ((slot * self.n_heads + head) * self.max_seq + pos) * self.head_dim
+    }
+
+    /// Append `seq` new positions from per-token projection outputs
+    /// `k`/`v` of shape `(len(slot_ids)·seq × d_model)`; lane `i` of the
+    /// activation rows lands in cache slot `slot_ids[i]` starting at
+    /// `starts[i]`.
+    fn store(
+        &mut self,
+        layer: usize,
+        slot_ids: &[usize],
+        starts: &[usize],
+        seq: usize,
+        k: &Matrix,
+        v: &Matrix,
+    ) {
         let hd = self.head_dim;
-        for b in 0..self.batch {
+        for (i, &slot) in slot_ids.iter().enumerate() {
             for t in 0..seq {
-                let krow = k.row(b * seq + t);
-                let vrow = v.row(b * seq + t);
+                let krow = k.row(i * seq + t);
+                let vrow = v.row(i * seq + t);
                 for head in 0..self.n_heads {
-                    let at = self.idx(b, head, pos0 + t);
+                    let at = self.idx(slot, head, starts[i] + t);
                     self.k[layer][at..at + hd]
                         .copy_from_slice(&krow[head * hd..(head + 1) * hd]);
                     self.v[layer][at..at + hd]
@@ -95,14 +136,14 @@ impl KvCache {
     }
 
     #[inline]
-    fn k_at(&self, layer: usize, b: usize, head: usize, pos: usize) -> &[f32] {
-        let at = self.idx(b, head, pos);
+    fn k_at(&self, layer: usize, slot: usize, head: usize, pos: usize) -> &[f32] {
+        let at = self.idx(slot, head, pos);
         &self.k[layer][at..at + self.head_dim]
     }
 
     #[inline]
-    fn v_at(&self, layer: usize, b: usize, head: usize, pos: usize) -> &[f32] {
-        let at = self.idx(b, head, pos);
+    fn v_at(&self, layer: usize, slot: usize, head: usize, pos: usize) -> &[f32] {
+        let at = self.idx(slot, head, pos);
         &self.v[layer][at..at + self.head_dim]
     }
 
@@ -237,7 +278,8 @@ impl NativeModel {
     }
 
     /// Prompt pass for a batch of equal-length prompts: fills a fresh KV
-    /// cache and returns the last-position token ids (greedy).
+    /// cache (slot `i` ← prompt `i`) and returns the last-position token
+    /// ids (greedy).
     pub fn prefill(&self, prompts: &[Vec<i32>]) -> Result<(Vec<i32>, KvCache)> {
         let batch = prompts.len();
         ensure!(batch > 0, "empty batch");
@@ -252,35 +294,106 @@ impl NativeModel {
             tokens.extend_from_slice(p);
         }
         let mut kv = KvCache::new(&self.config, batch);
-        let logits = self.forward(&tokens, batch, seq, &mut kv)?;
+        let slot_ids: Vec<usize> = (0..batch).collect();
+        let logits = self.forward_slots(&tokens, &slot_ids, seq, &mut kv)?;
         Ok((argmax_rows(&logits, batch), kv))
     }
 
-    /// One greedy decode step: appends a position to the cache, returns
-    /// the next token per sequence.
-    pub fn decode_step(&self, kv: &mut KvCache, last_tokens: &[i32]) -> Result<Vec<i32>> {
-        ensure!(last_tokens.len() == kv.batch, "token/batch mismatch");
-        ensure!(kv.len < self.config.max_seq, "KV cache exhausted");
-        let logits = self.forward(last_tokens, kv.batch, 1, kv)?;
-        Ok(argmax_rows(&logits, kv.batch))
+    /// Prompt pass for **one** sequence into lane `slot` of an existing
+    /// cache, while other lanes stay live — the continuous scheduler's
+    /// admission path. The slot's previous occupant is discarded.
+    /// Returns the first greedily sampled token.
+    pub fn prefill_slot(&self, kv: &mut KvCache, slot: usize, prompt: &[i32]) -> Result<i32> {
+        Ok(self.prefill_slots(kv, &[slot], prompt, prompt.len())?[0])
     }
 
-    /// Core block-parallel forward: `tokens` is `(batch × seq)` row-major
-    /// starting at position `kv.len`; returns last-position logits
-    /// `(batch × vocab)` and advances the cache.
-    fn forward(
+    /// Prompt pass for **several** sequences at once, one per lane of
+    /// `slot_ids` (ascending): `tokens` is `(len(slot_ids) × seq)`
+    /// row-major, every prompt already normalized to `seq`. Each target
+    /// lane's previous occupant is discarded. Returns the first greedily
+    /// sampled token per lane. A batched admission decodes each weight
+    /// block once for all lanes — k× less weight traffic than k
+    /// single-slot prefills on this memory-bound path.
+    pub fn prefill_slots(
+        &self,
+        kv: &mut KvCache,
+        slot_ids: &[usize],
+        tokens: &[i32],
+        seq: usize,
+    ) -> Result<Vec<i32>> {
+        ensure!(!slot_ids.is_empty(), "empty admission");
+        ensure!(seq > 0, "empty prompt");
+        ensure!(seq <= self.config.max_seq, "prompt exceeds max_seq");
+        ensure!(
+            tokens.len() == slot_ids.len() * seq,
+            "token buffer shape mismatch"
+        );
+        for &s in slot_ids {
+            ensure!(s < kv.slots, "slot {} out of range ({} slots)", s, kv.slots);
+        }
+        for &s in slot_ids {
+            kv.pos[s] = 0;
+        }
+        let logits = self.forward_slots(tokens, slot_ids, seq, kv)?;
+        Ok(argmax_rows(&logits, slot_ids.len()))
+    }
+
+    /// One greedy decode step over every lane of the cache (uniform
+    /// batch) — the wave-path analogue of [`Self::decode_slots`].
+    pub fn decode_step(&self, kv: &mut KvCache, last_tokens: &[i32]) -> Result<Vec<i32>> {
+        ensure!(last_tokens.len() == kv.slots, "token/slot mismatch");
+        let slot_ids: Vec<usize> = (0..kv.slots).collect();
+        self.decode_slots(kv, last_tokens, &slot_ids)
+    }
+
+    /// One greedy decode step over `slot_ids` only (ascending, no
+    /// duplicates); lanes not listed are untouched and cost nothing —
+    /// retired and still-free slots stop burning kernel time.
+    /// `last_tokens[i]` feeds `slot_ids[i]`.
+    pub fn decode_slots(
+        &self,
+        kv: &mut KvCache,
+        last_tokens: &[i32],
+        slot_ids: &[usize],
+    ) -> Result<Vec<i32>> {
+        ensure!(last_tokens.len() == slot_ids.len(), "token/slot mismatch");
+        for &s in slot_ids {
+            ensure!(s < kv.slots, "slot {} out of range ({} slots)", s, kv.slots);
+            ensure!(kv.pos[s] > 0, "decode on unprefilled slot {}", s);
+            ensure!(kv.pos[s] < self.config.max_seq, "KV slot {} exhausted", s);
+        }
+        let logits = self.forward_slots(last_tokens, slot_ids, 1, kv)?;
+        Ok(argmax_rows(&logits, slot_ids.len()))
+    }
+
+    /// Core forward over an arbitrary lane subset: `tokens` is
+    /// `(len(slot_ids) × seq)` row-major; row group `i` continues slot
+    /// `slot_ids[i]` from its current position. Returns last-position
+    /// logits `(len(slot_ids) × vocab)` and advances each slot's
+    /// position by `seq`.
+    fn forward_slots(
         &self,
         tokens: &[i32],
-        batch: usize,
+        slot_ids: &[usize],
         seq: usize,
         kv: &mut KvCache,
     ) -> Result<Vec<f32>> {
         let cfg = &self.config;
         let (d, hd, heads) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
-        let pos0 = kv.len;
-        ensure!(pos0 + seq <= cfg.max_seq, "KV cache overflow");
-        ensure!(kv.batch == batch, "KV cache batch mismatch");
-        let bs = batch * seq;
+        let n = slot_ids.len();
+        ensure!(n > 0 && seq > 0, "empty forward");
+        ensure!(tokens.len() == n * seq, "token buffer shape mismatch");
+        for w in slot_ids.windows(2) {
+            ensure!(w[0] < w[1], "slot ids must be ascending and distinct");
+        }
+        for &s in slot_ids {
+            ensure!(s < kv.slots, "slot {} out of range", s);
+        }
+        let starts: Vec<usize> = slot_ids.iter().map(|&s| kv.pos[s]).collect();
+        for (i, &s) in slot_ids.iter().enumerate() {
+            ensure!(starts[i] + seq <= cfg.max_seq, "KV slot {} overflow", s);
+        }
+        let bs = n * seq;
 
         // Token embeddings (out-of-range ids are clamped into the byte
         // vocab rather than panicking on hostile input).
@@ -291,6 +404,7 @@ impl NativeModel {
         }
 
         let scale = 1.0 / (hd as f32).sqrt();
+        let max_span = starts.iter().max().copied().unwrap_or(0) + seq;
         for (layer, bw) in self.blocks.iter().enumerate() {
             // --- attention ---------------------------------------------
             let h = rmsnormed(&x, &bw.attn_norm);
@@ -300,30 +414,31 @@ impl NativeModel {
             gemm_mt(&bw.wq, &h, &mut q, self.threads);
             gemm_mt(&bw.wk, &h, &mut k, self.threads);
             gemm_mt(&bw.wv, &h, &mut v, self.threads);
-            for b in 0..batch {
+            for i in 0..n {
                 for t in 0..seq {
-                    let row = b * seq + t;
-                    apply_rope(q.row_mut(row), heads, hd, pos0 + t, &self.rope_inv_freq);
-                    apply_rope(k.row_mut(row), heads, hd, pos0 + t, &self.rope_inv_freq);
+                    let row = i * seq + t;
+                    let pos = starts[i] + t;
+                    apply_rope(q.row_mut(row), heads, hd, pos, &self.rope_inv_freq);
+                    apply_rope(k.row_mut(row), heads, hd, pos, &self.rope_inv_freq);
                 }
             }
-            kv.store(layer, seq, pos0, &k, &v);
+            kv.store(layer, slot_ids, &starts, seq, &k, &v);
 
             let mut attn = Matrix::zeros(bs, d);
-            let mut scores = vec![0.0f32; pos0 + seq];
-            for b in 0..batch {
+            let mut scores = vec![0.0f32; max_span];
+            for (i, &slot) in slot_ids.iter().enumerate() {
                 for head in 0..heads {
                     for t in 0..seq {
-                        let row = b * seq + t;
-                        let span = pos0 + t + 1; // causal: positions 0..=pos
+                        let row = i * seq + t;
+                        let span = starts[i] + t + 1; // causal: positions 0..=pos
                         let qh = &q.row(row)[head * hd..(head + 1) * hd];
                         for (p, s) in scores[..span].iter_mut().enumerate() {
-                            *s = dot(qh, kv.k_at(layer, b, head, p)) * scale;
+                            *s = dot(qh, kv.k_at(layer, slot, head, p)) * scale;
                         }
                         softmax(&mut scores[..span]);
                         let out = &mut attn.row_mut(row)[head * hd..(head + 1) * hd];
                         for (p, &w) in scores[..span].iter().enumerate() {
-                            for (o, kvv) in out.iter_mut().zip(kv.v_at(layer, b, head, p)) {
+                            for (o, kvv) in out.iter_mut().zip(kv.v_at(layer, slot, head, p)) {
                                 *o += w * *kvv;
                             }
                         }
@@ -347,15 +462,17 @@ impl NativeModel {
             gemm_mt(&bw.w_down, &gate, &mut down, self.threads);
             add_assign(&mut x, &down);
         }
-        kv.len = pos0 + seq;
+        for (i, &s) in slot_ids.iter().enumerate() {
+            kv.pos[s] = starts[i] + seq;
+        }
 
         // Final norm + lm_head logits, last position per sequence only.
-        let mut logits = vec![0.0f32; batch * cfg.vocab];
+        let mut logits = vec![0.0f32; n * cfg.vocab];
         let mut hrow = vec![0.0f32; d];
-        for b in 0..batch {
-            let xrow = x.row(b * seq + (seq - 1));
+        for i in 0..n {
+            let xrow = x.row(i * seq + (seq - 1));
             rmsnorm_into(xrow, &self.final_norm, &mut hrow);
-            let out = &mut logits[b * cfg.vocab..(b + 1) * cfg.vocab];
+            let out = &mut logits[i * cfg.vocab..(i + 1) * cfg.vocab];
             for (vi, o) in out.iter_mut().enumerate() {
                 *o = dot(self.lm_head.row(vi), &hrow);
             }
@@ -471,11 +588,12 @@ mod tests {
         let prompts = vec![vec![72, 101, 108, 108, 111, 32, 119, 111], vec![84, 104, 101, 32, 113, 117, 105, 99]];
         let (first, mut kv) = m.prefill(&prompts).unwrap();
         assert_eq!(first.len(), 2);
-        assert_eq!(kv.len, 8);
+        assert_eq!(kv.pos(0), 8);
+        assert_eq!(kv.pos(1), 8);
         let mut last = first;
         for step in 0..4 {
             last = m.decode_step(&mut kv, &last).unwrap();
-            assert_eq!(kv.len, 9 + step);
+            assert_eq!(kv.pos(0), 9 + step);
             for &t in &last {
                 assert!((0..m.config.vocab as i32).contains(&t));
             }
@@ -511,6 +629,109 @@ mod tests {
         let (_, mut kv) = m.prefill(&[full[..5].to_vec()]).unwrap();
         let next_inc = m.decode_step(&mut kv, &[full[5]]).unwrap();
         assert_eq!(next_full, next_inc);
+    }
+
+    /// A sequence's greedy stream must not depend on how it was
+    /// scheduled: alone via the batch path, or slot-prefilled into a
+    /// shared cache and decoded beside a stranger at a different
+    /// position. This is the correctness contract the continuous
+    /// scheduler rests on.
+    #[test]
+    fn slot_path_matches_batch_path() {
+        let (m, _) = tiny_native(2);
+        let prompt_a: Vec<i32> = vec![72, 105, 32, 116, 104, 101];
+        let prompt_b: Vec<i32> = vec![9, 8, 7];
+
+        // Reference: each prompt alone through the batch path.
+        let mut ref_stream_a = Vec::new();
+        let (mut last, mut kv) = m.prefill(&[prompt_a.clone()]).unwrap();
+        for _ in 0..4 {
+            last = m.decode_step(&mut kv, &last).unwrap();
+            ref_stream_a.push(last[0]);
+        }
+        let mut ref_stream_b = Vec::new();
+        let (mut last, mut kv) = m.prefill(&[prompt_b.clone()]).unwrap();
+        for _ in 0..4 {
+            last = m.decode_step(&mut kv, &last).unwrap();
+            ref_stream_b.push(last[0]);
+        }
+
+        // Slot path: A prefills into slot 0, decodes 2 steps alone, then
+        // B is admitted into slot 1 mid-flight and both decode together.
+        let mut kv = KvCache::new(&m.config, 2);
+        let mut last_a = m.prefill_slot(&mut kv, 0, &prompt_a).unwrap();
+        let mut got_a = Vec::new();
+        for _ in 0..2 {
+            let next = m.decode_slots(&mut kv, &[last_a], &[0]).unwrap();
+            last_a = next[0];
+            got_a.push(last_a);
+        }
+        let mut last_b = m.prefill_slot(&mut kv, 1, &prompt_b).unwrap();
+        assert_eq!(kv.pos(0), prompt_a.len() + 2);
+        assert_eq!(kv.pos(1), prompt_b.len());
+        let mut got_b = Vec::new();
+        for _ in 0..2 {
+            let next = m.decode_slots(&mut kv, &[last_a, last_b], &[0, 1]).unwrap();
+            last_a = next[0];
+            last_b = next[1];
+            got_a.push(last_a);
+            got_b.push(last_b);
+        }
+        for _ in 0..2 {
+            let next = m.decode_slots(&mut kv, &[last_b], &[1]).unwrap();
+            last_b = next[0];
+            got_b.push(last_b);
+        }
+        assert_eq!(got_a, ref_stream_a);
+        assert_eq!(got_b, ref_stream_b);
+    }
+
+    /// Retiring a slot and admitting a new sequence into it must produce
+    /// the same stream as a fresh cache — stale KV data from the previous
+    /// occupant is unreachable behind the position gate.
+    #[test]
+    fn freed_slot_reuse_is_clean() {
+        let (m, _) = tiny_native(1);
+        let first: Vec<i32> = vec![100, 101, 102, 103, 104, 105, 106, 107];
+        let second: Vec<i32> = vec![42, 43, 44];
+
+        let mut ref_stream = Vec::new();
+        let (mut last, mut kv) = m.prefill(&[second.clone()]).unwrap();
+        for _ in 0..3 {
+            last = m.decode_step(&mut kv, &last).unwrap();
+            ref_stream.push(last[0]);
+        }
+
+        // Occupy the slot with a longer sequence, retire it, reuse it.
+        let mut kv = KvCache::new(&m.config, 1);
+        let mut last = m.prefill_slot(&mut kv, 0, &first).unwrap();
+        for _ in 0..5 {
+            last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+        }
+        kv.free_slot(0);
+        assert_eq!(kv.pos(0), 0);
+        let mut last = m.prefill_slot(&mut kv, 0, &second).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+            got.push(last);
+        }
+        assert_eq!(got, ref_stream);
+    }
+
+    #[test]
+    fn decode_slots_rejects_bad_slot_lists() {
+        let (m, _) = tiny_native(1);
+        let mut kv = KvCache::new(&m.config, 2);
+        let last = m.prefill_slot(&mut kv, 0, &[1, 2, 3]).unwrap();
+        // Unprefilled slot.
+        assert!(m.decode_slots(&mut kv, &[last], &[1]).is_err());
+        // Out-of-range slot.
+        assert!(m.decode_slots(&mut kv, &[last], &[2]).is_err());
+        // Duplicate slots.
+        assert!(m.decode_slots(&mut kv, &[last, last], &[0, 0]).is_err());
+        // Mismatched lengths.
+        assert!(m.decode_slots(&mut kv, &[last, last], &[0]).is_err());
     }
 
     #[test]

@@ -202,17 +202,18 @@ fn pjrt_serves_from_icqz_container() {
         max_new_tokens: 4,
         buckets: vec![1, 2, 4, 8],
         prefill_len: 64,
+        ..ServeConfig::default()
     };
     let dir2 = dir.clone();
     let cache2 = cache.clone();
     let server = Server::start(cfg, move || {
-        PjrtBackend::from_container(&dir2, &cpath, cache2).unwrap()
+        PjrtBackend::from_container(&dir2, &cpath, cache2)
     });
     let prompt: Vec<i32> = b"The rapid deployment of large language "
         .iter()
         .map(|&b| b as i32)
         .collect();
-    let (_, rx) = server.submit(prompt, 4);
+    let (_, rx) = server.submit(prompt, 4).unwrap();
     let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
     assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
     assert_eq!(resp.tokens.len(), 4);
@@ -235,12 +236,13 @@ fn serving_end_to_end_with_pjrt() {
         max_new_tokens: 8,
         buckets: vec![1, 2, 4, 8],
         prefill_len: 64,
+        ..ServeConfig::default()
     };
     let dir2 = dir.clone();
     let server = Server::start(cfg, move || {
-        let mut b = PjrtBackend::new(&dir2, &model).unwrap();
-        b.warmup().unwrap();
-        b
+        let mut b = PjrtBackend::new(&dir2, &model)?;
+        b.warmup()?;
+        Ok(b)
     });
     let prompt: Vec<i32> = b"Yhe rapid deployment of large language "
         .iter()
@@ -248,7 +250,7 @@ fn serving_end_to_end_with_pjrt() {
         .collect();
     let mut rxs = Vec::new();
     for _ in 0..6 {
-        let (_, rx) = server.submit(prompt.clone(), 8);
+        let (_, rx) = server.submit(prompt.clone(), 8).unwrap();
         rxs.push(rx);
     }
     let mut outputs = Vec::new();

@@ -2,7 +2,7 @@
 //! and the LRU decode cache feeding the serving coordinator. These run
 //! without PJRT artifacts (pure library + a deterministic backend).
 
-use icquant::coordinator::backend::{Backend, DecodeState, KvState};
+use icquant::coordinator::backend::{Backend, DecodeState};
 use icquant::coordinator::{ServeConfig, Server};
 use icquant::icquant::{packed, IcqConfig, IcqMatrix};
 use icquant::quant::QuantizerKind;
@@ -166,33 +166,47 @@ fn coordinator_serves_from_container_via_decode_cache() {
     }
 
     impl Backend for CachedStoreBackend {
-        fn prefill(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<DecodeState> {
+        fn new_state(&mut self, cap: usize) -> anyhow::Result<DecodeState> {
+            self.hashes = vec![0; cap];
+            Ok(DecodeState::empty(cap))
+        }
+
+        fn prefill_into(
+            &mut self,
+            state: &mut DecodeState,
+            slot: usize,
+            prompt: &[i32],
+        ) -> anyhow::Result<()> {
+            // Reads every plane through the shared cache, like a real
+            // per-request weight consumer.
             let salt = self.weight_salt();
-            self.hashes = prompts
-                .iter()
-                .map(|p| {
-                    let mut h = salt ^ 0xcbf29ce484222325;
-                    for &t in p {
-                        h = (h ^ t as u64).wrapping_mul(0x100000001b3);
-                    }
-                    h
-                })
-                .collect();
-            let last_tokens = self.hashes.iter().map(|&h| (h % 256) as i32).collect();
-            Ok(DecodeState { bucket: prompts.len(), pos: 0, last_tokens, kv: KvState::None })
+            let mut h = salt ^ 0xcbf29ce484222325;
+            for &t in prompt {
+                h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+            }
+            self.hashes[slot] = h;
+            state.last_tokens[slot] = (h % 256) as i32;
+            state.pos[slot] = 0;
+            state.active[slot] = true;
+            Ok(())
         }
 
         fn decode(&mut self, state: &mut DecodeState) -> anyhow::Result<Vec<i32>> {
             let salt = self.weight_salt();
-            let step = state.pos as u64;
-            let next: Vec<i32> = self
-                .hashes
-                .iter()
-                .map(|&h| (((h ^ salt).rotate_left((step % 63) as u32 + 1) ^ step) % 256) as i32)
-                .collect();
-            state.pos += 1;
-            state.last_tokens = next.clone();
-            Ok(next)
+            let mut out = vec![0i32; state.cap];
+            for slot in 0..state.cap {
+                if !state.active[slot] {
+                    continue;
+                }
+                let h = self.hashes[slot];
+                let step = state.pos[slot] as u64;
+                let t =
+                    (((h ^ salt).rotate_left((step % 63) as u32 + 1) ^ step) % 256) as i32;
+                out[slot] = t;
+                state.last_tokens[slot] = t;
+                state.pos[slot] += 1;
+            }
+            Ok(out)
         }
     }
 
@@ -205,13 +219,14 @@ fn coordinator_serves_from_container_via_decode_cache() {
             max_new_tokens: 8,
             buckets: vec![1, 2, 4],
             prefill_len: 16,
+            ..ServeConfig::default()
         },
-        move || CachedStoreBackend { stored, names, hashes: Vec::new() },
+        move || Ok(CachedStoreBackend { stored, names, hashes: Vec::new() }),
     );
 
     let mut rxs = Vec::new();
     for i in 0..12 {
-        let (_, rx) = server.submit(vec![i as i32; 8], 6);
+        let (_, rx) = server.submit(vec![i as i32; 8], 6).unwrap();
         rxs.push(rx);
     }
     for rx in rxs {
