@@ -14,23 +14,25 @@ cargo test -q
 echo "=== cargo fmt --check ==="
 cargo fmt --check
 
-echo "=== cargo clippy -- -D warnings ==="
-cargo clippy --all-targets -- -D warnings
+echo "=== cargo clippy -q -- -D warnings ==="
+cargo clippy -q --all-targets -- -D warnings
 
 echo "=== cargo doc --no-deps (broken intra-doc links fail) ==="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "=== kernels bench → BENCH_kernels.json ==="
-# Fused GEMV vs dequantize-then-matmul; asserts equal results and the
-# peak-resident-bytes win, records thread scaling.
-if cargo bench --bench kernels; then
-    if [ -f BENCH_kernels.json ]; then
-        mv BENCH_kernels.json ../BENCH_kernels.json
-        echo "recorded ../BENCH_kernels.json"
-    fi
-else
-    echo "WARNING: kernels bench failed; BENCH_kernels.json not refreshed" >&2
-fi
+# Packed-vs-byte plane and pool-vs-spawn A/Bs; asserts bit-identical
+# results, the peak-resident-bytes win, and the 2-bit plane shrink.
+# This bench is a CI gate: it must run and must record the required
+# keys, or the packed-serving claims are unbacked.
+cargo bench --bench kernels
+test -f BENCH_kernels.json || { echo "FAIL: kernels bench wrote no BENCH_kernels.json" >&2; exit 1; }
+mv BENCH_kernels.json ../BENCH_kernels.json
+echo "recorded ../BENCH_kernels.json"
+for key in bytes_per_weight fused_vs_dequant_speedup plane_shrink_ratio_2bit pool_vs_spawn_speedup; do
+    grep -q "\"$key\"" ../BENCH_kernels.json \
+        || { echo "FAIL: BENCH_kernels.json missing required key '$key'" >&2; exit 1; }
+done
 
 echo "=== serving bench → BENCH_serving.json ==="
 # Continuous-batching vs run-to-completion on the mixed-length staggered

@@ -166,10 +166,10 @@ fn main() -> anyhow::Result<()> {
     let stored = StoredModel::open(&container_path, cache.clone())?;
     let native = NativeModel::from_stored(&stored, 0)?;
     println!(
-        "\nstarting native fused-kernel coordinator ({} resident vs {} f32, {} threads)…",
+        "\nstarting native fused-kernel coordinator ({} resident vs {} f32, {}-wide kernel pool)…",
         human_bytes(native.quantized_bytes() as u64),
         human_bytes(native.dequantized_bytes() as u64),
-        native.threads
+        native.threads()
     );
     let cfg = ServeConfig {
         max_batch: 8,

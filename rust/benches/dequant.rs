@@ -52,14 +52,15 @@ fn main() {
     );
     println!("{}", r.report());
 
-    // Fused gather+FMA matvec straight off codes — weight bytes touched
-    // per op is rows*cols (1 byte/code): the memory-bound figure of merit.
+    // Fused gather+FMA matvec straight off the bit-packed codes —
+    // weight bytes touched per op is the packed plane (≈(n+1)/8 bytes
+    // per weight + codebooks): the memory-bound figure of merit.
     let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.37).sin()).collect();
     let mut y = vec![0.0f32; rows];
     let r = bench_throughput(
-        "dequant/matvec_quantized (code bytes)",
+        "dequant/matvec_quantized (packed bytes)",
         500,
-        (rows * cols) as u64,
+        rt.memory_bytes() as u64,
         || rt.matvec(black_box(&x), black_box(&mut y)),
     );
     println!("{}", r.report());

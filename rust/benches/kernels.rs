@@ -1,27 +1,39 @@
 //! Fused quantized-plane kernel benches (DESIGN.md §8) — the numbers the
-//! tentpole claims rest on, recorded as `BENCH_kernels.json` (ci.sh).
+//! tentpole claims rest on, recorded as `BENCH_kernels.json` (ci.sh
+//! fails if the required keys are missing).
 //!
-//! Three comparisons, at 2/3/4 bits and 1/2/4 threads:
+//! Four comparisons:
 //!
-//! * **hot GEMV**: fused gather+FMA off the runtime plane vs matvec over
-//!   a pre-dequantized f32 plane (pure bandwidth story).
-//! * **end-to-end cache miss**: storage artifact → serve one matvec —
-//!   fused path decodes to the runtime plane and runs the fused GEMV;
-//!   the baseline additionally dequantizes to f32 before its matvec.
-//!   Peak resident bytes are recorded for both; fused must win.
-//! * **thread scaling**: fused GEMV at 1/2/4 threads.
+//! * **packed vs byte plane**: fused GEMV off the bit-packed (n+1)-bit
+//!   runtime plane vs the same blocked kernel off a v1-style
+//!   byte-per-code plane, at 2/3/4 bits — the bandwidth story of this
+//!   PR. Resident plane bytes for both layouts are recorded
+//!   (`plane_shrink_ratio_2bit`; the ceiling is 8/(n+1) ≈ 2.67× at
+//!   2-bit, since codes go from 8 to n+1 bits).
+//! * **fused vs dequantize-then-matmul**: hot GEMV and end-to-end cache
+//!   miss (storage → one served matvec), with measured peak heap via a
+//!   counting allocator.
+//! * **pool vs spawn**: the same multi-threaded GEMV dispatched onto the
+//!   persistent worker pool vs per-call `thread::scope` spawning — the
+//!   per-token overhead the pool removes.
+//! * **tokens/s**: a small native-model decode loop (every projection on
+//!   the pooled fused kernels), the serving-shaped figure of merit.
 //!
 //! Every compared pair is asserted bit-identical before timing.
 
 use icquant::bench::{bench_throughput, black_box, BenchResult};
+use icquant::icquant::runtime::RuntimePlane;
 use icquant::icquant::{IcqConfig, IcqMatrix};
 use icquant::kernels::{available_threads, gemv, gemv_mt};
 use icquant::quant::QuantizerKind;
-use icquant::synthzoo;
+use icquant::store::{synth_model, DecodeCache, StoredModel};
+use icquant::synthzoo::FamilySpec;
 use icquant::util::json::Json;
 use icquant::util::tensor::Matrix;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 // ---------------------------------------------------------------------------
 // Counting allocator: makes "peak resident bytes" a *measurement* of
@@ -62,9 +74,10 @@ fn measure_peak<F: FnOnce()>(f: F) -> usize {
 
 const ROWS: usize = 768;
 const COLS: usize = 2048;
+const BLOCK: usize = 512;
 
 fn quantized(bits: u32) -> IcqMatrix {
-    let w = synthzoo::demo_matrix(ROWS, COLS, 7 + bits as u64);
+    let w = icquant::synthzoo::demo_matrix(ROWS, COLS, 7 + bits as u64);
     let cfg = IcqConfig {
         bits,
         outlier_ratio: 0.05,
@@ -72,6 +85,70 @@ fn quantized(bits: u32) -> IcqMatrix {
         quantizer: QuantizerKind::Rtn,
     };
     IcqMatrix::quantize(&w, None, &cfg).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// v1 byte-per-code plane, reconstructed for the A/B: same blocked
+// gather+accumulate kernel, the only difference is the code bytes moved.
+// ---------------------------------------------------------------------------
+
+struct BytePlane {
+    rows: usize,
+    cols: usize,
+    cb_stride: usize,
+    codes: Vec<u8>,
+    codebooks: Vec<f32>,
+}
+
+impl BytePlane {
+    fn from_runtime(rt: &RuntimePlane) -> BytePlane {
+        BytePlane {
+            rows: rt.rows,
+            cols: rt.cols,
+            cb_stride: rt.cb_stride(),
+            codes: rt.byte_codes(),
+            codebooks: rt.codebooks_flat().to_vec(),
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.codes.len() + self.codebooks.len() * 4
+    }
+
+    /// The pre-PR fused GEMV: block-staged gather off byte codes.
+    fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        let mut levels = [0.0f32; BLOCK];
+        for (r, out) in y.iter_mut().enumerate() {
+            let cb = &self.codebooks[r * self.cb_stride..(r + 1) * self.cb_stride];
+            let codes = &self.codes[r * self.cols..(r + 1) * self.cols];
+            let mut acc = 0.0f32;
+            let mut c0 = 0usize;
+            while c0 < self.cols {
+                let len = BLOCK.min(self.cols - c0);
+                for (l, &code) in levels[..len].iter_mut().zip(&codes[c0..c0 + len]) {
+                    *l = cb[code as usize];
+                }
+                for (l, xv) in levels[..len].iter().zip(&x[c0..c0 + len]) {
+                    acc += *l * *xv;
+                }
+                c0 += len;
+            }
+            *out = acc;
+        }
+    }
+}
+
+/// The pre-PR multi-threaded dispatch: spawn scoped threads per call —
+/// what the persistent pool replaced on the decode path. Both sides of
+/// the A/B run the same kernel body (`kernels::gemv_rows`); only the
+/// dispatch differs.
+fn gemv_mt_spawn(plane: &RuntimePlane, x: &[f32], y: &mut [f32], threads: usize) {
+    let chunk = plane.rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, ychunk) in y.chunks_mut(chunk).enumerate() {
+            s.spawn(move || icquant::kernels::gemv_rows(plane, x, ti * chunk, ychunk));
+        }
+    });
 }
 
 /// Reference y: dequantize then dense matvec (the path being replaced).
@@ -100,6 +177,48 @@ fn result_json(r: &BenchResult) -> Json {
     Json::obj(fields)
 }
 
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Native-model decode loop → tokens/s (the serving-shaped number).
+fn native_tokens_per_s() -> f64 {
+    let family = FamilySpec {
+        name: "bench-native",
+        d_model: 64,
+        d_ff: 128,
+        n_blocks: 2,
+        tail_frac: 0.02,
+        tail_scale: 2.5,
+        oproj_hot: 0.5,
+        seed: 0xBE7C,
+    };
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = synth_model(&family, &cfg, None).unwrap();
+    let cache = Arc::new(DecodeCache::new(64 << 20));
+    let stored = StoredModel::from_model(model, cache, "bench-native");
+    let native = icquant::kernels::NativeModel::from_stored(&stored, 2).unwrap();
+    let batch = 4usize;
+    let prompts: Vec<Vec<i32>> =
+        (0..batch).map(|i| (0..8).map(|j| (i * 13 + j * 7) as i32 % 256).collect()).collect();
+    let (mut last, mut kv) = native.prefill(&prompts).unwrap();
+    // Warmup decode.
+    for _ in 0..4 {
+        last = native.decode_step(&mut kv, &last).unwrap();
+    }
+    let steps = 48usize;
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        last = native.decode_step(&mut kv, &last).unwrap();
+    }
+    (batch * steps) as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     let x: Vec<f32> = (0..COLS).map(|i| (i as f32 * 0.37).sin()).collect();
     let cores = available_threads();
@@ -111,22 +230,36 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
     let mut footprints: Vec<Json> = Vec::new();
     let mut scaling: Vec<Json> = Vec::new();
+    let mut fused_vs_dequant_speedup_2bit = 0.0f64;
+    let mut packed_vs_byte_speedup_2bit = 0.0f64;
+    let mut plane_shrink_ratio_2bit = 0.0f64;
+    let mut bytes_per_weight_2bit = 0.0f64;
 
     for bits in [2u32, 3, 4] {
         let q = quantized(bits);
         let rt = q.to_runtime();
+        let byte_plane = BytePlane::from_runtime(&rt);
         let dense = rt.dequantize();
 
-        // Equal results first: fused output is bit-identical to
-        // dequantize-then-matmul, single- and multi-threaded.
+        // Equal results first: fused-off-packed is bit-identical to
+        // dequantize-then-matmul AND to the byte-code kernel, single-
+        // and multi-threaded.
         let mut y_fused = vec![0.0f32; ROWS];
         let mut y_ref = vec![0.0f32; ROWS];
+        let mut y_byte = vec![0.0f32; ROWS];
         gemv(&rt, &x, &mut y_fused);
         dequant_matvec(&dense, &x, &mut y_ref);
+        byte_plane.gemv(&x, &mut y_byte);
         assert_eq!(
-            y_fused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            y_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            bits_of(&y_fused),
+            bits_of(&y_ref),
             "fused GEMV diverged from dequantize-then-matmul at {} bits",
+            bits
+        );
+        assert_eq!(
+            bits_of(&y_fused),
+            bits_of(&y_byte),
+            "packed plane diverged from byte-code plane at {} bits",
             bits
         );
         for threads in [2usize, 4] {
@@ -135,32 +268,41 @@ fn main() {
             assert_eq!(y_mt, y_fused, "mt path diverged at {} threads", threads);
         }
 
-        // Hot path: weight bytes streamed per matvec.
-        let fused_bytes = rt.memory_bytes() as u64;
+        // Hot path: weight bytes streamed per matvec, per layout.
+        let packed_bytes = rt.memory_bytes() as u64;
+        let byte_bytes = byte_plane.memory_bytes() as u64;
         let f32_bytes = (ROWS * COLS * 4) as u64;
         let mut y = vec![0.0f32; ROWS];
         results.push(bench_throughput(
-            &format!("kernels/gemv_fused_{}bit (1 thread)", bits),
-            400,
-            fused_bytes,
+            &format!("kernels/gemv_packed_{}bit (1 thread)", bits),
+            300,
+            packed_bytes,
             || gemv(black_box(&rt), black_box(&x), black_box(&mut y)),
         ));
         println!("{}", results.last().unwrap().report());
+        let packed_ns = results.last().unwrap().mean_ns;
+        results.push(bench_throughput(
+            &format!("kernels/gemv_byte_codes_{}bit", bits),
+            300,
+            byte_bytes,
+            || byte_plane.gemv(black_box(&x), black_box(&mut y)),
+        ));
+        println!("{}", results.last().unwrap().report());
+        let byte_ns = results.last().unwrap().mean_ns;
         results.push(bench_throughput(
             &format!("kernels/matvec_dequantized_f32_{}bit", bits),
-            400,
+            300,
             f32_bytes,
             || dequant_matvec(black_box(&dense), black_box(&x), black_box(&mut y)),
         ));
         println!("{}", results.last().unwrap().report());
+        let dequant_ns = results.last().unwrap().mean_ns;
 
-        // End-to-end cache miss: storage → one served matvec. The fused
-        // path's peak resident set is the runtime plane; the baseline
-        // holds runtime plane + f32 plane at its peak.
+        // End-to-end cache miss: storage → one served matvec.
         results.push(bench_throughput(
             &format!("kernels/e2e_fused_decode+gemv_{}bit", bits),
-            600,
-            fused_bytes,
+            400,
+            packed_bytes,
             || {
                 let plane = black_box(&q).to_runtime();
                 gemv(&plane, black_box(&x), black_box(&mut y));
@@ -169,7 +311,7 @@ fn main() {
         println!("{}", results.last().unwrap().report());
         results.push(bench_throughput(
             &format!("kernels/e2e_dequant+matvec_{}bit", bits),
-            600,
+            400,
             f32_bytes,
             || {
                 let plane = black_box(&q).to_runtime();
@@ -181,7 +323,7 @@ fn main() {
 
         // Measured peak heap growth of one cold serve (decode included),
         // via the counting allocator: if the fused path ever secretly
-        // materialized an f32 plane, this assert would catch it.
+        // materialized an f32 (or byte) plane, this assert would catch it.
         let mut yp = vec![0.0f32; ROWS];
         let peak_fused = measure_peak(|| {
             let plane = black_box(&q).to_runtime();
@@ -200,32 +342,79 @@ fn main() {
             peak_fused,
             peak_dequant
         );
+        let shrink = byte_plane.memory_bytes() as f64 / rt.memory_bytes() as f64;
         println!(
-            "  measured peak heap: fused {} vs dequant {} ({:.2}x)\n",
+            "  resident plane: packed {} B vs byte-codes {} B ({:.2}x smaller; {:.3} bits/weight) | peak heap fused {} vs dequant {}\n",
+            rt.memory_bytes(),
+            byte_plane.memory_bytes(),
+            shrink,
+            rt.bits_per_weight(),
             peak_fused,
-            peak_dequant,
-            peak_dequant as f64 / peak_fused as f64
+            peak_dequant
         );
+        if bits == 2 {
+            fused_vs_dequant_speedup_2bit = dequant_ns / packed_ns;
+            packed_vs_byte_speedup_2bit = byte_ns / packed_ns;
+            plane_shrink_ratio_2bit = shrink;
+            bytes_per_weight_2bit = rt.memory_bytes() as f64 / (ROWS * COLS) as f64;
+            // Codes shrink 8→(n+1) bits, so the layout ceiling at 2-bit
+            // is 8/3 ≈ 2.67× (codebooks and row padding shave a little).
+            assert!(
+                shrink >= 2.5,
+                "packed plane must shrink ≥2.5x vs byte codes at 2-bit, got {:.2}",
+                shrink
+            );
+        }
         footprints.push(Json::obj(vec![
             ("bits", Json::num(bits as f64)),
+            ("plane_bytes_packed", Json::num(rt.memory_bytes() as f64)),
+            ("plane_bytes_byte_codes", Json::num(byte_plane.memory_bytes() as f64)),
+            ("plane_shrink_ratio", Json::num(shrink)),
+            ("resident_bits_per_weight", Json::num(rt.bits_per_weight())),
             ("peak_resident_bytes_fused", Json::num(peak_fused as f64)),
             ("peak_resident_bytes_dequant", Json::num(peak_dequant as f64)),
-            ("runtime_plane_bytes", Json::num(rt.memory_bytes() as f64)),
             ("f32_plane_bytes", Json::num((ROWS * COLS * 4) as f64)),
             ("storage_bytes", Json::num(q.storage_bytes() as f64)),
             ("equal_results", Json::Bool(true)),
         ]));
     }
 
-    // Thread scaling on the 2-bit plane (the paper's headline regime).
+    // Pool vs spawn + thread scaling on the 2-bit plane (the paper's
+    // headline regime): identical partitioning, only dispatch differs.
     let q = quantized(2);
     let rt = q.to_runtime();
+    let threads = 4usize.min(cores.max(1));
+    let mut y_pool = vec![0.0f32; ROWS];
+    let mut y_spawn = vec![0.0f32; ROWS];
+    gemv_mt(&rt, &x, &mut y_pool, threads);
+    gemv_mt_spawn(&rt, &x, &mut y_spawn, threads);
+    assert_eq!(bits_of(&y_pool), bits_of(&y_spawn), "pool vs spawn outputs diverged");
+    let mut y = vec![0.0f32; ROWS];
+    let r_pool = bench_throughput(
+        &format!("kernels/gemv_mt_pool ({} threads)", threads),
+        300,
+        rt.memory_bytes() as u64,
+        || gemv_mt(black_box(&rt), black_box(&x), black_box(&mut y), threads),
+    );
+    println!("{}", r_pool.report());
+    let r_spawn = bench_throughput(
+        &format!("kernels/gemv_mt_scoped_spawn ({} threads)", threads),
+        300,
+        rt.memory_bytes() as u64,
+        || gemv_mt_spawn(black_box(&rt), black_box(&x), black_box(&mut y), threads),
+    );
+    println!("{}", r_spawn.report());
+    let pool_vs_spawn_speedup = r_spawn.mean_ns / r_pool.mean_ns;
+    println!("\npool vs per-call spawn: {:.2}x", pool_vs_spawn_speedup);
+    results.push(r_pool);
+    results.push(r_spawn);
+
     let mut per_thread_ns = Vec::new();
     for threads in [1usize, 2, 4] {
         let mut y = vec![0.0f32; ROWS];
         let r = bench_throughput(
-            &format!("kernels/gemv_fused_2bit ({} threads)", threads),
-            400,
+            &format!("kernels/gemv_packed_2bit ({} threads)", threads),
+            300,
             rt.memory_bytes() as u64,
             || gemv_mt(black_box(&rt), black_box(&x), black_box(&mut y), threads),
         );
@@ -236,19 +425,31 @@ fn main() {
     let speedup_2t = per_thread_ns[0].1 / per_thread_ns[1].1;
     let speedup_4t = per_thread_ns[0].1 / per_thread_ns[2].1;
     println!(
-        "\nthread scaling: 2t {:.2}x, 4t {:.2}x (1t baseline; {} cores)",
+        "thread scaling: 2t {:.2}x, 4t {:.2}x (1t baseline; {} cores)",
         speedup_2t, speedup_4t, cores
     );
     scaling.push(Json::obj(vec![
         ("cores_available", Json::num(cores as f64)),
         ("speedup_2_threads", Json::num(speedup_2t)),
         ("speedup_4_threads", Json::num(speedup_4t)),
+        ("pool_vs_spawn_speedup", Json::num(pool_vs_spawn_speedup)),
     ]));
+
+    let tokens_per_s = native_tokens_per_s();
+    println!("native decode loop: {:.1} tokens/s (tiny model, pooled kernels)", tokens_per_s);
 
     let json = Json::obj(vec![
         ("bench", Json::str("kernels")),
         ("rows", Json::num(ROWS as f64)),
         ("cols", Json::num(COLS as f64)),
+        // Required keys (checked by ci.sh): the serving figure of merit
+        // and the headline speedup, both at 2-bit.
+        ("bytes_per_weight", Json::num(bytes_per_weight_2bit)),
+        ("fused_vs_dequant_speedup", Json::num(fused_vs_dequant_speedup_2bit)),
+        ("packed_vs_byte_speedup", Json::num(packed_vs_byte_speedup_2bit)),
+        ("plane_shrink_ratio_2bit", Json::num(plane_shrink_ratio_2bit)),
+        ("pool_vs_spawn_speedup", Json::num(pool_vs_spawn_speedup)),
+        ("tokens_per_s_native", Json::num(tokens_per_s)),
         ("footprints", Json::arr(footprints)),
         ("thread_scaling", Json::arr(scaling)),
         ("results", Json::arr(results.iter().map(result_json).collect())),

@@ -7,7 +7,7 @@
 
 pub mod plane;
 
-pub use plane::PackedPlane;
+pub use plane::{pack_aligned_u8, unpack_aligned_u8, PackedPlane};
 
 /// Append-only LSB-first bit writer.
 ///

@@ -3,8 +3,21 @@
 //! The quantized weight matrix is stored as one code per weight at a fixed
 //! bit width (the paper's `n`). [`PackedPlane`] packs those codes densely
 //! (LSB-first, row-major) and provides bulk unpack into `u8`/`u16` — the
-//! load-time hot path that turns the storage plane into the byte-aligned
-//! runtime plane the kernels consume (see DESIGN.md §4/§8).
+//! load-time path that turns the storage plane into the runtime plane the
+//! kernels consume (see DESIGN.md §4/§8).
+//!
+//! Two layouts share the type:
+//!
+//! * **dense** ([`PackedPlane::pack`]) — one contiguous bit stream, no
+//!   padding anywhere; the on-disk storage form, where every padding bit
+//!   would show up in the bits/weight accounting.
+//! * **row-aligned** ([`PackedPlane::pack_row_aligned`]) — each row starts
+//!   on a byte boundary (`row_stride` bytes per row, ≤7 padding bits per
+//!   row). This is the serving form: the fused kernels unpack one BLOCK of
+//!   codes at a time, and because `BLOCK·width` is a whole number of bytes,
+//!   every block within a row also starts byte-aligned — the in-loop
+//!   unpackers ([`unpack_aligned_u8`]) never straddle a row or need a bit
+//!   offset.
 
 use super::{mask, BitReader, BitWriter};
 
@@ -14,7 +27,83 @@ pub struct PackedPlane {
     pub rows: usize,
     pub cols: usize,
     pub width: u32,
+    /// Bytes per row for the row-aligned layout; 0 = dense bit stream.
+    row_stride: usize,
     bytes: Vec<u8>,
+}
+
+/// Unpack `out.len()` fixed-width codes from `src`, starting at byte 0
+/// (the start must be byte-aligned — row-aligned planes guarantee this
+/// for row starts and for every `BLOCK`-multiple column offset).
+///
+/// Width 8 is a copy; widths 1..=7 run a fixed-width octet path (8 codes
+/// per `width` bytes through one `u64` window) with a shift-register tail
+/// for the final `len % 8` codes.
+pub fn unpack_aligned_u8(src: &[u8], width: u32, out: &mut [u8]) {
+    assert!((1..=8).contains(&width), "aligned unpack supports width 1..=8");
+    let len = out.len();
+    if width == 8 {
+        out.copy_from_slice(&src[..len]);
+        return;
+    }
+    let w = width as usize;
+    let m = mask(width) as u8;
+    let groups = len / 8;
+    for g in 0..groups {
+        let off = g * w;
+        let mut buf = [0u8; 8];
+        buf[..w].copy_from_slice(&src[off..off + w]);
+        let window = u64::from_le_bytes(buf);
+        let dst = &mut out[g * 8..g * 8 + 8];
+        for (j, slot) in dst.iter_mut().enumerate() {
+            *slot = ((window >> (j * w)) as u8) & m;
+        }
+    }
+    // Tail: < 8 codes, shift-register over the remaining bytes.
+    let mut produced = groups * 8;
+    let mut byte_idx = groups * w;
+    let mut window = 0u64;
+    let mut avail = 0usize;
+    while produced < len {
+        while avail < w {
+            window |= (src[byte_idx] as u64) << avail;
+            avail += 8;
+            byte_idx += 1;
+        }
+        out[produced] = (window as u8) & m;
+        window >>= w;
+        avail -= w;
+        produced += 1;
+    }
+}
+
+/// Pack `codes` (each `< 2^width`) into `dst` starting at byte 0, LSB
+/// first. `dst` must hold `⌈codes.len()·width/8⌉` bytes and arrive
+/// zeroed beyond that point (row-stride padding bits stay 0).
+pub fn pack_aligned_u8(codes: &[u8], width: u32, dst: &mut [u8]) {
+    assert!((1..=8).contains(&width), "aligned pack supports width 1..=8");
+    if width == 8 {
+        dst[..codes.len()].copy_from_slice(codes);
+        return;
+    }
+    let w = width as usize;
+    let mut window = 0u64;
+    let mut avail = 0usize;
+    let mut byte_idx = 0usize;
+    for &c in codes {
+        debug_assert!((c as u64) <= mask(width), "code {} overflows width {}", c, width);
+        window |= (c as u64) << avail;
+        avail += w;
+        while avail >= 8 {
+            dst[byte_idx] = window as u8;
+            window >>= 8;
+            avail -= 8;
+            byte_idx += 1;
+        }
+    }
+    if avail > 0 {
+        dst[byte_idx] = window as u8;
+    }
 }
 
 impl PackedPlane {
@@ -40,15 +129,72 @@ impl PackedPlane {
             debug_assert!((c as u64) <= mask(width), "code {} overflows width {}", c, width);
             w.write(c as u64, width);
         }
-        PackedPlane { rows, cols, width, bytes: w.into_bytes() }
+        PackedPlane { rows, cols, width, row_stride: 0, bytes: w.into_bytes() }
     }
 
-    /// Total storage in bytes.
+    /// Bytes one row occupies in the row-aligned layout.
+    pub fn aligned_row_stride(cols: usize, width: u32) -> usize {
+        (cols * width as usize).div_ceil(8)
+    }
+
+    /// Pack `codes` row-aligned: every row starts on a byte boundary
+    /// (≤7 padding bits per row). Width is limited to 8 — this is the
+    /// serving layout, whose codes are staged through `u8` buffers.
+    pub fn pack_row_aligned(rows: usize, cols: usize, width: u32, codes: &[u16]) -> PackedPlane {
+        assert_eq!(codes.len(), rows * cols);
+        assert!((1..=8).contains(&width), "row-aligned planes support width 1..=8");
+        let stride = Self::aligned_row_stride(cols, width);
+        let mut bytes = vec![0u8; rows * stride];
+        let mut row_u8 = vec![0u8; cols];
+        for r in 0..rows {
+            for (d, &c) in row_u8.iter_mut().zip(&codes[r * cols..(r + 1) * cols]) {
+                debug_assert!((c as u64) <= mask(width), "code {} overflows width {}", c, width);
+                *d = c as u8;
+            }
+            pack_aligned_u8(&row_u8, width, &mut bytes[r * stride..(r + 1) * stride]);
+        }
+        PackedPlane { rows, cols, width, row_stride: stride, bytes }
+    }
+
+    /// Rebuild a row-aligned plane from its raw bytes (the fused
+    /// storage→runtime decode packs rows directly into this buffer).
+    pub fn from_row_aligned_bytes(
+        rows: usize,
+        cols: usize,
+        width: u32,
+        bytes: Vec<u8>,
+    ) -> PackedPlane {
+        assert!((1..=8).contains(&width), "row-aligned planes support width 1..=8");
+        let stride = Self::aligned_row_stride(cols, width);
+        assert_eq!(bytes.len(), rows * stride, "row-aligned byte length mismatch");
+        PackedPlane { rows, cols, width, row_stride: stride, bytes }
+    }
+
+    /// Whether rows start on byte boundaries (serving layout).
+    pub fn is_row_aligned(&self) -> bool {
+        self.row_stride != 0
+    }
+
+    /// Bytes per row (row-aligned planes only).
+    pub fn row_stride(&self) -> usize {
+        debug_assert!(self.is_row_aligned(), "dense planes have no row stride");
+        self.row_stride
+    }
+
+    /// One row's packed bytes (row-aligned planes only).
+    #[inline]
+    pub fn row_bytes(&self, row: usize) -> &[u8] {
+        debug_assert!(self.is_row_aligned(), "dense planes have no row slices");
+        &self.bytes[row * self.row_stride..(row + 1) * self.row_stride]
+    }
+
+    /// Total storage in bytes (row-aligned planes include row padding —
+    /// the true resident size).
     pub fn storage_bytes(&self) -> usize {
         self.bytes.len()
     }
 
-    /// Storage in bits (exact, without byte padding).
+    /// Storage in bits (exact code bits, without any padding).
     pub fn storage_bits(&self) -> usize {
         self.rows * self.cols * self.width as usize
     }
@@ -57,10 +203,10 @@ impl PackedPlane {
         &self.bytes
     }
 
-    /// Rebuild from raw parts (deserialization).
+    /// Rebuild a dense plane from raw parts (deserialization).
     pub fn from_bytes(rows: usize, cols: usize, width: u32, bytes: Vec<u8>) -> PackedPlane {
         assert!(bytes.len() * 8 >= rows * cols * width as usize);
-        PackedPlane { rows, cols, width, bytes }
+        PackedPlane { rows, cols, width, row_stride: 0, bytes }
     }
 
     /// Unpack the whole plane into one `u16` code per weight.
@@ -80,6 +226,14 @@ impl PackedPlane {
     pub fn unpack(&self) -> Vec<u16> {
         let n = self.rows * self.cols;
         let mut out = Vec::with_capacity(n);
+        if self.is_row_aligned() {
+            let mut row = vec![0u8; self.cols];
+            for r in 0..self.rows {
+                unpack_aligned_u8(self.row_bytes(r), self.width, &mut row);
+                out.extend(row.iter().map(|&c| c as u16));
+            }
+            return out;
+        }
         let mut r = BitReader::new(&self.bytes, self.storage_bits());
         for _ in 0..n {
             out.push(r.read(self.width) as u16);
@@ -97,6 +251,12 @@ impl PackedPlane {
         assert!(self.width <= 8);
         let n = self.rows * self.cols;
         assert_eq!(out.len(), n);
+        if self.is_row_aligned() {
+            for (r, chunk) in out.chunks_mut(self.cols).enumerate() {
+                unpack_aligned_u8(self.row_bytes(r), self.width, chunk);
+            }
+            return;
+        }
         let width = self.width as usize;
         let m = mask(self.width) as u8;
         let bytes = &self.bytes;
@@ -147,6 +307,9 @@ impl PackedPlane {
     pub fn unpack_row_u8(&self, row: usize, out: &mut [u8]) {
         assert!(self.width <= 8 && row < self.rows);
         assert_eq!(out.len(), self.cols);
+        if self.is_row_aligned() {
+            return unpack_aligned_u8(self.row_bytes(row), self.width, out);
+        }
         let width = self.width as usize;
         let m = mask(self.width);
         let mut bitpos = row * self.cols * width;
@@ -162,7 +325,11 @@ impl PackedPlane {
 
     /// Read one code.
     pub fn get(&self, row: usize, col: usize) -> u16 {
-        let bitpos = (row * self.cols + col) * self.width as usize;
+        let bitpos = if self.is_row_aligned() {
+            row * self.row_stride * 8 + col * self.width as usize
+        } else {
+            (row * self.cols + col) * self.width as usize
+        };
         let mut r = BitReader::new(&self.bytes, self.bytes.len() * 8);
         r.seek(bitpos);
         r.read(self.width) as u16
@@ -222,6 +389,64 @@ mod tests {
         let p = PackedPlane::pack(10, 100, 2, &codes);
         assert_eq!(p.storage_bits(), 2000);
         assert_eq!(p.storage_bytes(), 250);
+    }
+
+    #[test]
+    fn row_aligned_roundtrip_all_widths() {
+        // Odd col counts force row padding; 3-bit codes cross byte
+        // boundaries inside every row.
+        let mut rng = Rng::new(17);
+        for width in 1..=8u32 {
+            for cols in [1usize, 7, 63, 64, 65, 129] {
+                let rows = 5;
+                let codes: Vec<u16> =
+                    (0..rows * cols).map(|_| (rng.next_u64() & mask(width)) as u16).collect();
+                let p = PackedPlane::pack_row_aligned(rows, cols, width, &codes);
+                assert!(p.is_row_aligned());
+                assert_eq!(p.row_stride(), (cols * width as usize).div_ceil(8));
+                assert_eq!(p.storage_bytes(), rows * p.row_stride());
+                assert_eq!(p.unpack(), codes, "w={} cols={}", width, cols);
+                let mut out = vec![0u8; rows * cols];
+                p.unpack_into_u8(&mut out);
+                for (a, b) in out.iter().zip(&codes) {
+                    assert_eq!(*a as u16, *b);
+                }
+                let mut row = vec![0u8; cols];
+                for r in 0..rows {
+                    p.unpack_row_u8(r, &mut row);
+                    for c in 0..cols {
+                        assert_eq!(row[c] as u16, codes[r * cols + c]);
+                        assert_eq!(p.get(r, c), codes[r * cols + c]);
+                    }
+                }
+                // Raw-bytes reconstruction matches.
+                let p2 = PackedPlane::from_row_aligned_bytes(
+                    rows,
+                    cols,
+                    width,
+                    p.bytes().to_vec(),
+                );
+                assert_eq!(p2, p);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_pack_unpack_free_fns_match() {
+        // The octet fast path and the shift-register tail must agree for
+        // every width and every tail length 0..=7.
+        let mut rng = Rng::new(23);
+        for width in 1..=8u32 {
+            for len in [0usize, 1, 5, 8, 9, 16, 23, 512, 513] {
+                let codes: Vec<u8> =
+                    (0..len).map(|_| (rng.next_u64() & mask(width)) as u8).collect();
+                let mut dst = vec![0u8; (len * width as usize).div_ceil(8)];
+                pack_aligned_u8(&codes, width, &mut dst);
+                let mut back = vec![0u8; len];
+                unpack_aligned_u8(&dst, width, &mut back);
+                assert_eq!(back, codes, "w={} len={}", width, len);
+            }
+        }
     }
 
     #[test]

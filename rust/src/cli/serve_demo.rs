@@ -53,7 +53,7 @@ pub fn run_native(
     // Built on the main thread for the footprint report; the planes it
     // decodes are shared with the worker through the cache.
     let native = NativeModel::from_stored(&stored, threads)?;
-    let threads = native.threads;
+    let threads = native.threads();
     println!(
         "native model [{}]: {} blocks, d={} | quantized in {:.2}s",
         family.name,
@@ -68,7 +68,7 @@ pub fn run_native(
         native.dequantized_bytes() as f64 / native.quantized_bytes() as f64
     );
     println!(
-        "  kernel threads       : {} | backend: native fused GEMM (no PJRT)",
+        "  kernel pool          : {} executors (persistent, parked between tokens) | backend: native fused GEMM (no PJRT)",
         threads
     );
 

@@ -21,7 +21,7 @@
 //! tests; [`SimBackend`] adds a simulated per-slot step cost so benches
 //! can compare scheduler policies on one machine.
 
-use crate::kernels::{KvCache, NativeModel};
+use crate::kernels::{KvCache, NativeModel, WorkerPool};
 use crate::model::TrainedModel;
 use crate::runtime::{Engine, HostTensor};
 use crate::store::{DecodeCache, StoredModel};
@@ -360,10 +360,12 @@ impl Backend for PjrtBackend {
 // Native fused-kernel backend
 // ---------------------------------------------------------------------------
 
-/// CPU backend serving straight off the quantized runtime planes: every
-/// projection is a fused gather+accumulate GEMM
-/// ([`crate::kernels::gemm_mt`]) — no f32 weight plane, no PJRT, no
-/// Python at request time. Selected with `serve --backend=native`.
+/// CPU backend serving straight off the bit-packed quantized runtime
+/// planes: every projection is a fused unpack+gather+accumulate GEMM
+/// ([`crate::kernels::gemm_on`]) dispatched onto the model's persistent
+/// [`WorkerPool`] — no f32 weight plane, no per-token thread spawn, no
+/// PJRT, no Python at request time. Selected with
+/// `serve --backend=native`.
 ///
 /// Slot operations map directly onto the slot-addressed host
 /// [`KvCache`]: admission is a batch-1 prefill into a freed lane,
@@ -380,9 +382,20 @@ impl NativeBackend {
 
     /// Build from an opened container, pulling every projection through
     /// the store's shared runtime-plane cache. `threads` sizes the
-    /// scoped-thread fan-out of the fused kernels (0 ⇒ all cores).
+    /// model's persistent kernel pool (0 ⇒ all cores); the pool is
+    /// spawned here, once — the decode loop only enqueues onto it.
     pub fn from_stored(stored: &StoredModel, threads: usize) -> Result<NativeBackend> {
         Ok(NativeBackend { model: NativeModel::from_stored(stored, threads)? })
+    }
+
+    /// [`Self::from_stored`] dispatching onto an existing kernel pool —
+    /// lets several backends (or backend restarts) share one set of
+    /// parked workers instead of spawning per construction.
+    pub fn from_stored_with_pool(
+        stored: &StoredModel,
+        pool: Arc<WorkerPool>,
+    ) -> Result<NativeBackend> {
+        Ok(NativeBackend { model: NativeModel::from_stored_with_pool(stored, pool)? })
     }
 
     /// Open an `ICQZ` container and build the native backend from it.
@@ -847,5 +860,52 @@ mod tests {
         assert!(b.prefill_into_many(&mut state, &[(0, other)]).is_err());
         // KV headroom is reported for the scheduler's target clamp.
         assert_eq!(b.max_positions(), Some(b.model().config.max_seq));
+    }
+
+    /// Two backends sharing one kernel pool must produce the same
+    /// streams as a backend with its own pool — pooling is invisible to
+    /// the outputs, whatever the pool topology.
+    #[test]
+    fn shared_kernel_pool_is_output_invariant() {
+        use crate::icquant::IcqConfig;
+        use crate::quant::QuantizerKind;
+        use crate::store::synth_model;
+        use crate::synthzoo::FamilySpec;
+
+        let family = FamilySpec {
+            name: "tiny-backend-pool",
+            d_model: 32,
+            d_ff: 64,
+            n_blocks: 1,
+            tail_frac: 0.02,
+            tail_scale: 2.5,
+            oproj_hot: 0.5,
+            seed: 0xBAC3,
+        };
+        let cfg = IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::Rtn,
+        };
+        let model = synth_model(&family, &cfg, None).unwrap();
+        let cache = Arc::new(DecodeCache::new(64 << 20));
+        let stored = StoredModel::from_model(model, cache, "native-pool");
+        let prompt = vec![11, 22, 33, 44];
+
+        let mut own = NativeBackend::from_stored(&stored, 1).unwrap();
+        let mut state = own.prefill(&[prompt.clone()]).unwrap();
+        let reference: Vec<i32> =
+            (0..4).map(|_| own.decode(&mut state).unwrap()[0]).collect();
+
+        let pool = Arc::new(WorkerPool::new(3));
+        for _ in 0..2 {
+            let mut b = NativeBackend::from_stored_with_pool(&stored, pool.clone()).unwrap();
+            assert_eq!(b.model().threads(), 3);
+            let mut state = b.prefill(&[prompt.clone()]).unwrap();
+            let got: Vec<i32> =
+                (0..4).map(|_| b.decode(&mut state).unwrap()[0]).collect();
+            assert_eq!(got, reference);
+        }
     }
 }

@@ -99,42 +99,30 @@ impl RowIndexCode {
 
     /// Decode back to positions.
     pub fn decode(&self) -> Vec<usize> {
-        let mut r = BitReader::new(&self.bytes, self.n_symbols as usize * self.b as usize);
-        let flag = (1u64 << self.b) - 1;
-        let span = flag as usize;
-        let mut positions = Vec::with_capacity(self.n_outliers as usize);
-        let mut cursor = 0usize;
-        for _ in 0..self.n_symbols {
-            let s = r.read(self.b);
-            if s == flag {
-                cursor += span;
-            } else {
-                cursor += s as usize + 1;
-                positions.push(cursor - 1);
-            }
-        }
         // For encode-produced codes `positions.len() == n_outliers`; codes
         // rebuilt via `from_parts` from untrusted bytes may disagree, so
         // deserializers validate the count instead of asserting here
         // (see `icquant::packed::read_from`).
-        positions
+        self.positions().collect()
+    }
+
+    /// Stream the decoded positions without allocating — the load-time
+    /// hot path ([`crate::icquant::IcqMatrix::to_runtime`] walks every
+    /// row's gap stream once per model load).
+    pub fn positions(&self) -> Positions<'_> {
+        Positions {
+            reader: BitReader::new(&self.bytes, self.n_symbols as usize * self.b as usize),
+            b: self.b,
+            remaining: self.n_symbols as usize,
+            cursor: 0,
+        }
     }
 
     /// Decode directly into a boolean outlier mask of length `cols`
-    /// (the load-time hot path — no intermediate Vec).
+    /// (no intermediate Vec).
     pub fn decode_into_mask(&self, mask: &mut [bool]) {
-        let mut r = BitReader::new(&self.bytes, self.n_symbols as usize * self.b as usize);
-        let flag = (1u64 << self.b) - 1;
-        let span = flag as usize;
-        let mut cursor = 0usize;
-        for _ in 0..self.n_symbols {
-            let s = r.read(self.b);
-            if s == flag {
-                cursor += span;
-            } else {
-                cursor += s as usize + 1;
-                mask[cursor - 1] = true;
-            }
+        for p in self.positions() {
+            mask[p] = true;
         }
     }
 
@@ -150,6 +138,35 @@ impl RowIndexCode {
 
     pub fn from_parts(b: u32, n_symbols: u32, n_outliers: u32, bytes: Vec<u8>) -> RowIndexCode {
         RowIndexCode { b, n_symbols, n_outliers, bytes }
+    }
+}
+
+/// Streaming gap-symbol decoder over one row's index code — yields the
+/// 0-based outlier positions in ascending order, zero heap allocation.
+pub struct Positions<'a> {
+    reader: BitReader<'a>,
+    b: u32,
+    remaining: usize,
+    cursor: usize,
+}
+
+impl Iterator for Positions<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        let flag = (1u64 << self.b) - 1;
+        let span = flag as usize;
+        while self.remaining > 0 {
+            self.remaining -= 1;
+            let s = self.reader.read(self.b);
+            if s == flag {
+                self.cursor += span;
+            } else {
+                self.cursor += s as usize + 1;
+                return Some(self.cursor - 1);
+            }
+        }
+        None
     }
 }
 
@@ -224,6 +241,9 @@ mod tests {
         let positions = [3usize, 64, 65, 500, 1023];
         let code = RowIndexCode::encode(&positions, 6);
         assert_eq!(code.decode(), positions);
+        // The streaming iterator yields the same sequence without a Vec.
+        assert!(code.positions().eq(positions.iter().copied()));
+        assert_eq!(code.positions().count(), positions.len());
         let mut mask = vec![false; 1024];
         code.decode_into_mask(&mut mask);
         for (i, &m) in mask.iter().enumerate() {

@@ -18,5 +18,5 @@ pub mod coding;
 pub mod permute;
 
 pub use bound::{lemma1_bound, optimal_b, simulate_overhead};
-pub use coding::{decode_gaps, encode_gaps, encoded_symbol_count, RowIndexCode};
+pub use coding::{decode_gaps, encode_gaps, encoded_symbol_count, Positions, RowIndexCode};
 pub use permute::ColumnPermutation;

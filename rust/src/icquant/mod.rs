@@ -100,12 +100,15 @@ impl IcqMatrix {
     /// let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
     /// assert!(q.avg_bits_per_weight() < 2.5); // n + B ≈ 2.3
     ///
-    /// let rt = q.to_runtime(); // byte codes + fused per-row codebooks
+    /// let rt = q.to_runtime(); // bit-packed (n+1)-bit codes + flat fused codebooks
     /// assert_eq!(rt.dequantize().data, q.dequantize().data);
-    /// assert!(rt.memory_bytes() < 8 * 512 * 4); // smaller than f32
+    /// assert!(rt.memory_bytes() < 8 * 512); // smaller than even one byte per code
     /// ```
     pub fn quantize(w: &Matrix, sens: Option<&Matrix>, cfg: &IcqConfig) -> Result<IcqMatrix> {
-        ensure!(cfg.bits >= 1 && cfg.bits <= 8, "bits must be 1..=8");
+        // The serving representation is the fused (n+1)-bit runtime plane
+        // staged through u8 lanes, so n is capped at 7 here — at quantize
+        // time, where it can be an error instead of a load-time panic.
+        ensure!(cfg.bits >= 1 && cfg.bits <= 7, "bits must be 1..=7");
         ensure!(
             cfg.outlier_ratio >= 0.0 && cfg.outlier_ratio < 0.5,
             "outlier ratio must be in [0, 0.5)"
@@ -294,6 +297,18 @@ mod tests {
     fn auto_gap_bits_matches_optimal() {
         let cfg = IcqConfig { outlier_ratio: 0.05, gap_bits: 0, ..Default::default() };
         assert_eq!(cfg.resolved_gap_bits(), 6);
+    }
+
+    #[test]
+    fn rejects_bit_widths_the_runtime_plane_cannot_serve() {
+        // n = 8 would need 9-bit fused codes; refuse it at quantize time
+        // (the old byte-code plane silently corrupted the selector for
+        // n = 8 in release builds).
+        let w = heavy_tailed(2, 64, 17);
+        let cfg = IcqConfig { bits: 8, ..Default::default() };
+        assert!(IcqMatrix::quantize(&w, None, &cfg).is_err());
+        let cfg = IcqConfig { bits: 7, ..Default::default() };
+        assert!(IcqMatrix::quantize(&w, None, &cfg).is_ok());
     }
 
     #[test]

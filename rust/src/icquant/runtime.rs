@@ -1,104 +1,255 @@
 //! Load-time decode: storage artifact → runtime plane.
 //!
 //! The gap streams decode **once** at model load into a selector bit that
-//! is fused into the code as its MSB, producing one byte-aligned
-//! (n+1)-bit code per weight plus a fused per-row codebook of `2^(n+1)`
-//! entries (inliers at codes `0..2^n`, outliers at `2^n..2^(n+1)`).
-//! This is the plane the L1 Pallas kernel and the fused CPU kernels
-//! ([`crate::kernels`]) consume: a pure gather, no bit twiddling on the
-//! request path (DESIGN.md §4, §8 — on TPU the VPU has no per-lane
-//! variable shift, so byte-aligned codes are the right runtime layout).
+//! is fused into the code as its MSB, producing one **bit-packed**
+//! (n+1)-bit code per weight plus a flat fused-codebook buffer of
+//! `2^(n+1)` entries per row (inliers at codes `0..2^n`, outliers at
+//! `2^n..2^(n+1)`). This is the plane the fused CPU kernels
+//! ([`crate::kernels`]) consume: fixed-width codes, no per-weight
+//! branching, and — unlike the byte-aligned v1 layout — the hot loop
+//! streams `(n+1)/8` bytes per weight instead of a full byte, which on
+//! the memory-bound shapes the paper targets is the whole latency story
+//! (DESIGN.md §4, §8).
+//!
+//! Layout invariants the kernels rely on:
+//!
+//! * codes are row-aligned ([`PackedPlane::pack_row_aligned`]): each row
+//!   starts on a byte boundary, so a block of `BLOCK` codes at any
+//!   `BLOCK`-multiple column offset also starts byte-aligned
+//!   (`BLOCK·width ≡ 0 mod 8`), and the in-loop unpacker never needs a
+//!   bit offset;
+//! * codebooks are one contiguous `f32` buffer with stride `2^(bits+1)`
+//!   — `codebook(r)` is a subslice, not a pointer chase through
+//!   per-row `Vec`s.
 
 use super::IcqMatrix;
+use crate::bitstream::{pack_aligned_u8, PackedPlane};
 use crate::util::tensor::Matrix;
 
-/// Runtime representation: byte codes + fused codebooks.
+/// Codes staged per unpack chunk on the non-kernel paths (dequantize,
+/// matvec). The fused kernels use their own block size.
+const CHUNK: usize = 512;
+
+/// Runtime representation: bit-packed fused codes + flat codebooks.
 pub struct RuntimePlane {
     pub rows: usize,
     pub cols: usize,
-    /// Fused code per weight: `code | (is_outlier << bits)`.
-    pub codes: Vec<u8>,
-    /// Per-row fused codebook, `2^(bits+1)` f32 levels each.
-    pub codebooks: Vec<Vec<f32>>,
+    /// Base bit-width n; the packed fused codes are `n+1` bits wide.
     pub bits: u32,
+    /// Row-aligned bit-packed `code | (is_outlier << bits)` plane.
+    packed: PackedPlane,
+    /// Per-row fused codebooks, flattened: `2^(bits+1)` f32 levels per
+    /// row, contiguous.
+    codebooks: Vec<f32>,
 }
 
 impl IcqMatrix {
     /// Decode the storage artifact into the runtime plane.
+    ///
+    /// The gap-stream selector is OR-ed **directly into the packed
+    /// write**: each row's n-bit codes are unpacked into one reused
+    /// buffer, outlier positions stream from the index code
+    /// ([`crate::icq::RowIndexCode::positions`] — zero per-row heap
+    /// allocation), and the fused (n+1)-bit row is packed straight into
+    /// the destination buffer.
     pub fn to_runtime(&self) -> RuntimePlane {
-        let n = self.rows * self.cols;
-        let mut codes = vec![0u8; n];
-        // Unpack the whole n-bit plane first (fast bulk path)…
-        self.code_plane.unpack_into_u8(&mut codes);
-        // …then OR in the outlier selector bit from the gap streams.
+        assert!(
+            self.bits <= 7,
+            "runtime planes stage codes through u8: bits must be ≤7, got {}",
+            self.bits
+        );
+        let width = self.bits + 1;
+        let stride = PackedPlane::aligned_row_stride(self.cols, width);
+        let mut bytes = vec![0u8; self.rows * stride];
         let sel = 1u8 << self.bits;
+        let mut row_codes = vec![0u8; self.cols];
         for r in 0..self.rows {
-            let base = r * self.cols;
-            for &c in &self.index_codes[r].decode() {
-                codes[base + c] |= sel;
+            self.code_plane.unpack_row_u8(r, &mut row_codes);
+            for c in self.index_codes[r].positions() {
+                row_codes[c] |= sel;
             }
+            pack_aligned_u8(&row_codes, width, &mut bytes[r * stride..(r + 1) * stride]);
         }
-        let codebooks: Vec<Vec<f32>> = (0..self.rows)
-            .map(|r| {
-                let mut fused =
-                    Vec::with_capacity(self.inlier_cbs[r].levels.len() * 2);
-                fused.extend_from_slice(&self.inlier_cbs[r].levels);
-                fused.extend_from_slice(&self.outlier_cbs[r].levels);
-                fused
-            })
-            .collect();
-        RuntimePlane { rows: self.rows, cols: self.cols, codes, codebooks, bits: self.bits }
+        let cb_stride = 1usize << width;
+        let mut codebooks = Vec::with_capacity(self.rows * cb_stride);
+        for r in 0..self.rows {
+            debug_assert_eq!(self.inlier_cbs[r].levels.len() * 2, cb_stride);
+            debug_assert_eq!(self.outlier_cbs[r].levels.len() * 2, cb_stride);
+            codebooks.extend_from_slice(&self.inlier_cbs[r].levels);
+            codebooks.extend_from_slice(&self.outlier_cbs[r].levels);
+        }
+        RuntimePlane {
+            rows: self.rows,
+            cols: self.cols,
+            bits: self.bits,
+            packed: PackedPlane::from_row_aligned_bytes(self.rows, self.cols, width, bytes),
+            codebooks,
+        }
     }
 }
 
 impl RuntimePlane {
-    /// Dequantize the full plane to f32 (the serving load path; also what
-    /// gets shipped to the PJRT executable as a weight argument).
+    /// Packed code width in bits (`bits + 1`).
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.bits + 1
+    }
+
+    /// Entries per row in the fused codebook (`2^(bits+1)`).
+    #[inline]
+    pub fn cb_stride(&self) -> usize {
+        1usize << (self.bits + 1)
+    }
+
+    /// Row `r`'s fused codebook (`2^(bits+1)` levels).
+    #[inline]
+    pub fn codebook(&self, r: usize) -> &[f32] {
+        let s = self.cb_stride();
+        &self.codebooks[r * s..(r + 1) * s]
+    }
+
+    /// The whole flattened codebook buffer (`rows · 2^(bits+1)` f32) —
+    /// the shape the PJRT quantized-forward entry takes as an argument.
+    pub fn codebooks_flat(&self) -> &[f32] {
+        &self.codebooks
+    }
+
+    /// Row `r`'s packed code bytes (`row_stride` of them).
+    #[inline]
+    pub fn row_bytes(&self, r: usize) -> &[u8] {
+        self.packed.row_bytes(r)
+    }
+
+    /// Bytes one packed row occupies.
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.packed.row_stride()
+    }
+
+    /// The packed code plane itself.
+    pub fn packed(&self) -> &PackedPlane {
+        &self.packed
+    }
+
+    /// One fused code (tests / instrumentation — not a hot path).
+    pub fn code_at(&self, r: usize, c: usize) -> u8 {
+        self.packed.get(r, c) as u8
+    }
+
+    /// Materialize the fused codes as one byte per weight — the v1
+    /// layout, kept for consumers that need byte lanes (the PJRT
+    /// quantized-forward argument builder, A/B benches, tests).
+    pub fn byte_codes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows * self.cols];
+        self.packed.unpack_into_u8(&mut out);
+        out
+    }
+
+    /// Build a plane from byte codes + a flat codebook buffer (tests and
+    /// synthetic-plane construction; the serving path uses
+    /// [`IcqMatrix::to_runtime`]).
+    pub fn from_byte_codes(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        codes: &[u8],
+        codebooks: Vec<f32>,
+    ) -> RuntimePlane {
+        assert!(bits <= 7, "bits must be ≤7");
+        assert_eq!(codes.len(), rows * cols);
+        assert_eq!(codebooks.len(), rows << (bits + 1), "codebook buffer shape mismatch");
+        // Range-check in release too: an oversized code would bleed into
+        // the neighboring packed slot and corrupt it silently.
+        assert!(
+            codes.iter().all(|&c| (c as usize) < (1usize << (bits + 1))),
+            "code overflows the fused (bits+1)-bit width"
+        );
+        let width = bits + 1;
+        let stride = PackedPlane::aligned_row_stride(cols, width);
+        let mut bytes = vec![0u8; rows * stride];
+        for r in 0..rows {
+            pack_aligned_u8(
+                &codes[r * cols..(r + 1) * cols],
+                width,
+                &mut bytes[r * stride..(r + 1) * stride],
+            );
+        }
+        RuntimePlane {
+            rows,
+            cols,
+            bits,
+            packed: PackedPlane::from_row_aligned_bytes(rows, cols, width, bytes),
+            codebooks,
+        }
+    }
+
+    /// Dequantize the full plane to f32 (the PJRT weight-upload path;
+    /// also the reference the fused kernels are bit-identical to).
     pub fn dequantize(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
         for r in 0..self.rows {
-            let cb = &self.codebooks[r];
-            let src = &self.codes[r * self.cols..(r + 1) * self.cols];
-            let dst = out.row_mut(r);
-            for (d, &c) in dst.iter_mut().zip(src) {
-                *d = cb[c as usize];
-            }
+            self.dequantize_row_into(r, out.row_mut(r));
         }
         out
     }
 
     /// Dequantize one row into a caller buffer (streaming path).
     pub fn dequantize_row_into(&self, row: usize, out: &mut [f32]) {
-        let cb = &self.codebooks[row];
-        let src = &self.codes[row * self.cols..(row + 1) * self.cols];
-        for (d, &c) in out.iter_mut().zip(src) {
-            *d = cb[c as usize];
+        assert_eq!(out.len(), self.cols);
+        let cb = self.codebook(row);
+        let bytes = self.row_bytes(row);
+        let width = self.width();
+        let mut codes = [0u8; CHUNK];
+        let mut c0 = 0usize;
+        while c0 < self.cols {
+            let len = CHUNK.min(self.cols - c0);
+            let byte0 = c0 * width as usize / 8; // exact: c0 is a CHUNK multiple
+            crate::bitstream::unpack_aligned_u8(&bytes[byte0..], width, &mut codes[..len]);
+            for (d, &c) in out[c0..c0 + len].iter_mut().zip(&codes[..len]) {
+                *d = cb[c as usize];
+            }
+            c0 += len;
         }
     }
 
     /// `y = W x` straight off the quantized plane (gather + FMA per
     /// element) — the memory-bound deployment kernel shape. The
-    /// production form (blocked, multi-threaded, batched) lives in
-    /// [`crate::kernels`]; this single-pass version stays as the
+    /// production form (blocked, multi-threaded, batched, pooled) lives
+    /// in [`crate::kernels`]; this single-pass version stays as the
     /// smallest readable statement of the kernel and for the benches.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for r in 0..self.rows {
-            let cb = &self.codebooks[r];
-            let src = &self.codes[r * self.cols..(r + 1) * self.cols];
+        let width = self.width();
+        let mut codes = [0u8; CHUNK];
+        for (r, out) in y.iter_mut().enumerate() {
+            let cb = self.codebook(r);
+            let bytes = self.row_bytes(r);
             let mut acc = 0.0f32;
-            for (c, &code) in src.iter().enumerate() {
-                acc += cb[code as usize] * x[c];
+            let mut c0 = 0usize;
+            while c0 < self.cols {
+                let len = CHUNK.min(self.cols - c0);
+                let byte0 = c0 * width as usize / 8;
+                crate::bitstream::unpack_aligned_u8(&bytes[byte0..], width, &mut codes[..len]);
+                for (&c, xv) in codes[..len].iter().zip(&x[c0..c0 + len]) {
+                    acc += cb[c as usize] * *xv;
+                }
+                c0 += len;
             }
-            y[r] = acc;
+            *out = acc;
         }
     }
 
-    /// Runtime memory footprint in bytes (codes + codebooks) — the number
-    /// that drives memory-fetch latency at inference.
+    /// Runtime memory footprint in bytes (packed codes incl. row padding
+    /// + flat codebooks) — the number that drives memory-fetch latency
+    /// at inference, and what [`crate::store::DecodeCache`] charges.
     pub fn memory_bytes(&self) -> usize {
-        self.codes.len() + self.codebooks.iter().map(|c| c.len() * 4).sum::<usize>()
+        self.packed.storage_bytes() + self.codebooks.len() * 4
+    }
+
+    /// Resident bits per weight (codes + codebooks + row padding).
+    pub fn bits_per_weight(&self) -> f64 {
+        self.memory_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
     }
 }
 
@@ -113,7 +264,7 @@ mod tests {
         // The fused (n+1)-bit plane must reproduce exactly what the
         // two-codebook reference dequantization produces.
         let w = synthzoo::demo_matrix(16, 512, 31);
-        for bits in [2u32, 3, 4] {
+        for bits in [2u32, 3, 4, 5] {
             let cfg = IcqConfig { bits, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
             let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
             let reference = q.dequantize();
@@ -147,21 +298,48 @@ mod tests {
         for r in 0..4 {
             let positions = q.index_codes[r].decode();
             for c in 0..256 {
-                let has_sel = rt.codes[r * 256 + c] & 0b100 != 0;
+                let has_sel = rt.code_at(r, c) & 0b100 != 0;
                 assert_eq!(has_sel, positions.contains(&c), "r={} c={}", r, c);
             }
         }
     }
 
     #[test]
-    fn memory_footprint_shrinks_vs_fp16() {
+    fn byte_codes_round_trip_through_packed_layout() {
+        let w = synthzoo::demo_matrix(6, 333, 39); // odd cols: row padding
+        for bits in [2u32, 3, 4] {
+            let cfg = IcqConfig { bits, outlier_ratio: 0.05, gap_bits: 6, ..Default::default() };
+            let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+            let rt = q.to_runtime();
+            let bytes = rt.byte_codes();
+            let rebuilt = RuntimePlane::from_byte_codes(
+                rt.rows,
+                rt.cols,
+                rt.bits,
+                &bytes,
+                rt.codebooks_flat().to_vec(),
+            );
+            assert_eq!(rebuilt.packed(), rt.packed(), "bits={}", bits);
+            assert_eq!(rebuilt.dequantize().data, rt.dequantize().data);
+        }
+    }
+
+    #[test]
+    fn memory_footprint_is_truly_low_bit() {
         let w = synthzoo::demo_matrix(64, 1024, 37);
         let q = IcqMatrix::quantize(&w, None, &IcqConfig::default()).unwrap();
         let rt = q.to_runtime();
+        // 2-bit plane: 3 packed bits/weight + codebooks — under half the
+        // v1 byte-code plane and far under fp16.
+        let byte_plane = 64 * 1024 + rt.codebooks_flat().len() * 4;
         let fp16_bytes = 64 * 1024 * 2;
-        // Runtime plane is byte-aligned (8 bits/weight) — less than fp16
-        // but more than the 2.31-bit storage plane; both are reported.
+        assert!(rt.memory_bytes() * 2 < byte_plane);
         assert!(rt.memory_bytes() < fp16_bytes);
+        // Still above the ≈2.3-bit storage artifact (selector bit, row
+        // padding, f32 codebooks).
         assert!(q.storage_bytes() < rt.memory_bytes());
+        // Exact accounting: rows·⌈cols·3/8⌉ + rows·8·4 codebook bytes.
+        assert_eq!(rt.memory_bytes(), 64 * (1024 * 3usize).div_ceil(8) + 64 * 8 * 4);
+        assert!(rt.bits_per_weight() < 4.1, "{}", rt.bits_per_weight());
     }
 }

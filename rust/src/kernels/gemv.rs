@@ -1,42 +1,52 @@
 //! Fused quantized-plane GEMV/GEMM (DESIGN.md §8).
 //!
-//! `y = W x` computed **directly from the fused (n+1)-bit
-//! [`RuntimePlane`]** — per-row codebook gather + accumulate, no f32
-//! weight materialization. The weight bytes touched per output element
-//! are one code byte plus the (L1-resident) `2^(n+1)`-entry codebook, so
-//! the kernel moves ≈¼ of the bytes the dequantize-then-matmul path
-//! moves; on the memory-bound shapes the paper targets that is the whole
-//! latency story.
+//! `y = W x` computed **directly from the bit-packed fused (n+1)-bit
+//! [`RuntimePlane`]** — per-block unpack + per-row codebook gather +
+//! accumulate, no f32 weight materialization and no byte-code plane.
+//! The weight bytes touched per output element are `(n+1)/8` code bytes
+//! plus the (L1-resident) `2^(n+1)`-entry codebook, so the kernel moves
+//! ≈3/32 of the bytes the dequantize-then-matmul path moves at 2-bit
+//! (and ≈⅜ of what the byte-aligned v1 plane moved); on the memory-bound
+//! shapes the paper targets that is the whole latency story.
+//!
+//! Unpacking is fused into the gather loop: each BLOCK of codes is
+//! unpacked into a stack `u8` buffer
+//! ([`crate::bitstream::unpack_aligned_u8`] — fixed-width octet paths
+//! for the serving widths, generic tail fallback), then LUT-gathered.
+//! Rows are byte-aligned and `BLOCK·width ≡ 0 (mod 8)`, so every block
+//! starts on a byte boundary — no bit-offset bookkeeping in the loop.
 //!
 //! Accumulation contract: every output element is produced by **one f32
 //! accumulator walking columns in order**, exactly like
 //! [`RuntimePlane::dequantize`] followed by [`Matrix::matmul`]. The
-//! blocked inner loop only stages decoded levels into a stack buffer —
-//! it never reassociates the sum — so fused output is bit-identical to
-//! the dequantize-then-matmul reference (property-tested in
-//! `tests/kernels_prop.rs`). Scope: the contract holds for **finite**
-//! activations — [`Matrix::matmul`] skips exact-0.0 weights, so a ±∞/NaN
-//! activation at a column whose dequantized level is exactly 0.0 would
-//! propagate here (0·∞ = NaN) but be skipped by the dense reference.
+//! blocked inner loop only stages codes and decoded levels into stack
+//! buffers — it never reassociates the sum — so fused output is
+//! bit-identical to the dequantize-then-matmul reference
+//! (property-tested in `tests/kernels_prop.rs`). Scope: the contract
+//! holds for **finite** activations — [`Matrix::matmul`] skips exact-0.0
+//! weights, so a ±∞/NaN activation at a column whose dequantized level
+//! is exactly 0.0 would propagate here (0·∞ = NaN) but be skipped by the
+//! dense reference.
 //!
-//! Threading: row-partitioned (GEMV) or batch-partitioned (GEMM)
-//! `std::thread::scope` fan-out — no pool state, no extra deps, and each
-//! output element is still written by exactly one thread, so the
-//! bit-identity contract survives multi-threading unchanged.
+//! Threading: row-partitioned (GEMV) or batch/band-partitioned (GEMM)
+//! chunks dispatched onto a persistent [`WorkerPool`] — `gemv_mt`/
+//! `gemm_mt` use the process-global pool, the `*_on` forms take an
+//! explicit handle (what [`NativeModel`](crate::kernels::NativeModel)
+//! threads through). No `thread::scope` spawn remains on the per-token
+//! decode path. Each output element is still written by exactly one
+//! chunk, so the bit-identity contract survives pooling unchanged; a
+//! panicking chunk is re-raised with its failing row range in the
+//! message instead of poisoning the region with a bare join.
 
+use crate::bitstream::unpack_aligned_u8;
 use crate::icquant::runtime::RuntimePlane;
+use crate::kernels::pool::{self, PoolPanic, WorkerPool};
 use crate::util::tensor::Matrix;
 
-/// Codes decoded per gather block. Sized so the staged levels
-/// (`BLOCK × 4 B`) plus the source codes stay well inside L1 alongside
-/// the codebook.
+/// Codes decoded per gather block. Sized so the staged codes + levels
+/// (`BLOCK × 5 B`) stay well inside L1 alongside the codebook; any
+/// width's block (`BLOCK·width` bits) is a whole number of bytes.
 const BLOCK: usize = 512;
-
-/// Threads worth using for the multi-threaded paths: the machine's
-/// available parallelism, or 1 when it cannot be queried.
-pub fn available_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
 
 /// Single-threaded fused GEMV: `y[r] = Σ_c cb_r[code(r,c)] · x[c]`.
 ///
@@ -49,21 +59,29 @@ pub fn gemv(plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
 }
 
 /// Fused GEMV over the row range `[row0, row0 + y.len())` — the unit the
-/// multi-threaded path hands to each worker.
-fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
+/// pooled path hands to each chunk. Hidden-public so the pool-vs-spawn
+/// bench baseline dispatches the *same* kernel body it times against
+/// (`benches/kernels.rs`); not part of the supported API.
+#[doc(hidden)]
+pub fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
     let cols = plane.cols;
+    let width = plane.width();
+    let wbits = width as usize;
+    let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for (i, out) in y.iter_mut().enumerate() {
         let r = row0 + i;
-        let cb = plane.codebooks[r].as_slice();
-        let codes = &plane.codes[r * cols..(r + 1) * cols];
+        let cb = plane.codebook(r);
+        let bytes = plane.row_bytes(r);
         let mut acc = 0.0f32;
         let mut c0 = 0usize;
         while c0 < cols {
             let len = BLOCK.min(cols - c0);
-            let blk = &codes[c0..c0 + len];
+            // Unpack pass: BLOCK-aligned offsets start on byte
+            // boundaries, so this is a pure byte-window walk.
+            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
             // Gather pass: LUT lookups only (codebook stays hot in L1).
-            for (l, &code) in levels[..len].iter_mut().zip(blk) {
+            for (l, &code) in levels[..len].iter_mut().zip(&codes[..len]) {
                 *l = cb[code as usize];
             }
             // Accumulate pass: sequential, single accumulator — the
@@ -77,9 +95,25 @@ fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
     }
 }
 
-/// Multi-threaded fused GEMV: contiguous row chunks, one scoped thread
-/// per chunk. `threads ≤ 1` (or a single-chunk split) runs inline.
+/// Multi-threaded fused GEMV on the process-global pool: contiguous row
+/// chunks, partitioned `threads` ways. `threads ≤ 1` (or a single-chunk
+/// split) runs inline.
 pub fn gemv_mt(plane: &RuntimePlane, x: &[f32], y: &mut [f32], threads: usize) {
+    gemv_chunked(pool::global(), plane, x, y, threads)
+}
+
+/// [`gemv_mt`] on an explicit pool, partitioned to the pool's width.
+pub fn gemv_on(pool: &WorkerPool, plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
+    gemv_chunked(pool, plane, x, y, pool.threads())
+}
+
+fn gemv_chunked(
+    pool: &WorkerPool,
+    plane: &RuntimePlane,
+    x: &[f32],
+    y: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
     assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
     let threads = threads.max(1).min(plane.rows.max(1));
@@ -87,11 +121,26 @@ pub fn gemv_mt(plane: &RuntimePlane, x: &[f32], y: &mut [f32], threads: usize) {
         return gemv_rows(plane, x, 0, y);
     }
     let chunk = plane.rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, ychunk) in y.chunks_mut(chunk).enumerate() {
-            s.spawn(move || gemv_rows(plane, x, ti * chunk, ychunk));
-        }
-    });
+    let rows = plane.rows;
+    if let Err(p) =
+        pool.try_for_chunks_mut(y, chunk, |ti, ychunk| gemv_rows(plane, x, ti * chunk, ychunk))
+    {
+        panic_with_rows("fused GEMV", "output rows", p, chunk, rows);
+    }
+}
+
+/// Re-raise a pooled chunk's panic with the failing row range attached.
+fn panic_with_rows(kernel: &str, what: &str, p: PoolPanic, chunk: usize, total: usize) -> ! {
+    let r0 = p.task * chunk;
+    let r1 = ((p.task + 1) * chunk).min(total);
+    std::panic::panic_any(format!(
+        "{} worker for {} {}..{} panicked: {}",
+        kernel,
+        what,
+        r0,
+        r1,
+        p.message()
+    ))
 }
 
 /// Single-threaded fused GEMM: `y = x Wᵀ` with `x: (m × cols)` row-major
@@ -99,24 +148,42 @@ pub fn gemv_mt(plane: &RuntimePlane, x: &[f32], y: &mut [f32], threads: usize) {
 /// one token's activation vector). `y` is overwritten, not accumulated
 /// into.
 ///
-/// Each weight row's levels are decoded once per block and reused across
-/// all `m` activation rows; every `y[i][r]` still accumulates in column
-/// order with a single accumulator (bit-identical to the dense path).
+/// Each weight row's block is unpacked and decoded once and reused
+/// across all `m` activation rows; every `y[i][r]` still accumulates in
+/// column order with a single accumulator (bit-identical to the dense
+/// path).
 pub fn gemm(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
     assert_eq!(x.cols, plane.cols, "x cols must equal plane cols");
     assert_eq!((y.rows, y.cols), (x.rows, plane.rows), "y must be (m × rows)");
     gemm_slice(plane, x, 0, x.rows, &mut y.data);
 }
 
-/// Multi-threaded fused GEMM. `y` is overwritten.
+/// Multi-threaded fused GEMM on the process-global pool. `y` is
+/// overwritten.
 ///
 /// Partitioning adapts to the shape: with enough activation rows each
-/// thread takes a contiguous `x`-row chunk (reads shared, writes
-/// disjoint `y` rows); when the batch is smaller than the thread count
-/// — the bucket-1 decode step, exactly where latency matters — threads
-/// take contiguous *weight-row* bands instead, each computing a column
-/// band of `y` into a private buffer that is stitched afterwards.
+/// chunk takes a contiguous `x`-row range (reads shared, writes disjoint
+/// `y` rows); when the batch is smaller than the executor count — the
+/// bucket-1 decode step, exactly where latency matters — chunks take
+/// contiguous *weight-row* bands instead, each computing a column band
+/// of `y` into a private buffer that is stitched afterwards.
 pub fn gemm_mt(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix, threads: usize) {
+    gemm_chunked(pool::global(), plane, x, y, threads)
+}
+
+/// [`gemm_mt`] on an explicit pool, partitioned to the pool's width —
+/// the per-token serving entry ([`crate::kernels::NativeModel`]).
+pub fn gemm_on(pool: &WorkerPool, plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
+    gemm_chunked(pool, plane, x, y, pool.threads())
+}
+
+fn gemm_chunked(
+    pool: &WorkerPool,
+    plane: &RuntimePlane,
+    x: &Matrix,
+    y: &mut Matrix,
+    threads: usize,
+) {
     assert_eq!(x.cols, plane.cols, "x cols must equal plane cols");
     assert_eq!((y.rows, y.cols), (x.rows, plane.rows), "y must be (m × rows)");
     let threads = threads.max(1);
@@ -127,33 +194,33 @@ pub fn gemm_mt(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix, threads: usize)
     let rows_w = plane.rows;
     if m >= threads {
         let chunk = m.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (ti, yslice) in y.data.chunks_mut(chunk * rows_w).enumerate() {
-                s.spawn(move || {
-                    let mc = yslice.len() / rows_w;
-                    gemm_slice(plane, x, ti * chunk, mc, yslice);
-                });
-            }
-        });
+        if let Err(p) = pool.try_for_chunks_mut(&mut y.data, chunk * rows_w, |ti, yslice| {
+            let mc = yslice.len() / rows_w;
+            gemm_slice(plane, x, ti * chunk, mc, yslice);
+        }) {
+            panic_with_rows("fused GEMM", "activation rows", p, chunk, m);
+        }
         return;
     }
-    // Batch smaller than the thread pool: band over weight rows.
+    // Batch smaller than the executor count: band over weight rows.
     let t = threads.min(rows_w);
     if t <= 1 {
         return gemm_slice(plane, x, 0, m, &mut y.data);
     }
     let chunk = rows_w.div_ceil(t);
-    let bands: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..rows_w.div_ceil(chunk))
-            .map(|ti| {
-                let r0 = ti * chunk;
-                let r1 = ((ti + 1) * chunk).min(rows_w);
-                s.spawn(move || (r0, gemm_band(plane, x, r0, r1)))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("gemm band worker")).collect()
-    });
-    for (r0, band) in bands {
+    let n_bands = rows_w.div_ceil(chunk);
+    let mut bands: Vec<Vec<f32>> = vec![Vec::new(); n_bands];
+    if let Err(p) = pool.try_for_chunks_mut(&mut bands, 1, |ti, slot| {
+        let r0 = ti * chunk;
+        let r1 = ((ti + 1) * chunk).min(rows_w);
+        slot[0] = gemm_band(plane, x, r0, r1);
+    }) {
+        // One panicking band must not poison the forward anonymously:
+        // name the weight-row range it owned.
+        panic_with_rows("fused GEMM band", "weight rows", p, chunk, rows_w);
+    }
+    for (ti, band) in bands.iter().enumerate() {
+        let r0 = ti * chunk;
         let bw = band.len() / m;
         for i in 0..m {
             y.data[i * rows_w + r0..i * rows_w + r0 + bw]
@@ -168,17 +235,21 @@ fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f3
     debug_assert_eq!(y.len(), m * plane.rows);
     let cols = plane.cols;
     let rows_w = plane.rows;
+    let width = plane.width();
+    let wbits = width as usize;
     for v in y.iter_mut() {
         *v = 0.0;
     }
+    let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for r in 0..rows_w {
-        let cb = plane.codebooks[r].as_slice();
-        let codes = &plane.codes[r * cols..(r + 1) * cols];
+        let cb = plane.codebook(r);
+        let bytes = plane.row_bytes(r);
         let mut c0 = 0usize;
         while c0 < cols {
             let len = BLOCK.min(cols - c0);
-            for (l, &code) in levels[..len].iter_mut().zip(&codes[c0..c0 + len]) {
+            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
+            for (l, &code) in levels[..len].iter_mut().zip(&codes[..len]) {
                 *l = cb[code as usize];
             }
             for i in 0..m {
@@ -197,20 +268,24 @@ fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f3
 
 /// Fused GEMM restricted to weight rows `r0..r1`: returns the
 /// `(m × (r1-r0))` column band of `y`, each element accumulated in
-/// column order by one thread (the bit-identity contract holds).
+/// column order by one chunk (the bit-identity contract holds).
 fn gemm_band(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize) -> Vec<f32> {
     let cols = plane.cols;
+    let width = plane.width();
+    let wbits = width as usize;
     let m = x.rows;
     let bw = r1 - r0;
     let mut band = vec![0.0f32; m * bw];
+    let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for r in r0..r1 {
-        let cb = plane.codebooks[r].as_slice();
-        let codes = &plane.codes[r * cols..(r + 1) * cols];
+        let cb = plane.codebook(r);
+        let bytes = plane.row_bytes(r);
         let mut c0 = 0usize;
         while c0 < cols {
             let len = BLOCK.min(cols - c0);
-            for (l, &code) in levels[..len].iter_mut().zip(&codes[c0..c0 + len]) {
+            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
+            for (l, &code) in levels[..len].iter_mut().zip(&codes[..len]) {
                 *l = cb[code as usize];
             }
             for i in 0..m {
@@ -253,7 +328,7 @@ mod tests {
 
     #[test]
     fn gemv_bit_identical_to_dequant_matmul() {
-        for bits in [2u32, 3, 4] {
+        for bits in [2u32, 3, 4, 5] {
             let plane = runtime(64, 777, bits, 41 + bits as u64);
             let x = xvec(777);
             let mut y = vec![0.0f32; 64];
@@ -285,6 +360,25 @@ mod tests {
     }
 
     #[test]
+    fn explicit_pool_matches_global_pool() {
+        let plane = runtime(17, 300, 3, 19);
+        let x = xvec(300);
+        let mut want = vec![0.0f32; 17];
+        gemv(&plane, &x, &mut want);
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let mut y = vec![0.0f32; 17];
+            gemv_on(&pool, &plane, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "workers={}",
+                workers
+            );
+        }
+    }
+
+    #[test]
     fn gemm_bit_identical_to_dequant_matmul() {
         let plane = runtime(24, 300, 3, 11);
         let m = 5;
@@ -306,6 +400,13 @@ mod tests {
             gemm_mt(&plane, &x, &mut yt, threads);
             assert_eq!(yt.data, y.data, "threads={}", threads);
         }
+        // Explicit pools (band path: batch < executors).
+        for workers in [2usize, 4] {
+            let pool = WorkerPool::new(workers);
+            let mut yt = Matrix::zeros(m, 24);
+            gemm_on(&pool, &plane, &x, &mut yt);
+            assert_eq!(yt.data, y.data, "workers={}", workers);
+        }
     }
 
     #[test]
@@ -325,16 +426,46 @@ mod tests {
 
     #[test]
     fn block_boundary_shapes() {
-        // cols exactly at, one under, and one over the gather block.
-        for cols in [BLOCK - 1, BLOCK, BLOCK + 1] {
-            let plane = runtime(4, cols, 2, 3);
-            let x = xvec(cols);
-            let mut y = vec![0.0f32; 4];
-            gemv(&plane, &x, &mut y);
-            let want = dequant_matvec(&plane, &x);
-            for (a, b) in y.iter().zip(&want) {
-                assert_eq!(a.to_bits(), b.to_bits(), "cols={}", cols);
+        // cols exactly at, one under, and one over the gather block, at
+        // widths whose codes cross byte boundaries (3- and 5-bit).
+        for bits in [2u32, 4] {
+            for cols in [BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK + 1] {
+                let plane = runtime(4, cols, bits, 3);
+                let x = xvec(cols);
+                let mut y = vec![0.0f32; 4];
+                gemv(&plane, &x, &mut y);
+                let want = dequant_matvec(&plane, &x);
+                for (a, b) in y.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bits={} cols={}", bits, cols);
+                }
             }
         }
+    }
+
+    #[test]
+    fn band_panic_names_the_failing_row_range() {
+        // Satellite regression: a panicking band worker used to surface
+        // as a bare `join().expect("gemm band worker")`, poisoning the
+        // whole forward anonymously. The pooled path re-raises with the
+        // failing row range and the original payload text.
+        let pool = WorkerPool::new(2);
+        let mut slots = vec![0u8; 10];
+        let err = pool
+            .try_for_chunks_mut(&mut slots, 3, |i, _| {
+                if i == 2 {
+                    panic!("band exploded");
+                }
+            })
+            .expect_err("injected panic must surface");
+        let raised = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            panic_with_rows("fused GEMM band", "weight rows", err, 3, 10)
+        }))
+        .expect_err("panic_with_rows must panic");
+        let msg = raised
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".into());
+        assert!(msg.contains("weight rows 6..9"), "msg={}", msg);
+        assert!(msg.contains("band exploded"), "msg={}", msg);
     }
 }

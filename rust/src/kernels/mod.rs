@@ -4,26 +4,36 @@
 //! memory-bound: latency is set by the weight bytes a matmul must
 //! stream, so a server that dequantizes every layer to f32 before the
 //! GEMV throws the 2.3-bit footprint away exactly where it pays. This
-//! subsystem keeps weights in the fused (n+1)-bit
+//! subsystem keeps weights **bit-packed** in the fused (n+1)-bit
 //! [`RuntimePlane`](crate::icquant::runtime::RuntimePlane) form all the
-//! way through the matmul:
+//! way through the matmul — the hot loop streams `(n+1)/8` bytes per
+//! weight, not the full byte the v1 layout moved:
 //!
-//! * [`gemv`] / [`gemv_mt`] — `y = Wx` via per-row codebook gather +
-//!   accumulate, row-partitioned across scoped `std::thread`s.
-//! * [`gemm`] / [`gemm_mt`] — the batched form `y = xWᵀ`, decoding each
-//!   weight block once and reusing it across the batch.
+//! * [`gemv`] / [`gemv_mt`] / [`gemv_on`] — `y = Wx` via per-block
+//!   unpack + per-row codebook gather + accumulate.
+//! * [`gemm`] / [`gemm_mt`] / [`gemm_on`] — the batched form `y = xWᵀ`,
+//!   unpacking and decoding each weight block once per batch.
+//! * [`pool`] — the persistent [`WorkerPool`] the multi-threaded paths
+//!   dispatch through: workers spawn once and park between calls, so
+//!   the 7-projections-×-layers-×-every-token decode loop pays a queue
+//!   push per region instead of a `thread::scope` spawn.
 //! * [`model`] — a full native CPU Llama-mini forward (RMSNorm, RoPE
 //!   attention, SwiGLU) whose every projection runs through the fused
-//!   kernels: the zero-PJRT serving path behind
+//!   kernels on the model's own pool: the zero-PJRT serving path behind
 //!   [`NativeBackend`](crate::coordinator::backend::NativeBackend).
 //!
 //! All kernels are **bit-identical** to dequantize-then-matmul (see the
 //! accumulation contract in [`gemv`]'s module docs and the property
-//! tests in `tests/kernels_prop.rs`); `benches/kernels.rs` records the
-//! latency/footprint wins as `BENCH_kernels.json`.
+//! tests in `tests/kernels_prop.rs`), at any pool width; `benches/
+//! kernels.rs` records the packed-vs-byte and pool-vs-spawn wins as
+//! `BENCH_kernels.json`.
 
 mod gemv;
 pub mod model;
+pub mod pool;
 
-pub use gemv::{available_threads, gemm, gemm_mt, gemv, gemv_mt};
+pub use gemv::{gemm, gemm_mt, gemm_on, gemv, gemv_mt, gemv_on};
+#[doc(hidden)]
+pub use gemv::gemv_rows;
 pub use model::{KvCache, NativeModel};
+pub use pool::{available_threads, PoolPanic, WorkerPool};

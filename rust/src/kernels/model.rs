@@ -4,10 +4,11 @@
 //! [`NativeModel`] mirrors the Llama-mini architecture the python side
 //! AOT-compiles (`python/compile/model.py`: RMSNorm → RoPE multi-head
 //! attention → RMSNorm → SwiGLU, byte vocab), but every projection is a
-//! fused [`gemv::gemm_mt`](crate::kernels::gemm_mt) **straight off the
-//! quantized [`RuntimePlane`]** — no f32 weight plane ever exists. Dense
-//! side tensors (embeddings, norms, `lm_head`) stay f32; they are <2 %
-//! of the weight bytes.
+//! fused [`gemm_on`](crate::kernels::gemm_on) **straight off the
+//! bit-packed quantized [`RuntimePlane`]**, dispatched onto the model's
+//! persistent [`WorkerPool`] — no f32 weight plane ever exists and no
+//! thread is spawned at request time. Dense side tensors (embeddings,
+//! norms, `lm_head`) stay f32; they are <2 % of the weight bytes.
 //!
 //! The KV cache is **slot-addressed** (DESIGN.md §9): each of its lanes
 //! tracks its own position, so the continuous-batching scheduler can
@@ -18,14 +19,15 @@
 //! runs alone, in a uniform batch, or interleaved with strangers.
 //!
 //! This is the deployment story the paper's intro argues for: the
-//! serving working set is codes + codebooks (≈¼ of f32), and the
-//! per-token cost is a memory-bound sweep of those bytes. The PJRT
+//! serving working set is packed codes + codebooks (≈(n+1)/32 of f32 —
+//! ~3 bits/weight at n=2), and the per-token cost is a memory-bound
+//! sweep of those bytes. The PJRT
 //! backend remains the reference executor; this one trades its compiled
 //! graphs for zero Python/XLA dependence at request time.
 
 use crate::coordinator::backend::argmax_rows;
 use crate::icquant::runtime::RuntimePlane;
-use crate::kernels::gemm_mt;
+use crate::kernels::{gemm_on, WorkerPool};
 use crate::model::ModelConfig;
 use crate::store::StoredModel;
 use crate::util::tensor::Matrix;
@@ -159,8 +161,10 @@ impl KvCache {
 /// runtime planes, dense side tensors as f32.
 pub struct NativeModel {
     pub config: ModelConfig,
-    /// Worker threads for the fused GEMMs (≥1).
-    pub threads: usize,
+    /// Persistent worker pool every fused GEMM dispatches through —
+    /// spawned once at construction, parked between tokens. No
+    /// per-projection thread spawn survives on the decode path.
+    pool: Arc<WorkerPool>,
     tok_emb: Matrix,
     lm_head: Matrix,
     final_norm: Vec<f32>,
@@ -174,10 +178,19 @@ impl NativeModel {
     /// Assemble from an opened container: projections come through the
     /// store's shared [`crate::store::DecodeCache`] (one fused decode per
     /// layer, shared with every other consumer of the artifact), dense
-    /// tensors are copied out. `threads` sizes the kernel fan-out
-    /// (0 ⇒ all available cores).
+    /// tensors are copied out. `threads` sizes the model's persistent
+    /// kernel pool (0 ⇒ all available cores).
     pub fn from_stored(stored: &StoredModel, threads: usize) -> Result<NativeModel> {
-        let threads = if threads == 0 { crate::kernels::available_threads() } else { threads };
+        Self::from_stored_with_pool(stored, Arc::new(WorkerPool::new(threads)))
+    }
+
+    /// [`Self::from_stored`] sharing an existing kernel pool — several
+    /// models (or a model plus ad-hoc kernel callers) can dispatch onto
+    /// one set of parked workers.
+    pub fn from_stored_with_pool(
+        stored: &StoredModel,
+        pool: Arc<WorkerPool>,
+    ) -> Result<NativeModel> {
         let config = stored
             .config
             .clone()
@@ -245,13 +258,23 @@ impl NativeModel {
             .collect();
         Ok(NativeModel {
             config,
-            threads: threads.max(1),
+            pool,
             tok_emb,
             lm_head,
             final_norm: dense_vec("final_norm", d)?,
             blocks,
             rope_inv_freq,
         })
+    }
+
+    /// Executor width of the kernel pool (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The model's persistent kernel pool.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// Resident weight bytes of the quantized planes (codes + per-row
@@ -411,9 +434,9 @@ impl NativeModel {
             let mut q = Matrix::zeros(bs, d);
             let mut k = Matrix::zeros(bs, d);
             let mut v = Matrix::zeros(bs, d);
-            gemm_mt(&bw.wq, &h, &mut q, self.threads);
-            gemm_mt(&bw.wk, &h, &mut k, self.threads);
-            gemm_mt(&bw.wv, &h, &mut v, self.threads);
+            gemm_on(&self.pool, &bw.wq, &h, &mut q);
+            gemm_on(&self.pool, &bw.wk, &h, &mut k);
+            gemm_on(&self.pool, &bw.wv, &h, &mut v);
             for i in 0..n {
                 for t in 0..seq {
                     let row = i * seq + t;
@@ -446,20 +469,20 @@ impl NativeModel {
                 }
             }
             let mut o = Matrix::zeros(bs, d);
-            gemm_mt(&bw.wo, &attn, &mut o, self.threads);
+            gemm_on(&self.pool, &bw.wo, &attn, &mut o);
             add_assign(&mut x, &o);
 
             // --- SwiGLU MLP --------------------------------------------
             let h = rmsnormed(&x, &bw.mlp_norm);
             let mut gate = Matrix::zeros(bs, cfg.d_ff);
             let mut up = Matrix::zeros(bs, cfg.d_ff);
-            gemm_mt(&bw.w_gate, &h, &mut gate, self.threads);
-            gemm_mt(&bw.w_up, &h, &mut up, self.threads);
+            gemm_on(&self.pool, &bw.w_gate, &h, &mut gate);
+            gemm_on(&self.pool, &bw.w_up, &h, &mut up);
             for (g, u) in gate.data.iter_mut().zip(&up.data) {
                 *g = silu(*g) * *u;
             }
             let mut down = Matrix::zeros(bs, d);
-            gemm_mt(&bw.w_down, &gate, &mut down, self.threads);
+            gemm_on(&self.pool, &bw.w_down, &gate, &mut down);
             add_assign(&mut x, &down);
         }
         for (i, &s) in slot_ids.iter().enumerate() {

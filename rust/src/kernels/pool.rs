@@ -1,0 +1,467 @@
+//! Persistent worker pool for the fused kernels (DESIGN.md §8).
+//!
+//! The serving decode loop runs 7 projections × layers × one GEMM each,
+//! **every token**. Spawning OS threads per call (`std::thread::scope`)
+//! puts thread creation/teardown — tens of microseconds each — on the
+//! per-token path, multiplied by every projection of every layer. A
+//! [`WorkerPool`] spawns its workers once and parks them on a condvar;
+//! dispatching a parallel region is a queue push + wakeup, and the
+//! workers' stacks/TLS stay warm across calls. No external deps: plain
+//! `std` threads, `Mutex`/`Condvar` parking, atomic chunk claiming.
+//!
+//! Execution model: [`WorkerPool::parallel_for`] publishes a job of `n`
+//! index-addressed chunks; the **caller participates** (so a pool built
+//! with `threads` executors spawns `threads − 1` workers and `threads =
+//! 1` runs entirely inline), workers race to claim chunk indices via one
+//! atomic counter, and the call returns only when every chunk finished.
+//! Multiple threads may submit concurrently — jobs queue FIFO and
+//! workers drain them in order.
+//!
+//! Determinism: chunk→output mapping is fixed by the caller (each output
+//! element is written by exactly one closure invocation with a fixed
+//! index), so results are bit-identical regardless of worker count or
+//! which worker claims which chunk — the kernels' bit-identity contract
+//! survives pooling unchanged (property-tested in `tests/kernels_prop.rs`).
+//!
+//! Panics: a panicking chunk is caught, the job still drains (the other
+//! chunks complete), and the submitter receives the payload — via
+//! [`PoolPanic`] from the `try_*` forms, which call sites use to attach
+//! the failing work range (e.g. the GEMM band's weight rows) before
+//! re-panicking, instead of poisoning the whole forward with a bare
+//! `join()` expect.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Threads worth using: the machine's available parallelism, or 1 when
+/// it cannot be queried.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A chunk's panic, captured by the pool: which chunk index failed plus
+/// the original payload.
+pub struct PoolPanic {
+    /// Index of the panicking chunk (the `i` passed to the job).
+    pub task: usize,
+    payload: Box<dyn Any + Send>,
+}
+
+impl PoolPanic {
+    /// Best-effort text of the payload (`&str`/`String` panics; the
+    /// overwhelmingly common case).
+    pub fn message(&self) -> &str {
+        if let Some(s) = self.payload.downcast_ref::<&'static str>() {
+            s
+        } else if let Some(s) = self.payload.downcast_ref::<String>() {
+            s.as_str()
+        } else {
+            "<non-string panic payload>"
+        }
+    }
+
+    /// Re-raise the original payload.
+    pub fn resume(self) -> ! {
+        std::panic::resume_unwind(self.payload)
+    }
+}
+
+/// Type-erased pointer to the caller's job closure plus a monomorphized
+/// trampoline that calls it. The submitter blocks until every chunk
+/// completes, so the pointee outlives every dereference; after the last
+/// chunk is claimed no executor touches it again (claims past `n`
+/// return without dereferencing).
+#[derive(Clone, Copy)]
+struct JobPtr {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+// SAFETY: the pointee is `Sync` (shared calls are safe) and the
+// submitter keeps it alive for the whole parallel region (see above).
+unsafe impl Send for JobPtr {}
+unsafe impl Sync for JobPtr {}
+
+/// Trampoline: recover the concrete closure type and call it.
+unsafe fn call_job<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+/// No-op trampoline for placeholder jobs (never claimed).
+unsafe fn call_nothing(_: *const (), _: usize) {}
+
+/// One published parallel region.
+struct Job {
+    job: JobPtr,
+    n: usize,
+    /// Next unclaimed chunk index (may grow past `n`).
+    next: AtomicUsize,
+    /// Chunks not yet finished.
+    pending: AtomicUsize,
+    /// First captured panic (chunk index, payload).
+    panic: Mutex<Option<(usize, Box<dyn Any + Send>)>>,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    fn new<F: Fn(usize) + Sync>(job: &F, n: usize) -> Job {
+        // Lifetime erasure through a thin pointer; `JobPtr`'s invariant
+        // (submitter outlives all dereferences) restores soundness.
+        Job {
+            job: JobPtr { data: job as *const F as *const (), call: call_job::<F> },
+            n,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            panic: Mutex::new(None),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim and run chunks until none are left.
+    fn drain(&self) {
+        let job = self.job;
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // SAFETY: see `JobPtr` — valid for the region's duration.
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, i)
+            })) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some((i, payload));
+                }
+            }
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Last chunk: wake the submitter. Taking the lock before
+                // notifying closes the check-then-wait race.
+                let _g = self.done_mx.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Queue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+}
+
+/// Persistent `std::thread` worker pool with chunked `parallel_for`.
+/// Workers park between jobs; dropping the pool joins them.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `threads` executors **including the caller**:
+    /// `threads − 1` workers are spawned and parked; `threads ≤ 1`
+    /// spawns nothing and runs every region inline. `0` means all
+    /// available cores.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = if threads == 0 { available_threads() } else { threads.max(1) };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || Self::worker(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles, threads }
+    }
+
+    /// Executor count (parked workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn worker(shared: &Shared) {
+        loop {
+            let job = {
+                let mut q = shared.queue.lock().unwrap();
+                loop {
+                    if q.shutdown {
+                        return;
+                    }
+                    // Retire fully-claimed jobs from the front.
+                    while let Some(j) = q.jobs.front() {
+                        if j.next.load(Ordering::Relaxed) >= j.n {
+                            q.jobs.pop_front();
+                        } else {
+                            break;
+                        }
+                    }
+                    if let Some(j) = q.jobs.front() {
+                        break j.clone();
+                    }
+                    q = shared.work_cv.wait(q).unwrap();
+                }
+            };
+            job.drain();
+        }
+    }
+
+    /// Run `job(i)` for every `i in 0..tasks` across the pool; blocks
+    /// until all complete. Panics propagate (first payload wins).
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, tasks: usize, job: &F) {
+        if let Err(p) = self.try_parallel_for(tasks, job) {
+            p.resume();
+        }
+    }
+
+    /// Like [`Self::parallel_for`], but a panicking chunk is returned as
+    /// [`PoolPanic`] (with its chunk index) instead of re-raised — call
+    /// sites use it to attach the failing work range to the message.
+    pub fn try_parallel_for<F: Fn(usize) + Sync>(
+        &self,
+        tasks: usize,
+        job: &F,
+    ) -> Result<(), PoolPanic> {
+        if tasks == 0 {
+            return Ok(());
+        }
+        let region = Job::new(job, tasks);
+        if self.handles.is_empty() || tasks == 1 {
+            region.drain(); // inline: nothing to wake, nothing to wait on
+            return Self::finish(region);
+        }
+        let region = Arc::new(region);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push_back(region.clone());
+        }
+        // Wake only as many workers as there are chunks beyond the one
+        // the caller will take — small regions on a wide pool must not
+        // thundering-herd every parked worker per token. Correctness
+        // never depends on wakeups: the caller drains its own region.
+        let wake = (tasks - 1).min(self.handles.len());
+        for _ in 0..wake {
+            self.shared.work_cv.notify_one();
+        }
+        region.drain(); // the caller is an executor too
+        let mut g = region.done_mx.lock().unwrap();
+        while region.pending.load(Ordering::Acquire) != 0 {
+            g = region.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        let region = Arc::try_unwrap(region).unwrap_or_else(|arc| {
+            // A worker may still hold a clone for an instant after the
+            // final decrement; the job is complete either way — rebuild
+            // an owned shell around the shared panic slot.
+            let payload = arc.panic.lock().unwrap().take();
+            Job {
+                job: JobPtr { data: std::ptr::null(), call: call_nothing },
+                n: 0,
+                next: AtomicUsize::new(0),
+                pending: AtomicUsize::new(0),
+                panic: Mutex::new(payload),
+                done_mx: Mutex::new(()),
+                done_cv: Condvar::new(),
+            }
+        });
+        Self::finish(region)
+    }
+
+    fn finish(region: Job) -> Result<(), PoolPanic> {
+        match region.panic.into_inner().unwrap() {
+            Some((task, payload)) => Err(PoolPanic { task, payload }),
+            None => Ok(()),
+        }
+    }
+
+    /// Chunked parallel-for over disjoint consecutive `chunk`-sized
+    /// pieces of `data` (the last may be short): `f(i, piece_i)`.
+    pub fn for_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        data: &mut [T],
+        chunk: usize,
+        f: F,
+    ) {
+        if let Err(p) = self.try_for_chunks_mut(data, chunk, f) {
+            p.resume();
+        }
+    }
+
+    /// [`Self::for_chunks_mut`] with [`PoolPanic`] reporting.
+    pub fn try_for_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        data: &mut [T],
+        chunk: usize,
+        f: F,
+    ) -> Result<(), PoolPanic> {
+        assert!(chunk > 0, "chunk must be positive");
+        let len = data.len();
+        if len == 0 {
+            return Ok(());
+        }
+        struct Base<T>(*mut T);
+        // SAFETY: each chunk index maps to a disjoint subslice, and each
+        // index is claimed exactly once.
+        unsafe impl<T: Send> Send for Base<T> {}
+        unsafe impl<T: Send> Sync for Base<T> {}
+        let base = Base(data.as_mut_ptr());
+        self.try_parallel_for(len.div_ceil(chunk), &|i| {
+            let start = i * chunk;
+            let end = (start + chunk).min(len);
+            // SAFETY: disjoint range per claimed index (see above).
+            let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(i, piece);
+        })
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool the convenience kernels (`gemv_mt`/`gemm_mt`)
+/// dispatch through, sized to all available cores and spawned lazily on
+/// first use. Components with their own sizing
+/// ([`NativeModel`](crate::kernels::NativeModel)) hold their own pool
+/// instead.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(available_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        for threads in [1usize, 2, 4, 9] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for(97, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {} (threads {})", i, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn for_chunks_mut_partitions_exactly() {
+        let pool = WorkerPool::new(4);
+        for (len, chunk) in [(100usize, 7usize), (8, 8), (9, 8), (1, 3), (64, 1)] {
+            let mut data = vec![0u32; len];
+            pool.for_chunks_mut(&mut data, chunk, |i, piece| {
+                for (j, v) in piece.iter_mut().enumerate() {
+                    *v = (i * chunk + j) as u32;
+                }
+            });
+            for (j, v) in data.iter().enumerate() {
+                assert_eq!(*v, j as u32, "len={} chunk={}", len, chunk);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuse_across_many_regions() {
+        // The point of the pool: many cheap regions on warm workers.
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.parallel_for(5, &|i| {
+                total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 15);
+    }
+
+    #[test]
+    fn panic_reports_chunk_and_message_and_job_drains() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicU64::new(0);
+        let err = pool
+            .try_parallel_for(8, &|i| {
+                if i == 5 {
+                    panic!("chunk five exploded");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            })
+            .expect_err("must surface the panic");
+        assert_eq!(err.task, 5);
+        assert!(err.message().contains("chunk five exploded"));
+        // Every other chunk still ran: the region drains, it is not torn
+        // down mid-flight.
+        assert_eq!(done.load(Ordering::Relaxed), 7);
+        // The pool survives a panicked region.
+        pool.parallel_for(4, &|_| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn parallel_for_resumes_panic() {
+        let pool = WorkerPool::new(2);
+        pool.parallel_for(3, &|i| {
+            if i == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pool() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let sum = AtomicU64::new(0);
+                for _ in 0..50 {
+                    pool.parallel_for(11, &|i| {
+                        sum.fetch_add(i as u64, Ordering::Relaxed);
+                    });
+                }
+                (t, sum.into_inner())
+            }));
+        }
+        for h in handles {
+            let (_, got) = h.join().unwrap();
+            assert_eq!(got, 50 * 55);
+        }
+    }
+
+    #[test]
+    fn zero_and_one_tasks() {
+        let pool = WorkerPool::new(4);
+        pool.parallel_for(0, &|_| panic!("must not run"));
+        let ran = AtomicU64::new(0);
+        pool.parallel_for(1, &|i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.into_inner(), 1);
+    }
+}

@@ -2,20 +2,24 @@
 //!
 //! The serving hot loop consumes quantized layers through the fused
 //! kernels ([`crate::kernels`]), so what is worth caching is the
-//! **runtime plane** — byte-aligned (n+1)-bit codes plus per-row fused
-//! codebooks ([`IcqMatrix::to_runtime`]), ≈¼ the bytes of a dequantized
-//! f32 plane. [`DecodeCache`] sits between the ≈2.3-bit storage form and
-//! the kernels: `get_or_decode` runs the storage→runtime decode at most
-//! once per key while the entry is resident, so repeated prefill/decode
-//! batches — and multiple consumers of the same artifact — share one
-//! decode. Holding planes instead of f32 stretches the same byte budget
-//! ≈4× at LLM widths (DESIGN.md §6); consumers that do need f32 (the
-//! PJRT weight-upload path) dequantize transiently from the cached
-//! plane and drop the f32 copy after use.
+//! **runtime plane** — bit-packed (n+1)-bit codes plus the flat fused
+//! codebook buffer ([`IcqMatrix::to_runtime`]), ≈(n+1)/32 the bytes of a
+//! dequantized f32 plane (~3 bits/weight at n=2). [`DecodeCache`] sits
+//! between the ≈2.3-bit storage form and the kernels: `get_or_decode`
+//! runs the storage→runtime decode at most once per key while the entry
+//! is resident, so repeated prefill/decode batches — and multiple
+//! consumers of the same artifact — share one decode. Holding packed
+//! planes instead of f32 stretches the same byte budget ≈10× at 2-bit
+//! LLM widths — and ≈2.6× further than the byte-aligned v1 plane did,
+//! so a budget that used to hold a model's worth of byte planes now
+//! holds ~8/(n+1)× more layers (DESIGN.md §6). Consumers that do need
+//! f32 (the PJRT weight-upload path) dequantize transiently from the
+//! cached plane and drop the f32 copy after use.
 //!
 //! Each entry is charged its **true** resident size,
-//! [`RuntimePlane::memory_bytes`] (codes + codebooks) — not the f32
-//! plane size and not the storage size.
+//! [`RuntimePlane::memory_bytes`] (packed code bytes incl. row padding +
+//! codebook bytes) — not the f32 plane size, not a byte-per-code size,
+//! and not the storage size.
 //!
 //! Eviction is least-recently-used over a *byte* budget (weight planes
 //! vary by orders of magnitude across layers, so an entry-count bound
@@ -174,20 +178,21 @@ mod tests {
     use crate::synthzoo;
 
     /// A synthetic runtime plane with an exactly-known byte footprint:
-    /// `rows·cols` code bytes + `rows · 2^(bits+1) · 4` codebook bytes.
+    /// `rows·⌈cols·(bits+1)/8⌉` packed code bytes +
+    /// `rows · 2^(bits+1) · 4` codebook bytes.
     fn plane(rows: usize, cols: usize, seed: u64) -> RuntimePlane {
         let bits = 1u32;
-        RuntimePlane {
-            rows,
-            cols,
-            codes: (0..rows * cols).map(|i| ((i as u64 ^ seed) % 4) as u8).collect(),
-            codebooks: (0..rows).map(|r| vec![r as f32; 1 << (bits + 1)]).collect(),
-            bits,
-        }
+        let codes: Vec<u8> = (0..rows * cols).map(|i| ((i as u64 ^ seed) % 4) as u8).collect();
+        let codebooks: Vec<f32> =
+            (0..rows).flat_map(|r| vec![r as f32; 1 << (bits + 1)]).collect();
+        RuntimePlane::from_byte_codes(rows, cols, bits, &codes, codebooks)
     }
 
-    /// plane(8, 224, _) → 8·224 + 8·4·4 = 1920 bytes.
-    const PLANE_BYTES: usize = 8 * 224 + 8 * 4 * 4;
+    /// plane(8, 224, _) → 8·⌈224·2/8⌉ + 8·4·4 = 448 + 128 = 576 bytes —
+    /// the *packed* footprint (the v1 byte-code plane was 8·224 + 128 =
+    /// 1920 bytes; a budget sized in packed bytes must be charged packed
+    /// bytes, or eviction fires 3× early).
+    const PLANE_BYTES: usize = 8 * 56 + 8 * 4 * 4;
 
     #[test]
     fn hit_returns_same_arc_and_counts() {
@@ -203,14 +208,34 @@ mod tests {
     }
 
     #[test]
-    fn charges_runtime_plane_bytes_not_f32() {
-        // Regression (the original accounting bug): the entry must be
-        // charged codes + codebooks, not the 4·rows·cols f32 plane.
+    fn charges_packed_plane_bytes_not_f32_or_byte_codes() {
+        // Regression (two generations of accounting bug): the entry must
+        // be charged packed codes + codebooks — not the 4·rows·cols f32
+        // plane, and not one byte per code either.
         let c = DecodeCache::new(1 << 20);
         let p = c.get_or_insert_with("p", || plane(8, 224, 3));
         assert_eq!(c.bytes_used(), p.memory_bytes());
+        assert_eq!(c.bytes_used(), PLANE_BYTES);
         assert!(c.bytes_used() < p.rows * p.cols * 4, "charged like f32");
+        assert!(c.bytes_used() < p.rows * p.cols, "charged like byte codes");
         assert_eq!(c.stats().decoded_bytes, p.memory_bytes() as u64);
+    }
+
+    #[test]
+    fn eviction_regression_budget_fits_more_packed_planes() {
+        // A budget that held exactly one v1 byte-code plane (1920 B)
+        // holds three packed planes (576 B each) with room to spare —
+        // the "~3× more layers resident at the same budget" claim, as an
+        // eviction regression: under byte-code accounting the second and
+        // third inserts would each evict.
+        let byte_plane_bytes = 8 * 224 + 8 * 4 * 4;
+        let c = DecodeCache::new(byte_plane_bytes);
+        c.get_or_insert_with("a", || plane(8, 224, 1));
+        c.get_or_insert_with("b", || plane(8, 224, 2));
+        c.get_or_insert_with("c", || plane(8, 224, 3));
+        assert_eq!(c.len(), 3, "three packed planes fit one byte-plane budget");
+        assert_eq!(c.stats().evictions, 0);
+        assert!(c.bytes_used() <= byte_plane_bytes);
     }
 
     #[test]
@@ -254,7 +279,7 @@ mod tests {
         let d2 = c.get_or_decode("m", &q);
         assert!(Arc::ptr_eq(&d1, &d2));
         let rt = q.to_runtime();
-        assert_eq!(d1.codes, rt.codes);
+        assert_eq!(d1.packed(), rt.packed());
         assert_eq!(d1.dequantize().data, rt.dequantize().data);
         assert_eq!(c.stats().misses, 1);
         assert_eq!(c.bytes_used(), rt.memory_bytes());

@@ -16,10 +16,11 @@
 //!   harnesses resolve models by `name@hash` instead of ad-hoc paths
 //!   (`put` / `get` / `list` / `verify` / `gc`).
 //! * [`cache`] — a byte-budget **LRU decode cache** holding fused
-//!   *runtime planes* (the [`crate::icquant::runtime`] decode: codes +
-//!   codebooks, ≈¼ of f32) so repeated prefill/decode batches never
-//!   re-decode the same layer and the byte budget stretches ≈4× further
-//!   than caching dequantized f32 would (DESIGN.md §6).
+//!   *runtime planes* (the [`crate::icquant::runtime`] decode:
+//!   bit-packed (n+1)-bit codes + flat codebooks, ≈(n+1)/32 of f32) so
+//!   repeated prefill/decode batches never re-decode the same layer and
+//!   the byte budget stretches ≈10× further at 2-bit than caching
+//!   dequantized f32 would (DESIGN.md §6).
 //!
 //! [`StoredModel`] ties the three together for the serving stack: open a
 //! container (usually resolved through the registry), keep the quantized
@@ -337,9 +338,10 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.misses, 1);
         assert_eq!(s.hits, 1);
-        // The cache is charged the runtime-plane size, not f32.
+        // The cache is charged the packed runtime-plane size — smaller
+        // than one byte per code, let alone f32.
         assert_eq!(cache.bytes_used(), a.memory_bytes());
-        assert!(cache.bytes_used() < a.rows * a.cols * 4);
+        assert!(cache.bytes_used() < a.rows * a.cols);
         // decode() dequantizes transiently off the same cached plane.
         let d1 = stored.decode("l0.wq").unwrap();
         assert_eq!(d1.data, a.dequantize().data);

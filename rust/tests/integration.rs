@@ -127,12 +127,14 @@ fn forward_q_entry_matches_dequantized_fp_path() {
             let q = IcqMatrix::quantize(&t.as_matrix(), None, &cfg).unwrap();
             let rt = q.to_runtime();
             replacements.insert(t.name.clone(), rt.dequantize());
-            let codes_i32: Vec<i32> = rt.codes.iter().map(|&c| c as i32).collect();
+            // The PJRT entry takes byte-lane codes (TPU has no sub-byte
+            // lanes); unpack the packed runtime plane for the ABI.
+            let codes_i32: Vec<i32> =
+                rt.byte_codes().iter().map(|&c| c as i32).collect();
             q_args.push(
                 HostTensor::I32(codes_i32, vec![rt.rows, rt.cols]).to_literal().unwrap(),
             );
-            let cb_flat: Vec<f32> =
-                rt.codebooks.iter().flat_map(|c| c.iter().copied()).collect();
+            let cb_flat: Vec<f32> = rt.codebooks_flat().to_vec();
             let cb_cols = 1usize << (bits + 1);
             q_args.push(
                 HostTensor::F32(cb_flat, vec![rt.rows, cb_cols]).to_literal().unwrap(),

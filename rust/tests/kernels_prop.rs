@@ -1,12 +1,15 @@
 //! Property tests for the fused quantized-plane kernels: the fused GEMV
-//! (and GEMM, and their multi-threaded variants) must be **bit-identical**
-//! to `RuntimePlane::dequantize()` followed by a dense matmul, across
-//! bit-widths, outlier ratios (including γ = 0, where the outlier
-//! codebook is all padding), and odd shapes (1×1, 1×N, row counts that
-//! leave remainder chunks under every thread split).
+//! (and GEMM, their pooled multi-threaded variants, and explicit-pool
+//! dispatch) must be **bit-identical** to `RuntimePlane::dequantize()`
+//! followed by a dense matmul, across bit-widths 2..=5 (packed widths
+//! 3..=6 — 3-bit codes cross byte boundaries inside every row), outlier
+//! ratios (including γ = 0, where the outlier codebook is all padding),
+//! odd shapes (1×1, 1×N, row counts that leave remainder chunks under
+//! every split, col counts at the gather BLOCK ± 1), and any worker
+//! count.
 
 use icquant::icquant::{IcqConfig, IcqMatrix};
-use icquant::kernels::{gemm, gemm_mt, gemv, gemv_mt};
+use icquant::kernels::{gemm, gemm_mt, gemm_on, gemv, gemv_mt, gemv_on, WorkerPool};
 use icquant::quant::QuantizerKind;
 use icquant::synthzoo;
 use icquant::util::miniprop::{check, Config};
@@ -24,7 +27,7 @@ fn prop_fused_gemv_bit_identical_to_dequant_matmul() {
         |rng, size| {
             let rows = 1 + (size * 40.0 * rng.f64()) as usize;
             let cols = 1 + (size * 900.0 * rng.f64()) as usize;
-            let bits = rng.range_inclusive(2, 4) as u32;
+            let bits = rng.range_inclusive(2, 5) as u32;
             let gamma = if rng.bool(0.5) { 0.05 } else { 0.0 };
             let threads = rng.range_inclusive(1, 7) as usize;
             let seed = rng.next_u64();
@@ -81,7 +84,7 @@ fn prop_fused_gemm_bit_identical_to_dequant_matmul() {
             let rows = 1 + (size * 24.0 * rng.f64()) as usize;
             let cols = 1 + (size * 500.0 * rng.f64()) as usize;
             let batch = 1 + rng.below(7) as usize;
-            let bits = rng.range_inclusive(2, 4) as u32;
+            let bits = rng.range_inclusive(2, 5) as u32;
             let gamma = if rng.bool(0.5) { 0.05 } else { 0.0 };
             let threads = rng.range_inclusive(1, 5) as usize;
             let seed = rng.next_u64();
@@ -130,12 +133,77 @@ fn prop_fused_gemm_bit_identical_to_dequant_matmul() {
     );
 }
 
+/// Gather-block boundary shapes, pinned: the fused kernels unpack 512
+/// codes per block, so cols at 511/512/513 exercise the full-block,
+/// exact-fit, and one-code-tail paths — at widths whose codes cross
+/// byte boundaries (3-bit for n=2, 5-bit for n=4).
+#[test]
+fn fused_gemv_block_boundary_cols_pinned() {
+    const BLOCK: usize = 512; // kernels' gather block size
+    for &cols in &[BLOCK - 1, BLOCK, BLOCK + 1] {
+        for bits in [2u32, 4] {
+            let w = synthzoo::demo_matrix(6, cols, 0xB10C + bits as u64);
+            let cfg = IcqConfig {
+                bits,
+                outlier_ratio: 0.05,
+                gap_bits: 6,
+                quantizer: QuantizerKind::Rtn,
+            };
+            let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+            let rt = q.to_runtime();
+            let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.43).sin()).collect();
+            let want = rt
+                .dequantize()
+                .matmul(&Matrix::from_vec(cols, 1, x.clone()))
+                .data;
+            let mut y = vec![0.0f32; 6];
+            gemv(&rt, &x, &mut y);
+            assert_eq!(bits_of(&y), bits_of(&want), "bits={} cols={}", bits, cols);
+            let mut ymt = vec![0.0f32; 6];
+            gemv_mt(&rt, &x, &mut ymt, 4);
+            assert_eq!(bits_of(&ymt), bits_of(&want), "mt bits={} cols={}", bits, cols);
+        }
+    }
+}
+
+/// Pool determinism: the same GEMV/GEMM dispatched onto pools of 1, 2,
+/// and 4 workers must produce bit-identical outputs — chunk→output
+/// mapping is fixed by the caller, so worker count (and which worker
+/// claims which chunk) cannot show up in the results.
+#[test]
+fn pool_worker_count_is_output_invariant() {
+    let w = synthzoo::demo_matrix(29, 700, 0x9001);
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let q = IcqMatrix::quantize(&w, None, &cfg).unwrap();
+    let rt = q.to_runtime();
+    let x: Vec<f32> = (0..700).map(|i| (i as f32 * 0.29).cos()).collect();
+    let mut want_v = vec![0.0f32; 29];
+    gemv(&rt, &x, &mut want_v);
+    let xm = Matrix::from_vec(3, 700, (0..3 * 700).map(|i| (i as f32 * 0.07).sin()).collect());
+    let mut want_m = Matrix::zeros(3, 29);
+    gemm(&rt, &xm, &mut want_m);
+    for workers in [1usize, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        let mut y = vec![0.0f32; 29];
+        gemv_on(&pool, &rt, &x, &mut y);
+        assert_eq!(bits_of(&y), bits_of(&want_v), "gemv workers={}", workers);
+        let mut ym = Matrix::zeros(3, 29);
+        gemm_on(&pool, &rt, &xm, &mut ym);
+        assert_eq!(bits_of(&ym.data), bits_of(&want_m.data), "gemm workers={}", workers);
+    }
+}
+
 /// The explicit corner shapes called out in the issue, pinned (the
 /// property above covers them probabilistically).
 #[test]
 fn fused_gemv_corner_shapes_pinned() {
     for &(rows, cols) in &[(1usize, 1usize), (1, 513), (5, 2), (7, 64)] {
-        for bits in [2u32, 3, 4] {
+        for bits in [2u32, 3, 4, 5] {
             for gamma in [0.0, 0.05] {
                 let w = synthzoo::demo_matrix(rows, cols, 0xC0 + bits as u64);
                 let cfg = IcqConfig {
