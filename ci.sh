@@ -11,6 +11,33 @@ cargo build --release
 echo "=== cargo test -q ==="
 cargo test -q
 
+echo "=== randomized suites: seed × pool-worker matrix ==="
+# Re-run the scheduler fuzz harness and the end-to-end pipeline property
+# under several seeds and kernel-pool widths (DESIGN.md §10). The
+# harness prints its completed-case counts; the run is gated on the
+# fuzz harness finishing at least 64 randomized cases per matrix cell.
+FUZZ_LOG_DIR=$(mktemp -d)
+for seed in 1 2; do
+    for workers in 1 4; do
+        log="$FUZZ_LOG_DIR/fuzz_s${seed}_w${workers}.log"
+        echo "--- ICQ_TEST_SEED=$seed ICQ_POOL_WORKERS=$workers ---"
+        ICQ_TEST_SEED=$seed ICQ_POOL_WORKERS=$workers \
+            cargo test -q --test scheduler_fuzz --test e2e_pipeline -- --nocapture \
+            | tee "$log"
+        # `|| true`: grep exits 1 on zero matches, which under pipefail
+        # would abort the script before the FAIL diagnostic below —
+        # awk's `s + 0` already yields 0 for an empty stream.
+        cases=$( (grep -o 'scheduler_fuzz: completed [0-9]*' "$log" || true) \
+            | awk '{s += $3} END {print s + 0}')
+        if [ "$cases" -lt 64 ]; then
+            echo "FAIL: fuzz harness completed only $cases randomized cases (< 64)" >&2
+            exit 1
+        fi
+        echo "fuzz harness: $cases randomized cases (seed=$seed workers=$workers)"
+    done
+done
+rm -rf "$FUZZ_LOG_DIR"
+
 echo "=== cargo fmt --check ==="
 cargo fmt --check
 
@@ -32,6 +59,20 @@ echo "recorded ../BENCH_kernels.json"
 for key in bytes_per_weight fused_vs_dequant_speedup plane_shrink_ratio_2bit pool_vs_spawn_speedup; do
     grep -q "\"$key\"" ../BENCH_kernels.json \
         || { echo "FAIL: BENCH_kernels.json missing required key '$key'" >&2; exit 1; }
+done
+
+echo "=== paging bench → BENCH_paging.json ==="
+# Paged-vs-contiguous layout A/B and the shared-system-prompt TTFT
+# workload (DESIGN.md §10). Hard gate: the bench asserts bit-identical
+# streams across layouts and a measured prefill win from prefix reuse,
+# and the recorded JSON must carry the required keys.
+cargo bench --bench paging
+test -f BENCH_paging.json || { echo "FAIL: paging bench wrote no BENCH_paging.json" >&2; exit 1; }
+mv BENCH_paging.json ../BENCH_paging.json
+echo "recorded ../BENCH_paging.json"
+for key in paged_vs_contiguous_ratio shared_prefix_ttft_speedup shared_prefix_prefill_speedup prefix_hits block_utilization; do
+    grep -q "\"$key\"" ../BENCH_paging.json \
+        || { echo "FAIL: BENCH_paging.json missing required key '$key'" >&2; exit 1; }
 done
 
 echo "=== serving bench → BENCH_serving.json ==="

@@ -202,6 +202,10 @@ fn main() -> anyhow::Result<()> {
     println!("requests / tokens      : {} / {}", snap.requests, total_tokens);
     println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
+    println!(
+        "paged KV cache         : {} prefix block hits, {}/{} blocks peak/total, {} evicted",
+        snap.prefix_hits, snap.blocks_in_use_peak, snap.kv_total_blocks, snap.blocks_evicted
+    );
     let cstats = cache.stats();
     println!(
         "shared plane cache     : {} hits / {} misses — the PJRT phase's decodes were reused",

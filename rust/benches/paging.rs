@@ -1,0 +1,245 @@
+//! Paged-KV serving benches, recorded as `BENCH_paging.json` (ci.sh
+//! hard gate). Two A/Bs over the native fused-kernel backend:
+//!
+//! 1. **Layout** — the same mixed workload through the paged cache
+//!    (16-token blocks) and through the contiguous-equivalent layout
+//!    (one `max_seq` block per slot, sharing off): tokens/s for each,
+//!    plus the block-table overhead ratio. Outputs are asserted
+//!    bit-identical — paging must never change a stream.
+//! 2. **Shared prefix** — the dominant multi-user scenario: every
+//!    request carries the same long system prompt. With prefix sharing
+//!    the registry serves the prefix blocks and prefill recomputes only
+//!    the per-request tail, so TTFT and prefill latency drop; the bench
+//!    records the measured improvement and the prefix-hit counters, and
+//!    asserts outputs identical to the no-sharing arm.
+
+use icquant::coordinator::backend::NativeBackend;
+use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
+use icquant::icquant::IcqConfig;
+use icquant::kernels::{KvLayout, NativeModel};
+use icquant::quant::QuantizerKind;
+use icquant::store::{synth_model, DecodeCache, StoredModel};
+use icquant::synthzoo::FamilySpec;
+use icquant::util::json::Json;
+use icquant::util::prng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SLOTS: usize = 4;
+const THREADS: usize = 2;
+const N_REQUESTS: usize = 24;
+const PREFILL_LEN: usize = 48;
+const SYSTEM_PROMPT: usize = 40;
+const MAX_TOKENS: usize = 8;
+
+fn bench_family() -> FamilySpec {
+    FamilySpec {
+        name: "paging-bench",
+        d_model: 64,
+        d_ff: 128,
+        n_blocks: 2,
+        tail_frac: 0.02,
+        tail_scale: 2.5,
+        oproj_hot: 0.5,
+        seed: 0x9A6E,
+    }
+}
+
+fn stored() -> StoredModel {
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = synth_model(&bench_family(), &cfg, None).unwrap();
+    let cache = Arc::new(DecodeCache::new(256 << 20));
+    StoredModel::from_model(model, cache, "paging-bench")
+}
+
+struct RunReport {
+    tokens: usize,
+    wall_s: f64,
+    tokens_per_s: f64,
+    avg_ttft_ms: f64,
+    avg_prefill_ms: f64,
+    prefix_hits: u64,
+    prefix_hit_tokens: u64,
+    blocks_in_use_peak: usize,
+    kv_total_blocks: usize,
+    block_utilization: f64,
+    cow_forks: u64,
+    outputs: Vec<Vec<i32>>,
+}
+
+/// Serve `prompts` through the continuous scheduler with one KV layout.
+fn run_workload(stored: &StoredModel, layout: KvLayout, prompts: &[Vec<i32>]) -> RunReport {
+    let native = NativeModel::from_stored(stored, THREADS).unwrap();
+    let cfg = ServeConfig {
+        max_batch: SLOTS,
+        max_wait: Duration::from_millis(2),
+        max_new_tokens: MAX_TOKENS,
+        buckets: vec![1, 2, SLOTS],
+        prefill_len: PREFILL_LEN,
+        pad_id: b' ' as i32,
+        scheduler: SchedulerKind::Continuous,
+    };
+    let server =
+        Server::start(cfg, move || Ok(NativeBackend::new(native).with_kv_layout(layout)));
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for p in prompts {
+        rxs.push(server.submit(p.clone(), MAX_TOKENS).unwrap().1);
+    }
+    let mut outputs = Vec::new();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        tokens += resp.tokens.len();
+        outputs.push(resp.tokens);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    server.shutdown();
+    RunReport {
+        tokens,
+        wall_s,
+        tokens_per_s: tokens as f64 / wall_s,
+        avg_ttft_ms: snap.avg_ttft_ms,
+        avg_prefill_ms: snap.avg_prefill_ms,
+        prefix_hits: snap.prefix_hits,
+        prefix_hit_tokens: snap.prefix_hit_tokens,
+        blocks_in_use_peak: snap.blocks_in_use_peak,
+        kv_total_blocks: snap.kv_total_blocks,
+        block_utilization: snap.block_utilization,
+        cow_forks: snap.cow_forks,
+        outputs,
+    }
+}
+
+fn report_json(r: &RunReport) -> Json {
+    Json::obj(vec![
+        ("tokens", Json::num(r.tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tokens_per_s", Json::num(r.tokens_per_s)),
+        ("avg_ttft_ms", Json::num(r.avg_ttft_ms)),
+        ("avg_prefill_ms", Json::num(r.avg_prefill_ms)),
+        ("prefix_hits", Json::num(r.prefix_hits as f64)),
+        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
+        ("blocks_in_use_peak", Json::num(r.blocks_in_use_peak as f64)),
+        ("kv_total_blocks", Json::num(r.kv_total_blocks as f64)),
+        ("block_utilization", Json::num(r.block_utilization)),
+        ("cow_forks", Json::num(r.cow_forks as f64)),
+    ])
+}
+
+fn main() {
+    let stored = stored();
+    println!(
+        "paging bench: {} requests, {} KV slots, prefill {} tokens, {} decode tokens, {} threads",
+        N_REQUESTS, SLOTS, PREFILL_LEN, MAX_TOKENS, THREADS
+    );
+
+    // --- 1. layout A/B: paged vs contiguous-equivalent, mixed prompts --
+    let mut rng = Rng::new(0x9A6E_BEEF);
+    let mixed: Vec<Vec<i32>> = (0..N_REQUESTS)
+        .map(|_| {
+            (0..8 + rng.below(32) as usize).map(|_| rng.below(256) as i32).collect()
+        })
+        .collect();
+    let model_cfg = stored.config.clone().unwrap();
+    let paged =
+        run_workload(&stored, KvLayout { block_tokens: 16, total_blocks: None, prefix_sharing: true }, &mixed);
+    let contiguous = run_workload(&stored, KvLayout::contiguous(&model_cfg), &mixed);
+    assert_eq!(
+        paged.outputs, contiguous.outputs,
+        "paged and contiguous streams must be bit-identical"
+    );
+    let layout_ratio = paged.tokens_per_s / contiguous.tokens_per_s;
+    println!(
+        "layout A/B:  paged {:.1} tok/s vs contiguous {:.1} tok/s (ratio {:.3}); \
+         peak blocks {}/{} ({:.0}% utilized)",
+        paged.tokens_per_s,
+        contiguous.tokens_per_s,
+        layout_ratio,
+        paged.blocks_in_use_peak,
+        paged.kv_total_blocks,
+        paged.block_utilization * 100.0
+    );
+
+    // --- 2. shared system prompt: sharing on vs off -------------------
+    let system: Vec<i32> = (0..SYSTEM_PROMPT).map(|_| 32 + rng.below(95) as i32).collect();
+    let shared_prompts: Vec<Vec<i32>> = (0..N_REQUESTS)
+        .map(|_| {
+            let mut p = system.clone();
+            p.extend((0..6).map(|_| rng.below(256) as i32));
+            p
+        })
+        .collect();
+    let sharing_on = run_workload(
+        &stored,
+        KvLayout { block_tokens: 16, total_blocks: None, prefix_sharing: true },
+        &shared_prompts,
+    );
+    let sharing_off = run_workload(
+        &stored,
+        KvLayout { block_tokens: 16, total_blocks: None, prefix_sharing: false },
+        &shared_prompts,
+    );
+    assert_eq!(
+        sharing_on.outputs, sharing_off.outputs,
+        "prefix sharing must never change a stream"
+    );
+    assert!(
+        sharing_on.prefix_hits > 0,
+        "shared system prompts produced no prefix hits"
+    );
+    assert!(
+        sharing_on.avg_prefill_ms < sharing_off.avg_prefill_ms,
+        "prefix reuse did not reduce prefill latency: {:.2} ms vs {:.2} ms",
+        sharing_on.avg_prefill_ms,
+        sharing_off.avg_prefill_ms
+    );
+    let ttft_speedup = sharing_off.avg_ttft_ms / sharing_on.avg_ttft_ms;
+    let prefill_speedup = sharing_off.avg_prefill_ms / sharing_on.avg_prefill_ms;
+    println!(
+        "shared-prefix: ttft {:.2} ms → {:.2} ms ({:.2}x), prefill {:.2} ms → {:.2} ms ({:.2}x)",
+        sharing_off.avg_ttft_ms,
+        sharing_on.avg_ttft_ms,
+        ttft_speedup,
+        sharing_off.avg_prefill_ms,
+        sharing_on.avg_prefill_ms,
+        prefill_speedup
+    );
+    println!(
+        "               {} prefix block hits ({} prompt tokens not recomputed), {} CoW forks",
+        sharing_on.prefix_hits, sharing_on.prefix_hit_tokens, sharing_on.cow_forks
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("paging")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("requests", Json::num(N_REQUESTS as f64)),
+                ("kv_slots", Json::num(SLOTS as f64)),
+                ("prefill_len", Json::num(PREFILL_LEN as f64)),
+                ("system_prompt_tokens", Json::num(SYSTEM_PROMPT as f64)),
+                ("max_tokens", Json::num(MAX_TOKENS as f64)),
+                ("block_tokens", Json::num(16.0)),
+                ("threads", Json::num(THREADS as f64)),
+            ]),
+        ),
+        ("paged", report_json(&paged)),
+        ("contiguous", report_json(&contiguous)),
+        ("paged_vs_contiguous_ratio", Json::num(layout_ratio)),
+        ("shared_prefix", report_json(&sharing_on)),
+        ("unshared_prefix", report_json(&sharing_off)),
+        ("shared_prefix_ttft_speedup", Json::num(ttft_speedup)),
+        ("shared_prefix_prefill_speedup", Json::num(prefill_speedup)),
+        ("prefix_hits", Json::num(sharing_on.prefix_hits as f64)),
+    ]);
+    std::fs::write("BENCH_paging.json", json.to_string()).unwrap();
+    println!("\nwrote BENCH_paging.json");
+}

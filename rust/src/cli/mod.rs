@@ -139,7 +139,7 @@ fn print_help() {
     println!("  bound [--gamma g]             Lemma 1 bound + optimal b");
     println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
     println!("        [--backend pjrt|native] [--family f] [--bits n]");
-    println!("        [--threads t]           batched serving demo;");
+    println!("        [--threads t] [--block-size b]  batched serving demo;");
     println!("                                pjrt = AOT HLO (needs artifacts),");
     println!("                                native = fused quantized-plane CPU");
     println!("                                kernels, no artifacts needed");
@@ -451,6 +451,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.flag("family").unwrap_or("llama3.2-1b"),
             args.usize_flag("bits", 2)? as u32,
             args.usize_flag("threads", 0)?, // 0 ⇒ all cores
+            args.usize_flag("block-size", 0)?, // 0 ⇒ default KV block size
         ),
         other => bail!("unknown backend '{}' (expected pjrt|native)", other),
     }

@@ -16,7 +16,7 @@ use crate::coordinator::{SchedulerKind, ServeConfig, Server};
 use crate::eval::load_corpus_tokens;
 use crate::experiments::methods::Method;
 use crate::icquant::IcqConfig;
-use crate::kernels::NativeModel;
+use crate::kernels::{KvLayout, NativeModel, DEFAULT_BLOCK_TOKENS};
 use crate::model::{artifacts_dir, TrainedModel};
 use crate::quant::QuantizerKind;
 use crate::store::{synth_model, DecodeCache, StoredModel};
@@ -36,6 +36,7 @@ pub fn run_native(
     family_name: &str,
     bits: u32,
     threads: usize,
+    block_tokens: usize,
 ) -> Result<()> {
     let family = crate::synthzoo::family(family_name).ok_or_else(|| {
         anyhow::anyhow!("unknown family '{}' (see `icquant zoo`)", family_name)
@@ -71,6 +72,14 @@ pub fn run_native(
         "  kernel pool          : {} executors (persistent, parked between tokens) | backend: native fused GEMM (no PJRT)",
         threads
     );
+    let kv_layout = KvLayout {
+        block_tokens: if block_tokens == 0 { DEFAULT_BLOCK_TOKENS } else { block_tokens },
+        ..KvLayout::default()
+    };
+    println!(
+        "  paged KV cache       : {}-token blocks, shared-prefix reuse on (DESIGN.md §10)",
+        kv_layout.block_tokens
+    );
 
     // Unlike PJRT there are no pre-compiled bucket entries, so grow the
     // bucket ladder to cover whatever batch size was requested.
@@ -90,15 +99,19 @@ pub fn run_native(
         pad_id: b' ' as i32,
         scheduler: SchedulerKind::Continuous,
     };
-    let server = Server::start(cfg, move || Ok(NativeBackend::new(native)));
+    let server =
+        Server::start(cfg, move || Ok(NativeBackend::new(native).with_kv_layout(kv_layout)));
 
-    // Workload: synthetic printable-byte prompts (byte-level vocab).
+    // Workload: synthetic printable-byte prompts (byte-level vocab)
+    // behind one shared "system prompt" prefix — the scenario the paged
+    // cache's prefix reuse targets (DESIGN.md §10).
     let mut rng = Rng::new(0x5E2E);
+    let system: Vec<i32> = (0..16).map(|_| 32 + (rng.below(95)) as i32).collect();
     let t0 = Instant::now();
     let mut rxs = Vec::new();
     for _ in 0..n_requests {
-        let prompt: Vec<i32> =
-            (0..24).map(|_| 32 + (rng.below(95)) as i32).collect();
+        let mut prompt = system.clone();
+        prompt.extend((0..8).map(|_| 32 + (rng.below(95)) as i32));
         let (_, rx) = server.submit(prompt, max_tokens)?;
         rxs.push(rx);
     }
@@ -125,6 +138,18 @@ pub fn run_native(
     println!("avg time-to-1st-token  : {:.1} ms", snap.avg_ttft_ms);
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
     println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
+    println!(
+        "prefix cache           : {} block hits ({} prompt tokens not recomputed), {} CoW forks",
+        snap.prefix_hits, snap.prefix_hit_tokens, snap.cow_forks
+    );
+    println!(
+        "KV blocks              : {} in use / {} peak / {} total ({:.0}% peak utilization), {} evicted",
+        snap.blocks_in_use,
+        snap.blocks_in_use_peak,
+        snap.kv_total_blocks,
+        snap.block_utilization * 100.0,
+        snap.blocks_evicted
+    );
     println!(
         "plane cache            : {} hits / {} misses ({} decoded, {} resident)",
         cstats.hits,

@@ -21,7 +21,7 @@
 //! tests; [`SimBackend`] adds a simulated per-slot step cost so benches
 //! can compare scheduler policies on one machine.
 
-use crate::kernels::{KvCache, NativeModel, WorkerPool};
+use crate::kernels::{KvCache, KvCacheStats, KvLayout, NativeModel, WorkerPool};
 use crate::model::TrainedModel;
 use crate::runtime::{Engine, HostTensor};
 use crate::store::{DecodeCache, StoredModel};
@@ -174,6 +174,47 @@ pub trait Backend {
     /// request runs out of room quietly (short response) instead of
     /// erroring the whole batch mid-decode.
     fn max_positions(&self) -> Option<usize> {
+        None
+    }
+
+    /// Paged-cache admission headroom: `(allocatable blocks, tokens per
+    /// block)`. Backends with a paged KV cache (DESIGN.md §10) report
+    /// how many blocks an admission round can draw on — free-list
+    /// blocks plus evictable prefix-registry blocks — so the scheduler
+    /// admits on **free blocks**, not free slots. `None` keeps the
+    /// slot-only admission of mocks and wave-mode executors.
+    fn kv_block_headroom(&self, state: &DecodeState) -> Option<(usize, usize)> {
+        let _ = state;
+        None
+    }
+
+    /// Blocks admitting this (already prefill-normalized) prompt would
+    /// newly allocate, consulting any prefix-sharing state — so the
+    /// admission gate charges shared-prefix requests what they really
+    /// cost instead of worst-case prompt blocks. `None` falls back to
+    /// the gate's worst-case estimate.
+    fn admission_block_need(&self, state: &DecodeState, prompt: &[i32]) -> Option<usize> {
+        let _ = (state, prompt);
+        None
+    }
+
+    /// Reserve up to `want` future decode tokens of KV capacity for
+    /// `slot`, returning how many are **guaranteed**. The scheduler
+    /// clamps each request's token target to this at admission, so an
+    /// overcommitted paged pool ends an over-long request early (short
+    /// response) instead of exhausting mid-decode and erroring its
+    /// whole batch. The default guarantees everything (unbounded or
+    /// per-slot-provisioned caches).
+    fn reserve_tokens(&mut self, state: &mut DecodeState, slot: usize, want: usize) -> usize {
+        let _ = (state, slot);
+        want
+    }
+
+    /// Point-in-time paged-cache counters (prefix hits, block
+    /// occupancy, evictions, CoW forks), when the backend has a paged
+    /// cache — surfaced into serving [`Metrics`](super::metrics::Metrics).
+    fn kv_cache_stats(&self, state: &DecodeState) -> Option<KvCacheStats> {
+        let _ = state;
         None
     }
 
@@ -367,17 +408,31 @@ impl Backend for PjrtBackend {
 /// PJRT, no Python at request time. Selected with
 /// `serve --backend=native`.
 ///
-/// Slot operations map directly onto the slot-addressed host
-/// [`KvCache`]: admission is a batch-1 prefill into a freed lane,
-/// decode runs the fused kernels over the active lanes only, and
-/// retirement is a position reset.
+/// Slot operations map directly onto the **paged** host [`KvCache`]
+/// (DESIGN.md §10): admission prefills into a freed lane (reusing any
+/// registered shared-prefix blocks), decode runs the fused kernels over
+/// the active lanes only, and retirement decrements block refcounts and
+/// returns exclusive blocks to the free list.
 pub struct NativeBackend {
     model: NativeModel,
+    layout: KvLayout,
 }
 
 impl NativeBackend {
     pub fn new(model: NativeModel) -> NativeBackend {
-        NativeBackend { model }
+        NativeBackend { model, layout: KvLayout::default() }
+    }
+
+    /// Override the paged-cache layout (block size, pool size, prefix
+    /// sharing) used for every state this backend creates.
+    pub fn with_kv_layout(mut self, layout: KvLayout) -> NativeBackend {
+        self.layout = layout;
+        self
+    }
+
+    /// The paged-cache layout new decode states are built with.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.layout
     }
 
     /// Build from an opened container, pulling every projection through
@@ -385,7 +440,7 @@ impl NativeBackend {
     /// model's persistent kernel pool (0 ⇒ all cores); the pool is
     /// spawned here, once — the decode loop only enqueues onto it.
     pub fn from_stored(stored: &StoredModel, threads: usize) -> Result<NativeBackend> {
-        Ok(NativeBackend { model: NativeModel::from_stored(stored, threads)? })
+        Ok(NativeBackend::new(NativeModel::from_stored(stored, threads)?))
     }
 
     /// [`Self::from_stored`] dispatching onto an existing kernel pool —
@@ -395,7 +450,7 @@ impl NativeBackend {
         stored: &StoredModel,
         pool: Arc<WorkerPool>,
     ) -> Result<NativeBackend> {
-        Ok(NativeBackend { model: NativeModel::from_stored_with_pool(stored, pool)? })
+        Ok(NativeBackend::new(NativeModel::from_stored_with_pool(stored, pool)?))
     }
 
     /// Open an `ICQZ` container and build the native backend from it.
@@ -418,7 +473,8 @@ impl Backend for NativeBackend {
     fn new_state(&mut self, cap: usize) -> Result<DecodeState> {
         ensure!(cap > 0, "state needs at least one slot");
         let mut state = DecodeState::empty(cap);
-        state.kv = KvState::Native(KvCache::new(&self.model.config, cap));
+        state.kv =
+            KvState::Native(KvCache::with_layout(&self.model.config, cap, self.layout));
         Ok(state)
     }
 
@@ -494,6 +550,34 @@ impl Backend for NativeBackend {
 
     fn max_positions(&self) -> Option<usize> {
         Some(self.model.config.max_seq)
+    }
+
+    fn kv_block_headroom(&self, state: &DecodeState) -> Option<(usize, usize)> {
+        match &state.kv {
+            KvState::Native(kv) => Some((kv.admission_free_blocks(), kv.block_tokens())),
+            _ => None,
+        }
+    }
+
+    fn admission_block_need(&self, state: &DecodeState, prompt: &[i32]) -> Option<usize> {
+        match &state.kv {
+            KvState::Native(kv) => Some(kv.admission_block_need(prompt)),
+            _ => None,
+        }
+    }
+
+    fn reserve_tokens(&mut self, state: &mut DecodeState, slot: usize, want: usize) -> usize {
+        match &mut state.kv {
+            KvState::Native(kv) => kv.reserve(slot, want),
+            _ => want,
+        }
+    }
+
+    fn kv_cache_stats(&self, state: &DecodeState) -> Option<KvCacheStats> {
+        match &state.kv {
+            KvState::Native(kv) => Some(kv.stats()),
+            _ => None,
+        }
     }
 
     fn retire(&mut self, state: &mut DecodeState, slot: usize) -> Result<()> {
@@ -860,6 +944,67 @@ mod tests {
         assert!(b.prefill_into_many(&mut state, &[(0, other)]).is_err());
         // KV headroom is reported for the scheduler's target clamp.
         assert_eq!(b.max_positions(), Some(b.model().config.max_seq));
+    }
+
+    /// The paged-cache plumbing the scheduler drives: block headroom is
+    /// reported, reservations clamp to allocatable headroom, stats
+    /// count prefix hits, and retirement returns blocks.
+    #[test]
+    fn native_backend_reports_paged_headroom_and_stats() {
+        use crate::icquant::IcqConfig;
+        use crate::kernels::KvLayout;
+        use crate::quant::QuantizerKind;
+        use crate::store::synth_model;
+        use crate::synthzoo::FamilySpec;
+
+        let family = FamilySpec {
+            name: "tiny-backend-paged",
+            d_model: 32,
+            d_ff: 64,
+            n_blocks: 1,
+            tail_frac: 0.02,
+            tail_scale: 2.5,
+            oproj_hot: 0.5,
+            seed: 0xBAC4,
+        };
+        let cfg = IcqConfig {
+            bits: 2,
+            outlier_ratio: 0.05,
+            gap_bits: 6,
+            quantizer: QuantizerKind::Rtn,
+        };
+        let model = synth_model(&family, &cfg, None).unwrap();
+        let cache = Arc::new(DecodeCache::new(64 << 20));
+        let stored = StoredModel::from_model(model, cache, "native-paged");
+        let layout =
+            KvLayout { block_tokens: 4, total_blocks: Some(6), prefix_sharing: true };
+        let mut b = NativeBackend::from_stored(&stored, 1)
+            .unwrap()
+            .with_kv_layout(layout);
+        assert_eq!(b.kv_layout().block_tokens, 4);
+        let mut state = b.new_state(2).unwrap();
+        assert_eq!(b.kv_block_headroom(&state), Some((6, 4)));
+        assert!(b.kv_cache_stats(&state).unwrap().blocks_in_use == 0);
+
+        // Admit an 8-token prompt: 2 blocks used, 4 left.
+        let prompt = vec![10, 20, 30, 40, 50, 60, 70, 80];
+        b.prefill_into(&mut state, 0, &prompt).unwrap();
+        assert_eq!(b.kv_block_headroom(&state), Some((4, 4)));
+        // Reservation clamps to the allocatable headroom: 4 blocks ⇒
+        // 16 tokens on top of zero slack.
+        assert_eq!(b.reserve_tokens(&mut state, 0, 1000), 16);
+        assert_eq!(b.kv_block_headroom(&state), Some((0, 4)));
+
+        // An identical prompt cannot be admitted now (no blocks)…
+        assert!(b.prefill_into_many(&mut state, &[(1, prompt.clone())]).is_err());
+        // …but after retirement the blocks come back (some held only by
+        // the prefix registry, which still counts as allocatable).
+        b.retire(&mut state, 0).unwrap();
+        assert_eq!(b.kv_block_headroom(&state), Some((6, 4)));
+        b.prefill_into(&mut state, 1, &prompt).unwrap();
+        let stats = b.kv_cache_stats(&state).unwrap();
+        assert!(stats.prefix_hit_blocks >= 2, "re-admitted prompt reuses its blocks");
+        assert!(stats.blocks_in_use >= 2);
     }
 
     /// Two backends sharing one kernel pool must produce the same

@@ -18,6 +18,32 @@ pub struct PendingRequest {
     pub req: GenerateRequest,
     pub tx: Sender<GenerateResponse>,
     pub arrived: Instant,
+    /// Prompt normalized to the prefill window, computed lazily and
+    /// exactly once — the block-admission gate re-examines queued
+    /// requests every scheduler iteration, and re-running
+    /// [`fit_prompt`] per step would put a per-candidate allocation on
+    /// the decode loop.
+    normalized: Option<Vec<i32>>,
+}
+
+impl PendingRequest {
+    pub fn new(
+        req: GenerateRequest,
+        tx: Sender<GenerateResponse>,
+        arrived: Instant,
+    ) -> PendingRequest {
+        PendingRequest { req, tx, arrived, normalized: None }
+    }
+
+    /// The prompt fitted to the prefill window ([`fit_prompt`]), cached
+    /// after the first call. `window`/`pad_id` are fixed per server, so
+    /// the cache can never go stale.
+    pub fn normalized(&mut self, window: usize, pad_id: i32) -> &[i32] {
+        if self.normalized.is_none() {
+            self.normalized = Some(fit_prompt(&self.req.prompt, window, pad_id));
+        }
+        self.normalized.as_deref().unwrap()
+    }
 }
 
 /// Flush policy: emit the batch when it is full or the oldest member has

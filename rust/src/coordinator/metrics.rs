@@ -9,6 +9,7 @@
 //! rounding with NaN-safe `total_cmp` ordering (the old `as usize`
 //! truncation floored the rank, biasing p99 low on small samples).
 
+use crate::kernels::KvCacheStats;
 use crate::util::prng::Rng;
 use std::sync::Mutex;
 
@@ -102,6 +103,24 @@ struct Inner {
     decode_steps: u64,
     active_slot_sum: u64,
     latencies: Reservoir,
+    /// Paged-KV pressure (DESIGN.md §10): fixed-size counters copied
+    /// from the backend's cache each step — reservoir-safe like the
+    /// latency fix, nothing here grows with traffic. A cache's counters
+    /// are monotonic only for its lifetime and caches are recreated
+    /// (per wave; after a decode error), so the totals are kept as
+    /// `base` (sum of all finished cache epochs) + `last` (the live
+    /// cache's current values); `record_kv` rolls `last` into `base`
+    /// when a new epoch starts. `blocks_in_use` is a gauge with a
+    /// tracked peak.
+    kv_base: KvCacheStats,
+    kv_last: KvCacheStats,
+    blocks_in_use: usize,
+    blocks_in_use_peak: usize,
+    /// Peak of per-sample `in_use / total` ratios — pool sizes differ
+    /// across epochs (wave buckets), so a cross-epoch absolute peak
+    /// divided by the latest total would be meaningless (even > 1).
+    block_utilization_peak: f64,
+    kv_total_blocks: usize,
 }
 
 impl Default for Inner {
@@ -119,6 +138,12 @@ impl Default for Inner {
             decode_steps: 0,
             active_slot_sum: 0,
             latencies: Reservoir::new(),
+            kv_base: KvCacheStats::default(),
+            kv_last: KvCacheStats::default(),
+            blocks_in_use: 0,
+            blocks_in_use_peak: 0,
+            block_utilization_peak: 0.0,
+            kv_total_blocks: 0,
         }
     }
 }
@@ -145,6 +170,25 @@ pub struct Snapshot {
     pub decode_steps: u64,
     /// Mean KV slots occupied per decode step.
     pub avg_active_slots: f64,
+    /// Prompt blocks served from the shared-prefix registry instead of
+    /// being recomputed (cumulative; 0 for non-paged backends).
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill compute the registry skipped.
+    pub prefix_hit_tokens: u64,
+    /// KV blocks currently allocated / the high-water mark.
+    pub blocks_in_use: usize,
+    pub blocks_in_use_peak: usize,
+    /// Registered blocks recycled under pool pressure (cumulative).
+    pub blocks_evicted: u64,
+    /// Copy-on-write forks of shared blocks (cumulative).
+    pub cow_forks: u64,
+    /// Physical blocks in the paged pool (0 for non-paged backends;
+    /// the latest epoch's pool — wave buckets size pools differently).
+    pub kv_total_blocks: usize,
+    /// Peak per-sample fraction of the block pool in use (0 when
+    /// non-paged); each sample is measured against its own epoch's
+    /// pool size, so this never exceeds 1.
+    pub block_utilization: f64,
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
     /// Latencies observed / currently held in the reservoir.
@@ -167,6 +211,30 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.decode_steps += 1;
         m.active_slot_sum += active as u64;
+    }
+
+    /// Latest paged-cache counters from the backend (DESIGN.md §10).
+    /// `new_epoch` marks the first report from a **recreated** cache
+    /// (a fresh wave state, or the replacement state after a decode
+    /// error): the previous cache's final counters roll into the
+    /// cumulative base so totals never reset or move backwards.
+    /// `blocks_in_use` updates a gauge + peak. Constant-size state —
+    /// safe under sustained traffic, like the latency reservoir.
+    pub fn record_kv(&self, s: &KvCacheStats, new_epoch: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if new_epoch {
+            m.kv_base.prefix_hit_blocks += m.kv_last.prefix_hit_blocks;
+            m.kv_base.prefix_hit_tokens += m.kv_last.prefix_hit_tokens;
+            m.kv_base.blocks_evicted += m.kv_last.blocks_evicted;
+            m.kv_base.cow_forks += m.kv_last.cow_forks;
+        }
+        m.kv_last = *s;
+        m.blocks_in_use = s.blocks_in_use;
+        m.blocks_in_use_peak = m.blocks_in_use_peak.max(s.blocks_in_use);
+        m.block_utilization_peak = m
+            .block_utilization_peak
+            .max(s.blocks_in_use as f64 / s.total_blocks.max(1) as f64);
+        m.kv_total_blocks = s.total_blocks;
     }
 
     pub fn record_request(&self, t: &RequestTiming) {
@@ -196,6 +264,14 @@ impl Metrics {
             avg_decode_ms_per_token: m.decode_ms_sum / m.tokens.max(1) as f64,
             decode_steps: m.decode_steps,
             avg_active_slots: m.active_slot_sum as f64 / m.decode_steps.max(1) as f64,
+            prefix_hits: m.kv_base.prefix_hit_blocks + m.kv_last.prefix_hit_blocks,
+            prefix_hit_tokens: m.kv_base.prefix_hit_tokens + m.kv_last.prefix_hit_tokens,
+            blocks_in_use: m.blocks_in_use,
+            blocks_in_use_peak: m.blocks_in_use_peak,
+            blocks_evicted: m.kv_base.blocks_evicted + m.kv_last.blocks_evicted,
+            cow_forks: m.kv_base.cow_forks + m.kv_last.cow_forks,
+            kv_total_blocks: m.kv_total_blocks,
+            block_utilization: m.block_utilization_peak,
             p50_latency_ms: percentile(&lat, 0.5),
             p99_latency_ms: percentile(&lat, 0.99),
             latencies_seen: m.latencies.seen,
@@ -236,6 +312,78 @@ mod tests {
         assert_eq!(s.decode_steps, 2);
         assert!((s.avg_active_slots - 3.0).abs() < 1e-9);
         assert!((s.p50_latency_ms - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_counters_track_latest_and_peak() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().kv_total_blocks, 0);
+        assert_eq!(m.snapshot().block_utilization, 0.0);
+        m.record_kv(
+            &KvCacheStats {
+                block_tokens: 4,
+                total_blocks: 32,
+                blocks_in_use: 10,
+                registered_blocks: 2,
+                prefix_hit_blocks: 3,
+                prefix_hit_tokens: 12,
+                blocks_evicted: 1,
+                cow_forks: 1,
+            },
+            false,
+        );
+        m.record_kv(
+            &KvCacheStats {
+                block_tokens: 4,
+                total_blocks: 32,
+                blocks_in_use: 6, // gauge drops, peak stays
+                registered_blocks: 2,
+                prefix_hit_blocks: 5,
+                prefix_hit_tokens: 20,
+                blocks_evicted: 2,
+                cow_forks: 1,
+            },
+            false,
+        );
+        let s = m.snapshot();
+        assert_eq!(s.prefix_hits, 5);
+        assert_eq!(s.prefix_hit_tokens, 20);
+        assert_eq!(s.blocks_in_use, 6);
+        assert_eq!(s.blocks_in_use_peak, 10);
+        assert_eq!(s.blocks_evicted, 2);
+        assert_eq!(s.cow_forks, 1);
+        assert_eq!(s.kv_total_blocks, 32);
+        assert!((s.block_utilization - 10.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_counters_accumulate_across_cache_epochs() {
+        // Regression: caches are recreated per wave / after decode
+        // errors, and their counters restart at zero — the snapshot
+        // totals must keep accumulating instead of resetting.
+        let m = Metrics::default();
+        let epoch = |hits: u64, evicted: u64, in_use: usize| KvCacheStats {
+            block_tokens: 4,
+            total_blocks: 16,
+            blocks_in_use: in_use,
+            registered_blocks: 0,
+            prefix_hit_blocks: hits,
+            prefix_hit_tokens: hits * 4,
+            blocks_evicted: evicted,
+            cow_forks: 0,
+        };
+        m.record_kv(&epoch(2, 1, 8), true); // wave 1 final counters
+        m.record_kv(&epoch(3, 0, 5), true); // wave 2 (fresh cache)
+        m.record_kv(&epoch(4, 2, 6), true); // wave 3 (fresh cache)
+        let s = m.snapshot();
+        assert_eq!(s.prefix_hits, 2 + 3 + 4);
+        assert_eq!(s.prefix_hit_tokens, (2 + 3 + 4) * 4);
+        assert_eq!(s.blocks_evicted, 1 + 0 + 2);
+        assert_eq!(s.blocks_in_use, 6);
+        assert_eq!(s.blocks_in_use_peak, 8);
+        // Utilization is a per-sample ratio peak, bounded by 1 even
+        // when pool sizes differ across epochs.
+        assert!((s.block_utilization - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -25,6 +25,15 @@
 //! *waves* instead — run-to-completion admission, but responses still
 //! leave the moment each lane finishes.
 //!
+//! Backends with a **paged KV cache** (DESIGN.md §10 —
+//! [`backend::NativeBackend`]) are admitted on **free blocks** rather
+//! than free slots: an admission round is gated on the pool's
+//! allocatable headroom, each request's token target is clamped by a
+//! block *reservation* (`Backend::reserve_tokens`) so an overcommitted
+//! pool shortens responses instead of erroring mid-decode, and
+//! retirement returns blocks (refcount-decremented — shared prefix
+//! blocks survive in the registry).
+//!
 //! The model executor lives *inside* the worker thread (xla handles are
 //! not `Send`); weight literals are built once at startup. [`backend`]
 //! abstracts the executor so the scheduling logic is property-tested
@@ -263,7 +272,7 @@ fn slot_loop<B: Backend>(
             // No scheduler state — fail every request until shutdown.
             let msg = format!("scheduler state: {:#}", e);
             while let Ok(WorkItem::Request(r, tx, t)) = rx.recv() {
-                fail(&PendingRequest { req: r, tx, arrived: t }, msg.clone());
+                fail(&PendingRequest::new(r, tx, t), msg.clone());
             }
             return;
         }
@@ -271,6 +280,9 @@ fn slot_loop<B: Backend>(
     let mut slots: Vec<Option<SlotSeq>> = (0..cap).map(|_| None).collect();
     let mut queue: VecDeque<PendingRequest> = VecDeque::new();
     let mut draining = false;
+    // Set when `state` (and its paged cache) is replaced after a decode
+    // error, so the next metrics report starts a new counter epoch.
+    let mut kv_cache_recreated = false;
 
     loop {
         let occupied = slots.iter().filter(|s| s.is_some()).count();
@@ -281,7 +293,7 @@ fn slot_loop<B: Backend>(
                 // Idle: block for work.
                 match rx.recv() {
                     Ok(WorkItem::Request(r, tx, t)) => {
-                        queue.push_back(PendingRequest { req: r, tx, arrived: t })
+                        queue.push_back(PendingRequest::new(r, tx, t))
                     }
                     Ok(WorkItem::Shutdown) | Err(_) => draining = true,
                 }
@@ -290,7 +302,7 @@ fn slot_loop<B: Backend>(
             loop {
                 match rx.try_recv() {
                     Ok(WorkItem::Request(r, tx, t)) => {
-                        queue.push_back(PendingRequest { req: r, tx, arrived: t })
+                        queue.push_back(PendingRequest::new(r, tx, t))
                     }
                     Ok(WorkItem::Shutdown) | Err(TryRecvError::Disconnected) => {
                         draining = true;
@@ -306,7 +318,50 @@ fn slot_loop<B: Backend>(
 
         // --- admission: freed slots refill immediately, and the whole
         // round shares one batched prefill pass over the weights ------------
-        let to_admit = policy.admit_now(occupied, queue.len());
+        let mut to_admit = policy.admit_now(occupied, queue.len());
+        if to_admit > 0 {
+            // Paged backends admit on **free blocks**, not free slots
+            // (DESIGN.md §10). Each candidate is charged what its
+            // prefill would actually allocate (the backend consults
+            // its prefix registry — a shared-system-prompt request
+            // costs a block or two, not the whole prompt); the
+            // worst-case fallback is ⌈prefill_len / block⌉ prompt
+            // blocks plus one reservable decode block when the prompt
+            // fills its last block exactly (otherwise tail slack
+            // guarantees the first decode tokens). A round that does
+            // not fit waits for retirements to return blocks; an idle
+            // worker still force-admits one request so an impossible
+            // prompt fails with a clear error instead of stalling the
+            // queue forever.
+            if let Some((free_blocks, block_tokens)) = backend.kv_block_headroom(&state) {
+                let fallback = cfg.prefill_len.div_ceil(block_tokens)
+                    + usize::from(cfg.prefill_len % block_tokens == 0);
+                let mut budget = free_blocks;
+                let mut fits = 0usize;
+                // The normalized prompt is cached on the request (this
+                // gate re-examines waiting candidates every iteration);
+                // bail before probing once the budget cannot fit one.
+                for p in queue.iter_mut().take(to_admit) {
+                    if budget == 0 {
+                        break;
+                    }
+                    let prompt = p.normalized(cfg.prefill_len, pad_id);
+                    let need = backend
+                        .admission_block_need(&state, prompt)
+                        .unwrap_or(fallback)
+                        .max(1);
+                    if need > budget {
+                        break;
+                    }
+                    budget -= need;
+                    fits += 1;
+                }
+                to_admit = fits;
+                if to_admit == 0 && occupied == 0 {
+                    to_admit = 1;
+                }
+            }
+        }
         if to_admit > 0 {
             let mut round: Vec<(usize, PendingRequest)> = Vec::with_capacity(to_admit);
             for slot in 0..cap {
@@ -318,9 +373,9 @@ fn slot_loop<B: Backend>(
                 }
             }
             let admissions: Vec<(usize, Vec<i32>)> = round
-                .iter()
+                .iter_mut()
                 .map(|(slot, p)| {
-                    (*slot, batcher::fit_prompt(&p.req.prompt, cfg.prefill_len, pad_id))
+                    (*slot, p.normalized(cfg.prefill_len, pad_id).to_vec())
                 })
                 .collect();
             let t0 = Instant::now();
@@ -330,14 +385,47 @@ fn slot_loop<B: Backend>(
                     // round's wall time (same accounting as a wave).
                     let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
                     let n = round.len();
-                    for (slot, p) in round {
-                        let mut target = p.req.max_new_tokens.min(cfg.max_new_tokens);
-                        if let Some(max_pos) = backend.max_positions() {
-                            // Clamp to the slot's KV headroom: an
-                            // over-long request ends early instead of
-                            // exhausting the cache mid-decode and
-                            // erroring its whole batch.
-                            target = target.min(max_pos.saturating_sub(state.pos[slot]));
+                    let requested: Vec<usize> = round
+                        .iter()
+                        .map(|(slot, p)| {
+                            let mut target =
+                                p.req.max_new_tokens.min(cfg.max_new_tokens);
+                            if let Some(max_pos) = backend.max_positions() {
+                                // Clamp to the slot's KV headroom: an
+                                // over-long request ends early instead
+                                // of exhausting the cache mid-decode
+                                // and erroring its whole batch.
+                                target = target
+                                    .min(max_pos.saturating_sub(state.pos[*slot]));
+                            }
+                            target
+                        })
+                        .collect();
+                    // Paged backends additionally clamp each target to
+                    // the allocatable block headroom, *reserving* the
+                    // blocks — a clamped sequence can then never hit
+                    // pool exhaustion mid-decode. Two phases so a
+                    // greedy round member cannot starve a batchmate to
+                    // zero: everyone secures their first decode token
+                    // first (reservations have total semantics — the
+                    // second call extends the first).
+                    for (&(slot, _), &want) in round.iter().zip(&requested) {
+                        let _ = backend.reserve_tokens(&mut state, slot, want.min(1));
+                    }
+                    for ((slot, p), want) in round.into_iter().zip(requested) {
+                        let target = backend.reserve_tokens(&mut state, slot, want);
+                        if target == 0 && want > 0 {
+                            // Only possible on a force-admitted round
+                            // into a pool too small to back one decode
+                            // token: fail clearly instead of delivering
+                            // an empty response as success.
+                            let _ = backend.retire(&mut state, slot);
+                            fail(
+                                &p,
+                                "KV block pool too small to decode any tokens for this request"
+                                    .to_string(),
+                            );
+                            continue;
                         }
                         slots[slot] = Some(SlotSeq {
                             p,
@@ -401,6 +489,7 @@ fn slot_loop<B: Backend>(
                 }
                 if let Ok(fresh) = backend.new_state(cap) {
                     state = fresh;
+                    kv_cache_recreated = true;
                 }
                 continue;
             }
@@ -408,6 +497,12 @@ fn slot_loop<B: Backend>(
 
         // --- retirement: deliver the moment a sequence finishes -----------
         retire_finished(backend, &mut state, &mut slots, metrics);
+
+        // Paged-cache pressure counters (prefix hits, block occupancy,
+        // evictions) — one gauge update per step keeps the lock cheap.
+        if let Some(ks) = backend.kv_cache_stats(&state) {
+            metrics.record_kv(&ks, std::mem::take(&mut kv_cache_recreated));
+        }
     }
 }
 
@@ -464,7 +559,7 @@ fn wave_loop<B: Backend>(
     while !shutdown {
         // Block for the first request.
         let first = match rx.recv() {
-            Ok(WorkItem::Request(r, tx, t)) => PendingRequest { req: r, tx, arrived: t },
+            Ok(WorkItem::Request(r, tx, t)) => PendingRequest::new(r, tx, t),
             Ok(WorkItem::Shutdown) | Err(_) => break,
         };
         let mut batch = vec![first];
@@ -480,7 +575,7 @@ fn wave_loop<B: Backend>(
             // Drain whatever is already queued without waiting.
             match rx.try_recv() {
                 Ok(WorkItem::Request(r, tx, t)) => {
-                    batch.push(PendingRequest { req: r, tx, arrived: t });
+                    batch.push(PendingRequest::new(r, tx, t));
                     continue;
                 }
                 Ok(WorkItem::Shutdown) => {
@@ -497,7 +592,7 @@ fn wave_loop<B: Backend>(
             let budget = policy.max_wait.saturating_sub(batch_start.elapsed());
             match rx.recv_timeout(budget) {
                 Ok(WorkItem::Request(r, tx, t)) => {
-                    batch.push(PendingRequest { req: r, tx, arrived: t })
+                    batch.push(PendingRequest::new(r, tx, t))
                 }
                 Ok(WorkItem::Shutdown) => {
                     shutdown = true;
@@ -516,19 +611,19 @@ fn serve_wave<B: Backend>(
     cfg: &ServeConfig,
     pad_id: i32,
     backend: &mut B,
-    batch: Vec<PendingRequest>,
+    mut batch: Vec<PendingRequest>,
     metrics: &Metrics,
 ) {
     let n = batch.len();
     let bucket = batcher::pick_bucket(&cfg.buckets, n)
         .unwrap_or_else(|| *cfg.buckets.last().unwrap());
-    metrics.record_batch(n, bucket);
 
     // Normalize prompts to the prefill window (left-truncate / left-pad
-    // so the generation-relevant suffix survives).
+    // so the generation-relevant suffix survives); cached on the
+    // request, so a split-and-retried wave does not recompute them.
     let mut prompts = Vec::with_capacity(bucket);
-    for p in batch.iter() {
-        prompts.push(batcher::fit_prompt(&p.req.prompt, cfg.prefill_len, pad_id));
+    for p in batch.iter_mut() {
+        prompts.push(p.normalized(cfg.prefill_len, pad_id).to_vec());
     }
     // Pad the bucket with copies of the first prompt (outputs discarded).
     while prompts.len() < bucket {
@@ -539,6 +634,19 @@ fn serve_wave<B: Backend>(
     let mut state = match backend.prefill(&prompts) {
         Ok(s) => s,
         Err(e) => {
+            // A multi-request wave whose prefill failed (e.g. an
+            // overcommitted paged pool exhausted mid-batch) degrades
+            // to two smaller waves instead of failing every request —
+            // pool pressure then serializes waves the way the block
+            // gate serializes continuous admission. Only a wave of one
+            // reports the error.
+            if batch.len() > 1 {
+                let mut first = batch;
+                let second = first.split_off(first.len() / 2);
+                serve_wave(cfg, pad_id, backend, first, metrics);
+                serve_wave(cfg, pad_id, backend, second, metrics);
+                return;
+            }
             let msg = format!("prefill: {:#}", e);
             for p in &batch {
                 fail(p, msg.clone());
@@ -546,7 +654,17 @@ fn serve_wave<B: Backend>(
             return;
         }
     };
+    // Counted only for a wave that actually serves (a split-and-retried
+    // parent would otherwise double-count its requests).
+    metrics.record_batch(n, bucket);
     let prefill_ms = t_prefill.elapsed().as_secs_f64() * 1e3;
+    // Bucket-padding lanes carry no request: retire them immediately so
+    // slot backends stop decoding them and paged caches get their
+    // blocks back (PJRT's retire is a mask — its compiled graph keeps
+    // computing the lane either way).
+    for lane in n..bucket {
+        let _ = backend.retire(&mut state, lane);
+    }
 
     struct WaveSeq {
         p: Option<PendingRequest>,
@@ -568,6 +686,27 @@ fn serve_wave<B: Backend>(
         let headroom = max_pos.saturating_sub(state.pos[0]);
         for seq in seqs.iter_mut() {
             seq.target = seq.target.min(headroom);
+        }
+    }
+    // Paged backends: clamp each lane's target to the allocatable block
+    // headroom, reserving the blocks (same contract as the continuous
+    // path — an overcommitted pool shortens responses, never errors a
+    // wave mid-decode). Two phases (reservations have total semantics):
+    // every lane secures its first decode token before any lane
+    // reserves deep, so a greedy wave member cannot starve a batchmate
+    // to zero. A lane that still clamps to zero cannot decode at all:
+    // fail it clearly and free its lane.
+    for (lane, seq) in seqs.iter().enumerate() {
+        let _ = backend.reserve_tokens(&mut state, lane, seq.target.min(1));
+    }
+    for (lane, seq) in seqs.iter_mut().enumerate() {
+        let before_reserve = seq.target;
+        seq.target = backend.reserve_tokens(&mut state, lane, seq.target);
+        if seq.target == 0 && before_reserve > 0 {
+            let _ = backend.retire(&mut state, lane);
+            if let Some(p) = seq.p.take() {
+                fail(&p, "KV block pool too small to decode any tokens for this request".to_string());
+            }
         }
     }
 
@@ -595,14 +734,24 @@ fn serve_wave<B: Backend>(
     };
 
     // Requests asking for zero tokens are satisfied by prefill alone.
-    for seq in seqs.iter_mut() {
-        if seq.target == 0 {
+    for (lane, seq) in seqs.iter_mut().enumerate() {
+        if seq.p.is_some() && seq.target == 0 {
             deliver(seq, None, 0.0);
+            let _ = backend.retire(&mut state, lane);
         }
     }
 
     let max_steps = seqs.iter().filter(|s| s.p.is_some()).map(|s| s.target).max();
     let mut first_token_at = None;
+    // Every wave owns a fresh state (and cache), so its first report
+    // opens a new counter epoch — totals accumulate across waves.
+    let mut kv_epoch_new = true;
+    if let Some(ks) = backend.kv_cache_stats(&state) {
+        // Sample right after prefill, while the lanes actually occupy
+        // blocks — a single end-of-wave sample would only ever see the
+        // registry remnants of retired lanes.
+        metrics.record_kv(&ks, std::mem::take(&mut kv_epoch_new));
+    }
     for _ in 0..max_steps.unwrap_or(0) {
         if seqs.iter().all(|s| s.p.is_none()) {
             break;
@@ -618,6 +767,7 @@ fn serve_wave<B: Backend>(
                 // The compiled graph computes the whole bucket, finished
                 // or not — record true occupancy, i.e. the bucket.
                 metrics.record_step(bucket);
+                let mut finished = Vec::new();
                 for (i, seq) in seqs.iter_mut().enumerate() {
                     if seq.p.is_none() {
                         continue;
@@ -627,7 +777,18 @@ fn serve_wave<B: Backend>(
                         // Early retirement: respond now, even though the
                         // wave keeps decoding for its longest member.
                         deliver(seq, first_token_at, decode_elapsed_ms);
+                        finished.push(i);
                     }
+                }
+                // Free the finished lanes: slot backends stop decoding
+                // them and paged caches reclaim their blocks, so a
+                // delivered lane can never drag the pool into
+                // exhaustion while its long batchmates keep going.
+                for i in finished {
+                    let _ = backend.retire(&mut state, i);
+                }
+                if let Some(ks) = backend.kv_cache_stats(&state) {
+                    metrics.record_kv(&ks, std::mem::take(&mut kv_epoch_new));
                 }
             }
             Err(e) => {
@@ -640,6 +801,10 @@ fn serve_wave<B: Backend>(
                 return;
             }
         }
+    }
+    // Final sample catches counter updates from the last retirements.
+    if let Some(ks) = backend.kv_cache_stats(&state) {
+        metrics.record_kv(&ks, std::mem::take(&mut kv_epoch_new));
     }
 }
 
@@ -971,6 +1136,131 @@ mod tests {
         fn max_positions(&self) -> Option<usize> {
             Some(5)
         }
+    }
+
+    /// A mock with a simulated paged block pool: headroom shrinks as
+    /// slots admit (⌈prefill_len/bt⌉ blocks each) and reservations are
+    /// first-come-first-served, exactly like the native paged cache.
+    struct PagedMock {
+        inner: MockBackend,
+        block_tokens: usize,
+        total_blocks: usize,
+        used: Vec<usize>,
+        reserved: Vec<usize>,
+    }
+
+    impl PagedMock {
+        fn new(block_tokens: usize, total_blocks: usize) -> PagedMock {
+            PagedMock {
+                inner: MockBackend::new(),
+                block_tokens,
+                total_blocks,
+                used: Vec::new(),
+                reserved: Vec::new(),
+            }
+        }
+        fn free_blocks(&self) -> usize {
+            self.total_blocks
+                - self.used.iter().sum::<usize>()
+                - self.reserved.iter().sum::<usize>()
+        }
+    }
+
+    impl Backend for PagedMock {
+        fn new_state(&mut self, cap: usize) -> Result<backend::DecodeState> {
+            self.used = vec![0; cap];
+            self.reserved = vec![0; cap];
+            self.inner.new_state(cap)
+        }
+        fn prefill_into(
+            &mut self,
+            state: &mut backend::DecodeState,
+            slot: usize,
+            prompt: &[i32],
+        ) -> Result<()> {
+            let need = prompt.len().div_ceil(self.block_tokens).max(1);
+            anyhow::ensure!(need <= self.free_blocks(), "block pool exhausted");
+            self.inner.prefill_into(state, slot, prompt)?;
+            self.used[slot] = need;
+            Ok(())
+        }
+        fn decode(&mut self, state: &mut backend::DecodeState) -> Result<Vec<i32>> {
+            self.inner.decode(state)
+        }
+        fn retire(&mut self, state: &mut backend::DecodeState, slot: usize) -> Result<()> {
+            self.used[slot] = 0;
+            self.reserved[slot] = 0;
+            state.active[slot] = false;
+            state.pos[slot] = 0;
+            Ok(())
+        }
+        fn vocab(&self) -> Option<usize> {
+            self.inner.vocab()
+        }
+        fn kv_block_headroom(&self, _state: &backend::DecodeState) -> Option<(usize, usize)> {
+            Some((self.free_blocks(), self.block_tokens))
+        }
+        fn reserve_tokens(
+            &mut self,
+            _state: &mut backend::DecodeState,
+            slot: usize,
+            want: usize,
+        ) -> usize {
+            // Total semantics, like KvCache::reserve — a repeat call
+            // extends the slot's reservation instead of stacking.
+            let needed = want.div_ceil(self.block_tokens);
+            let extra = needed.saturating_sub(self.reserved[slot]).min(self.free_blocks());
+            self.reserved[slot] += extra;
+            (self.reserved[slot] * self.block_tokens).min(want)
+        }
+    }
+
+    /// A pool with room for exactly one request at a time must serialize
+    /// admission even though KV slots are free — admission is by blocks.
+    #[test]
+    fn paged_backend_admits_by_blocks_not_slots() {
+        let mut cfg = cfg_with(SchedulerKind::Continuous, 4, 2);
+        cfg.prefill_len = 16;
+        cfg.max_new_tokens = 4;
+        // 16-token prefill = 4 blocks; pool of 5 fits one request
+        // (4 prefill + 1 reserved decode block), never two.
+        let server = Server::start(cfg, || Ok(PagedMock::new(4, 5)));
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            rxs.push(server.submit(vec![i; 4], 4).unwrap().1);
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 4);
+        // Block-gated admission keeps at most one sequence in flight.
+        assert!(
+            snap.avg_active_slots <= 1.0 + 1e-9,
+            "admission was not serialized by block headroom: {:.2} active slots",
+            snap.avg_active_slots
+        );
+        server.shutdown();
+    }
+
+    /// The reservation clamp bounds an over-long request to allocatable
+    /// blocks (short response, no error), like max_positions does for
+    /// slot-provisioned caches.
+    #[test]
+    fn over_long_request_is_clamped_by_block_reservation() {
+        let mut cfg = cfg_with(SchedulerKind::Continuous, 1, 2);
+        cfg.prefill_len = 4;
+        cfg.max_new_tokens = 100;
+        cfg.buckets = vec![1];
+        // 4-token prefill = 1 block; 3 blocks left ⇒ 12 decode tokens.
+        let server = Server::start(cfg, || Ok(PagedMock::new(4, 4)));
+        let (_, rx) = server.submit(vec![1, 2, 3], 50).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        assert_eq!(resp.tokens.len(), 12, "target must clamp to reserved blocks");
+        server.shutdown();
     }
 
     #[test]

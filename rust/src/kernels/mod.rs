@@ -20,7 +20,12 @@
 //! * [`model`] — a full native CPU Llama-mini forward (RMSNorm, RoPE
 //!   attention, SwiGLU) whose every projection runs through the fused
 //!   kernels on the model's own pool: the zero-PJRT serving path behind
-//!   [`NativeBackend`](crate::coordinator::backend::NativeBackend).
+//!   [`NativeBackend`](crate::coordinator::backend::NativeBackend). Its
+//!   [`KvCache`] is **paged** (DESIGN.md §10): fixed-size token blocks
+//!   behind per-slot block tables, refcounted so identical prompt
+//!   prefixes share one physical copy (copy-on-write on divergence) —
+//!   the weight planes made the weights small; paging makes the KV
+//!   cache, the next bottleneck, dense too.
 //!
 //! All kernels are **bit-identical** to dequantize-then-matmul (see the
 //! accumulation contract in [`gemv`]'s module docs and the property
@@ -35,5 +40,5 @@ pub mod pool;
 pub use gemv::{gemm, gemm_mt, gemm_on, gemv, gemv_mt, gemv_on};
 #[doc(hidden)]
 pub use gemv::gemv_rows;
-pub use model::{KvCache, NativeModel};
+pub use model::{KvCache, KvCacheStats, KvLayout, NativeModel, DEFAULT_BLOCK_TOKENS};
 pub use pool::{available_threads, PoolPanic, WorkerPool};

@@ -1,5 +1,5 @@
 //! Native CPU transformer forward over fused quantized planes
-//! (DESIGN.md §8).
+//! (DESIGN.md §8), with a **paged KV cache** (DESIGN.md §10).
 //!
 //! [`NativeModel`] mirrors the Llama-mini architecture the python side
 //! AOT-compiles (`python/compile/model.py`: RMSNorm → RoPE multi-head
@@ -10,20 +10,26 @@
 //! thread is spawned at request time. Dense side tensors (embeddings,
 //! norms, `lm_head`) stay f32; they are <2 % of the weight bytes.
 //!
-//! The KV cache is **slot-addressed** (DESIGN.md §9): each of its lanes
-//! tracks its own position, so the continuous-batching scheduler can
-//! prefill one request into a freed lane ([`NativeModel::prefill_slot`])
-//! and decode an arbitrary subset of lanes ([`NativeModel::decode_slots`])
-//! while the rest of the batch is mid-generation. Lanes never attend
-//! across each other, so a sequence's tokens are bit-identical whether it
-//! runs alone, in a uniform batch, or interleaved with strangers.
+//! The KV cache is **paged** (DESIGN.md §10): storage is a pool of
+//! fixed-size token blocks, each slot walks a per-slot **block table**,
+//! blocks are handed out by a free-list allocator and **refcounted** so
+//! requests with identical prompt prefixes map their prefix blocks onto
+//! one shared physical copy (a block-chain registry keyed by exact
+//! token content — the dominant multi-user scenario: shared system
+//! prompts) and skip recomputing them at prefill. Writes into a shared
+//! block **copy-on-write fork** it first, so sharing can never leak one
+//! sequence's state into another. Lanes never attend across each other
+//! and each lane carries its own position, so a sequence's tokens are
+//! bit-identical whether it runs alone, in a uniform batch, interleaved
+//! with strangers, or on top of a reused prefix — at any block size.
 //!
 //! This is the deployment story the paper's intro argues for: the
 //! serving working set is packed codes + codebooks (≈(n+1)/32 of f32 —
-//! ~3 bits/weight at n=2), and the per-token cost is a memory-bound
-//! sweep of those bytes. The PJRT
-//! backend remains the reference executor; this one trades its compiled
-//! graphs for zero Python/XLA dependence at request time.
+//! ~3 bits/weight at n=2), which makes the **KV cache** the memory
+//! bottleneck at scale; paging + prefix sharing is what turns the tiny
+//! weight footprint into more concurrent users. The PJRT backend
+//! remains the reference executor; this one trades its compiled graphs
+//! for zero Python/XLA dependence at request time.
 
 use crate::coordinator::backend::argmax_rows;
 use crate::icquant::runtime::RuntimePlane;
@@ -31,7 +37,8 @@ use crate::kernels::{gemm_on, WorkerPool};
 use crate::model::ModelConfig;
 use crate::store::StoredModel;
 use crate::util::tensor::Matrix;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 /// RoPE base frequency (python `ModelConfig.rope_theta`).
@@ -39,48 +46,191 @@ const ROPE_THETA: f32 = 10000.0;
 /// RMSNorm epsilon (python `ModelConfig.norm_eps`).
 const NORM_EPS: f32 = 1e-5;
 
-/// One transformer block's weights: quantized projections (shared with
-/// the decode cache) + dense norms.
-struct BlockWeights {
-    attn_norm: Vec<f32>,
-    mlp_norm: Vec<f32>,
-    wq: Arc<RuntimePlane>,
-    wk: Arc<RuntimePlane>,
-    wv: Arc<RuntimePlane>,
-    wo: Arc<RuntimePlane>,
-    w_gate: Arc<RuntimePlane>,
-    w_up: Arc<RuntimePlane>,
-    w_down: Arc<RuntimePlane>,
+/// Tokens per KV block when the caller does not pick one. Small enough
+/// that short requests waste little tail capacity, large enough that
+/// block-table walks stay cheap.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Sentinel "no previous block" parent id for the first block of a
+/// prefix chain.
+const NO_PARENT: usize = usize::MAX;
+
+/// Layout knobs for the paged KV cache (DESIGN.md §10).
+#[derive(Clone, Copy, Debug)]
+pub struct KvLayout {
+    /// Tokens per physical block.
+    pub block_tokens: usize,
+    /// Physical blocks in the pool. `None` ⇒ fully provisioned
+    /// (`slots × ⌈max_seq / block_tokens⌉`), where allocation can never
+    /// fail; smaller values overcommit — prefix sharing stretches the
+    /// pool, admission is gated on free blocks, and exhaustion is a
+    /// clean per-request error.
+    pub total_blocks: Option<usize>,
+    /// Shared-prefix reuse: block-chain registry + copy-on-write.
+    pub prefix_sharing: bool,
 }
 
-/// Slot-addressed KV cache: per layer, `[slots, H, max_seq, hd]` flat
-/// f32 — plain host memory, unlike the PJRT path's device literals.
+impl Default for KvLayout {
+    fn default() -> Self {
+        KvLayout {
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            total_blocks: None,
+            prefix_sharing: true,
+        }
+    }
+}
+
+impl KvLayout {
+    /// The contiguous-equivalent layout: one `max_seq`-token block per
+    /// slot, no sharing — the pre-paging behaviour, kept as the A/B
+    /// baseline (`benches/paging.rs`) and differential-test reference.
+    pub fn contiguous(cfg: &ModelConfig) -> KvLayout {
+        KvLayout {
+            block_tokens: cfg.max_seq,
+            total_blocks: None,
+            prefix_sharing: false,
+        }
+    }
+}
+
+/// Point-in-time paged-cache counters (cumulative counters never reset
+/// for the life of the cache; gauges reflect the current pool state).
+/// Surfaced through `Backend::kv_cache_stats` into serving
+/// [`Metrics`](crate::coordinator::metrics::Metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvCacheStats {
+    /// Tokens per block.
+    pub block_tokens: usize,
+    /// Physical blocks in the pool.
+    pub total_blocks: usize,
+    /// Blocks currently allocated (tables + registry).
+    pub blocks_in_use: usize,
+    /// Blocks currently registered for prefix sharing.
+    pub registered_blocks: usize,
+    /// Cumulative: prompt blocks served from the registry instead of
+    /// being recomputed.
+    pub prefix_hit_blocks: u64,
+    /// Cumulative: prompt tokens whose prefill compute was skipped.
+    pub prefix_hit_tokens: u64,
+    /// Cumulative: registered blocks recycled under pool pressure.
+    pub blocks_evicted: u64,
+    /// Cumulative: copy-on-write forks (writes into shared blocks).
+    pub cow_forks: u64,
+}
+
+/// A registered (shareable) block: its chain key, for removal from the
+/// index on eviction, and an LRU tick.
+struct RegEntry {
+    key: PrefixKey,
+    last_use: u64,
+}
+
+/// Identity of one prefix-chain block: the physical id of its parent
+/// block (or [`NO_PARENT`]) plus the exact `block_tokens` token ids it
+/// covers. Exact-content keys — no hashing of the chain, so a lookup
+/// hit *proves* the cached KV was computed from this prefix.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct PrefixKey {
+    parent: usize,
+    tokens: Vec<i32>,
+}
+
+/// Paged, slot-addressed KV cache (DESIGN.md §10): per layer, a pool of
+/// `[total_blocks, H, block_tokens, hd]` flat f32 blocks — plain host
+/// memory, unlike the PJRT path's device literals.
 ///
-/// Each slot holds one independent sequence and advances its own
-/// [`pos`](KvCache::pos). Retiring a sequence is `free_slot` (a position
-/// reset — no zeroing needed, since attention never reads past a slot's
-/// position); the next occupant overwrites from position 0.
+/// Each slot holds one independent sequence: its per-slot
+/// [`pos`](KvCache::pos) and a block table mapping logical token blocks
+/// to physical pool blocks. Blocks are refcounted; prompt-prefix blocks
+/// can be shared between slots (and outlive their slot in the prefix
+/// registry), and any write into a shared block copy-on-write forks it
+/// first. Retiring a sequence is [`free_slot`](KvCache::free_slot):
+/// refcounts drop, exclusive blocks return to the free list, and the
+/// lane's table empties — no zeroing, the position gate makes stale
+/// data unreachable.
 pub struct KvCache {
     slots: usize,
     max_seq: usize,
     n_heads: usize,
     head_dim: usize,
+    block_tokens: usize,
+    total_blocks: usize,
+    sharing: bool,
     /// Per-slot next-write position (0 = free/fresh).
     pos: Vec<usize>,
+    /// Per-slot block table: logical block index → physical block id.
+    tables: Vec<Vec<usize>>,
+    /// Per-block reference count (slot tables + prefix registry).
+    refcount: Vec<u32>,
+    /// Free-list allocator (stack of unreferenced block ids).
+    free: Vec<usize>,
+    /// Per-slot blocks reserved for future decode tokens
+    /// ([`KvCache::reserve`]) — backed by free-list blocks, so a
+    /// granted reservation can never fail to allocate.
+    reserved: Vec<usize>,
+    reserved_total: usize,
+    /// Prefix-chain registry: block key → physical block.
+    prefix_index: HashMap<PrefixKey, usize>,
+    /// Registry bookkeeping per physical block.
+    registered: Vec<Option<RegEntry>>,
+    /// Incremental mirrors of registry state, so the per-step stats
+    /// and admission headroom are O(1) instead of scanning the pool
+    /// (`debug_validate` recomputes and checks both).
+    registered_count: usize,
+    /// Registered blocks with refcount 1 (held only by the index) —
+    /// reclaimable on demand.
+    evictable_count: usize,
+    tick: u64,
+    prefix_hit_blocks: u64,
+    prefix_hit_tokens: u64,
+    blocks_evicted: u64,
+    cow_forks: u64,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
 
 impl KvCache {
-    /// An empty cache with `slots` independent lanes.
+    /// An empty cache with `slots` independent lanes and the default
+    /// paged layout (fully provisioned, sharing on).
     pub fn new(cfg: &ModelConfig, slots: usize) -> KvCache {
-        let per_layer = slots * cfg.n_heads * cfg.max_seq * cfg.head_dim();
+        Self::with_layout(cfg, slots, KvLayout::default())
+    }
+
+    /// An empty cache with an explicit paged layout. `block_tokens` is
+    /// clamped to `max_seq`: a block can never hold more positions than
+    /// a sequence can reach, and an oversized value (e.g. a
+    /// `--block-size` typo) would otherwise silently multiply the KV
+    /// allocation by `block_tokens / max_seq`.
+    pub fn with_layout(cfg: &ModelConfig, slots: usize, layout: KvLayout) -> KvCache {
+        let bt = layout.block_tokens.min(cfg.max_seq.max(1));
+        assert!(bt >= 1, "block_tokens must be >= 1");
+        let per_slot = cfg.max_seq.div_ceil(bt);
+        let total = layout.total_blocks.unwrap_or(slots.max(1) * per_slot).max(1);
+        let per_layer = total * cfg.n_heads * bt * cfg.head_dim();
         KvCache {
             slots,
             max_seq: cfg.max_seq,
             n_heads: cfg.n_heads,
             head_dim: cfg.head_dim(),
+            block_tokens: bt,
+            total_blocks: total,
+            sharing: layout.prefix_sharing,
             pos: vec![0; slots],
+            tables: vec![Vec::new(); slots],
+            refcount: vec![0; total],
+            // Reverse so allocation proceeds in ascending block order.
+            free: (0..total).rev().collect(),
+            reserved: vec![0; slots],
+            reserved_total: 0,
+            prefix_index: HashMap::new(),
+            registered: (0..total).map(|_| None).collect(),
+            registered_count: 0,
+            evictable_count: 0,
+            tick: 0,
+            prefix_hit_blocks: 0,
+            prefix_hit_tokens: 0,
+            blocks_evicted: 0,
+            cow_forks: 0,
             k: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
             v: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
         }
@@ -96,22 +246,414 @@ impl KvCache {
         self.pos[slot]
     }
 
-    /// Release `slot` for reuse by a new sequence. The lane's data is
-    /// left in place — the position gate makes it unreachable, and the
-    /// next `prefill_slot` overwrites from 0.
+    /// Tokens per physical block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Physical blocks in the pool.
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Blocks currently allocated (slot tables + prefix registry).
+    pub fn blocks_in_use(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Whether shared-prefix reuse is enabled.
+    pub fn prefix_sharing(&self) -> bool {
+        self.sharing
+    }
+
+    /// Blocks an admission can draw on right now: unreserved free-list
+    /// blocks plus registry blocks held by nothing else (evictable on
+    /// demand). The scheduler gates admission rounds on this.
+    pub fn admission_free_blocks(&self) -> usize {
+        self.free.len().saturating_sub(self.reserved_total) + self.evictable_count
+    }
+
+    /// Admission headroom a prefill of `prompt` would consume, in the
+    /// units of [`admission_free_blocks`](KvCache::admission_free_blocks):
+    /// fresh blocks for the part of the prompt the prefix registry
+    /// cannot serve, the copy-on-write fork block when the whole
+    /// prompt is registered, the first decode block when the prompt
+    /// fills its last block exactly (otherwise tail slack covers the
+    /// first decode tokens) — **plus** any matched registry blocks
+    /// that are currently evictable: mapping them pins them (refcount
+    /// 2), removing them from the headroom other round members were
+    /// counting on. The admission gate uses this so shared-prefix
+    /// requests are charged what they actually consume — a round's
+    /// lookups all run against the same pre-round registry this
+    /// consults, so the estimate matches the prefill.
+    pub fn admission_block_need(&self, prompt: &[i32]) -> usize {
+        let bt = self.block_tokens;
+        let total = prompt.len().div_ceil(bt).max(1);
+        let mut matched = 0usize;
+        let mut pins_evictable = 0usize;
+        if self.sharing {
+            // One reused key buffer: this estimate runs per queued
+            // candidate per scheduler iteration while a round waits on
+            // blocks, so a per-chunk Vec would be decode-loop garbage.
+            let mut key = PrefixKey { parent: NO_PARENT, tokens: Vec::with_capacity(bt) };
+            for chunk in prompt.chunks_exact(bt) {
+                key.tokens.clear();
+                key.tokens.extend_from_slice(chunk);
+                match self.prefix_index.get(&key) {
+                    Some(&b) => {
+                        if self.refcount[b] == 1 {
+                            pins_evictable += 1;
+                        }
+                        key.parent = b;
+                        matched += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        let fresh = total - matched;
+        let alloc = if fresh == 0 {
+            // Fully registered prompt: the final-token recompute forks
+            // the shared tail, and the fork leaves no slack.
+            2
+        } else {
+            fresh + usize::from(prompt.len() % bt == 0)
+        };
+        alloc + pins_evictable
+    }
+
+    /// Point-in-time counters (see [`KvCacheStats`]). O(1) — called on
+    /// the serving loop every decode step.
+    pub fn stats(&self) -> KvCacheStats {
+        KvCacheStats {
+            block_tokens: self.block_tokens,
+            total_blocks: self.total_blocks,
+            blocks_in_use: self.blocks_in_use(),
+            registered_blocks: self.registered_count,
+            prefix_hit_blocks: self.prefix_hit_blocks,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            blocks_evicted: self.blocks_evicted,
+            cow_forks: self.cow_forks,
+        }
+    }
+
+    /// Release `slot` for reuse by a new sequence: refcounts of its
+    /// blocks drop (exclusive blocks return to the free list — blocks
+    /// still held by the prefix registry or a sharing slot survive),
+    /// its reservation returns to the pool, and its position resets.
     pub fn free_slot(&mut self, slot: usize) {
+        for b in std::mem::take(&mut self.tables[slot]) {
+            self.release(b);
+        }
         self.pos[slot] = 0;
+        self.reserved_total -= self.reserved[slot];
+        self.reserved[slot] = 0;
+    }
+
+    fn release(&mut self, b: usize) {
+        self.refcount[b] -= 1;
+        if self.refcount[b] == 0 {
+            debug_assert!(self.registered[b].is_none());
+            self.free.push(b);
+        } else if self.refcount[b] == 1 && self.registered[b].is_some() {
+            // Now held only by the index — reclaimable on demand.
+            self.evictable_count += 1;
+        }
+    }
+
+    /// Take one more reference to `b`, maintaining the evictable count
+    /// (a registry-only block stops being reclaimable once a slot
+    /// shares it).
+    fn retain(&mut self, b: usize) {
+        if self.refcount[b] == 1 && self.registered[b].is_some() {
+            self.evictable_count -= 1;
+        }
+        self.refcount[b] += 1;
+    }
+
+    /// Ensure `slot` can write up to `want` more tokens from its
+    /// current position, returning how many are now **guaranteed**
+    /// (slack in its allocated blocks plus its reserved blocks). Total
+    /// semantics: repeat calls extend an existing reservation instead
+    /// of stacking on top of it, so the scheduler can reserve in
+    /// phases (one block for every round member first, then the full
+    /// targets). When unreserved free blocks run short, registry-only
+    /// blocks are evicted into the free list to back the reservation —
+    /// the same headroom [`admission_free_blocks`] advertises. The
+    /// scheduler clamps each request's token target to the return
+    /// value, so a decode step can never fail on pool exhaustion for a
+    /// clamped sequence; [`free_slot`](KvCache::free_slot) releases
+    /// the reservation.
+    ///
+    /// [`admission_free_blocks`]: KvCache::admission_free_blocks
+    pub fn reserve(&mut self, slot: usize, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let bt = self.block_tokens;
+        let pos = self.pos[slot];
+        let slack = self.tables[slot].len() * bt - pos;
+        // A shared tail block must be forked before the slot can write
+        // into it — that fork costs one extra block.
+        let fork_need = if slack > 0 && self.refcount[self.tables[slot][pos / bt]] > 1 {
+            1
+        } else {
+            0
+        };
+        let already = self.reserved[slot];
+        let total_needed = fork_need + want.saturating_sub(slack).div_ceil(bt);
+        let extra = total_needed.saturating_sub(already);
+        let mut avail = self.free.len().saturating_sub(self.reserved_total);
+        while avail < extra {
+            if !self.evict_lru_to_free() {
+                break;
+            }
+            avail = self.free.len().saturating_sub(self.reserved_total);
+        }
+        let grant = extra.min(avail);
+        self.reserved[slot] += grant;
+        self.reserved_total += grant;
+        let total = already + grant;
+        let guaranteed = if total >= fork_need {
+            slack + (total - fork_need) * bt
+        } else {
+            0
+        };
+        guaranteed.min(want)
+    }
+
+    /// Evict the LRU registry-only block into the free list (backing a
+    /// reservation rather than an immediate allocation).
+    fn evict_lru_to_free(&mut self) -> bool {
+        match self.evict_lru() {
+            Some(b) => {
+                self.free.push(b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Grab a block for `slot`: its own reservation first, then
+    /// unreserved free blocks, then LRU eviction of registry-only
+    /// blocks. Errors only when the pool is truly exhausted.
+    fn alloc_block(&mut self, slot: usize) -> Result<usize> {
+        let from_reservation = self.reserved[slot] > 0;
+        let b = if from_reservation {
+            // Invariant: reserved_total <= free.len(), so this cannot
+            // miss (reservations are granted against free blocks and
+            // unreserved allocation never dips into them).
+            self.free.pop().expect("reserved block missing from free list")
+        } else if self.free.len() > self.reserved_total {
+            self.free.pop().unwrap()
+        } else if let Some(b) = self.evict_lru() {
+            b
+        } else {
+            bail!(
+                "KV block pool exhausted ({} blocks of {} tokens, {} reserved)",
+                self.total_blocks,
+                self.block_tokens,
+                self.reserved_total
+            );
+        };
+        if from_reservation {
+            self.reserved[slot] -= 1;
+            self.reserved_total -= 1;
+        }
+        debug_assert_eq!(self.refcount[b], 0);
+        self.refcount[b] = 1;
+        Ok(b)
+    }
+
+    /// Recycle the least-recently-used registry-only block (refcount 1
+    /// — held by nothing but the index). Its registered descendants are
+    /// de-registered too: their chain keys name this block as parent,
+    /// and a recycled parent id must never let a stale chain match.
+    fn evict_lru(&mut self) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (b, e) in self.registered.iter().enumerate() {
+            if let Some(entry) = e {
+                if self.refcount[b] == 1 && best.map_or(true, |(t, _)| entry.last_use < t) {
+                    best = Some((entry.last_use, b));
+                }
+            }
+        }
+        let (_, b) = best?;
+        let entry = self.registered[b].take().unwrap();
+        self.prefix_index.remove(&entry.key);
+        self.registered_count -= 1;
+        self.evictable_count -= 1;
+        self.refcount[b] = 0;
+        self.blocks_evicted += 1;
+        self.deregister_descendants(b);
+        Some(b)
+    }
+
+    /// Remove every registered chain descendant of `parent` from the
+    /// index (recursively). Blocks still referenced by slots stay
+    /// allocated — they just stop being shareable; orphans whose only
+    /// holder was the index return to the free list.
+    fn deregister_descendants(&mut self, parent: usize) {
+        let children: Vec<usize> = self
+            .registered
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.as_ref().is_some_and(|e| e.key.parent == parent))
+            .map(|(b, _)| b)
+            .collect();
+        for c in children {
+            let entry = self.registered[c].take().unwrap();
+            self.prefix_index.remove(&entry.key);
+            self.registered_count -= 1;
+            if self.refcount[c] == 1 {
+                self.evictable_count -= 1;
+            }
+            self.refcount[c] -= 1;
+            if self.refcount[c] == 0 {
+                // Only an orphan actually gets recycled; a block still
+                // referenced by slot tables merely stops being
+                // shareable and must not inflate the eviction counter.
+                self.free.push(c);
+                self.blocks_evicted += 1;
+            }
+            self.deregister_descendants(c);
+        }
+    }
+
+    /// Map the longest registered chain of `prompt`'s full blocks into
+    /// `slot`'s (empty) table, sharing the physical blocks, and return
+    /// the number of prompt tokens whose prefill compute is skipped.
+    /// At least the final prompt token is always recomputed (its
+    /// last-position logits seed generation); when the whole prompt is
+    /// cached that recompute lands inside the shared tail block and the
+    /// write copy-on-write forks it.
+    fn map_shared_prefix(&mut self, slot: usize, prompt: &[i32]) -> usize {
+        debug_assert!(self.tables[slot].is_empty() && self.pos[slot] == 0);
+        if !self.sharing || prompt.len() < 2 {
+            return 0;
+        }
+        let bt = self.block_tokens;
+        self.tick += 1;
+        let mut matched = 0usize;
+        let mut key = PrefixKey { parent: NO_PARENT, tokens: Vec::with_capacity(bt) };
+        for chunk in prompt.chunks_exact(bt) {
+            key.tokens.clear();
+            key.tokens.extend_from_slice(chunk);
+            match self.prefix_index.get(&key) {
+                Some(&b) => {
+                    self.tables[slot].push(b);
+                    self.retain(b);
+                    if let Some(e) = self.registered[b].as_mut() {
+                        e.last_use = self.tick;
+                    }
+                    key.parent = b;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        let reuse = (matched * bt).min(prompt.len() - 1);
+        self.pos[slot] = reuse;
+        self.prefix_hit_blocks += matched as u64;
+        self.prefix_hit_tokens += reuse as u64;
+        reuse
+    }
+
+    /// Register `slot`'s full prompt blocks in the prefix index so
+    /// later identical prompts reuse them. Chains continue through the
+    /// canonical (first-registered) physical block when a key already
+    /// exists — contents are bit-identical by determinism either way.
+    fn register_prefix(&mut self, slot: usize, prompt: &[i32]) {
+        if !self.sharing {
+            return;
+        }
+        let bt = self.block_tokens;
+        self.tick += 1;
+        let mut parent = NO_PARENT;
+        for (i, chunk) in prompt.chunks_exact(bt).enumerate() {
+            let key = PrefixKey { parent, tokens: chunk.to_vec() };
+            if let Some(&b) = self.prefix_index.get(&key) {
+                if let Some(e) = self.registered[b].as_mut() {
+                    e.last_use = self.tick;
+                }
+                parent = b;
+            } else {
+                let phys = self.tables[slot][i];
+                debug_assert!(self.registered[phys].is_none());
+                self.prefix_index.insert(key.clone(), phys);
+                // The slot already holds phys (refcount >= 1), so the
+                // block is registered but not evictable.
+                self.refcount[phys] += 1;
+                self.registered[phys] = Some(RegEntry { key, last_use: self.tick });
+                self.registered_count += 1;
+                parent = phys;
+            }
+        }
+    }
+
+    /// Make positions `pos .. pos + seq` of `slot` writable: allocate
+    /// blocks the table does not cover yet and **copy-on-write fork**
+    /// any allocated block in the write range that other holders share.
+    /// Forking copies the block across every layer before any layer
+    /// writes, so the per-layer stores in the forward stay oblivious.
+    fn prepare_append(&mut self, slot: usize, seq: usize) -> Result<()> {
+        debug_assert!(seq > 0);
+        let pos = self.pos[slot];
+        ensure!(pos + seq <= self.max_seq, "KV slot {} overflow", slot);
+        let bt = self.block_tokens;
+        let first = pos / bt;
+        let last = (pos + seq - 1) / bt;
+        for b in first..=last {
+            if b < self.tables[slot].len() {
+                if self.refcount[self.tables[slot][b]] > 1 {
+                    self.fork(slot, b).with_context(|| {
+                        format!("copy-on-write fork of slot {} block {}", slot, b)
+                    })?;
+                }
+            } else {
+                let nb = self
+                    .alloc_block(slot)
+                    .with_context(|| format!("allocating KV block for slot {}", slot))?;
+                self.tables[slot].push(nb);
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write: give `slot` a private copy of logical block
+    /// `logical` (all layers, both tensors) and drop its reference to
+    /// the shared original.
+    fn fork(&mut self, slot: usize, logical: usize) -> Result<()> {
+        let old = self.tables[slot][logical];
+        // `old` has refcount >= 2, so eviction inside alloc can never
+        // pick it.
+        let nb = self.alloc_block(slot)?;
+        let stride = self.n_heads * self.block_tokens * self.head_dim;
+        for layer in 0..self.k.len() {
+            let (src, dst) = (old * stride, nb * stride);
+            self.k[layer].copy_within(src..src + stride, dst);
+            self.v[layer].copy_within(src..src + stride, dst);
+        }
+        // Via release: the original may be a registered block dropping
+        // to registry-only (it becomes evictable; it cannot hit zero —
+        // some other holder motivated the fork).
+        self.release(old);
+        self.tables[slot][logical] = nb;
+        self.cow_forks += 1;
+        Ok(())
     }
 
     #[inline]
-    fn idx(&self, slot: usize, head: usize, pos: usize) -> usize {
-        ((slot * self.n_heads + head) * self.max_seq + pos) * self.head_dim
+    fn idx(&self, slot: usize, pos: usize) -> usize {
+        let phys = self.tables[slot][pos / self.block_tokens];
+        (phys * self.n_heads * self.block_tokens + pos % self.block_tokens) * self.head_dim
     }
 
     /// Append `seq` new positions from per-token projection outputs
     /// `k`/`v` of shape `(len(slot_ids)·seq × d_model)`; lane `i` of the
     /// activation rows lands in cache slot `slot_ids[i]` starting at
-    /// `starts[i]`.
+    /// `starts[i]`. The caller must have run
+    /// [`prepare_append`](KvCache::prepare_append) for the range.
     fn store(
         &mut self,
         layer: usize,
@@ -122,12 +664,14 @@ impl KvCache {
         v: &Matrix,
     ) {
         let hd = self.head_dim;
+        let hstride = self.block_tokens * hd;
         for (i, &slot) in slot_ids.iter().enumerate() {
             for t in 0..seq {
                 let krow = k.row(i * seq + t);
                 let vrow = v.row(i * seq + t);
+                let base = self.idx(slot, starts[i] + t);
                 for head in 0..self.n_heads {
-                    let at = self.idx(slot, head, starts[i] + t);
+                    let at = base + head * hstride;
                     self.k[layer][at..at + hd]
                         .copy_from_slice(&krow[head * hd..(head + 1) * hd]);
                     self.v[layer][at..at + hd]
@@ -139,13 +683,13 @@ impl KvCache {
 
     #[inline]
     fn k_at(&self, layer: usize, slot: usize, head: usize, pos: usize) -> &[f32] {
-        let at = self.idx(slot, head, pos);
+        let at = self.idx(slot, pos) + head * self.block_tokens * self.head_dim;
         &self.k[layer][at..at + self.head_dim]
     }
 
     #[inline]
     fn v_at(&self, layer: usize, slot: usize, head: usize, pos: usize) -> &[f32] {
-        let at = self.idx(slot, head, pos);
+        let at = self.idx(slot, pos) + head * self.block_tokens * self.head_dim;
         &self.v[layer][at..at + self.head_dim]
     }
 
@@ -155,6 +699,77 @@ impl KvCache {
             + self.v.iter().map(|l| l.len()).sum::<usize>())
             * 4
     }
+
+    /// Exhaustively check the allocator/refcount/registry invariants —
+    /// the fuzz harnesses call this after every scheduling step. Not
+    /// part of the supported API.
+    #[doc(hidden)]
+    pub fn debug_validate(&self) {
+        let bt = self.block_tokens;
+        let mut refs = vec![0u32; self.total_blocks];
+        for (slot, table) in self.tables.iter().enumerate() {
+            let pos = self.pos[slot];
+            assert!(pos <= self.max_seq, "slot {} pos {} beyond max_seq", slot, pos);
+            assert!(
+                table.len() >= pos.div_ceil(bt) && table.len() <= (pos + 1).div_ceil(bt),
+                "slot {} table len {} inconsistent with pos {}",
+                slot,
+                table.len(),
+                pos
+            );
+            for &b in table {
+                refs[b] += 1;
+            }
+        }
+        for (b, e) in self.registered.iter().enumerate() {
+            if let Some(entry) = e {
+                refs[b] += 1;
+                assert_eq!(
+                    self.prefix_index.get(&entry.key),
+                    Some(&b),
+                    "registry entry for block {} missing from index",
+                    b
+                );
+            }
+        }
+        let reg_count = self.registered.iter().filter(|e| e.is_some()).count();
+        assert_eq!(self.prefix_index.len(), reg_count);
+        assert_eq!(self.registered_count, reg_count, "registered_count out of sync");
+        let evictable = self
+            .registered
+            .iter()
+            .enumerate()
+            .filter(|(b, e)| e.is_some() && self.refcount[*b] == 1)
+            .count();
+        assert_eq!(self.evictable_count, evictable, "evictable_count out of sync");
+        for (b, &rc) in self.refcount.iter().enumerate() {
+            assert_eq!(rc, refs[b], "block {} refcount {} != {} references", b, rc, refs[b]);
+        }
+        let mut seen = vec![false; self.total_blocks];
+        for &b in &self.free {
+            assert!(!seen[b], "block {} on the free list twice", b);
+            seen[b] = true;
+            assert_eq!(self.refcount[b], 0, "free block {} has references", b);
+        }
+        let in_use = self.refcount.iter().filter(|&&rc| rc > 0).count();
+        assert_eq!(in_use + self.free.len(), self.total_blocks, "blocks leaked");
+        assert_eq!(self.reserved_total, self.reserved.iter().sum::<usize>());
+        assert!(self.reserved_total <= self.free.len(), "reservations exceed free blocks");
+    }
+}
+
+/// One transformer block's weights: quantized projections (shared with
+/// the decode cache) + dense norms.
+struct BlockWeights {
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    wq: Arc<RuntimePlane>,
+    wk: Arc<RuntimePlane>,
+    wv: Arc<RuntimePlane>,
+    wo: Arc<RuntimePlane>,
+    w_gate: Arc<RuntimePlane>,
+    w_up: Arc<RuntimePlane>,
+    w_down: Arc<RuntimePlane>,
 }
 
 /// The native-kernel model: quantized projections resident as fused
@@ -301,8 +916,8 @@ impl NativeModel {
     }
 
     /// Prompt pass for a batch of equal-length prompts: fills a fresh KV
-    /// cache (slot `i` ← prompt `i`) and returns the last-position token
-    /// ids (greedy).
+    /// cache (slot `i` ← prompt `i`, default paged layout) and returns
+    /// the last-position token ids (greedy).
     pub fn prefill(&self, prompts: &[Vec<i32>]) -> Result<(Vec<i32>, KvCache)> {
         let batch = prompts.len();
         ensure!(batch > 0, "empty batch");
@@ -325,7 +940,9 @@ impl NativeModel {
     /// Prompt pass for **one** sequence into lane `slot` of an existing
     /// cache, while other lanes stay live — the continuous scheduler's
     /// admission path. The slot's previous occupant is discarded.
-    /// Returns the first greedily sampled token.
+    /// Shared-prefix reuse applies (DESIGN.md §10): registered prefix
+    /// blocks are mapped instead of recomputed. Returns the first
+    /// greedily sampled token.
     pub fn prefill_slot(&self, kv: &mut KvCache, slot: usize, prompt: &[i32]) -> Result<i32> {
         Ok(self.prefill_slots(kv, &[slot], prompt, prompt.len())?[0])
     }
@@ -334,10 +951,37 @@ impl NativeModel {
     /// `slot_ids` (ascending): `tokens` is `(len(slot_ids) × seq)`
     /// row-major, every prompt already normalized to `seq`. Each target
     /// lane's previous occupant is discarded. Returns the first greedily
-    /// sampled token per lane. A batched admission decodes each weight
-    /// block once for all lanes — k× less weight traffic than k
-    /// single-slot prefills on this memory-bound path.
+    /// sampled token per lane.
+    ///
+    /// Each lane first maps the longest registered prefix chain of its
+    /// prompt into its block table (skipping that much prefill
+    /// compute); the remaining suffixes are then forwarded **batched by
+    /// equal suffix length**, so a uniform admission round still
+    /// decodes each weight block once for all lanes — k× less weight
+    /// traffic than k single-slot prefills on this memory-bound path.
     pub fn prefill_slots(
+        &self,
+        kv: &mut KvCache,
+        slot_ids: &[usize],
+        tokens: &[i32],
+        seq: usize,
+    ) -> Result<Vec<i32>> {
+        let result = self.prefill_slots_inner(kv, slot_ids, tokens, seq);
+        if result.is_err() {
+            // A failed round (e.g. block-pool exhaustion after some
+            // lanes mapped shared prefixes) must not leak refcounts or
+            // half-admitted positions: free everything we touched so
+            // the cache stays consistent for the next round.
+            for &s in slot_ids {
+                if s < kv.slots {
+                    kv.free_slot(s);
+                }
+            }
+        }
+        result
+    }
+
+    fn prefill_slots_inner(
         &self,
         kv: &mut KvCache,
         slot_ids: &[usize],
@@ -351,14 +995,45 @@ impl NativeModel {
             tokens.len() == slot_ids.len() * seq,
             "token buffer shape mismatch"
         );
+        // Enforced here (not just per suffix group): duplicates that
+        // land in different groups would each pass the group-local
+        // forward validation while corrupting the shared slot's table.
+        for w in slot_ids.windows(2) {
+            ensure!(w[0] < w[1], "slot ids must be ascending and distinct");
+        }
         for &s in slot_ids {
             ensure!(s < kv.slots, "slot {} out of range ({} slots)", s, kv.slots);
         }
         for &s in slot_ids {
-            kv.pos[s] = 0;
+            kv.free_slot(s);
         }
-        let logits = self.forward_slots(tokens, slot_ids, seq, kv)?;
-        Ok(argmax_rows(&logits, slot_ids.len()))
+        // Map shared prefixes, then group lanes by remaining suffix
+        // length so each group shares one forward pass.
+        let mut reuse = vec![0usize; slot_ids.len()];
+        for (i, &s) in slot_ids.iter().enumerate() {
+            reuse[i] = kv.map_shared_prefix(s, &tokens[i * seq..(i + 1) * seq]);
+        }
+        let mut by_suffix: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, &r) in reuse.iter().enumerate() {
+            by_suffix.entry(seq - r).or_default().push(i);
+        }
+        let mut firsts = vec![0i32; slot_ids.len()];
+        for (&suffix, lanes) in &by_suffix {
+            let group: Vec<usize> = lanes.iter().map(|&i| slot_ids[i]).collect();
+            let mut buf = Vec::with_capacity(lanes.len() * suffix);
+            for &i in lanes {
+                buf.extend_from_slice(&tokens[i * seq + (seq - suffix)..(i + 1) * seq]);
+            }
+            let logits = self.forward_slots(&buf, &group, suffix, kv)?;
+            for (j, &i) in lanes.iter().enumerate() {
+                let row = &logits[j * self.config.vocab..(j + 1) * self.config.vocab];
+                firsts[i] = argmax_rows(row, 1)[0];
+            }
+        }
+        for (i, &s) in slot_ids.iter().enumerate() {
+            kv.register_prefix(s, &tokens[i * seq..(i + 1) * seq]);
+        }
+        Ok(firsts)
     }
 
     /// One greedy decode step over every lane of the cache (uniform
@@ -415,6 +1090,12 @@ impl NativeModel {
         let starts: Vec<usize> = slot_ids.iter().map(|&s| kv.pos[s]).collect();
         for (i, &s) in slot_ids.iter().enumerate() {
             ensure!(starts[i] + seq <= cfg.max_seq, "KV slot {} overflow", s);
+        }
+        // Block housekeeping before any layer writes: allocate table
+        // entries for the new positions and copy-on-write fork shared
+        // blocks in the write range (all layers at once).
+        for &s in slot_ids {
+            kv.prepare_append(s, seq)?;
         }
         let bs = n * seq;
 
@@ -605,6 +1286,26 @@ mod tests {
         (NativeModel::from_stored(&stored, threads).unwrap(), cache)
     }
 
+    /// Greedy-generate `steps` tokens from `prompt` alone in a fresh
+    /// cache with the given layout.
+    fn stream_with_layout(
+        m: &NativeModel,
+        layout: KvLayout,
+        prompt: &[i32],
+        steps: usize,
+    ) -> Vec<i32> {
+        let mut kv = KvCache::with_layout(&m.config, 1, layout);
+        let mut last = m.prefill_slot(&mut kv, 0, prompt).unwrap();
+        let mut out = Vec::with_capacity(steps);
+        kv.debug_validate();
+        for _ in 0..steps {
+            last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+            out.push(last);
+            kv.debug_validate();
+        }
+        out
+    }
+
     #[test]
     fn prefill_then_decode_produces_tokens_in_vocab() {
         let (m, _) = tiny_native(1);
@@ -755,6 +1456,10 @@ mod tests {
         assert!(m.decode_slots(&mut kv, &[last, last], &[0, 0]).is_err());
         // Mismatched lengths.
         assert!(m.decode_slots(&mut kv, &[last, last], &[0]).is_err());
+        // Duplicate slots in a batched admission are rejected up front
+        // (suffix grouping could otherwise split them into separately
+        // valid forwards while corrupting the shared slot's table).
+        assert!(m.prefill_slots(&mut kv, &[0, 0], &[1, 2, 3, 4], 2).is_err());
     }
 
     #[test]
@@ -774,8 +1479,221 @@ mod tests {
         let (m, _) = tiny_native(1);
         let (_, kv) = m.prefill(&[vec![1, 2, 3]]).unwrap();
         let cfg = &m.config;
+        // max_seq (256) is a multiple of the default block size, so the
+        // fully-provisioned paged pool matches the contiguous footprint
+        // exactly: blocks × H × block_tokens × hd == H × max_seq × hd.
         let want =
             2 * cfg.n_layers * cfg.n_heads * cfg.max_seq * cfg.head_dim() * 4;
         assert_eq!(kv.memory_bytes(), want);
+        assert_eq!(kv.total_blocks(), cfg.max_seq.div_ceil(kv.block_tokens()));
+    }
+
+    /// The paged layout is invisible to the outputs: any block size,
+    /// with or without prefix sharing, reproduces the
+    /// contiguous-equivalent stream token for token.
+    #[test]
+    fn paged_streams_are_block_size_invariant() {
+        let (m, _) = tiny_native(2);
+        let prompt: Vec<i32> = (0..23).map(|i| (i * 11 + 3) % 256).collect();
+        let reference =
+            stream_with_layout(&m, KvLayout::contiguous(&m.config), &prompt, 6);
+        for bt in [1usize, 3, 4, 7, 16, 64] {
+            for sharing in [false, true] {
+                let layout = KvLayout {
+                    block_tokens: bt,
+                    total_blocks: None,
+                    prefix_sharing: sharing,
+                };
+                let got = stream_with_layout(&m, layout, &prompt, 6);
+                assert_eq!(
+                    got, reference,
+                    "stream diverged at block_tokens={} sharing={}",
+                    bt, sharing
+                );
+            }
+        }
+    }
+
+    /// Shared-prefix reuse: a second slot with the same prompt maps the
+    /// registered prefix blocks (counted as hits), skips that prefill
+    /// compute, and still produces a bit-identical stream.
+    #[test]
+    fn shared_prefix_reuse_is_bit_identical_and_counted() {
+        let (m, _) = tiny_native(2);
+        // 3 full blocks + a partial tail at block_tokens = 4.
+        let prompt: Vec<i32> = (0..14).map(|i| (i * 7 + 1) % 256).collect();
+        let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+        let reference = stream_with_layout(
+            &m,
+            KvLayout::contiguous(&m.config),
+            &prompt,
+            5,
+        );
+
+        let mut kv = KvCache::with_layout(&m.config, 2, layout);
+        let mut last_a = m.prefill_slot(&mut kv, 0, &prompt).unwrap();
+        assert_eq!(kv.stats().prefix_hit_blocks, 0, "first prefill cannot hit");
+        let mut last_b = m.prefill_slot(&mut kv, 1, &prompt).unwrap();
+        let stats = kv.stats();
+        assert_eq!(stats.prefix_hit_blocks, 3, "3 full blocks should be reused");
+        assert_eq!(stats.prefix_hit_tokens, 12);
+        kv.debug_validate();
+        let (mut got_a, mut got_b) = (vec![last_a], vec![last_b]);
+        for _ in 0..4 {
+            let next = m.decode_slots(&mut kv, &[last_a, last_b], &[0, 1]).unwrap();
+            last_a = next[0];
+            last_b = next[1];
+            got_a.push(last_a);
+            got_b.push(last_b);
+            kv.debug_validate();
+        }
+        let mut want = vec![m.prefill(&[prompt.clone()]).unwrap().0[0]];
+        want.extend_from_slice(&reference[..4]);
+        assert_eq!(got_a, want);
+        assert_eq!(got_b, want);
+    }
+
+    /// A prompt that is exactly full blocks and fully registered: the
+    /// reuse keeps every shared block, recomputes only the final token,
+    /// and that write copy-on-write forks the shared tail block.
+    #[test]
+    fn full_prompt_reuse_forks_on_write() {
+        let (m, _) = tiny_native(1);
+        let prompt: Vec<i32> = (0..12).map(|i| (i * 5 + 2) % 256).collect(); // 3 × bt=4
+        let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+        let reference =
+            stream_with_layout(&m, KvLayout::contiguous(&m.config), &prompt, 4);
+
+        let mut kv = KvCache::with_layout(&m.config, 1, layout);
+        let _ = m.prefill_slot(&mut kv, 0, &prompt).unwrap();
+        kv.free_slot(0); // blocks survive in the registry
+        kv.debug_validate();
+        let mut last = m.prefill_slot(&mut kv, 0, &prompt).unwrap();
+        let stats = kv.stats();
+        assert_eq!(stats.prefix_hit_blocks, 3);
+        assert_eq!(stats.prefix_hit_tokens, 11, "last token always recomputed");
+        assert!(stats.cow_forks >= 1, "write into the shared tail must fork");
+        kv.debug_validate();
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+            got.push(last);
+            kv.debug_validate();
+        }
+        assert_eq!(got, reference);
+    }
+
+    /// An overcommitted pool: eviction recycles registry-only blocks
+    /// under pressure, and true exhaustion is a clean error, not a
+    /// panic or corruption.
+    #[test]
+    fn overcommitted_pool_evicts_then_errors_cleanly() {
+        let (m, _) = tiny_native(1);
+        let layout = KvLayout { block_tokens: 4, total_blocks: Some(4), prefix_sharing: true };
+        let mut kv = KvCache::with_layout(&m.config, 2, layout);
+        // Fill the registry via a retired 8-token prompt (2 blocks).
+        let _ = m.prefill_slot(&mut kv, 0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        kv.free_slot(0);
+        assert_eq!(kv.stats().registered_blocks, 2);
+        // A different 12-token prompt needs 3 blocks: 2 free + 1 evicted.
+        let mut last = m
+            .prefill_slot(&mut kv, 0, &[9, 9, 9, 9, 8, 8, 8, 8, 7, 7, 7, 7])
+            .unwrap();
+        assert!(kv.stats().blocks_evicted >= 1, "pressure must evict registry blocks");
+        kv.debug_validate();
+        // Decode to exhaustion: 4 blocks × 4 tokens = 16 positions total,
+        // 12 used and nothing left to steal once the registry is empty.
+        let mut err = None;
+        for _ in 0..8 {
+            match m.decode_slots(&mut kv, &[last], &[0]) {
+                Ok(next) => last = next[0],
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        let err = err.expect("pool must exhaust");
+        assert!(format!("{:#}", err).contains("exhausted"), "got: {:#}", err);
+        kv.debug_validate();
+    }
+
+    /// Reservations clamp to the allocatable headroom and make the
+    /// granted tokens immune to a competing slot's allocations.
+    #[test]
+    fn reservation_guarantees_decode_headroom() {
+        let (m, _) = tiny_native(1);
+        let layout = KvLayout { block_tokens: 4, total_blocks: Some(4), prefix_sharing: false };
+        let mut kv = KvCache::with_layout(&m.config, 2, layout);
+        let mut last = m.prefill_slot(&mut kv, 0, &[1, 2, 3, 4, 5, 6]).unwrap();
+        // 6 tokens in 2 blocks: slack 2, 2 free blocks → 10 allocatable.
+        assert_eq!(kv.reserve(0, 64), 10);
+        // Total semantics: a repeat call reports the same guarantee
+        // instead of stacking a second reservation.
+        assert_eq!(kv.reserve(0, 64), 10);
+        kv.debug_validate();
+        // A competitor cannot prefill into the reserved blocks…
+        assert!(m.prefill_slot(&mut kv, 1, &[7, 7, 7, 7, 7]).is_err());
+        kv.debug_validate();
+        // …while the reserved slot decodes its full grant.
+        for _ in 0..10 {
+            last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+            kv.debug_validate();
+        }
+        // Retirement returns reservation and blocks to the pool.
+        kv.free_slot(0);
+        kv.debug_validate();
+        assert_eq!(kv.admission_free_blocks(), 4);
+        let _ = m.prefill_slot(&mut kv, 1, &[7, 7, 7, 7, 7]).unwrap();
+        kv.debug_validate();
+    }
+
+    /// Reservations can tap registry-only blocks by evicting them —
+    /// the same headroom `admission_free_blocks` advertises, so a
+    /// request admitted on evictable headroom is never clamped to zero.
+    #[test]
+    fn reserve_evicts_registry_blocks_for_headroom() {
+        let (m, _) = tiny_native(1);
+        let layout = KvLayout { block_tokens: 4, total_blocks: Some(4), prefix_sharing: true };
+        let mut kv = KvCache::with_layout(&m.config, 2, layout);
+        // Retired 8-token prompt: free list 2, registry 2 (evictable).
+        let _ = m.prefill_slot(&mut kv, 0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        kv.free_slot(0);
+        // A different prompt drains the free list (its own registered
+        // blocks are slot-held, refcount 2 — not evictable).
+        let mut last = m
+            .prefill_slot(&mut kv, 1, &[9, 9, 9, 9, 8, 8, 8, 8])
+            .unwrap();
+        assert_eq!(kv.admission_free_blocks(), 2, "only the old registry blocks remain");
+        // The reservation must evict them rather than clamp to zero.
+        assert_eq!(kv.reserve(1, 100), 8);
+        assert_eq!(kv.stats().blocks_evicted, 2);
+        kv.debug_validate();
+        for _ in 0..8 {
+            last = m.decode_slots(&mut kv, &[last], &[1]).unwrap()[0];
+            kv.debug_validate();
+        }
+        // Pool truly full now: nothing further is grantable.
+        assert_eq!(kv.reserve(1, 1), 0);
+    }
+
+    /// The prefix registry survives slot retirement: a recurring system
+    /// prompt keeps hitting across otherwise unrelated requests.
+    #[test]
+    fn prefix_registry_survives_retirement() {
+        let (m, _) = tiny_native(1);
+        let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+        let mut kv = KvCache::with_layout(&m.config, 1, layout);
+        let system: Vec<i32> = (0..8).map(|i| 64 + i).collect();
+        for round in 0..3 {
+            let mut prompt = system.clone();
+            prompt.extend_from_slice(&[100 + round, 101 + round]);
+            let _ = m.prefill_slot(&mut kv, 0, &prompt).unwrap();
+            kv.free_slot(0);
+            kv.debug_validate();
+        }
+        // Rounds 2 and 3 each reuse the 2 system-prompt blocks.
+        assert_eq!(kv.stats().prefix_hit_blocks, 4);
+        assert_eq!(kv.stats().prefix_hit_tokens, 16);
     }
 }

@@ -26,6 +26,46 @@ impl Config {
     pub fn with_cases(cases: usize) -> Self {
         Config { cases, seed: 0xDEC0DE }
     }
+
+    /// [`Config::with_cases`] whose seed honours the `ICQ_TEST_SEED`
+    /// environment variable when set (decimal or `0x`-hex) — how
+    /// `ci.sh` re-runs the randomized suites under a seed matrix
+    /// without recompiling. Falls back to the default seed.
+    pub fn from_env(cases: usize) -> Self {
+        let seed = std::env::var("ICQ_TEST_SEED")
+            .ok()
+            .and_then(|s| parse_seed(&s))
+            .unwrap_or(0xDEC0DE);
+        Config { cases, seed }
+    }
+}
+
+/// Parse a seed string: decimal or `0x`-prefixed hex.
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse::<u64>().ok(),
+    }
+}
+
+/// Kernel-pool widths the randomized suites run at: `ICQ_POOL_WORKERS`
+/// (comma-separated positive integers) when set — one cell of the
+/// ci.sh seed × worker matrix — else the default `1,2,4` sweep.
+pub fn pool_worker_matrix() -> Vec<usize> {
+    let parsed: Vec<usize> = std::env::var("ICQ_POOL_WORKERS")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&w| w > 0)
+                .collect()
+        })
+        .unwrap_or_default();
+    if parsed.is_empty() {
+        vec![1, 2, 4]
+    } else {
+        parsed
+    }
 }
 
 /// Run `prop` over `cfg.cases` random inputs produced by `gen`.
@@ -119,6 +159,17 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn env_seed_parses_decimal_and_hex() {
+        // from_env is exercised on its fallback path only (tests run in
+        // parallel; mutating the process environment would race).
+        assert_eq!(Config::from_env(8).cases, 8);
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed(" 0x2A "), Some(42));
+        assert_eq!(parse_seed("0Xff"), Some(255));
+        assert_eq!(parse_seed("bogus"), None);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! End-to-end pipeline property (ISSUE 5): the whole PR 1→5 stack in
+//! one test. A SynthZoo checkpoint is quantized at bits ∈ {2, 3, 4},
+//! packed into an `ICQZ` container on disk, pushed through the
+//! content-hash registry, reopened via the shared decode cache into
+//! bit-packed `RuntimePlane`s, and served greedily by the native
+//! fused-kernel model over the **paged KV cache** — asserting every
+//! emitted token is **bit-identical** to an independent
+//! dequantize-then-forward reference model (dense f32 matmuls, its own
+//! contiguous KV), both at the model API and through the full `Server`
+//! scheduler.
+//!
+//! Seeded via `ICQ_TEST_SEED` (miniprop reports failing seeds); kernel
+//! pool widths via `ICQ_POOL_WORKERS` — the ci.sh matrix.
+
+use icquant::coordinator::backend::{argmax_rows, NativeBackend};
+use icquant::coordinator::batcher::{clamp_pad_id, fit_prompt};
+use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
+use icquant::icquant::IcqConfig;
+use icquant::kernels::{KvCache, KvLayout, NativeModel};
+use icquant::model::ModelConfig;
+use icquant::quant::QuantizerKind;
+use icquant::store::{container, synth_model, DecodeCache, Registry, StoredModel};
+use icquant::synthzoo::FamilySpec;
+use icquant::util::miniprop::{check, pool_worker_matrix, Config};
+use icquant::util::tensor::Matrix;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("icq_e2e_pipeline").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Reference model: dequantized f32 weights, dense matmuls, contiguous
+// per-position KV — an independent implementation of the same
+// architecture. The fused kernels' accumulation contract (DESIGN.md §8)
+// says gemm ≡ x · dequantize(W)ᵀ bit-for-bit, and the forward helpers
+// mirror `kernels/model.rs` op for op, so the whole greedy stream must
+// match exactly.
+// ---------------------------------------------------------------------------
+
+const ROPE_THETA: f32 = 10000.0;
+const NORM_EPS: f32 = 1e-5;
+
+struct RefBlock {
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    /// Dequantized projections, pre-transposed for `x · Wᵀ`.
+    wq_t: Matrix,
+    wk_t: Matrix,
+    wv_t: Matrix,
+    wo_t: Matrix,
+    w_gate_t: Matrix,
+    w_up_t: Matrix,
+    w_down_t: Matrix,
+}
+
+struct RefModel {
+    cfg: ModelConfig,
+    tok_emb: Matrix,
+    lm_head: Matrix,
+    final_norm: Vec<f32>,
+    blocks: Vec<RefBlock>,
+    inv_freq: Vec<f32>,
+}
+
+/// Per-layer K/V rows, one `d_model` row per position — the simplest
+/// possible contiguous cache.
+struct RefKv {
+    k: Vec<Vec<Vec<f32>>>,
+    v: Vec<Vec<Vec<f32>>>,
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + NORM_EPS).sqrt();
+    x.iter().zip(w).map(|(xv, wv)| xv * r * wv).collect()
+}
+
+fn apply_rope(row: &mut [f32], heads: usize, hd: usize, pos: usize, inv_freq: &[f32]) {
+    let half = hd / 2;
+    for head in 0..heads {
+        let h = &mut row[head * hd..(head + 1) * hd];
+        for (j, &freq) in inv_freq.iter().enumerate() {
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let (a, b) = (h[j], h[j + half]);
+            h[j] = a * cos - b * sin;
+            h[j + half] = a * sin + b * cos;
+        }
+    }
+}
+
+fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+impl RefModel {
+    fn build(stored: &StoredModel) -> RefModel {
+        let cfg = stored.config.clone().expect("container has a config");
+        let plane_t = |name: &str| -> Matrix {
+            stored.runtime_plane(name).unwrap().dequantize().transpose()
+        };
+        let dense_mat = |name: &str| -> Matrix {
+            let (shape, data) = stored.dense(name).unwrap();
+            Matrix::from_vec(shape[0], shape[1], data.to_vec())
+        };
+        let dense_vec = |name: &str| -> Vec<f32> { stored.dense(name).unwrap().1.to_vec() };
+        let blocks = (0..cfg.n_layers)
+            .map(|i| RefBlock {
+                attn_norm: dense_vec(&format!("l{}.attn_norm", i)),
+                mlp_norm: dense_vec(&format!("l{}.mlp_norm", i)),
+                wq_t: plane_t(&format!("l{}.wq", i)),
+                wk_t: plane_t(&format!("l{}.wk", i)),
+                wv_t: plane_t(&format!("l{}.wv", i)),
+                wo_t: plane_t(&format!("l{}.wo", i)),
+                w_gate_t: plane_t(&format!("l{}.w_gate", i)),
+                w_up_t: plane_t(&format!("l{}.w_up", i)),
+                w_down_t: plane_t(&format!("l{}.w_down", i)),
+            })
+            .collect();
+        let half = cfg.head_dim() / 2;
+        let inv_freq =
+            (0..half).map(|j| ROPE_THETA.powf(-(j as f32) / half as f32)).collect();
+        RefModel {
+            tok_emb: dense_mat("tok_emb"),
+            lm_head: dense_mat("lm_head"),
+            final_norm: dense_vec("final_norm"),
+            blocks,
+            inv_freq,
+            cfg,
+        }
+    }
+
+    fn empty_kv(&self) -> RefKv {
+        RefKv {
+            k: vec![Vec::new(); self.cfg.n_layers],
+            v: vec![Vec::new(); self.cfg.n_layers],
+        }
+    }
+
+    /// Process one token at the next position; returns greedy argmax of
+    /// the resulting logits.
+    fn step(&self, kv: &mut RefKv, token: i32) -> i32 {
+        let cfg = &self.cfg;
+        let (d, hd, heads) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+        let pos = kv.k[0].len();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let id = (token.max(0) as usize).min(cfg.vocab - 1);
+        let mut x = self.tok_emb.row(id).to_vec();
+        for (layer, bw) in self.blocks.iter().enumerate() {
+            let h = Matrix::from_vec(1, d, rmsnorm(&x, &bw.attn_norm));
+            let mut q = h.matmul(&bw.wq_t);
+            let mut k = h.matmul(&bw.wk_t);
+            let v = h.matmul(&bw.wv_t);
+            apply_rope(q.row_mut(0), heads, hd, pos, &self.inv_freq);
+            apply_rope(k.row_mut(0), heads, hd, pos, &self.inv_freq);
+            kv.k[layer].push(k.data.clone());
+            kv.v[layer].push(v.data.clone());
+
+            let mut attn = vec![0.0f32; d];
+            let span = pos + 1;
+            let mut scores = vec![0.0f32; span];
+            for head in 0..heads {
+                let qh = &q.row(0)[head * hd..(head + 1) * hd];
+                for (p, s) in scores.iter_mut().enumerate() {
+                    *s = dot(qh, &kv.k[layer][p][head * hd..(head + 1) * hd]) * scale;
+                }
+                softmax(&mut scores);
+                let out = &mut attn[head * hd..(head + 1) * hd];
+                for (p, &w) in scores.iter().enumerate() {
+                    for (o, kvv) in
+                        out.iter_mut().zip(&kv.v[layer][p][head * hd..(head + 1) * hd])
+                    {
+                        *o += w * *kvv;
+                    }
+                }
+            }
+            let o = Matrix::from_vec(1, d, attn).matmul(&bw.wo_t);
+            for (a, b) in x.iter_mut().zip(&o.data) {
+                *a += *b;
+            }
+
+            let h = Matrix::from_vec(1, d, rmsnorm(&x, &bw.mlp_norm));
+            let mut gate = h.matmul(&bw.w_gate_t);
+            let up = h.matmul(&bw.w_up_t);
+            for (g, u) in gate.data.iter_mut().zip(&up.data) {
+                *g = silu(*g) * *u;
+            }
+            let down = gate.matmul(&bw.w_down_t);
+            for (a, b) in x.iter_mut().zip(&down.data) {
+                *a += *b;
+            }
+        }
+        let h = rmsnorm(&x, &self.final_norm);
+        let logits: Vec<f32> =
+            (0..cfg.vocab).map(|vi| dot(self.lm_head.row(vi), &h)).collect();
+        argmax_rows(&logits, 1)[0]
+    }
+
+    /// Greedy continuation: feed the prompt token by token, then `steps`
+    /// generated tokens. Returns `steps + 1` tokens (the prefill
+    /// prediction first) — the same shape as the native
+    /// prefill-then-decode stream.
+    fn continuation(&self, prompt: &[i32], steps: usize) -> Vec<i32> {
+        let mut kv = self.empty_kv();
+        let mut last = 0;
+        for &t in prompt {
+            last = self.step(&mut kv, t);
+        }
+        let mut out = vec![last];
+        for _ in 0..steps {
+            last = self.step(&mut kv, last);
+            out.push(last);
+        }
+        out
+    }
+}
+
+/// Native greedy stream through the paged cache, same shape as
+/// [`RefModel::continuation`].
+fn native_stream(
+    m: &NativeModel,
+    layout: KvLayout,
+    prompt: &[i32],
+    steps: usize,
+) -> Vec<i32> {
+    let mut kv = KvCache::with_layout(&m.config, 1, layout);
+    let mut last = m.prefill_slot(&mut kv, 0, prompt).unwrap();
+    let mut out = vec![last];
+    for _ in 0..steps {
+        last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+        out.push(last);
+        kv.debug_validate();
+    }
+    out
+}
+
+/// Build the full artifact chain for one bit-width and return the
+/// StoredModel opened from the registry-resolved container path.
+fn stored_via_registry(dir: &PathBuf, bits: u32) -> StoredModel {
+    let family = FamilySpec {
+        name: "e2e-tiny",
+        d_model: 32,
+        d_ff: 64,
+        n_blocks: 2,
+        tail_frac: 0.02,
+        tail_scale: 2.5,
+        oproj_hot: 0.5,
+        seed: 0xE2E0 + bits as u64,
+    };
+    let qcfg = IcqConfig {
+        bits,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = synth_model(&family, &qcfg, None).unwrap();
+
+    // Container on disk → registry put → name@hash resolve → reopen.
+    let raw_path = dir.join(format!("e2e-b{}.icqz", bits));
+    container::save(&model, &raw_path).unwrap();
+    let loaded = container::load(&raw_path).unwrap();
+    let reg = Registry::open(dir.join("registry")).unwrap();
+    let record = reg.put_model(&format!("e2e-b{}", bits), &loaded).unwrap();
+    let (_, resolved) = reg.resolve(&record.spec()).unwrap();
+    let cache = Arc::new(DecodeCache::new(64 << 20));
+    StoredModel::open(&resolved, cache).unwrap()
+}
+
+/// The acceptance property: quantize → container → registry → cached
+/// packed planes → native paged serve ≡ dequantize-then-forward, at
+/// every bit width, block size and pool width exercised.
+#[test]
+fn e2e_native_paged_serve_matches_dequantized_reference() {
+    let dir = tmp_dir("bitwidths");
+    let workers = pool_worker_matrix();
+    for bits in [2u32, 3, 4] {
+        let stored = stored_via_registry(&dir, bits);
+        let reference = RefModel::build(&stored);
+        for &w in &workers {
+            let native = NativeModel::from_stored(&stored, w).unwrap();
+            check(
+                &format!("e2e-pipeline-b{}-w{}", bits, w),
+                Config::from_env(4),
+                |rng, size| {
+                    let plen = 1 + (size * 19.0) as usize;
+                    let prompt: Vec<i32> =
+                        (0..plen).map(|_| rng.below(256) as i32).collect();
+                    let steps = 1 + rng.below(6) as usize;
+                    let block_tokens =
+                        *[2usize, 4, 16].get(rng.below(3) as usize).unwrap();
+                    (prompt, steps, block_tokens)
+                },
+                |(prompt, steps, block_tokens)| {
+                    let want = reference.continuation(prompt, *steps);
+                    let layout = KvLayout {
+                        block_tokens: *block_tokens,
+                        total_blocks: None,
+                        prefix_sharing: true,
+                    };
+                    let got = native_stream(&native, layout, prompt, *steps);
+                    icquant::prop_assert!(
+                        got == want,
+                        "bits={} workers={} bt={}: native {:?} != reference {:?}",
+                        bits,
+                        w,
+                        block_tokens,
+                        got,
+                        want
+                    );
+                    Ok(())
+                },
+            );
+        }
+    }
+    println!("e2e_pipeline: completed {} randomized cases", 3 * pool_worker_matrix().len() * 4);
+}
+
+/// The same property through the full serving stack: `Server` +
+/// continuous scheduler + paged `NativeBackend`, shared-prefix prompts
+/// included. The server's visible stream is the decode outputs (the
+/// prefill prediction seeds generation), i.e. `continuation[1..]`.
+#[test]
+fn e2e_server_streams_match_dequantized_reference() {
+    let dir = tmp_dir("server");
+    let stored = stored_via_registry(&dir, 2);
+    let reference = RefModel::build(&stored);
+    let workers = pool_worker_matrix();
+    let w = *workers.last().unwrap();
+    let native = NativeModel::from_stored(&stored, w).unwrap();
+    let vocab = native.config.vocab;
+
+    let cfg = ServeConfig {
+        max_batch: 3,
+        max_wait: Duration::from_millis(1),
+        max_new_tokens: 6,
+        buckets: vec![1, 2, 3],
+        prefill_len: 12,
+        pad_id: b' ' as i32,
+        scheduler: SchedulerKind::Continuous,
+    };
+    let prefill_len = cfg.prefill_len;
+    let pad = clamp_pad_id(cfg.pad_id, Some(vocab));
+    let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+    let server = Server::start(cfg, move || {
+        Ok(NativeBackend::new(native).with_kv_layout(layout))
+    });
+
+    // Six requests, three sharing one system-prompt prefix.
+    let system: Vec<i32> = vec![83, 89, 83, 84, 69, 77, 58, 32];
+    let mut prompts = Vec::new();
+    for i in 0..6 {
+        let mut p = if i % 2 == 0 { system.clone() } else { vec![78 + i] };
+        p.extend_from_slice(&[65 + i, 66 + i]);
+        prompts.push(p);
+    }
+    let mut rxs = Vec::new();
+    for p in &prompts {
+        rxs.push(server.submit(p.clone(), 5).unwrap().1);
+    }
+    for (p, rx) in prompts.iter().zip(rxs) {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        let padded = fit_prompt(p, prefill_len, pad);
+        let want = reference.continuation(&padded, 5);
+        assert_eq!(
+            resp.tokens,
+            want[1..6].to_vec(),
+            "served stream != dequantized reference for prompt {:?}",
+            p
+        );
+    }
+    let snap = server.metrics.snapshot();
+    assert!(snap.prefix_hits > 0, "shared system prompts must hit the prefix cache");
+    server.shutdown();
+    println!("e2e_pipeline: server differential OK ({} prefix block hits)", snap.prefix_hits);
+}

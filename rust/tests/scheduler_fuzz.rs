@@ -1,0 +1,490 @@
+//! Randomized scheduler / paged-KV fuzz harness (ISSUE 5).
+//!
+//! Three layers of differential testing, all seeded through
+//! `miniprop::Config::from_env` (override with `ICQ_TEST_SEED`; failing
+//! cases panic with their seed) and sized through `ICQ_POOL_WORKERS`
+//! (comma-separated kernel-pool widths, default `1,2,4`):
+//!
+//! 1. **Scheduler equivalence** — randomized workloads (arrival jitter,
+//!    prompt/target lengths incl. empty and over-long, slot caps 1–8,
+//!    early retirements via tiny targets, bounded-KV clamps) through the
+//!    real `Server` worker over deterministic mock backends, asserting
+//!    the continuous-batching scheduler delivers exactly the
+//!    run-to-completion outputs with no lost or duplicated responses
+//!    and sane occupancy metrics.
+//! 2. **Paged-cache interleavings** — random block sizes, pool sizes,
+//!    prefix-sharing patterns and admit/decode/retire interleavings
+//!    driven straight against `NativeModel` + paged `KvCache`, asserting
+//!    bit-identical streams vs the contiguous-equivalent layout and
+//!    validating every allocator/refcount invariant after every op.
+//! 3. **Native server differential** — full `Server` runs over the
+//!    paged `NativeBackend` under both schedulers with shared prompt
+//!    prefixes, asserting identical outputs.
+//!
+//! `ci.sh` runs this binary under a seed × pool-worker matrix and gates
+//! on the total completed-case count printed by each test.
+
+use icquant::coordinator::backend::{Backend, DecodeState, MockBackend, NativeBackend};
+use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
+use icquant::icquant::IcqConfig;
+use icquant::kernels::{KvCache, KvLayout, NativeModel};
+use icquant::quant::QuantizerKind;
+use icquant::store::{synth_model, DecodeCache, StoredModel};
+use icquant::synthzoo::FamilySpec;
+use icquant::util::miniprop::{check, pool_worker_matrix, Config};
+use icquant::util::prng::Rng;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A mock whose KV capacity is bounded, so the fuzz exercises the
+/// over-long-request clamp on both schedulers.
+struct BoundedMock {
+    inner: MockBackend,
+    max_pos: usize,
+}
+
+impl Backend for BoundedMock {
+    fn new_state(&mut self, cap: usize) -> anyhow::Result<DecodeState> {
+        self.inner.new_state(cap)
+    }
+    fn prefill_into(
+        &mut self,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> anyhow::Result<()> {
+        self.inner.prefill_into(state, slot, prompt)
+    }
+    fn decode(&mut self, state: &mut DecodeState) -> anyhow::Result<Vec<i32>> {
+        self.inner.decode(state)
+    }
+    fn vocab(&self) -> Option<usize> {
+        self.inner.vocab()
+    }
+    fn max_positions(&self) -> Option<usize> {
+        Some(self.max_pos)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct FuzzRequest {
+    prompt: Vec<i32>,
+    want: usize,
+    jitter_us: u64,
+}
+
+#[derive(Debug, Clone)]
+struct FuzzWorkload {
+    cap: usize,
+    max_new_tokens: usize,
+    prefill_len: usize,
+    /// `Some(n)` bounds the mock's KV to `n` positions.
+    max_pos: Option<usize>,
+    requests: Vec<FuzzRequest>,
+}
+
+fn run_workload(w: &FuzzWorkload, scheduler: SchedulerKind) -> Vec<(u64, Vec<i32>)> {
+    let cfg = ServeConfig {
+        max_batch: w.cap,
+        max_wait: Duration::from_millis(1),
+        max_new_tokens: w.max_new_tokens,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: w.prefill_len,
+        pad_id: b' ' as i32,
+        scheduler,
+    };
+    // `usize::MAX` makes the bound a no-op — one backend type for both
+    // the bounded and unbounded arms of the fuzz.
+    let max_pos = w.max_pos.unwrap_or(usize::MAX);
+    let server = Server::start(cfg, move || {
+        Ok(BoundedMock { inner: MockBackend::new(), max_pos })
+    });
+    let mut rxs = Vec::new();
+    for r in &w.requests {
+        if r.jitter_us > 0 {
+            std::thread::sleep(Duration::from_micros(r.jitter_us));
+        }
+        let (id, rx) = server.submit(r.prompt.clone(), r.want).unwrap();
+        rxs.push((id, rx));
+    }
+    let out: Vec<(u64, Vec<i32>)> = rxs
+        .into_iter()
+        .map(|(id, rx)| {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            assert!(resp.timing.error.is_none(), "request failed: {:?}", resp.timing.error);
+            assert_eq!(resp.id, id);
+            (id, resp.tokens)
+        })
+        .collect();
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests as usize, w.requests.len(), "metrics lost requests");
+    if scheduler == SchedulerKind::Continuous {
+        // Wave mode records compiled-bucket occupancy, which may round
+        // above the slot cap; the slot scheduler never can.
+        assert!(
+            snap.avg_active_slots <= w.cap as f64 + 1e-9,
+            "occupancy exceeded the slot cap: {:.2} > {}",
+            snap.avg_active_slots,
+            w.cap
+        );
+    }
+    server.shutdown();
+    out
+}
+
+/// Layer 1: the continuous scheduler must deliver exactly the
+/// run-to-completion outputs for arbitrary workloads.
+#[test]
+fn fuzz_scheduler_equivalence_over_random_workloads() {
+    const CASES: usize = 80;
+    check(
+        "scheduler-equivalence",
+        Config::from_env(CASES),
+        |rng, size| {
+            let n = 1 + (size * 19.0) as usize;
+            let cap = 1 + rng.below(8) as usize;
+            let max_new_tokens = 1 + rng.below(10) as usize;
+            let prefill_len = 4 + rng.below(28) as usize;
+            let max_pos = if rng.bool(0.25) { Some(2 + rng.below(8) as usize) } else { None };
+            let requests = (0..n)
+                .map(|_| FuzzRequest {
+                    // Empty, short, window-sized and over-long prompts.
+                    prompt: (0..rng.below(40) as usize)
+                        .map(|_| rng.below(256) as i32)
+                        .collect(),
+                    // 0 = satisfied by prefill alone; values beyond
+                    // max_new_tokens exercise the cap.
+                    want: rng.below(13) as usize,
+                    jitter_us: if rng.bool(0.3) {
+                        (size * rng.below(1500) as f64) as u64
+                    } else {
+                        0
+                    },
+                })
+                .collect();
+            FuzzWorkload { cap, max_new_tokens, prefill_len, max_pos, requests }
+        },
+        |w| {
+            let cont = run_workload(w, SchedulerKind::Continuous);
+            let wave = run_workload(w, SchedulerKind::RunToCompletion);
+            icquant::prop_assert!(
+                cont.len() == w.requests.len(),
+                "continuous lost responses: {} of {}",
+                cont.len(),
+                w.requests.len()
+            );
+            let ids: HashSet<u64> = cont.iter().map(|(id, _)| *id).collect();
+            icquant::prop_assert!(ids.len() == cont.len(), "duplicated response ids");
+            for (i, ((_, ct), (_, wt))) in cont.iter().zip(&wave).enumerate() {
+                icquant::prop_assert!(
+                    ct == wt,
+                    "request {} diverged between schedulers: {:?} vs {:?}",
+                    i,
+                    ct,
+                    wt
+                );
+                let mut want = w.requests[i].want.min(w.max_new_tokens);
+                if let Some(mp) = w.max_pos {
+                    want = want.min(mp);
+                }
+                icquant::prop_assert!(
+                    ct.len() == want,
+                    "request {} length {} != clamped target {}",
+                    i,
+                    ct.len(),
+                    want
+                );
+            }
+            Ok(())
+        },
+    );
+    println!("scheduler_fuzz: completed {} randomized cases (scheduler-equivalence)", CASES);
+}
+
+fn tiny_stored(seed: u64) -> StoredModel {
+    let family = FamilySpec {
+        name: "fuzz-tiny",
+        d_model: 32,
+        d_ff: 64,
+        n_blocks: 2,
+        tail_frac: 0.02,
+        tail_scale: 2.5,
+        oproj_hot: 0.5,
+        seed,
+    };
+    let cfg = IcqConfig {
+        bits: 2,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    let model = synth_model(&family, &cfg, None).unwrap();
+    let cache = Arc::new(DecodeCache::new(64 << 20));
+    StoredModel::from_model(model, cache, "fuzz-tiny")
+}
+
+/// One sequence's reference stream: alone, contiguous-equivalent layout.
+fn reference_stream(m: &NativeModel, prompt: &[i32], steps: usize) -> Vec<i32> {
+    let mut kv = KvCache::with_layout(&m.config, 1, KvLayout::contiguous(&m.config));
+    let mut last = m.prefill_slot(&mut kv, 0, prompt).unwrap();
+    let mut out = vec![last];
+    for _ in 0..steps {
+        last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+        out.push(last);
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+struct PagedCase {
+    block_tokens: usize,
+    sharing: bool,
+    cap: usize,
+    /// `Some` = overcommitted pool sized for the active lanes' worst
+    /// case but not for registry accumulation, so allocations under
+    /// pressure must evict registered blocks (never truly exhaust:
+    /// every lane needs at most `⌈32/bt⌉` blocks and the pool holds
+    /// `cap × (⌈32/bt⌉ + 1)`).
+    total_blocks: Option<usize>,
+    /// Shared system-prompt prefix length (0 = unrelated prompts).
+    prefix_len: usize,
+    /// Per-request distinct tail length and decode steps.
+    requests: Vec<(usize, usize)>,
+    seed: u64,
+}
+
+/// Layer 2: random paged layouts and admit/decode/retire interleavings
+/// against the model, checked token-for-token against the contiguous
+/// reference and invariant-validated after every operation.
+#[test]
+fn fuzz_paged_interleavings_bit_identical_across_pool_widths() {
+    let workers = pool_worker_matrix();
+    let mut total = 0usize;
+    for &w in &workers {
+        let stored = tiny_stored(0x7157);
+        let m = NativeModel::from_stored(&stored, w).unwrap();
+        const CASES: usize = 10;
+        total += CASES;
+        check(
+            &format!("paged-interleavings-w{}", w),
+            Config::from_env(CASES),
+            |rng, size| {
+                let block_tokens = *[1usize, 2, 3, 4, 5, 8, 16]
+                    .get(rng.below(7) as usize)
+                    .unwrap();
+                let cap = 2 + rng.below(3) as usize;
+                // Half the cases run an overcommitted pool so eviction,
+                // descendant deregistration and CoW-under-pressure are
+                // fuzzed, not just unit-tested (prompts + decodes stay
+                // under 32 tokens, so the sizing above always leaves a
+                // block allocatable by evicting registry-only blocks).
+                let total_blocks = if rng.bool(0.5) {
+                    Some(cap * (32usize.div_ceil(block_tokens) + 1))
+                } else {
+                    None
+                };
+                PagedCase {
+                    block_tokens,
+                    sharing: rng.bool(0.7),
+                    cap,
+                    total_blocks,
+                    prefix_len: rng.below(13) as usize,
+                    requests: (0..(2 + (size * 4.0) as usize))
+                        .map(|_| (1 + rng.below(6) as usize, 1 + rng.below(6) as usize))
+                        .collect(),
+                    seed: rng.next_u64(),
+                }
+            },
+            |case| {
+                let layout = KvLayout {
+                    block_tokens: case.block_tokens,
+                    total_blocks: case.total_blocks,
+                    prefix_sharing: case.sharing,
+                };
+                let mut rng = Rng::new(case.seed);
+                let prefix: Vec<i32> =
+                    (0..case.prefix_len).map(|_| rng.below(256) as i32).collect();
+                let prompts: Vec<Vec<i32>> = case
+                    .requests
+                    .iter()
+                    .map(|&(tail, _)| {
+                        let mut p = prefix.clone();
+                        p.extend((0..tail).map(|_| rng.below(256) as i32));
+                        p
+                    })
+                    .collect();
+                let refs: Vec<Vec<i32>> = prompts
+                    .iter()
+                    .zip(&case.requests)
+                    .map(|(p, &(_, steps))| reference_stream(&m, p, steps))
+                    .collect();
+
+                // Random interleaving: admit into free slots, decode the
+                // active subset, retire finished sequences.
+                let mut kv = KvCache::with_layout(&m.config, case.cap, layout);
+                let mut slot_of: Vec<Option<usize>> = vec![None; prompts.len()];
+                let mut emitted: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+                let mut last: Vec<i32> = vec![0; prompts.len()];
+                let mut next_req = 0usize;
+                let mut guard = 0usize;
+                while emitted.iter().zip(&refs).any(|(e, r)| e.len() < r.len()) {
+                    guard += 1;
+                    if guard > 10_000 {
+                        return Err("interleaving failed to make progress".into());
+                    }
+                    // Maybe admit (always admit if nothing is active).
+                    let active: Vec<usize> =
+                        (0..prompts.len()).filter(|&i| slot_of[i].is_some()).collect();
+                    let free_slot = (0..case.cap)
+                        .find(|s| !slot_of.iter().any(|&x| x == Some(*s)));
+                    if next_req < prompts.len()
+                        && free_slot.is_some()
+                        && (active.is_empty() || rng.bool(0.5))
+                    {
+                        let slot = free_slot.unwrap();
+                        let first = m
+                            .prefill_slot(&mut kv, slot, &prompts[next_req])
+                            .map_err(|e| format!("prefill: {:#}", e))?;
+                        kv.debug_validate();
+                        if first != refs[next_req][0] {
+                            return Err(format!(
+                                "request {} first token {} != reference {}",
+                                next_req, first, refs[next_req][0]
+                            ));
+                        }
+                        emitted[next_req].push(first);
+                        last[next_req] = first;
+                        slot_of[next_req] = Some(slot);
+                        next_req += 1;
+                        continue;
+                    }
+                    // Decode a random non-empty subset of active lanes.
+                    let mut lanes: Vec<usize> = active
+                        .iter()
+                        .copied()
+                        .filter(|_| rng.bool(0.8))
+                        .collect();
+                    if lanes.is_empty() {
+                        lanes = active.clone();
+                    }
+                    if lanes.is_empty() {
+                        continue;
+                    }
+                    lanes.sort_by_key(|&i| slot_of[i].unwrap());
+                    let slots: Vec<usize> = lanes.iter().map(|&i| slot_of[i].unwrap()).collect();
+                    let feed: Vec<i32> = lanes.iter().map(|&i| last[i]).collect();
+                    let next = m
+                        .decode_slots(&mut kv, &feed, &slots)
+                        .map_err(|e| format!("decode: {:#}", e))?;
+                    kv.debug_validate();
+                    for (j, &i) in lanes.iter().enumerate() {
+                        last[i] = next[j];
+                        emitted[i].push(next[j]);
+                        let want = &refs[i];
+                        let at = emitted[i].len() - 1;
+                        if emitted[i][at] != want[at] {
+                            return Err(format!(
+                                "request {} diverged at token {}: {} != {}",
+                                i, at, emitted[i][at], want[at]
+                            ));
+                        }
+                        if emitted[i].len() == want.len() {
+                            kv.free_slot(slot_of[i].take().unwrap());
+                            kv.debug_validate();
+                        }
+                    }
+                }
+                for (i, (e, r)) in emitted.iter().zip(&refs).enumerate() {
+                    icquant::prop_assert!(
+                        e == r,
+                        "request {} stream mismatch under paging",
+                        i
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+    println!(
+        "scheduler_fuzz: completed {} randomized cases (paged-interleavings, workers {:?})",
+        total, workers
+    );
+}
+
+/// Layer 3: the whole server (continuous vs run-to-completion) over the
+/// paged native backend with shared prompt prefixes.
+#[test]
+fn fuzz_native_server_scheduler_differential() {
+    let workers = pool_worker_matrix();
+    let mut total = 0usize;
+    for &w in &workers {
+        const CASES: usize = 3;
+        total += CASES;
+        check(
+            &format!("native-server-differential-w{}", w),
+            Config::from_env(CASES),
+            |rng, _| {
+                let block_tokens = *[2usize, 4, 16].get(rng.below(3) as usize).unwrap();
+                let n = 3 + rng.below(4) as usize;
+                let prefix = rng.below(10) as usize;
+                let seed = rng.next_u64();
+                (block_tokens, n, prefix, seed)
+            },
+            |&(block_tokens, n, prefix_len, seed)| {
+                let mut run = |scheduler: SchedulerKind| -> Vec<Vec<i32>> {
+                    let stored = tiny_stored(0x7157);
+                    let layout = KvLayout {
+                        block_tokens,
+                        total_blocks: None,
+                        prefix_sharing: true,
+                    };
+                    let backend = NativeBackend::from_stored(&stored, w)
+                        .unwrap()
+                        .with_kv_layout(layout);
+                    let cfg = ServeConfig {
+                        max_batch: 3,
+                        max_wait: Duration::from_millis(1),
+                        max_new_tokens: 6,
+                        buckets: vec![1, 2, 3],
+                        prefill_len: 16,
+                        pad_id: b' ' as i32,
+                        scheduler,
+                    };
+                    let server = Server::start(cfg, move || Ok(backend));
+                    let mut rng = Rng::new(seed);
+                    let prefix: Vec<i32> =
+                        (0..prefix_len).map(|_| rng.below(256) as i32).collect();
+                    let mut rxs = Vec::new();
+                    for _ in 0..n {
+                        let mut p = prefix.clone();
+                        p.extend((0..1 + rng.below(5) as usize).map(|_| rng.below(256) as i32));
+                        let want = 1 + rng.below(5) as usize;
+                        rxs.push(server.submit(p, want).unwrap().1);
+                    }
+                    let out = rxs
+                        .into_iter()
+                        .map(|rx| {
+                            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                            assert!(r.timing.error.is_none(), "{:?}", r.timing.error);
+                            r.tokens
+                        })
+                        .collect();
+                    server.shutdown();
+                    out
+                };
+                let cont = run(SchedulerKind::Continuous);
+                let wave = run(SchedulerKind::RunToCompletion);
+                icquant::prop_assert!(
+                    cont == wave,
+                    "paged native outputs diverged between schedulers"
+                );
+                Ok(())
+            },
+        );
+    }
+    println!(
+        "scheduler_fuzz: completed {} randomized cases (native-server-differential, workers {:?})",
+        total, workers
+    );
+}
