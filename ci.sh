@@ -77,16 +77,30 @@ done
 
 echo "=== serving bench → BENCH_serving.json ==="
 # Continuous-batching vs run-to-completion on the mixed-length staggered
-# workload; asserts identical per-request outputs across schedulers and
-# records the throughput / short-request-p50 trajectory per PR.
-if cargo bench --bench serving; then
-    if [ -f BENCH_serving.json ]; then
-        mv BENCH_serving.json ../BENCH_serving.json
-        echo "recorded ../BENCH_serving.json"
-    fi
-else
-    echo "WARNING: serving bench failed; BENCH_serving.json not refreshed" >&2
-fi
+# workload; asserts identical per-request outputs across schedulers,
+# records the throughput / short-request-p50 trajectory per PR, and
+# asserts the disabled tracer stays within 2% of a decode step
+# (recorded as trace_overhead_pct). Hard gate: the bench must run and
+# the recorded JSON must carry the required keys.
+cargo bench --bench serving
+test -f BENCH_serving.json || { echo "FAIL: serving bench wrote no BENCH_serving.json" >&2; exit 1; }
+mv BENCH_serving.json ../BENCH_serving.json
+echo "recorded ../BENCH_serving.json"
+for key in throughput_speedup short_p50_speedup trace_overhead_pct trace_disabled_ns_per_call; do
+    grep -q "\"$key\"" ../BENCH_serving.json \
+        || { echo "FAIL: BENCH_serving.json missing required key '$key'" >&2; exit 1; }
+done
+
+echo "=== serve_demo trace → trace-check ==="
+# End-to-end observability gate: run the native serving demo with the
+# flight recorder armed, then validate the emitted Chrome-trace JSON
+# (non-empty, balanced spans, monotone per-thread timestamps, and all
+# four event categories: request / scheduler / pool / kv).
+TRACE_OUT=$(mktemp -t icq_trace_XXXX.json)
+./target/release/icquant serve --backend native --family llama3.2-1b \
+    --requests 8 --batch 4 --tokens 8 --trace-out "$TRACE_OUT"
+./target/release/icquant trace-check "$TRACE_OUT"
+rm -f "$TRACE_OUT"
 
 echo "=== store bench → BENCH_store.json ==="
 # The bench binary writes BENCH_store.json into the working directory;

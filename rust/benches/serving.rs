@@ -20,6 +20,7 @@ use icquant::bench::{bench_fn, black_box, BenchResult};
 use icquant::coordinator::backend::{Backend, MockBackend, PjrtBackend, SimBackend};
 use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
 use icquant::model::{artifacts_dir, TrainedModel};
+use icquant::trace::{self, Cat, Tracer};
 use icquant::util::json::Json;
 use std::time::{Duration, Instant};
 
@@ -193,6 +194,54 @@ fn main() {
         wave.short_p50_ms
     );
 
+    // Tracing overhead: the serving hot path now carries trace
+    // instants/spans that must stay ≈ free while the tracer is
+    // disabled (one relaxed atomic load each, no allocation, no
+    // lock). Measure the disabled probe directly and scale it to a
+    // per-decode-step call count well above what the scheduler
+    // actually emits.
+    assert!(!Tracer::is_enabled(), "tracer must be disabled for the overhead probe");
+    const PROBE_CALLS: u64 = 1024;
+    let probe = bench_fn("serving/trace_disabled_instant (x1024)", 300, || {
+        for i in 0..PROBE_CALLS {
+            trace::instant(Cat::Sched, "probe", black_box(i), 0, 0);
+        }
+    });
+    println!("\n{}", probe.report());
+    let trace_disabled_ns_per_call = probe.mean_ns / PROBE_CALLS as f64;
+    // Conservative bound: ~32 trace calls per decode step (the slot
+    // loop emits a handful), against the sim backend's 150µs step.
+    const TRACE_POINTS_PER_STEP: f64 = 32.0;
+    let trace_overhead_pct = 100.0 * trace_disabled_ns_per_call * TRACE_POINTS_PER_STEP
+        / SIM_STEP_PER_SLOT.as_nanos() as f64;
+    println!(
+        "trace disabled: {:.2} ns/call → {:.4}% of a {}µs decode step at {} calls/step",
+        trace_disabled_ns_per_call,
+        trace_overhead_pct,
+        SIM_STEP_PER_SLOT.as_micros(),
+        TRACE_POINTS_PER_STEP as u64
+    );
+    assert!(
+        trace_overhead_pct < 2.0,
+        "disabled tracer costs {:.3}% of a decode step (budget: 2%)",
+        trace_overhead_pct
+    );
+
+    // Informational: the same workload with the tracer recording.
+    Tracer::enable(trace::DEFAULT_BYTE_BUDGET);
+    let traced = run_mixed_workload(SchedulerKind::Continuous);
+    let traced_events = Tracer::event_count();
+    Tracer::disable();
+    Tracer::reset();
+    assert_eq!(
+        traced.outputs, cont.outputs,
+        "tracing changed per-request outputs"
+    );
+    println!(
+        "traced continuous        {:>8.1} tok/s  ({} events recorded)",
+        traced.tokens_per_s, traced_events
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::str("serving")),
         (
@@ -221,6 +270,10 @@ fn main() {
             Json::num(wave.short_p50_ms / cont.short_p50_ms),
         ),
         ("coordinator_overhead", result_json(&overhead)),
+        ("trace_disabled_ns_per_call", Json::num(trace_disabled_ns_per_call)),
+        ("trace_overhead_pct", Json::num(trace_overhead_pct)),
+        ("traced_tokens_per_s", Json::num(traced.tokens_per_s)),
+        ("traced_events", Json::num(traced_events as f64)),
     ]);
     std::fs::write("BENCH_serving.json", json.to_string()).unwrap();
     println!("\nwrote BENCH_serving.json");

@@ -12,6 +12,7 @@
 //! icquant bound [--gamma g]          Lemma 1 bound table + optimal b
 //! icquant serve [opts]               run the serving demo (PJRT or
 //!                                    native fused-kernel backend)
+//! icquant trace-check <file>         validate a --trace-out trace file
 //! icquant eval [--bits n ...]        perplexity of FP vs ICQuant model
 //! icquant zoo                        list synthetic model families
 //! icquant help
@@ -104,6 +105,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "stats" => cmd_stats(&args),
         "bound" => cmd_bound(&args),
         "serve" => cmd_serve(&args),
+        "trace-check" => cmd_trace_check(&args),
         "eval" => cmd_eval(&args),
         "zoo" => cmd_zoo(),
         "help" | "--help" | "-h" => {
@@ -139,10 +141,15 @@ fn print_help() {
     println!("  bound [--gamma g]             Lemma 1 bound + optimal b");
     println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
     println!("        [--backend pjrt|native] [--family f] [--bits n]");
-    println!("        [--threads t] [--block-size b]  batched serving demo;");
+    println!("        [--threads t] [--block-size b] [--trace-out f.json]");
+    println!("                                batched serving demo;");
     println!("                                pjrt = AOT HLO (needs artifacts),");
     println!("                                native = fused quantized-plane CPU");
-    println!("                                kernels, no artifacts needed");
+    println!("                                kernels, no artifacts needed;");
+    println!("                                --trace-out writes a Chrome/Perfetto");
+    println!("                                trace of the run");
+    println!("  trace-check <trace.json>      validate an emitted trace (schema,");
+    println!("                                balanced spans, categories)");
     println!("  eval [--bits n] [--ratio g]   ppl: FP vs ICQuant^SK");
     println!("  zoo                           list synthetic model families");
 }
@@ -315,6 +322,48 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             s.crc32
         );
     }
+
+    // Per-layer quantization observability (the paper's own §2/§3
+    // statistics, measured from the stored payloads): outlier
+    // fraction, gap width b, index-coding overhead B, effective
+    // bits/weight, and codebook dynamic range.
+    let model = container::load(&path)?;
+    let mut header = false;
+    for (name, payload) in &model.entries {
+        let m = match payload {
+            store::TensorPayload::Quantized(m) => m,
+            _ => continue,
+        };
+        if !header {
+            println!(
+                "\n  {:<16} {:>12} {:>9} {:>3} {:>8} {:>8} {:>8}  {}",
+                "quantized", "shape", "outlier%", "b", "B idx", "bits n+B", "+cbooks",
+                "codebook range"
+            );
+            header = true;
+        }
+        let n_out: u64 = m.index_codes.iter().map(|c| c.n_outliers as u64).sum();
+        let frac = n_out as f64 / (m.rows * m.cols) as f64;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for cb in m.inlier_cbs.iter().chain(m.outlier_cbs.iter()) {
+            for &l in &cb.levels {
+                lo = lo.min(l);
+                hi = hi.max(l);
+            }
+        }
+        println!(
+            "  {:<16} {:>12} {:>8.2}% {:>3} {:>8.4} {:>8.3} {:>8.3}  [{:+.3}, {:+.3}]",
+            name,
+            format!("{}x{}", m.rows, m.cols),
+            frac * 100.0,
+            m.gap_bits,
+            m.index_bits_per_weight(),
+            m.avg_bits_per_weight(),
+            m.avg_bits_per_weight_full(),
+            lo,
+            hi
+        );
+    }
     Ok(())
 }
 
@@ -442,8 +491,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.usize_flag("requests", 16)?;
     let max_batch = args.usize_flag("batch", 8)?;
     let tokens = args.usize_flag("tokens", 16)?;
+    let trace_out = args.flag("trace-out");
     match args.flag("backend").unwrap_or("pjrt") {
-        "pjrt" => serve_demo::run(n_requests, max_batch, tokens, args.bool_flag("quantized")),
+        "pjrt" => serve_demo::run(
+            n_requests,
+            max_batch,
+            tokens,
+            args.bool_flag("quantized"),
+            trace_out,
+        ),
         "native" => serve_demo::run_native(
             n_requests,
             max_batch,
@@ -452,9 +508,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_flag("bits", 2)? as u32,
             args.usize_flag("threads", 0)?, // 0 ⇒ all cores
             args.usize_flag("block-size", 0)?, // 0 ⇒ default KV block size
+            trace_out,
         ),
         other => bail!("unknown backend '{}' (expected pjrt|native)", other),
     }
+}
+
+/// Validate a Chrome trace-event JSON file emitted by `serve
+/// --trace-out` (or [`crate::trace::Tracer::export`]): non-empty
+/// `traceEvents`, balanced B/E pairs per thread, per-thread monotone
+/// timestamps, and all four event categories present. This is the CI
+/// trace gate (`ci.sh`).
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    use crate::util::json::Json;
+    let path = args
+        .positional
+        .first()
+        .context("usage: icquant trace-check <trace.json>")?;
+    let text = std::fs::read_to_string(path).with_context(|| path.to_string())?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {}", path, e))?;
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .context("traceEvents is not an array")?;
+    anyhow::ensure!(!events.is_empty(), "trace has no events");
+
+    let mut cats: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    // Per-tid open-span depth and last timestamp.
+    let mut depth: HashMap<i64, i64> = HashMap::new();
+    let mut last_ts: HashMap<i64, f64> = HashMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e.req("ph")?.as_str().context("ph not a string")?;
+        let tid = e.req("tid")?.as_i64().context("tid not an int")?;
+        let ts = e.req("ts")?.as_f64().context("ts not a number")?;
+        let cat = e.req("cat")?.as_str().context("cat not a string")?;
+        e.req("name")?.as_str().context("name not a string")?;
+        cats.insert(cat.to_string());
+        if let Some(&prev) = last_ts.get(&tid) {
+            anyhow::ensure!(
+                ts >= prev,
+                "event {}: ts {} < previous ts {} on tid {}",
+                i, ts, prev, tid
+            );
+        }
+        last_ts.insert(tid, ts);
+        let d = depth.entry(tid).or_insert(0);
+        match ph {
+            "B" => *d += 1,
+            "E" => {
+                *d -= 1;
+                anyhow::ensure!(*d >= 0, "event {}: unmatched E on tid {}", i, tid);
+            }
+            "i" => {}
+            other => bail!("event {}: unknown phase '{}'", i, other),
+        }
+    }
+    for (tid, d) in &depth {
+        anyhow::ensure!(*d == 0, "tid {}: {} unclosed B span(s)", tid, d);
+    }
+    for want in ["request", "scheduler", "pool", "kv"] {
+        anyhow::ensure!(
+            cats.contains(want),
+            "missing event category '{}' (have: {:?})",
+            want, cats
+        );
+    }
+    println!(
+        "OK: {} events, {} threads, categories {:?}",
+        events.len(),
+        depth.len(),
+        cats
+    );
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -20,11 +20,31 @@ use crate::kernels::{KvLayout, NativeModel, DEFAULT_BLOCK_TOKENS};
 use crate::model::{artifacts_dir, TrainedModel};
 use crate::quant::QuantizerKind;
 use crate::store::{synth_model, DecodeCache, StoredModel};
+use crate::trace::{Tracer, DEFAULT_BYTE_BUDGET};
 use crate::util::human_bytes;
 use crate::util::prng::Rng;
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Arm the flight-recorder tracer when a `--trace-out` path was given.
+fn trace_setup(trace_out: Option<&str>) {
+    if trace_out.is_some() {
+        Tracer::enable(DEFAULT_BYTE_BUDGET);
+    }
+}
+
+/// Export the recorded trace to `trace_out` (Chrome trace-event JSON,
+/// loadable in Perfetto / `chrome://tracing`) and disable the tracer.
+fn trace_finish(trace_out: Option<&str>) -> Result<()> {
+    if let Some(path) = trace_out {
+        let events = Tracer::event_count();
+        Tracer::export_to(std::path::Path::new(path))?;
+        Tracer::disable();
+        println!("trace                  : {} events -> {}", events, path);
+    }
+    Ok(())
+}
 
 /// Serve a SynthZoo family through the native fused-kernel backend:
 /// quantize → runtime-plane cache → [`NativeBackend`]. Needs no
@@ -37,6 +57,7 @@ pub fn run_native(
     bits: u32,
     threads: usize,
     block_tokens: usize,
+    trace_out: Option<&str>,
 ) -> Result<()> {
     let family = crate::synthzoo::family(family_name).ok_or_else(|| {
         anyhow::anyhow!("unknown family '{}' (see `icquant zoo`)", family_name)
@@ -99,6 +120,7 @@ pub fn run_native(
         pad_id: b' ' as i32,
         scheduler: SchedulerKind::Continuous,
     };
+    trace_setup(trace_out);
     let server =
         Server::start(cfg, move || Ok(NativeBackend::new(native).with_kv_layout(kv_layout)));
 
@@ -127,6 +149,7 @@ pub fn run_native(
     let cstats = cache.stats();
     println!("\n=== native serving report ===");
     println!("requests               : {}", snap.requests);
+    println!("errors                 : {}", snap.errors);
     println!("generated tokens       : {}", total_tokens);
     println!("wall time              : {:.2} s", wall);
     println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
@@ -158,10 +181,17 @@ pub fn run_native(
         human_bytes(cache.bytes_used() as u64)
     );
     server.shutdown();
+    trace_finish(trace_out)?;
     Ok(())
 }
 
-pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bool) -> Result<()> {
+pub fn run(
+    n_requests: usize,
+    max_batch: usize,
+    max_tokens: usize,
+    quantized: bool,
+    trace_out: Option<&str>,
+) -> Result<()> {
     let dir = artifacts_dir();
     let mut model = TrainedModel::load(&dir)?;
     let mut storage_note = String::from("FP32 weights");
@@ -191,6 +221,7 @@ pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bo
     };
     println!("starting server: {} | max_batch={} max_wait=15ms", storage_note, max_batch);
 
+    trace_setup(trace_out);
     let dir2 = dir.clone();
     let model2 = model.clone();
     let server = Server::start(cfg, move || {
@@ -220,6 +251,7 @@ pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bo
     let snap = server.metrics.snapshot();
     println!("\n=== serving report ===");
     println!("requests               : {}", snap.requests);
+    println!("errors                 : {}", snap.errors);
     println!("generated tokens       : {}", total_tokens);
     println!("wall time              : {:.2} s", wall);
     println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
@@ -231,5 +263,6 @@ pub fn run(n_requests: usize, max_batch: usize, max_tokens: usize, quantized: bo
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);
     println!("p50 / p99 latency      : {:.0} / {:.0} ms", snap.p50_latency_ms, snap.p99_latency_ms);
     server.shutdown();
+    trace_finish(trace_out)?;
     Ok(())
 }

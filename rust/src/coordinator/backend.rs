@@ -23,6 +23,7 @@
 
 use crate::kernels::{KvCache, KvCacheStats, KvLayout, NativeModel, WorkerPool};
 use crate::model::TrainedModel;
+use crate::trace::{self, Cat};
 use crate::runtime::{Engine, HostTensor};
 use crate::store::{DecodeCache, StoredModel};
 use anyhow::{bail, ensure, Context, Result};
@@ -331,6 +332,7 @@ impl Backend for PjrtBackend {
 
     fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<DecodeState> {
         let bucket = prompts.len();
+        let _sp = trace::span_args(Cat::Sched, "backend_prefill", 0, bucket as i64, 0);
         let entry = format!("prefill_b{}", bucket);
         self.engine.prepare(&entry)?; // compile before async uploads
         let s = self.prefill_len;
@@ -358,6 +360,7 @@ impl Backend for PjrtBackend {
     }
 
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
+        let _sp = trace::span_args(Cat::Sched, "backend_decode", 0, state.cap as i64, 0);
         // Wave-uniform position: every lane advanced together since the
         // shared prefill.
         anyhow::ensure!(state.pos[0] < self.max_seq, "KV cache exhausted");
@@ -506,6 +509,8 @@ impl Backend for NativeBackend {
             Some(parts) => parts,
             None => return Ok(()),
         };
+        let _sp =
+            trace::span_args(Cat::Sched, "backend_prefill", 0, admissions.len() as i64, 0);
         let seq = first.1.len();
         // Mixed prompt lengths (possible only for direct trait users —
         // the scheduler normalizes to prefill_len) fall back to
@@ -593,6 +598,7 @@ impl Backend for NativeBackend {
     fn decode(&mut self, state: &mut DecodeState) -> Result<Vec<i32>> {
         let slots = state.active_slots();
         ensure!(!slots.is_empty(), "decode with no active slots");
+        let _sp = trace::span_args(Cat::Sched, "backend_decode", 0, slots.len() as i64, 0);
         let mut kv = match std::mem::replace(&mut state.kv, KvState::None) {
             KvState::Native(kv) => kv,
             _ => bail!("kv state missing or not a native payload"),

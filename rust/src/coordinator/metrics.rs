@@ -90,6 +90,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 
 struct Inner {
     requests: u64,
+    errors: u64,
     batches: u64,
     batch_size_sum: u64,
     bucket_sum: u64,
@@ -127,6 +128,7 @@ impl Default for Inner {
     fn default() -> Inner {
         Inner {
             requests: 0,
+            errors: 0,
             batches: 0,
             batch_size_sum: 0,
             bucket_sum: 0,
@@ -157,7 +159,12 @@ pub struct Metrics {
 /// A point-in-time copy for reporting.
 #[derive(Clone, Debug, Default)]
 pub struct Snapshot {
+    /// Successfully completed requests. Failed requests are counted in
+    /// [`Snapshot::errors`] instead — their all-zero timings would
+    /// deflate every latency aggregate below.
     pub requests: u64,
+    /// Requests that failed (prefill/decode error, exhausted KV pool).
+    pub errors: u64,
     /// Admission rounds (continuous) or waves (batch path).
     pub batches: u64,
     pub avg_batch_size: f64,
@@ -237,8 +244,16 @@ impl Metrics {
         m.kv_total_blocks = s.total_blocks;
     }
 
+    /// Record a completed request. A timing carrying an error is routed
+    /// to the error counter instead: `RequestTiming::failed` is all
+    /// zeros, and feeding it to the reservoir/averages would deflate
+    /// p50/p99 and every latency mean exactly when things go wrong.
     pub fn record_request(&self, t: &RequestTiming) {
         let mut m = self.inner.lock().unwrap();
+        if t.error.is_some() {
+            m.errors += 1;
+            return;
+        }
         m.requests += 1;
         m.tokens += t.tokens as u64;
         m.queue_ms_sum += t.queue_ms;
@@ -248,12 +263,18 @@ impl Metrics {
         m.latencies.record(t.total_ms());
     }
 
+    /// Count one failed request (no timing to aggregate).
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lat = m.latencies.samples.clone();
         lat.sort_by(|a, b| a.total_cmp(b));
         Snapshot {
             requests: m.requests,
+            errors: m.errors,
             batches: m.batches,
             avg_batch_size: m.batch_size_sum as f64 / m.batches.max(1) as f64,
             avg_bucket: m.bucket_sum as f64 / m.batches.max(1) as f64,
@@ -384,6 +405,36 @@ mod tests {
         // Utilization is a per-sample ratio peak, bounded by 1 even
         // when pool sizes differ across epochs.
         assert!((s.block_utilization - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_requests_do_not_pollute_latency_aggregates() {
+        // Regression: `RequestTiming::failed` (all-zero timings) used to
+        // flow into the reservoir and averages, deflating p50/p99 and
+        // ttft exactly when the system was failing.
+        let m = Metrics::default();
+        for _ in 0..3 {
+            m.record_request(&RequestTiming {
+                queue_ms: 1.0,
+                prefill_ms: 2.0,
+                ttft_ms: 5.0,
+                decode_ms: 7.0,
+                tokens: 4,
+                error: None,
+            });
+        }
+        for _ in 0..5 {
+            m.record_request(&RequestTiming::failed("decode: boom".into()));
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.errors, 6);
+        assert_eq!(s.latency_samples, 3);
+        // Aggregates reflect only the successful requests.
+        assert!((s.avg_ttft_ms - 5.0).abs() < 1e-9);
+        assert!((s.p50_latency_ms - 10.0).abs() < 1e-9);
+        assert!((s.p99_latency_ms - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod backend;
 pub mod batcher;
 pub mod metrics;
 
+use crate::trace::{self, Cat, Stage};
 use anyhow::{anyhow, Result};
 use backend::{Backend, DecodeState};
 use batcher::{AdmissionPolicy, BatchPolicy, PendingRequest};
@@ -189,6 +190,7 @@ impl Server {
     ) -> Result<(u64, Receiver<GenerateResponse>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
+        trace::instant(Cat::Request, "enqueue", id, prompt.len() as i64, max_new_tokens as i64);
         let req = GenerateRequest { id, prompt, max_new_tokens };
         self.tx
             .send(WorkItem::Request(req, rtx, Instant::now()))
@@ -230,7 +232,14 @@ fn worker_loop<B: Backend>(
     }
 }
 
-fn fail(p: &PendingRequest, msg: String) {
+fn fail(p: &PendingRequest, msg: String, metrics: &Metrics) {
+    metrics.record_error();
+    trace::instant(Cat::Request, "error", p.req.id, 0, 0);
+    if trace::enabled() {
+        // Failures arrive with their own context: dump the most recent
+        // events so the trace shows what the stack was doing.
+        trace::flight_dump(&format!("request {} failed: {}", p.req.id, msg));
+    }
     let _ = p.tx.send(GenerateResponse {
         id: p.req.id,
         tokens: vec![],
@@ -272,7 +281,7 @@ fn slot_loop<B: Backend>(
             // No scheduler state — fail every request until shutdown.
             let msg = format!("scheduler state: {:#}", e);
             while let Ok(WorkItem::Request(r, tx, t)) = rx.recv() {
-                fail(&PendingRequest::new(r, tx, t), msg.clone());
+                fail(&PendingRequest::new(r, tx, t), msg.clone(), metrics);
             }
             return;
         }
@@ -357,8 +366,12 @@ fn slot_loop<B: Backend>(
                     fits += 1;
                 }
                 to_admit = fits;
+                // Block-need accounting for the trace: how many of the
+                // wanted admissions fit the allocatable headroom.
+                trace::instant(Cat::Sched, "block_gate", 0, fits as i64, free_blocks as i64);
                 if to_admit == 0 && occupied == 0 {
                     to_admit = 1;
+                    trace::instant(Cat::Sched, "force_admit", 0, 0, free_blocks as i64);
                 }
             }
         }
@@ -379,7 +392,11 @@ fn slot_loop<B: Backend>(
                 })
                 .collect();
             let t0 = Instant::now();
-            match backend.prefill_into_many(&mut state, &admissions) {
+            let prefill_span =
+                trace::span_args(Cat::Sched, "prefill_round", 0, admissions.len() as i64, 0);
+            let prefill_res = backend.prefill_into_many(&mut state, &admissions);
+            drop(prefill_span);
+            match prefill_res {
                 Ok(()) => {
                     // The pass is shared, so each request is charged the
                     // round's wall time (same accounting as a wave).
@@ -388,8 +405,8 @@ fn slot_loop<B: Backend>(
                     let requested: Vec<usize> = round
                         .iter()
                         .map(|(slot, p)| {
-                            let mut target =
-                                p.req.max_new_tokens.min(cfg.max_new_tokens);
+                            let want = p.req.max_new_tokens.min(cfg.max_new_tokens);
+                            let mut target = want;
                             if let Some(max_pos) = backend.max_positions() {
                                 // Clamp to the slot's KV headroom: an
                                 // over-long request ends early instead
@@ -397,6 +414,15 @@ fn slot_loop<B: Backend>(
                                 // and erroring its whole batch.
                                 target = target
                                     .min(max_pos.saturating_sub(state.pos[*slot]));
+                            }
+                            if target < want {
+                                trace::instant(
+                                    Cat::Sched,
+                                    "clamp_positions",
+                                    p.req.id,
+                                    want as i64,
+                                    target as i64,
+                                );
                             }
                             target
                         })
@@ -414,6 +440,15 @@ fn slot_loop<B: Backend>(
                     }
                     for ((slot, p), want) in round.into_iter().zip(requested) {
                         let target = backend.reserve_tokens(&mut state, slot, want);
+                        if target < want {
+                            trace::instant(
+                                Cat::Sched,
+                                "clamp_reservation",
+                                p.req.id,
+                                want as i64,
+                                target as i64,
+                            );
+                        }
                         if target == 0 && want > 0 {
                             // Only possible on a force-admitted round
                             // into a pool too small to back one decode
@@ -424,9 +459,21 @@ fn slot_loop<B: Backend>(
                                 &p,
                                 "KV block pool too small to decode any tokens for this request"
                                     .to_string(),
+                                metrics,
                             );
                             continue;
                         }
+                        trace::instant(
+                            Cat::Request,
+                            "admit",
+                            p.req.id,
+                            slot as i64,
+                            target as i64,
+                        );
+                        trace::stage_ms(
+                            Stage::Queue,
+                            (t0 - p.arrived).as_secs_f64() * 1e3,
+                        );
                         slots[slot] = Some(SlotSeq {
                             p,
                             target,
@@ -438,6 +485,14 @@ fn slot_loop<B: Backend>(
                         });
                     }
                     metrics.record_batch(n, occupied + n);
+                    trace::instant(
+                        Cat::Sched,
+                        "admit_round",
+                        0,
+                        n as i64,
+                        (occupied + n) as i64,
+                    );
+                    trace::stage_ms(Stage::Prefill, prefill_ms);
                 }
                 Err(e) => {
                     let msg = format!("prefill: {:#}", e);
@@ -447,7 +502,7 @@ fn slot_loop<B: Backend>(
                         // idempotent, so free them unconditionally to
                         // keep scheduler and backend occupancy in sync.
                         let _ = backend.retire(&mut state, slot);
-                        fail(&p, msg.clone());
+                        fail(&p, msg.clone(), metrics);
                     }
                 }
             }
@@ -461,10 +516,15 @@ fn slot_loop<B: Backend>(
 
         // --- one decode step over the active slots ------------------------
         let t0 = Instant::now();
-        match backend.decode(&mut state) {
+        let active_now = slots.iter().filter(|s| s.is_some()).count();
+        let step_span = trace::span_args(Cat::Sched, "decode_step", 0, active_now as i64, 0);
+        let step_res = backend.decode(&mut state);
+        drop(step_span);
+        match step_res {
             Ok(next) => {
                 let now = Instant::now();
                 let step_ms = (now - t0).as_secs_f64() * 1e3;
+                trace::stage_ms(Stage::DecodeStep, step_ms);
                 let mut n_active = 0usize;
                 for (slot, entry) in slots.iter_mut().enumerate() {
                     if let Some(seq) = entry.as_mut() {
@@ -474,6 +534,10 @@ fn slot_loop<B: Backend>(
                         if seq.first_token_at.is_none() {
                             seq.first_token_at = Some(now);
                         }
+                        // Every active sequence gained one token this
+                        // step, so its inter-token gap is the step wall
+                        // time.
+                        trace::stage_ms(Stage::InterToken, step_ms);
                     }
                 }
                 metrics.record_step(n_active);
@@ -483,7 +547,7 @@ fn slot_loop<B: Backend>(
                 let msg = format!("decode: {:#}", e);
                 for (slot, entry) in slots.iter_mut().enumerate() {
                     if let Some(seq) = entry.take() {
-                        fail(&seq.p, msg.clone());
+                        fail(&seq.p, msg.clone(), metrics);
                         let _ = backend.retire(&mut state, slot);
                     }
                 }
@@ -532,6 +596,8 @@ fn retire_finished<B: Backend>(
             error: None,
         };
         metrics.record_request(&timing);
+        trace::instant(Cat::Request, "retire", seq.p.req.id, timing.tokens as i64, slot as i64);
+        trace::stage_ms(Stage::Total, timing.total_ms());
         let _ = seq.p.tx.send(GenerateResponse {
             id: seq.p.req.id,
             tokens: seq.tokens,
@@ -631,9 +697,14 @@ fn serve_wave<B: Backend>(
     }
 
     let t_prefill = Instant::now();
-    let mut state = match backend.prefill(&prompts) {
+    let wave_span = trace::span_args(Cat::Sched, "wave", 0, n as i64, bucket as i64);
+    let prefill_span = trace::span_args(Cat::Sched, "prefill_wave", 0, n as i64, 0);
+    let prefill_res = backend.prefill(&prompts);
+    drop(prefill_span);
+    let mut state = match prefill_res {
         Ok(s) => s,
         Err(e) => {
+            drop(wave_span);
             // A multi-request wave whose prefill failed (e.g. an
             // overcommitted paged pool exhausted mid-batch) degrades
             // to two smaller waves instead of failing every request —
@@ -643,13 +714,20 @@ fn serve_wave<B: Backend>(
             if batch.len() > 1 {
                 let mut first = batch;
                 let second = first.split_off(first.len() / 2);
+                trace::instant(
+                    Cat::Sched,
+                    "wave_split",
+                    0,
+                    first.len() as i64,
+                    second.len() as i64,
+                );
                 serve_wave(cfg, pad_id, backend, first, metrics);
                 serve_wave(cfg, pad_id, backend, second, metrics);
                 return;
             }
             let msg = format!("prefill: {:#}", e);
             for p in &batch {
-                fail(p, msg.clone());
+                fail(p, msg.clone(), metrics);
             }
             return;
         }
@@ -657,7 +735,9 @@ fn serve_wave<B: Backend>(
     // Counted only for a wave that actually serves (a split-and-retried
     // parent would otherwise double-count its requests).
     metrics.record_batch(n, bucket);
+    trace::instant(Cat::Sched, "admit_round", 0, n as i64, bucket as i64);
     let prefill_ms = t_prefill.elapsed().as_secs_f64() * 1e3;
+    trace::stage_ms(Stage::Prefill, prefill_ms);
     // Bucket-padding lanes carry no request: retire them immediately so
     // slot backends stop decoding them and paged caches get their
     // blocks back (PJRT's retire is a mask — its compiled graph keeps
@@ -702,10 +782,24 @@ fn serve_wave<B: Backend>(
     for (lane, seq) in seqs.iter_mut().enumerate() {
         let before_reserve = seq.target;
         seq.target = backend.reserve_tokens(&mut state, lane, seq.target);
+        if seq.target < before_reserve {
+            let id = seq.p.as_ref().map(|p| p.req.id).unwrap_or(0);
+            trace::instant(
+                Cat::Sched,
+                "clamp_reservation",
+                id,
+                before_reserve as i64,
+                seq.target as i64,
+            );
+        }
         if seq.target == 0 && before_reserve > 0 {
             let _ = backend.retire(&mut state, lane);
             if let Some(p) = seq.p.take() {
-                fail(&p, "KV block pool too small to decode any tokens for this request".to_string());
+                fail(
+                    &p,
+                    "KV block pool too small to decode any tokens for this request".to_string(),
+                    metrics,
+                );
             }
         }
     }
@@ -726,6 +820,9 @@ fn serve_wave<B: Backend>(
             error: None,
         };
         metrics.record_request(&timing);
+        trace::instant(Cat::Request, "retire", p.req.id, timing.tokens as i64, 0);
+        trace::stage_ms(Stage::Queue, timing.queue_ms);
+        trace::stage_ms(Stage::Total, timing.total_ms());
         let _ = p.tx.send(GenerateResponse {
             id: p.req.id,
             tokens: std::mem::take(&mut seq.tokens),
@@ -757,10 +854,19 @@ fn serve_wave<B: Backend>(
             break;
         }
         let t0 = Instant::now();
-        match backend.decode(&mut state) {
+        let in_flight = seqs.iter().filter(|s| s.p.is_some()).count();
+        let step_span = trace::span_args(Cat::Sched, "decode_step", 0, in_flight as i64, 0);
+        let step_res = backend.decode(&mut state);
+        drop(step_span);
+        match step_res {
             Ok(next) => {
                 let now = Instant::now();
-                decode_elapsed_ms += (now - t0).as_secs_f64() * 1e3;
+                let step_ms = (now - t0).as_secs_f64() * 1e3;
+                decode_elapsed_ms += step_ms;
+                trace::stage_ms(Stage::DecodeStep, step_ms);
+                for _ in 0..in_flight {
+                    trace::stage_ms(Stage::InterToken, step_ms);
+                }
                 if first_token_at.is_none() {
                     first_token_at = Some(now);
                 }
@@ -795,7 +901,7 @@ fn serve_wave<B: Backend>(
                 let msg = format!("decode: {:#}", e);
                 for seq in seqs.iter_mut() {
                     if let Some(p) = seq.p.take() {
-                        fail(&p, msg.clone());
+                        fail(&p, msg.clone(), metrics);
                     }
                 }
                 return;

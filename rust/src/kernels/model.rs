@@ -36,6 +36,7 @@ use crate::icquant::runtime::RuntimePlane;
 use crate::kernels::{gemm_on, WorkerPool};
 use crate::model::ModelConfig;
 use crate::store::StoredModel;
+use crate::trace::{self, Cat};
 use crate::util::tensor::Matrix;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -419,7 +420,9 @@ impl KvCache {
         } else {
             0
         };
-        guaranteed.min(want)
+        let granted = guaranteed.min(want);
+        trace::instant(Cat::Kv, "reserve", slot as u64, want as i64, granted as i64);
+        granted
     }
 
     /// Evict the LRU registry-only block into the free list (backing a
@@ -485,6 +488,7 @@ impl KvCache {
         self.evictable_count -= 1;
         self.refcount[b] = 0;
         self.blocks_evicted += 1;
+        trace::instant(Cat::Kv, "evict", b as u64, self.blocks_evicted as i64, 0);
         self.deregister_descendants(b);
         Some(b)
     }
@@ -556,6 +560,9 @@ impl KvCache {
         self.pos[slot] = reuse;
         self.prefix_hit_blocks += matched as u64;
         self.prefix_hit_tokens += reuse as u64;
+        if matched > 0 {
+            trace::instant(Cat::Kv, "prefix_hit", slot as u64, matched as i64, reuse as i64);
+        }
         reuse
     }
 
@@ -640,6 +647,7 @@ impl KvCache {
         self.release(old);
         self.tables[slot][logical] = nb;
         self.cow_forks += 1;
+        trace::instant(Cat::Kv, "cow_fork", slot as u64, logical as i64, nb as i64);
         Ok(())
     }
 

@@ -30,6 +30,7 @@
 //! re-panicking, instead of poisoning the whole forward with a bare
 //! `join()` expect.
 
+use crate::trace::{self, Cat};
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -195,6 +196,9 @@ impl WorkerPool {
     fn worker(shared: &Shared) {
         loop {
             let job = {
+                // Park interval: from re-entering the wait loop to
+                // claiming the next job (or shutdown).
+                let _park = trace::span(Cat::Pool, "park", 0);
                 let mut q = shared.queue.lock().unwrap();
                 loop {
                     if q.shutdown {
@@ -214,6 +218,7 @@ impl WorkerPool {
                     q = shared.work_cv.wait(q).unwrap();
                 }
             };
+            let _busy = trace::span_args(Cat::Pool, "busy", 0, job.n as i64, 0);
             job.drain();
         }
     }
@@ -239,6 +244,7 @@ impl WorkerPool {
         }
         let region = Job::new(job, tasks);
         if self.handles.is_empty() || tasks == 1 {
+            trace::instant(Cat::Pool, "dispatch", 0, tasks as i64, 0);
             region.drain(); // inline: nothing to wake, nothing to wait on
             return Self::finish(region);
         }
@@ -246,6 +252,7 @@ impl WorkerPool {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.jobs.push_back(region.clone());
+            trace::instant(Cat::Pool, "dispatch", 0, tasks as i64, q.jobs.len() as i64);
         }
         // Wake only as many workers as there are chunks beyond the one
         // the caller will take — small regions on a wide pool must not
@@ -281,7 +288,13 @@ impl WorkerPool {
 
     fn finish(region: Job) -> Result<(), PoolPanic> {
         match region.panic.into_inner().unwrap() {
-            Some((task, payload)) => Err(PoolPanic { task, payload }),
+            Some((task, payload)) => {
+                trace::instant(Cat::Pool, "panic", 0, task as i64, 0);
+                if trace::enabled() {
+                    trace::flight_dump(&format!("PoolPanic in chunk {}", task));
+                }
+                Err(PoolPanic { task, payload })
+            }
             None => Ok(()),
         }
     }

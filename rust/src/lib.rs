@@ -8,8 +8,10 @@
 //! The crate is organized as a three-layer stack (see DESIGN.md §1):
 //!
 //! * **Substrate** — [`util`], [`bitstream`]: PRNG, JSON, f16, special
-//!   functions, bit-level packing. Everything is `std`-only; the offline
-//!   vendored registry carries just the `xla` closure.
+//!   functions, bit-level packing; [`trace`]: the flight-recorder
+//!   tracing + per-stage profiling subsystem the serving stack reports
+//!   through. Everything is `std`-only; the offline vendored registry
+//!   carries just the `xla` closure.
 //! * **Core library** — [`icq`] (the paper's index-coding contribution),
 //!   [`quant`] (RTN / weighted K-means / grouping / mixed-precision /
 //!   incoherence / VQ / GPTQ-lite baselines), [`icquant`] (the framework
@@ -25,6 +27,7 @@
 //!   (one harness per paper table/figure), [`bench`] (timing harness).
 
 pub mod util;
+pub mod trace;
 pub mod bitstream;
 pub mod icq;
 pub mod quant;

@@ -1,0 +1,637 @@
+//! Flight-recorder tracing + per-stage profiling for the serving stack
+//! (DESIGN.md §11).
+//!
+//! The coordinator's [`Metrics`](crate::coordinator::metrics::Metrics)
+//! snapshot says *how much* — this module says *where*: a lock-light,
+//! bounded ring-buffer event recorder that captures typed spans and
+//! instants across the request lifecycle (enqueue → admit → prefill →
+//! decode steps → retire/error), the scheduler (admission rounds with
+//! block-need accounting, clamps, wave splits), the kernel pool (job
+//! dispatch, per-worker busy/park intervals, queue depth), and the
+//! paged KV cache (prefix hits, CoW forks, evictions, reservations).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **A disabled tracer is near-free on the decode hot path.** Every
+//!    public recording entry point starts with one relaxed atomic load
+//!    and returns — no allocation, no lock, no timestamp read. The
+//!    serving bench asserts the bound (`trace_overhead_pct` in
+//!    `BENCH_serving.json`).
+//! 2. **Constant memory under sustained traffic**, like the latency
+//!    reservoir: each recording thread owns a fixed-capacity ring of
+//!    fixed-size [`Event`] records sized from a byte budget; wraparound
+//!    overwrites the oldest events and counts them as dropped.
+//! 3. **Lock-light when enabled.** The per-thread ring sits behind a
+//!    mutex only its owner thread touches (export briefly contends);
+//!    the registry lock is taken once per thread per generation.
+//!
+//! Spans are recorded as separate begin/end events in thread order, so
+//! each thread's stream is chronological and properly nested by
+//! construction (RAII [`Span`] guards). [`Tracer::export`] renders the
+//! rings as Chrome trace-event JSON (`chrome://tracing` /
+//! [Perfetto](https://ui.perfetto.dev) loadable): wraparound can orphan
+//! an `E` (its `B` was overwritten) or leave a `B` dangling (span still
+//! open), so the exporter drops unmatched ends and closes unfinished
+//! begins at the thread's last timestamp — the emitted stream always
+//! has balanced `B`/`E` pairs and per-thread monotone timestamps.
+//!
+//! Separately from events, fixed-size log-bucketed [`Stage`] histograms
+//! accumulate per-stage durations (queue, prefill, inter-token, decode
+//! step, end-to-end); they survive ring wraparound and are embedded in
+//! the export under `otherData.histograms`.
+//!
+//! The **flight recorder** is the failure-path consumer: on a request
+//! error or a [`PoolPanic`](crate::kernels::PoolPanic) the serving
+//! stack calls [`flight_dump`], which renders the most recent events
+//! across all threads to stderr — failures arrive with their own
+//! context even when nobody asked for a full trace file.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring budget: 256 KiB ≈ 4.6k events per thread.
+pub const DEFAULT_BYTE_BUDGET: usize = 256 * 1024;
+
+/// Events rendered by a flight-recorder dump.
+const FLIGHT_TAIL: usize = 48;
+
+/// Event category — the four subsystems the trace taxonomy covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cat {
+    /// Request lifecycle: enqueue, admit, retire, error.
+    Request,
+    /// Scheduler: admission rounds, block gating, clamps, waves, steps.
+    Sched,
+    /// Kernel pool: dispatch, per-worker busy/park, queue depth, panics.
+    Pool,
+    /// Paged KV cache: prefix hits, CoW forks, evictions, reservations.
+    Kv,
+}
+
+impl Cat {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Cat::Request => "request",
+            Cat::Sched => "scheduler",
+            Cat::Pool => "pool",
+            Cat::Kv => "kv",
+        }
+    }
+}
+
+/// Trace-event phase (the Chrome `ph` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Begin,
+    End,
+    Instant,
+}
+
+/// One fixed-size ring record. `name` is `&'static str` by contract so
+/// recording never allocates; `a`/`b` carry two event-specific counters
+/// (block need vs. headroom, clamp before vs. after, …).
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    ts_us: u64,
+    cat: Cat,
+    ph: Phase,
+    name: &'static str,
+    id: u64,
+    a: i64,
+    b: i64,
+}
+
+/// Bytes one ring slot costs against the byte budget.
+const EVENT_BYTES: usize = std::mem::size_of::<Event>();
+
+/// Pipeline stages with a dedicated duration histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Arrival → admission.
+    Queue = 0,
+    /// Prompt pass (per admission round / wave).
+    Prefill = 1,
+    /// Gap between consecutive tokens of an active sequence (= the
+    /// decode step wall time while it participates).
+    InterToken = 2,
+    /// One batched decode step.
+    DecodeStep = 3,
+    /// End-to-end request latency.
+    Total = 4,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] =
+        [Stage::Queue, Stage::Prefill, Stage::InterToken, Stage::DecodeStep, Stage::Total];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Prefill => "prefill",
+            Stage::InterToken => "inter_token",
+            Stage::DecodeStep => "decode_step",
+            Stage::Total => "total",
+        }
+    }
+}
+
+/// Log₂-bucketed duration histogram: bucket `i` counts durations in
+/// `[2^(i−1), 2^i)` µs (bucket 0 is `0 µs`). Fixed size, atomic — many
+/// recorders, no lock, constant memory.
+const HIST_BUCKETS: usize = 40;
+
+struct LogHist {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl LogHist {
+    fn new() -> LogHist {
+        LogHist {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket(us: u64) -> usize {
+        ((64 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn record(&self, us: u64) {
+        self.counts[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper edge (µs) of the first bucket whose cumulative count
+    /// reaches fraction `p` — a log₂-resolution percentile estimate.
+    fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.n.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        1u64 << (HIST_BUCKETS - 1)
+    }
+
+    fn to_json(&self) -> Json {
+        let n = self.n.load(Ordering::Relaxed);
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .map(|c| Json::num(c.load(Ordering::Relaxed) as f64))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(n as f64)),
+            ("mean_us", Json::num(self.sum_us.load(Ordering::Relaxed) as f64 / n.max(1) as f64)),
+            ("p50_us", Json::num(self.percentile_us(0.5) as f64)),
+            ("p99_us", Json::num(self.percentile_us(0.99) as f64)),
+            ("log2_buckets", Json::arr(buckets)),
+        ])
+    }
+
+    fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.n.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Fixed-capacity overwrite-oldest event ring.
+struct RingBuf {
+    cap: usize,
+    events: Vec<Event>,
+    /// Oldest slot once full (0 while filling).
+    start: usize,
+    dropped: u64,
+}
+
+impl RingBuf {
+    fn new(cap: usize) -> RingBuf {
+        RingBuf { cap, events: Vec::with_capacity(cap), start: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.events.len() < self.cap {
+            self.events.push(e);
+        } else {
+            self.events[self.start] = e;
+            self.start = (self.start + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest → newest.
+    fn in_order(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.events.len());
+        out.extend_from_slice(&self.events[self.start..]);
+        out.extend_from_slice(&self.events[..self.start]);
+        out
+    }
+}
+
+/// One thread's ring. The mutex is effectively uncontended: only the
+/// owner thread records; export/flight dumps briefly share it.
+struct ThreadRing {
+    tid: u64,
+    buf: Mutex<RingBuf>,
+}
+
+struct Shared {
+    epoch: Instant,
+    /// Bumped by [`Tracer::reset`]: threads re-register fresh rings.
+    generation: AtomicU64,
+    byte_budget: AtomicUsize,
+    next_tid: AtomicU64,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    hists: [LogHist; Stage::ALL.len()],
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static FLIGHT: AtomicBool = AtomicBool::new(true);
+static SHARED: OnceLock<Shared> = OnceLock::new();
+
+fn shared() -> &'static Shared {
+    SHARED.get_or_init(|| Shared {
+        epoch: Instant::now(),
+        generation: AtomicU64::new(0),
+        byte_budget: AtomicUsize::new(DEFAULT_BYTE_BUDGET),
+        next_tid: AtomicU64::new(1),
+        rings: Mutex::new(Vec::new()),
+        hists: std::array::from_fn(|_| LogHist::new()),
+    })
+}
+
+thread_local! {
+    /// (generation, ring) cached per recording thread.
+    static LOCAL: RefCell<Option<(u64, Arc<ThreadRing>)>> = const { RefCell::new(None) };
+}
+
+/// Whether tracing is on — the hot-path gate: one relaxed atomic load.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Append to the calling thread's ring, registering it on first use
+/// (or after a [`Tracer::reset`]). Never called while disabled.
+#[inline(never)]
+fn record(cat: Cat, ph: Phase, name: &'static str, id: u64, a: i64, b: i64) {
+    let sh = shared();
+    let ts_us = sh.epoch.elapsed().as_micros() as u64;
+    let e = Event { ts_us, cat, ph, name, id, a, b };
+    // `try_with`: a record during TLS teardown is silently dropped
+    // rather than aborting the thread.
+    let _ = LOCAL.try_with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let generation = sh.generation.load(Ordering::Acquire);
+        let stale = match slot.as_ref() {
+            Some((g, _)) => *g != generation,
+            None => true,
+        };
+        if stale {
+            let cap = (sh.byte_budget.load(Ordering::Relaxed) / EVENT_BYTES).max(16);
+            let ring = Arc::new(ThreadRing {
+                tid: sh.next_tid.fetch_add(1, Ordering::Relaxed),
+                buf: Mutex::new(RingBuf::new(cap)),
+            });
+            sh.rings.lock().unwrap().push(ring.clone());
+            *slot = Some((generation, ring));
+        }
+        let (_, ring) = slot.as_ref().expect("registered above");
+        ring.buf.lock().unwrap().push(e);
+    });
+}
+
+/// Record an instant event (`ph: "i"`). Free when tracing is disabled.
+#[inline]
+pub fn instant(cat: Cat, name: &'static str, id: u64, a: i64, b: i64) {
+    if !enabled() {
+        return;
+    }
+    record(cat, Phase::Instant, name, id, a, b);
+}
+
+/// RAII span: records `B` on creation (when enabled) and the matching
+/// `E` on drop. Must stay on the creating thread (per-thread nesting is
+/// what makes the exported `B`/`E` stream valid).
+#[must_use = "a span records its end when dropped"]
+pub struct Span {
+    live: bool,
+    cat: Cat,
+    name: &'static str,
+    id: u64,
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if self.live {
+            record(self.cat, Phase::End, self.name, self.id, 0, 0);
+        }
+    }
+}
+
+/// Open a span. Free when tracing is disabled (no timestamp, no lock).
+#[inline]
+pub fn span(cat: Cat, name: &'static str, id: u64) -> Span {
+    span_args(cat, name, id, 0, 0)
+}
+
+/// [`span`] with the two counter arguments on the begin event.
+#[inline]
+pub fn span_args(cat: Cat, name: &'static str, id: u64, a: i64, b: i64) -> Span {
+    let live = enabled();
+    if live {
+        record(cat, Phase::Begin, name, id, a, b);
+    }
+    Span { live, cat, name, id }
+}
+
+/// Record a duration into a stage histogram. Free when disabled.
+#[inline]
+pub fn stage_us(stage: Stage, us: u64) {
+    if !enabled() {
+        return;
+    }
+    shared().hists[stage as usize].record(us);
+}
+
+/// [`stage_us`] for a millisecond duration (negative clamps to 0).
+#[inline]
+pub fn stage_ms(stage: Stage, ms: f64) {
+    if !enabled() {
+        return;
+    }
+    shared().hists[stage as usize].record((ms.max(0.0) * 1e3) as u64);
+}
+
+/// Dump the most recent events across all threads to stderr — called on
+/// request errors and pool panics so failures arrive with context.
+/// Returns the rendered dump, or `None` when tracing (or the flight
+/// recorder) is off.
+pub fn flight_dump(trigger: &str) -> Option<String> {
+    if !enabled() || !FLIGHT.load(Ordering::Relaxed) {
+        return None;
+    }
+    let sh = SHARED.get()?;
+    let mut recent: Vec<(u64, Event)> = Vec::new();
+    for ring in sh.rings.lock().unwrap().iter() {
+        let buf = ring.buf.lock().unwrap();
+        recent.extend(buf.in_order().into_iter().map(|e| (ring.tid, e)));
+    }
+    recent.sort_by_key(|(_, e)| e.ts_us);
+    let tail = recent.len().saturating_sub(FLIGHT_TAIL);
+    let mut out = format!(
+        "=== flight recorder: {} (last {} of {} events) ===\n",
+        trigger,
+        recent.len() - tail,
+        recent.len()
+    );
+    for (tid, e) in &recent[tail..] {
+        let ph = match e.ph {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+        };
+        out.push_str(&format!(
+            "  [{:>12} us] t{:<2} {} {}/{} id={} a={} b={}\n",
+            e.ts_us,
+            tid,
+            ph,
+            e.cat.as_str(),
+            e.name,
+            e.id,
+            e.a,
+            e.b
+        ));
+    }
+    eprint!("{}", out);
+    Some(out)
+}
+
+/// Handle to the process-wide tracer.
+pub struct Tracer;
+
+impl Tracer {
+    /// Turn recording on with a per-thread ring byte budget (applies to
+    /// rings created from now on; existing rings keep their size — call
+    /// [`Tracer::reset`] first for a clean slate). Also arms the flight
+    /// recorder.
+    pub fn enable(byte_budget_per_thread: usize) {
+        shared()
+            .byte_budget
+            .store(byte_budget_per_thread.max(EVENT_BYTES * 16), Ordering::Relaxed);
+        FLIGHT.store(true, Ordering::Relaxed);
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop recording (rings keep their contents for export).
+    pub fn disable() {
+        ENABLED.store(false, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled() -> bool {
+        enabled()
+    }
+
+    /// Arm/disarm the flight recorder independently of full tracing.
+    pub fn set_flight_recorder(on: bool) {
+        FLIGHT.store(on, Ordering::Relaxed);
+    }
+
+    /// Drop all recorded events and histogram counts. Threads re-register
+    /// fresh rings (at the current byte budget) on their next record; a
+    /// thread mid-record during the reset may lose that one event.
+    pub fn reset() {
+        if let Some(sh) = SHARED.get() {
+            sh.generation.fetch_add(1, Ordering::Release);
+            sh.rings.lock().unwrap().clear();
+            for h in &sh.hists {
+                h.reset();
+            }
+        }
+    }
+
+    /// Events currently held across all rings (newest-window view).
+    pub fn event_count() -> usize {
+        match SHARED.get() {
+            Some(sh) => {
+                sh.rings.lock().unwrap().iter().map(|r| r.buf.lock().unwrap().events.len()).sum()
+            }
+            None => 0,
+        }
+    }
+
+    /// Render everything recorded so far as a Chrome trace-event JSON
+    /// document (object form: `traceEvents` + `otherData`), loadable in
+    /// `chrome://tracing` and Perfetto. Per thread, unmatched `E`
+    /// events (begin lost to wraparound) are dropped and dangling `B`
+    /// events are closed at the thread's last timestamp, so the output
+    /// always carries balanced `B`/`E` pairs in monotone per-thread
+    /// timestamp order.
+    pub fn export() -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        let mut dropped = 0u64;
+        let mut n_threads = 0usize;
+        if let Some(sh) = SHARED.get() {
+            let mut rings: Vec<Arc<ThreadRing>> = sh.rings.lock().unwrap().clone();
+            rings.sort_by_key(|r| r.tid);
+            n_threads = rings.len();
+            for ring in rings {
+                let buf = ring.buf.lock().unwrap();
+                dropped += buf.dropped;
+                let evs = buf.in_order();
+                drop(buf);
+                let mut open: Vec<Event> = Vec::new();
+                for e in &evs {
+                    match e.ph {
+                        Phase::Begin => {
+                            open.push(*e);
+                            events.push(event_json(ring.tid, e, "B"));
+                        }
+                        Phase::End => {
+                            // An end whose begin was overwritten by
+                            // wraparound would unbalance the stream.
+                            if open.pop().is_some() {
+                                events.push(event_json(ring.tid, e, "E"));
+                            }
+                        }
+                        Phase::Instant => events.push(event_json(ring.tid, e, "i")),
+                    }
+                }
+                // Close spans still open (or cut off by disable) at the
+                // thread's newest timestamp.
+                let last_ts = evs.last().map(|e| e.ts_us).unwrap_or(0);
+                while let Some(b) = open.pop() {
+                    let closed = Event { ts_us: last_ts, ph: Phase::End, ..b };
+                    events.push(event_json(ring.tid, &closed, "E"));
+                }
+            }
+        }
+        let hists = match SHARED.get() {
+            Some(sh) => Stage::ALL
+                .iter()
+                .map(|s| (s.as_str(), sh.hists[*s as usize].to_json()))
+                .collect(),
+            None => Vec::new(),
+        };
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("recorder", Json::str("icquant-flight-recorder")),
+                    ("threads", Json::num(n_threads as f64)),
+                    ("dropped_events", Json::num(dropped as f64)),
+                    ("histograms", Json::obj(hists)),
+                ]),
+            ),
+        ])
+    }
+
+    /// [`Tracer::export`] straight to a file.
+    pub fn export_to(path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, Self::export().to_string())
+    }
+}
+
+fn event_json(tid: u64, e: &Event, ph: &str) -> Json {
+    let mut fields = vec![
+        ("ph", Json::str(ph)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(e.ts_us as f64)),
+        ("cat", Json::str(e.cat.as_str())),
+        ("name", Json::str(e.name)),
+        (
+            "args",
+            Json::obj(vec![
+                ("id", Json::num(e.id as f64)),
+                ("a", Json::num(e.a as f64)),
+                ("b", Json::num(e.b as f64)),
+            ]),
+        ),
+    ];
+    if ph == "i" {
+        fields.push(("s", Json::str("t"))); // thread-scoped instant
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let h = LogHist::new();
+        assert_eq!(LogHist::bucket(0), 0);
+        assert_eq!(LogHist::bucket(1), 1);
+        assert_eq!(LogHist::bucket(2), 2);
+        assert_eq!(LogHist::bucket(3), 2);
+        assert_eq!(LogHist::bucket(4), 3);
+        assert_eq!(LogHist::bucket(u64::MAX), HIST_BUCKETS - 1);
+        for us in [1u64, 1, 1, 1000] {
+            h.record(us);
+        }
+        // p50 falls in the 1 µs bucket (upper edge 2), p99 in the
+        // 512..1024 bucket (upper edge 1024).
+        assert_eq!(h.percentile_us(0.5), 2);
+        assert_eq!(h.percentile_us(0.99), 1024);
+        h.reset();
+        assert_eq!(h.percentile_us(0.5), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_in_order() {
+        let mk = |i: u64| Event {
+            ts_us: i,
+            cat: Cat::Sched,
+            ph: Phase::Instant,
+            name: "e",
+            id: i,
+            a: 0,
+            b: 0,
+        };
+        let mut r = RingBuf::new(4);
+        for i in 0..6 {
+            r.push(mk(i));
+        }
+        let got: Vec<u64> = r.in_order().iter().map(|e| e.ts_us).collect();
+        assert_eq!(got, vec![2, 3, 4, 5]);
+        assert_eq!(r.dropped, 2);
+        assert_eq!(r.events.len(), 4);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        // The lib-test binary runs tests concurrently; this test only
+        // asserts the *disabled* path, which is the process default —
+        // integration tests own the enabled/global-state scenarios.
+        if enabled() {
+            return; // another harness enabled tracing; skip
+        }
+        instant(Cat::Request, "noop", 1, 2, 3);
+        stage_us(Stage::Queue, 5);
+        let s = span(Cat::Pool, "noop", 0);
+        drop(s);
+        assert!(flight_dump("test").is_none());
+    }
+}

@@ -1,0 +1,262 @@
+//! Integration tests for the flight-recorder tracer (DESIGN.md §11).
+//!
+//! The tracer is process-global state (one enable flag, per-thread
+//! rings, shared histograms), so every test here serializes on one
+//! lock, resets the recorder, and disables it again before releasing —
+//! the lib tests only ever exercise the disabled path.
+
+use icquant::coordinator::metrics::{Metrics, RequestTiming};
+use icquant::trace::{self, Cat, Stage, Tracer};
+use icquant::util::json::Json;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Serialize tests that touch the global tracer; reset on acquire.
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let g = LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner());
+    Tracer::disable();
+    Tracer::reset();
+    g
+}
+
+fn export_events(doc: &Json) -> Vec<Json> {
+    doc.req("traceEvents").unwrap().as_arr().unwrap().to_vec()
+}
+
+/// Validate the Chrome-trace invariants the exporter promises: every
+/// event carries the required fields, per-thread timestamps are
+/// monotone, and B/E pairs balance with depth never going negative.
+fn assert_schema_valid(doc: &Json) {
+    let events = export_events(doc);
+    let mut depth: HashMap<i64, i64> = HashMap::new();
+    let mut last_ts: HashMap<i64, f64> = HashMap::new();
+    for e in &events {
+        let ph = e.req("ph").unwrap().as_str().unwrap();
+        let tid = e.req("tid").unwrap().as_i64().unwrap();
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        e.req("pid").unwrap().as_i64().unwrap();
+        e.req("cat").unwrap().as_str().unwrap();
+        e.req("name").unwrap().as_str().unwrap();
+        if let Some(&prev) = last_ts.get(&tid) {
+            assert!(ts >= prev, "ts regressed on tid {}: {} < {}", tid, ts, prev);
+        }
+        last_ts.insert(tid, ts);
+        let d = depth.entry(tid).or_insert(0);
+        match ph {
+            "B" => *d += 1,
+            "E" => {
+                *d -= 1;
+                assert!(*d >= 0, "unmatched E on tid {}", tid);
+            }
+            "i" => {}
+            other => panic!("unknown phase {:?}", other),
+        }
+    }
+    for (tid, d) in depth {
+        assert_eq!(d, 0, "tid {} left {} span(s) open", tid, d);
+    }
+}
+
+#[test]
+fn wraparound_keeps_newest_events_within_byte_budget() {
+    let _g = tracer_lock();
+    // A 1-byte budget clamps to the 16-event minimum ring.
+    Tracer::enable(1);
+    for i in 0..100u64 {
+        trace::instant(Cat::Sched, "wrap", i, 0, 0);
+    }
+    Tracer::disable();
+    assert_eq!(Tracer::event_count(), 16, "ring must hold exactly its capacity");
+    let doc = Tracer::export();
+    let ids: Vec<u64> = export_events(&doc)
+        .iter()
+        .filter(|e| e.req("name").unwrap().as_str() == Some("wrap"))
+        .map(|e| e.req("args").unwrap().req("id").unwrap().as_f64().unwrap() as u64)
+        .collect();
+    // Overwrite-oldest: exactly the newest 16 instants survive, in order.
+    assert_eq!(ids, (84..100).collect::<Vec<u64>>());
+    let dropped = doc
+        .req("otherData")
+        .unwrap()
+        .req("dropped_events")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert_eq!(dropped, 84.0);
+    Tracer::reset();
+}
+
+#[test]
+fn multithreaded_recording_loses_no_spans_below_capacity() {
+    let _g = tracer_lock();
+    Tracer::enable(trace::DEFAULT_BYTE_BUDGET);
+    const THREADS: usize = 4;
+    const SPANS: usize = 50;
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                for i in 0..SPANS {
+                    let s = trace::span_args(
+                        Cat::Pool,
+                        "mt_span",
+                        (t * SPANS + i) as u64,
+                        t as i64,
+                        i as i64,
+                    );
+                    trace::instant(Cat::Kv, "mt_instant", i as u64, 0, 0);
+                    drop(s);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    Tracer::disable();
+    let doc = Tracer::export();
+    assert_schema_valid(&doc);
+    let events = export_events(&doc);
+    let count = |ph: &str, name: &str| {
+        events
+            .iter()
+            .filter(|e| {
+                e.req("ph").unwrap().as_str() == Some(ph)
+                    && e.req("name").unwrap().as_str() == Some(name)
+            })
+            .count()
+    };
+    // Below ring capacity (~4.6k events/thread) nothing is lost.
+    assert_eq!(count("B", "mt_span"), THREADS * SPANS);
+    assert_eq!(count("E", "mt_span"), THREADS * SPANS);
+    assert_eq!(count("i", "mt_instant"), THREADS * SPANS);
+    let dropped = doc
+        .req("otherData")
+        .unwrap()
+        .req("dropped_events")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert_eq!(dropped, 0.0);
+    Tracer::reset();
+}
+
+#[test]
+fn export_is_schema_valid_and_closes_dangling_spans() {
+    let _g = tracer_lock();
+    Tracer::enable(trace::DEFAULT_BYTE_BUDGET);
+    {
+        let _outer = trace::span_args(Cat::Sched, "outer", 1, 10, 20);
+        let inner = trace::span(Cat::Request, "inner", 2);
+        trace::instant(Cat::Kv, "poke", 3, 1, 2);
+        drop(inner);
+    }
+    trace::stage_us(Stage::DecodeStep, 150);
+    trace::stage_ms(Stage::Total, 1.5);
+    // A span deliberately left open: the exporter must close it at the
+    // thread's last timestamp rather than emit an unbalanced stream.
+    std::mem::forget(trace::span(Cat::Pool, "dangling", 4));
+    trace::instant(Cat::Pool, "after", 5, 0, 0);
+    Tracer::disable();
+
+    let dir = std::env::temp_dir().join("icq_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("out.json");
+    Tracer::export_to(&path).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_schema_valid(&doc);
+
+    let events = export_events(&doc);
+    let danglings: Vec<&str> = events
+        .iter()
+        .filter(|e| e.req("name").unwrap().as_str() == Some("dangling"))
+        .map(|e| e.req("ph").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(danglings, vec!["B", "E"], "dangling span must be closed on export");
+    // Stage histograms ride along in otherData.
+    let hists = doc.req("otherData").unwrap().req("histograms").unwrap();
+    assert_eq!(
+        hists.req("decode_step").unwrap().req("count").unwrap().as_f64(),
+        Some(1.0)
+    );
+    assert_eq!(hists.req("total").unwrap().req("count").unwrap().as_f64(), Some(1.0));
+    let _ = std::fs::remove_dir_all(&dir);
+    Tracer::reset();
+}
+
+#[test]
+fn flight_dump_returns_recent_events() {
+    let _g = tracer_lock();
+    Tracer::enable(trace::DEFAULT_BYTE_BUDGET);
+    for i in 0..10u64 {
+        trace::instant(Cat::Request, "fail_ctx", i, 0, 0);
+    }
+    let dump = trace::flight_dump("test trigger").expect("armed recorder must dump");
+    assert!(dump.contains("test trigger"));
+    assert!(dump.contains("request/fail_ctx"));
+    // Disarming the flight recorder silences dumps without stopping
+    // event recording.
+    Tracer::set_flight_recorder(false);
+    assert!(trace::flight_dump("quiet").is_none());
+    Tracer::set_flight_recorder(true);
+    Tracer::disable();
+    Tracer::reset();
+}
+
+#[test]
+fn concurrent_metrics_recording_and_snapshots() {
+    // No tracer involvement needed, but Metrics and the tracer share
+    // the serving hot path; keep the test serialized all the same.
+    let _g = tracer_lock();
+    let metrics = Arc::new(Metrics::default());
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 200;
+    let mut handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let m = metrics.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    if i % 10 == 0 {
+                        m.record_request(&RequestTiming::failed("boom".into()));
+                    } else {
+                        m.record_request(&RequestTiming {
+                            queue_ms: 1.0,
+                            prefill_ms: 2.0,
+                            ttft_ms: 3.0,
+                            decode_ms: 4.0,
+                            tokens: 2,
+                            error: None,
+                        });
+                    }
+                    m.record_step(t + 1);
+                }
+            })
+        })
+        .collect();
+    // One more thread snapshots while the recorders hammer the lock.
+    {
+        let m = metrics.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..100 {
+                let s = m.snapshot();
+                assert!(s.requests + s.errors <= (THREADS * PER_THREAD) as u64);
+                assert!(s.p50_latency_ms >= 0.0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = metrics.snapshot();
+    let failed = (THREADS * PER_THREAD / 10) as u64;
+    assert_eq!(s.errors, failed);
+    assert_eq!(s.requests, (THREADS * PER_THREAD) as u64 - failed);
+    assert_eq!(s.tokens, s.requests * 2);
+    // Successful timings only: every total is 1+2+4 = 7 ms.
+    assert_eq!(s.p50_latency_ms, 7.0);
+    assert_eq!(s.p99_latency_ms, 7.0);
+    assert_eq!(s.decode_steps, (THREADS * PER_THREAD) as u64);
+}
