@@ -70,7 +70,11 @@ cargo bench --bench paging
 test -f BENCH_paging.json || { echo "FAIL: paging bench wrote no BENCH_paging.json" >&2; exit 1; }
 mv BENCH_paging.json ../BENCH_paging.json
 echo "recorded ../BENCH_paging.json"
-for key in paged_vs_contiguous_ratio shared_prefix_ttft_speedup shared_prefix_prefill_speedup prefix_hits block_utilization; do
+for key in paged_vs_contiguous_ratio shared_prefix_ttft_speedup shared_prefix_prefill_speedup \
+        prefix_hits block_utilization \
+        kv_bytes_per_token_f32 kv_bytes_per_token_kv8 kv_bytes_per_token_kv4 \
+        resident_tokens_per_mib_f32 resident_tokens_per_mib_kv8 resident_tokens_per_mib_kv4 \
+        kv8_resident_ratio kv4_resident_ratio; do
     grep -q "\"$key\"" ../BENCH_paging.json \
         || { echo "FAIL: BENCH_paging.json missing required key '$key'" >&2; exit 1; }
 done
@@ -101,6 +105,14 @@ TRACE_OUT=$(mktemp -t icq_trace_XXXX.json)
     --requests 8 --batch 4 --tokens 8 --trace-out "$TRACE_OUT"
 ./target/release/icquant trace-check "$TRACE_OUT"
 rm -f "$TRACE_OUT"
+# Same gate with 4-bit quantized KV blocks (ISSUE 7): the trace must
+# stay well-formed when the kv category carries quantize_block /
+# dequant_write events and the report shows quantized accounting.
+TRACE_OUT_KV=$(mktemp -t icq_trace_kv4_XXXX.json)
+./target/release/icquant serve --backend native --family llama3.2-1b \
+    --requests 8 --batch 4 --tokens 8 --kv-bits 4 --trace-out "$TRACE_OUT_KV"
+./target/release/icquant trace-check "$TRACE_OUT_KV"
+rm -f "$TRACE_OUT_KV"
 
 echo "=== store bench → BENCH_store.json ==="
 # The bench binary writes BENCH_store.json into the working directory;

@@ -12,11 +12,17 @@
 //!    the per-request tail, so TTFT and prefill latency drop; the bench
 //!    records the measured improvement and the prefix-hit counters, and
 //!    asserts outputs identical to the no-sharing arm.
+//! 3. **Quantized KV residency** (ISSUE 7) — long aligned prefills at
+//!    `kv_bits ∈ {off, 8, 4}`, recording `kv_bytes_per_token_*` and
+//!    `resident_tokens_per_mib_*`; `kv4_resident_ratio` (tokens/MiB at
+//!    4-bit vs f32) is asserted ≥ 3× — the headline capacity win of
+//!    DESIGN.md §12 (hot f32 tails amortize with context length; the
+//!    measurement uses block-aligned prompts so every block is cold).
 
 use icquant::coordinator::backend::NativeBackend;
 use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
 use icquant::icquant::IcqConfig;
-use icquant::kernels::{KvLayout, NativeModel};
+use icquant::kernels::{KvCache, KvLayout, NativeModel};
 use icquant::quant::QuantizerKind;
 use icquant::store::{synth_model, DecodeCache, StoredModel};
 use icquant::synthzoo::FamilySpec;
@@ -31,6 +37,11 @@ const N_REQUESTS: usize = 24;
 const PREFILL_LEN: usize = 48;
 const SYSTEM_PROMPT: usize = 40;
 const MAX_TOKENS: usize = 8;
+/// Residency section: larger blocks amortize the per-channel (lo, hi)
+/// range overhead of quantized planes; prompts are 3 full blocks so
+/// the measurement sees only cold (quantizable) blocks.
+const KV_BENCH_BLOCK_TOKENS: usize = 32;
+const KV_BENCH_PREFILL: usize = 3 * KV_BENCH_BLOCK_TOKENS;
 
 fn bench_family() -> FamilySpec {
     FamilySpec {
@@ -118,6 +129,38 @@ fn run_workload(stored: &StoredModel, layout: KvLayout, prompts: &[Vec<i32>]) ->
     }
 }
 
+/// Fill every slot with a block-aligned prompt at one `kv_bits`
+/// setting and read the cache's resident-byte counters — the capacity
+/// side of KV quantization, measured on real cache state rather than
+/// arithmetic. Returns `(bytes/token, tokens/MiB)`.
+fn measure_residency(stored: &StoredModel, kv_bits: Option<u32>) -> (f64, f64) {
+    let native = NativeModel::from_stored(stored, THREADS).unwrap();
+    let layout = KvLayout {
+        block_tokens: KV_BENCH_BLOCK_TOKENS,
+        total_blocks: None,
+        prefix_sharing: false,
+        kv_bits,
+    };
+    let mut kv = KvCache::with_layout(&native.config, SLOTS, layout);
+    let mut rng = Rng::new(0x4B17);
+    for slot in 0..SLOTS {
+        let prompt: Vec<i32> =
+            (0..KV_BENCH_PREFILL).map(|_| rng.below(256) as i32).collect();
+        native.prefill_slot(&mut kv, slot, &prompt).unwrap();
+    }
+    kv.debug_validate();
+    let s = kv.stats();
+    assert_eq!(s.resident_tokens, SLOTS * KV_BENCH_PREFILL);
+    if kv_bits.is_some() {
+        assert_eq!(
+            s.quantized_blocks, s.blocks_in_use,
+            "block-aligned prompts must quantize every block"
+        );
+    }
+    let bytes_per_token = s.kv_resident_bytes as f64 / s.resident_tokens as f64;
+    (bytes_per_token, (1u64 << 20) as f64 / bytes_per_token)
+}
+
 fn report_json(r: &RunReport) -> Json {
     Json::obj(vec![
         ("tokens", Json::num(r.tokens as f64)),
@@ -149,8 +192,13 @@ fn main() {
         })
         .collect();
     let model_cfg = stored.config.clone().unwrap();
-    let paged =
-        run_workload(&stored, KvLayout { block_tokens: 16, total_blocks: None, prefix_sharing: true }, &mixed);
+    let paged_layout = KvLayout {
+        block_tokens: 16,
+        total_blocks: None,
+        prefix_sharing: true,
+        kv_bits: None,
+    };
+    let paged = run_workload(&stored, paged_layout, &mixed);
     let contiguous = run_workload(&stored, KvLayout::contiguous(&model_cfg), &mixed);
     assert_eq!(
         paged.outputs, contiguous.outputs,
@@ -177,14 +225,10 @@ fn main() {
             p
         })
         .collect();
-    let sharing_on = run_workload(
-        &stored,
-        KvLayout { block_tokens: 16, total_blocks: None, prefix_sharing: true },
-        &shared_prompts,
-    );
+    let sharing_on = run_workload(&stored, paged_layout, &shared_prompts);
     let sharing_off = run_workload(
         &stored,
-        KvLayout { block_tokens: 16, total_blocks: None, prefix_sharing: false },
+        KvLayout { prefix_sharing: false, ..paged_layout },
         &shared_prompts,
     );
     assert_eq!(
@@ -217,6 +261,23 @@ fn main() {
         sharing_on.prefix_hits, sharing_on.prefix_hit_tokens, sharing_on.cow_forks
     );
 
+    // --- 3. quantized KV residency: f32 vs 8- vs 4-bit blocks ---------
+    let (bpt_f32, tpm_f32) = measure_residency(&stored, None);
+    let (bpt_kv8, tpm_kv8) = measure_residency(&stored, Some(8));
+    let (bpt_kv4, tpm_kv4) = measure_residency(&stored, Some(4));
+    let kv8_ratio = tpm_kv8 / tpm_f32;
+    let kv4_ratio = tpm_kv4 / tpm_f32;
+    println!(
+        "kv residency:  f32 {:.0} B/token ({:.0} tokens/MiB) | kv8 {:.0} B/token \
+         ({:.0} tokens/MiB, {:.2}x) | kv4 {:.0} B/token ({:.0} tokens/MiB, {:.2}x)",
+        bpt_f32, tpm_f32, bpt_kv8, tpm_kv8, kv8_ratio, bpt_kv4, tpm_kv4, kv4_ratio
+    );
+    assert!(
+        kv4_ratio >= 3.0,
+        "4-bit KV must hold >= 3x more resident tokens per MiB than f32, got {:.2}x",
+        kv4_ratio
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::str("paging")),
         (
@@ -239,6 +300,16 @@ fn main() {
         ("shared_prefix_ttft_speedup", Json::num(ttft_speedup)),
         ("shared_prefix_prefill_speedup", Json::num(prefill_speedup)),
         ("prefix_hits", Json::num(sharing_on.prefix_hits as f64)),
+        ("kv_bench_block_tokens", Json::num(KV_BENCH_BLOCK_TOKENS as f64)),
+        ("kv_bench_prefill", Json::num(KV_BENCH_PREFILL as f64)),
+        ("kv_bytes_per_token_f32", Json::num(bpt_f32)),
+        ("kv_bytes_per_token_kv8", Json::num(bpt_kv8)),
+        ("kv_bytes_per_token_kv4", Json::num(bpt_kv4)),
+        ("resident_tokens_per_mib_f32", Json::num(tpm_f32)),
+        ("resident_tokens_per_mib_kv8", Json::num(tpm_kv8)),
+        ("resident_tokens_per_mib_kv4", Json::num(tpm_kv4)),
+        ("kv8_resident_ratio", Json::num(kv8_ratio)),
+        ("kv4_resident_ratio", Json::num(kv4_ratio)),
     ]);
     std::fs::write("BENCH_paging.json", json.to_string()).unwrap();
     println!("\nwrote BENCH_paging.json");

@@ -141,11 +141,15 @@ fn print_help() {
     println!("  bound [--gamma g]             Lemma 1 bound + optimal b");
     println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
     println!("        [--backend pjrt|native] [--family f] [--bits n]");
-    println!("        [--threads t] [--block-size b] [--trace-out f.json]");
+    println!("        [--threads t] [--block-size b] [--kv-bits 4|8|off]");
+    println!("        [--trace-out f.json]");
     println!("                                batched serving demo;");
     println!("                                pjrt = AOT HLO (needs artifacts),");
     println!("                                native = fused quantized-plane CPU");
     println!("                                kernels, no artifacts needed;");
+    println!("                                --kv-bits quantizes filled KV blocks");
+    println!("                                in place with ICQ index coding");
+    println!("                                (off = full f32, the default);");
     println!("                                --trace-out writes a Chrome/Perfetto");
     println!("                                trace of the run");
     println!("  trace-check <trace.json>      validate an emitted trace (schema,");
@@ -492,6 +496,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize_flag("batch", 8)?;
     let tokens = args.usize_flag("tokens", 16)?;
     let trace_out = args.flag("trace-out");
+    // KV-block quantization width (native backend; DESIGN.md §12).
+    // "off" (the default) keeps every block f32 and is bit-identical
+    // to the pre-quantization serving path.
+    let kv_bits = match args.flag("kv-bits").unwrap_or("off") {
+        "off" => None,
+        "4" => Some(4),
+        "8" => Some(8),
+        other => bail!("unknown --kv-bits '{}' (expected 4|8|off)", other),
+    };
     match args.flag("backend").unwrap_or("pjrt") {
         "pjrt" => serve_demo::run(
             n_requests,
@@ -508,6 +521,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_flag("bits", 2)? as u32,
             args.usize_flag("threads", 0)?, // 0 ⇒ all cores
             args.usize_flag("block-size", 0)?, // 0 ⇒ default KV block size
+            kv_bits,
             trace_out,
         ),
         other => bail!("unknown backend '{}' (expected pjrt|native)", other),

@@ -57,6 +57,7 @@ pub fn run_native(
     bits: u32,
     threads: usize,
     block_tokens: usize,
+    kv_bits: Option<u32>,
     trace_out: Option<&str>,
 ) -> Result<()> {
     let family = crate::synthzoo::family(family_name).ok_or_else(|| {
@@ -95,12 +96,20 @@ pub fn run_native(
     );
     let kv_layout = KvLayout {
         block_tokens: if block_tokens == 0 { DEFAULT_BLOCK_TOKENS } else { block_tokens },
+        kv_bits,
         ..KvLayout::default()
     };
     println!(
         "  paged KV cache       : {}-token blocks, shared-prefix reuse on (DESIGN.md §10)",
         kv_layout.block_tokens
     );
+    match kv_bits {
+        Some(b) => println!(
+            "  KV quantization      : ICQ {}-bit blocks, hot tail f32 (DESIGN.md §12)",
+            b
+        ),
+        None => println!("  KV quantization      : off (full f32 blocks)"),
+    }
 
     // Unlike PJRT there are no pre-compiled bucket entries, so grow the
     // bucket ladder to cover whatever batch size was requested.
@@ -173,6 +182,16 @@ pub fn run_native(
         snap.block_utilization * 100.0,
         snap.blocks_evicted
     );
+    if let Some(b) = snap.kv_bits {
+        println!(
+            "quantized KV ({} bit)   : {} blocks quantized ({} resident now), {} scratch hits, {} resident KV",
+            b,
+            snap.blocks_quantized,
+            snap.quantized_blocks,
+            snap.dequant_scratch_hits,
+            human_bytes(snap.kv_resident_bytes as u64)
+        );
+    }
     println!(
         "plane cache            : {} hits / {} misses ({} decoded, {} resident)",
         cstats.hits,

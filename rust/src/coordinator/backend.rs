@@ -433,6 +433,14 @@ impl NativeBackend {
         self
     }
 
+    /// Enable (or disable, with `None`) in-place ICQ quantization of
+    /// filled KV blocks at `bits` bits per value (DESIGN.md §12).
+    /// Shorthand for rewriting `kv_bits` on the current layout.
+    pub fn with_kv_quant(mut self, bits: Option<u32>) -> NativeBackend {
+        self.layout.kv_bits = bits;
+        self
+    }
+
     /// The paged-cache layout new decode states are built with.
     pub fn kv_layout(&self) -> KvLayout {
         self.layout
@@ -982,8 +990,12 @@ mod tests {
         let model = synth_model(&family, &cfg, None).unwrap();
         let cache = Arc::new(DecodeCache::new(64 << 20));
         let stored = StoredModel::from_model(model, cache, "native-paged");
-        let layout =
-            KvLayout { block_tokens: 4, total_blocks: Some(6), prefix_sharing: true };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: Some(6),
+            prefix_sharing: true,
+            kv_bits: None,
+        };
         let mut b = NativeBackend::from_stored(&stored, 1)
             .unwrap()
             .with_kv_layout(layout);

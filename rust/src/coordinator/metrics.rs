@@ -196,6 +196,20 @@ pub struct Snapshot {
     /// non-paged); each sample is measured against its own epoch's
     /// pool size, so this never exceeds 1.
     pub block_utilization: f64,
+    /// KV quantization width of the latest cache epoch (`None` when
+    /// quantization is off or the backend is non-paged).
+    pub kv_bits: Option<u32>,
+    /// Blocks currently held in the quantized `Icq` state (gauge,
+    /// latest epoch — DESIGN.md §12).
+    pub quantized_blocks: usize,
+    /// Filled blocks quantized in place (cumulative across epochs).
+    pub blocks_quantized: u64,
+    /// Quantized-block attention reads served from an already-staged
+    /// dequant scratch entry (cumulative across epochs).
+    pub dequant_scratch_hits: u64,
+    /// Logical resident KV bytes of the latest epoch: quantized payload
+    /// plus full f32 cost of unquantized blocks (gauge).
+    pub kv_resident_bytes: usize,
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
     /// Latencies observed / currently held in the reservoir.
@@ -234,6 +248,8 @@ impl Metrics {
             m.kv_base.prefix_hit_tokens += m.kv_last.prefix_hit_tokens;
             m.kv_base.blocks_evicted += m.kv_last.blocks_evicted;
             m.kv_base.cow_forks += m.kv_last.cow_forks;
+            m.kv_base.blocks_quantized += m.kv_last.blocks_quantized;
+            m.kv_base.dequant_scratch_hits += m.kv_last.dequant_scratch_hits;
         }
         m.kv_last = *s;
         m.blocks_in_use = s.blocks_in_use;
@@ -293,6 +309,12 @@ impl Metrics {
             cow_forks: m.kv_base.cow_forks + m.kv_last.cow_forks,
             kv_total_blocks: m.kv_total_blocks,
             block_utilization: m.block_utilization_peak,
+            kv_bits: m.kv_last.kv_bits,
+            quantized_blocks: m.kv_last.quantized_blocks,
+            blocks_quantized: m.kv_base.blocks_quantized + m.kv_last.blocks_quantized,
+            dequant_scratch_hits: m.kv_base.dequant_scratch_hits
+                + m.kv_last.dequant_scratch_hits,
+            kv_resident_bytes: m.kv_last.kv_resident_bytes,
             p50_latency_ms: percentile(&lat, 0.5),
             p99_latency_ms: percentile(&lat, 0.99),
             latencies_seen: m.latencies.seen,
@@ -350,6 +372,12 @@ mod tests {
                 prefix_hit_tokens: 12,
                 blocks_evicted: 1,
                 cow_forks: 1,
+                kv_bits: Some(4),
+                quantized_blocks: 3,
+                blocks_quantized: 4,
+                dequant_scratch_hits: 7,
+                kv_resident_bytes: 900,
+                ..Default::default()
             },
             false,
         );
@@ -363,6 +391,12 @@ mod tests {
                 prefix_hit_tokens: 20,
                 blocks_evicted: 2,
                 cow_forks: 1,
+                kv_bits: Some(4),
+                quantized_blocks: 2, // gauge drops too
+                blocks_quantized: 6,
+                dequant_scratch_hits: 11,
+                kv_resident_bytes: 700,
+                ..Default::default()
             },
             false,
         );
@@ -375,6 +409,13 @@ mod tests {
         assert_eq!(s.cow_forks, 1);
         assert_eq!(s.kv_total_blocks, 32);
         assert!((s.block_utilization - 10.0 / 32.0).abs() < 1e-12);
+        // Quantized-KV accounting (DESIGN.md §12): gauges track the
+        // latest sample, cumulative counters the latest epoch values.
+        assert_eq!(s.kv_bits, Some(4));
+        assert_eq!(s.quantized_blocks, 2);
+        assert_eq!(s.blocks_quantized, 6);
+        assert_eq!(s.dequant_scratch_hits, 11);
+        assert_eq!(s.kv_resident_bytes, 700);
     }
 
     #[test]
@@ -392,6 +433,9 @@ mod tests {
             prefix_hit_tokens: hits * 4,
             blocks_evicted: evicted,
             cow_forks: 0,
+            blocks_quantized: hits, // quantized counters roll too
+            dequant_scratch_hits: evicted * 3,
+            ..Default::default()
         };
         m.record_kv(&epoch(2, 1, 8), true); // wave 1 final counters
         m.record_kv(&epoch(3, 0, 5), true); // wave 2 (fresh cache)
@@ -400,6 +444,8 @@ mod tests {
         assert_eq!(s.prefix_hits, 2 + 3 + 4);
         assert_eq!(s.prefix_hit_tokens, (2 + 3 + 4) * 4);
         assert_eq!(s.blocks_evicted, 1 + 0 + 2);
+        assert_eq!(s.blocks_quantized, 2 + 3 + 4);
+        assert_eq!(s.dequant_scratch_hits, (1 + 0 + 2) * 3);
         assert_eq!(s.blocks_in_use, 6);
         assert_eq!(s.blocks_in_use_peak, 8);
         // Utilization is a per-sample ratio peak, bounded by 1 even

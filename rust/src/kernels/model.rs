@@ -32,9 +32,11 @@
 //! for zero Python/XLA dependence at request time.
 
 use crate::coordinator::backend::argmax_rows;
+use crate::icq::RowIndexCode;
 use crate::icquant::runtime::RuntimePlane;
 use crate::kernels::{gemm_on, WorkerPool};
 use crate::model::ModelConfig;
+use crate::quant::rtn::fit_rtn_range;
 use crate::store::StoredModel;
 use crate::trace::{self, Cat};
 use crate::util::tensor::Matrix;
@@ -56,6 +58,15 @@ pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 /// prefix chain.
 const NO_PARENT: usize = usize::MAX;
 
+/// Sentinel "no f32 region" id: the block is either free or holds a
+/// quantized payload instead of float storage.
+const NO_REGION: usize = usize::MAX;
+
+/// Gap width of the outlier index stream in quantized KV planes. The
+/// positions span one whole plane (`H·hd·block_tokens` symbols), so an
+/// 8-bit gap keeps escape symbols rare even for sparse outliers.
+const KV_GAP_BITS: u32 = 8;
+
 /// Layout knobs for the paged KV cache (DESIGN.md §10).
 #[derive(Clone, Copy, Debug)]
 pub struct KvLayout {
@@ -69,6 +80,14 @@ pub struct KvLayout {
     pub total_blocks: Option<usize>,
     /// Shared-prefix reuse: block-chain registry + copy-on-write.
     pub prefix_sharing: bool,
+    /// ICQ-quantize full KV blocks to this many bits per value
+    /// (DESIGN.md §12). `None` keeps every block f32 — the bit-exact
+    /// pre-quantization behaviour. `Some(b)` (2..=8; the CLI exposes 4
+    /// and 8) quantizes each block per-head-channel the moment it fills,
+    /// keeping only the hot tail block at f32; decoding is lossy but
+    /// deterministic, so streams stay schedule-invariant at a fixed
+    /// layout.
+    pub kv_bits: Option<u32>,
 }
 
 impl Default for KvLayout {
@@ -77,6 +96,7 @@ impl Default for KvLayout {
             block_tokens: DEFAULT_BLOCK_TOKENS,
             total_blocks: None,
             prefix_sharing: true,
+            kv_bits: None,
         }
     }
 }
@@ -90,6 +110,7 @@ impl KvLayout {
             block_tokens: cfg.max_seq,
             total_blocks: None,
             prefix_sharing: false,
+            kv_bits: None,
         }
     }
 }
@@ -117,6 +138,23 @@ pub struct KvCacheStats {
     pub blocks_evicted: u64,
     /// Cumulative: copy-on-write forks (writes into shared blocks).
     pub cow_forks: u64,
+    /// KV quantization width (`None` ⇒ every block f32).
+    pub kv_bits: Option<u32>,
+    /// Blocks currently in the `Icq` state (gauge).
+    pub quantized_blocks: usize,
+    /// Cumulative: block quantization events (a re-quantized
+    /// dequantize-then-write block counts again).
+    pub blocks_quantized: u64,
+    /// Cumulative: attention reads of a quantized block served from an
+    /// already-staged dequant scratch entry (shared-prefix lanes in the
+    /// same forward hitting one staged copy).
+    pub dequant_scratch_hits: u64,
+    /// Logical bytes of all used blocks: quantized payload bytes plus
+    /// full f32 cost for `F32` blocks (gauge). `bytes/token` is this
+    /// over [`resident_tokens`](KvCacheStats::resident_tokens).
+    pub kv_resident_bytes: usize,
+    /// Tokens currently resident across slot lanes (Σ per-slot pos).
+    pub resident_tokens: usize,
 }
 
 /// A registered (shareable) block: its chain key, for removal from the
@@ -134,6 +172,178 @@ struct RegEntry {
 struct PrefixKey {
     parent: usize,
     tokens: Vec<i32>,
+}
+
+/// One ICQ-quantized K or V plane of one physical block in one layer
+/// (DESIGN.md §12). Channel = one `(head, dim)` coordinate; its
+/// `block_tokens` values along the token axis are quantized together:
+/// an optional single outlier (taken only when removing it at least
+/// halves the channel range — the paper's range-halving trick) is kept
+/// exact and gap-coded into one plane-wide [`RowIndexCode`] stream, and
+/// the inliers round to a per-channel uniform grid
+/// ([`fit_rtn_range`]).
+#[derive(Clone)]
+struct QuantPlane {
+    /// Packed `bits`-wide codes, channel-major: channel `ch` owns codes
+    /// `ch·block_tokens .. (ch+1)·block_tokens`.
+    codes: Vec<u8>,
+    /// Per-channel inlier grid `[lo, hi]` (2 f32 per channel).
+    ranges: Vec<f32>,
+    /// Outlier positions over the flattened channel-major stream.
+    outliers: RowIndexCode,
+    /// Outlier values (exact f32), in position order.
+    outlier_vals: Vec<f32>,
+}
+
+impl QuantPlane {
+    /// Payload bytes of this plane: packed codes + grid endpoints +
+    /// exact outliers + the gap stream.
+    fn payload_bytes(&self) -> usize {
+        self.codes.len()
+            + self.ranges.len() * 4
+            + self.outlier_vals.len() * 4
+            + self.outliers.bytes().len()
+    }
+}
+
+/// The quantized payload of one physical block: per layer, one K and
+/// one V [`QuantPlane`]. A block is either f32 (owns an arena region)
+/// or `Icq` (owns one of these) — never both.
+#[derive(Clone)]
+struct QuantBlock {
+    bits: u32,
+    k: Vec<QuantPlane>,
+    v: Vec<QuantPlane>,
+}
+
+impl QuantBlock {
+    fn payload_bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(QuantPlane::payload_bytes).sum()
+    }
+}
+
+/// Write code `val` (`bits` wide, LSB-first) at slot `i` of a packed
+/// code buffer.
+#[inline]
+fn pack_code(buf: &mut [u8], i: usize, bits: u32, val: u32) {
+    let mut bit = i * bits as usize;
+    let mut left = bits;
+    let mut v = val;
+    while left > 0 {
+        let byte = bit / 8;
+        let off = (bit % 8) as u32;
+        let take = left.min(8 - off);
+        let mask = ((1u32 << take) - 1) as u8;
+        buf[byte] |= ((v as u8) & mask) << off;
+        v >>= take;
+        bit += take as usize;
+        left -= take;
+    }
+}
+
+/// Read the `bits`-wide code at slot `i` of a packed code buffer.
+#[inline]
+fn unpack_code(buf: &[u8], i: usize, bits: u32) -> u32 {
+    let mut bit = i * bits as usize;
+    let mut left = bits;
+    let mut out = 0u32;
+    let mut shift = 0u32;
+    while left > 0 {
+        let byte = bit / 8;
+        let off = (bit % 8) as u32;
+        let take = left.min(8 - off);
+        let mask = (1u32 << take) - 1;
+        out |= (((buf[byte] as u32) >> off) & mask) << shift;
+        shift += take;
+        bit += take as usize;
+        left -= take;
+    }
+    out
+}
+
+/// Quantize one `[H, block_tokens, hd]` f32 plane per head-channel.
+/// Deterministic in the input values alone, so a block's payload is
+/// identical wherever (and whenever) it was quantized — the property
+/// the prefix registry and the fuzz invariance contract lean on.
+fn quantize_plane(src: &[f32], n_heads: usize, bt: usize, hd: usize, bits: u32) -> QuantPlane {
+    let n_ch = n_heads * hd;
+    let mut codes = vec![0u8; (n_ch * bt * bits as usize).div_ceil(8)];
+    let mut ranges = Vec::with_capacity(n_ch * 2);
+    let mut out_pos = Vec::new();
+    let mut out_vals = Vec::new();
+    let mut vals = vec![0.0f32; bt];
+    for ch in 0..n_ch {
+        let (h, d) = (ch / hd, ch % hd);
+        for (t, v) in vals.iter_mut().enumerate() {
+            *v = src[h * bt * hd + t * hd + d];
+        }
+        let (lo, hi) = crate::quant::min_max(&vals);
+        // Top-magnitude candidate outlier (ties break to the first
+        // token, matching `top_k_by_magnitude`'s determinism rule).
+        let mut star = 0usize;
+        for (t, &v) in vals.iter().enumerate() {
+            if v.abs() > vals[star].abs() {
+                star = t;
+            }
+        }
+        let (mut lo2, mut hi2) = (f32::INFINITY, f32::NEG_INFINITY);
+        for (t, &v) in vals.iter().enumerate() {
+            if t != star {
+                lo2 = lo2.min(v);
+                hi2 = hi2.max(v);
+            }
+        }
+        // ICQ's range-halving rule: pay the index entry only when the
+        // remaining inliers span at most half the full range (≥1 bit of
+        // grid resolution bought back).
+        let take = bt >= 2 && hi > lo && hi2 >= lo2 && (hi2 - lo2) <= 0.5 * (hi - lo);
+        let (glo, ghi) = if take { (lo2, hi2) } else { (lo, hi) };
+        let cb = fit_rtn_range(glo, ghi, bits);
+        ranges.push(glo);
+        ranges.push(ghi);
+        if take {
+            out_pos.push(ch * bt + star);
+            out_vals.push(vals[star]);
+        }
+        for (t, &v) in vals.iter().enumerate() {
+            let code = if take && t == star { 0 } else { cb.encode(v) as u32 };
+            pack_code(&mut codes, ch * bt + t, bits, code);
+        }
+    }
+    QuantPlane {
+        codes,
+        ranges,
+        outliers: RowIndexCode::encode(&out_pos, KV_GAP_BITS),
+        outlier_vals: out_vals,
+    }
+}
+
+/// Decode one quantized plane back into `[H, block_tokens, hd]` f32.
+/// The grid mirrors [`fit_rtn_range`] (`level(c) = lo + c·(hi−lo)/(2ᵇ−1)`),
+/// then exact outlier values overwrite their positions.
+fn dequantize_plane(
+    qp: &QuantPlane,
+    n_heads: usize,
+    bt: usize,
+    hd: usize,
+    bits: u32,
+    dst: &mut [f32],
+) {
+    let n_ch = n_heads * hd;
+    let levels = (1usize << bits) as f32;
+    for ch in 0..n_ch {
+        let (h, d) = (ch / hd, ch % hd);
+        let (lo, hi) = (qp.ranges[2 * ch], qp.ranges[2 * ch + 1]);
+        let step = if hi > lo { (hi - lo) / (levels - 1.0) } else { 0.0 };
+        for t in 0..bt {
+            let code = unpack_code(&qp.codes, ch * bt + t, bits);
+            dst[h * bt * hd + t * hd + d] = lo + step * code as f32;
+        }
+    }
+    for (i, p) in qp.outliers.positions().enumerate() {
+        let (ch, t) = (p / bt, p % bt);
+        dst[(ch / hd) * bt * hd + t * hd + (ch % hd)] = qp.outlier_vals[i];
+    }
 }
 
 /// Paged, slot-addressed KV cache (DESIGN.md §10): per layer, a pool of
@@ -186,6 +396,37 @@ pub struct KvCache {
     prefix_hit_tokens: u64,
     blocks_evicted: u64,
     cow_forks: u64,
+    /// KV quantization width (`None` ⇒ pure f32, the bit-exact path).
+    kv_bits: Option<u32>,
+    /// Per-block quantized payload: `Some` ⇔ the block is in the `Icq`
+    /// state (and then `region[b] == NO_REGION`).
+    quant: Vec<Option<Box<QuantBlock>>>,
+    /// Per-block f32 arena region id ([`NO_REGION`] ⇔ quantized or
+    /// free). With quantization off this is the identity map and the
+    /// arena is fully provisioned up front — the pre-§12 layout.
+    region: Vec<usize>,
+    /// Recycled arena regions (a block releases its region when it
+    /// quantizes or frees).
+    region_free: Vec<usize>,
+    /// Arena regions allocated so far (high-water; never shrinks).
+    regions: usize,
+    /// Dequant scratch: staged f32 copies of quantized blocks for the
+    /// current layer of the current forward. `scratch_tag[phys] ==
+    /// scratch_gen` ⇔ the block is staged at arena slot
+    /// `scratch_slot_of[phys]`. Sized to the forward's working set and
+    /// reused across calls, so steady-state decode stays allocation-free.
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    scratch_slot_of: Vec<usize>,
+    scratch_tag: Vec<u64>,
+    scratch_gen: u64,
+    scratch_len: usize,
+    /// Gauge mirrors of the quantized-block population (stats are O(1)
+    /// on the decode loop; `debug_validate` recomputes both).
+    quantized_count: usize,
+    quant_payload_bytes: usize,
+    blocks_quantized: u64,
+    dequant_scratch_hits: u64,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
@@ -205,9 +446,17 @@ impl KvCache {
     pub fn with_layout(cfg: &ModelConfig, slots: usize, layout: KvLayout) -> KvCache {
         let bt = layout.block_tokens.min(cfg.max_seq.max(1));
         assert!(bt >= 1, "block_tokens must be >= 1");
+        if let Some(b) = layout.kv_bits {
+            assert!((2..=8).contains(&b), "kv_bits must be in 2..=8, got {}", b);
+        }
         let per_slot = cfg.max_seq.div_ceil(bt);
         let total = layout.total_blocks.unwrap_or(slots.max(1) * per_slot).max(1);
-        let per_layer = total * cfg.n_heads * bt * cfg.head_dim();
+        // Quantization off: the f32 arena is fully provisioned and
+        // identity-mapped up front (the exact pre-§12 footprint). On:
+        // regions are handed out lazily and recycled as blocks
+        // quantize, so the arena only grows to the hot-tail watermark.
+        let init_regions = if layout.kv_bits.is_none() { total } else { 0 };
+        let per_layer = init_regions * cfg.n_heads * bt * cfg.head_dim();
         KvCache {
             slots,
             max_seq: cfg.max_seq,
@@ -232,6 +481,25 @@ impl KvCache {
             prefix_hit_tokens: 0,
             blocks_evicted: 0,
             cow_forks: 0,
+            kv_bits: layout.kv_bits,
+            quant: (0..total).map(|_| None).collect(),
+            region: if layout.kv_bits.is_none() {
+                (0..total).collect()
+            } else {
+                vec![NO_REGION; total]
+            },
+            region_free: Vec::new(),
+            regions: init_regions,
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+            scratch_slot_of: vec![usize::MAX; total],
+            scratch_tag: vec![0; total],
+            scratch_gen: 0,
+            scratch_len: 0,
+            quantized_count: 0,
+            quant_payload_bytes: 0,
+            blocks_quantized: 0,
+            dequant_scratch_hits: 0,
             k: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
             v: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
         }
@@ -326,6 +594,7 @@ impl KvCache {
     /// Point-in-time counters (see [`KvCacheStats`]). O(1) — called on
     /// the serving loop every decode step.
     pub fn stats(&self) -> KvCacheStats {
+        let f32_block = 2 * self.k.len() * self.stride() * 4;
         KvCacheStats {
             block_tokens: self.block_tokens,
             total_blocks: self.total_blocks,
@@ -335,7 +604,49 @@ impl KvCache {
             prefix_hit_tokens: self.prefix_hit_tokens,
             blocks_evicted: self.blocks_evicted,
             cow_forks: self.cow_forks,
+            kv_bits: self.kv_bits,
+            quantized_blocks: self.quantized_count,
+            blocks_quantized: self.blocks_quantized,
+            dequant_scratch_hits: self.dequant_scratch_hits,
+            kv_resident_bytes: self.quant_payload_bytes
+                + f32_block * (self.blocks_in_use() - self.quantized_count),
+            resident_tokens: self.pos.iter().sum(),
         }
+    }
+
+    /// KV quantization width (`None` ⇒ pure f32 blocks).
+    pub fn kv_bits(&self) -> Option<u32> {
+        self.kv_bits
+    }
+
+    /// Per-layer f32 values of one block (`H · block_tokens · hd`).
+    #[inline]
+    fn stride(&self) -> usize {
+        self.n_heads * self.block_tokens * self.head_dim
+    }
+
+    /// Logical bytes of the used blocks: quantized payloads plus full
+    /// f32 cost for `F32` blocks — what a fully packed layout holds
+    /// resident ([`memory_bytes`](KvCache::memory_bytes) reports the
+    /// physical arena, which stops growing at the hot watermark but
+    /// never shrinks). O(total_blocks); `stats()` carries the O(1)
+    /// mirror.
+    pub fn resident_kv_bytes(&self) -> usize {
+        let f32_block = 2 * self.k.len() * self.stride() * 4;
+        self.refcount
+            .iter()
+            .enumerate()
+            .filter(|&(_, &rc)| rc > 0)
+            .map(|(b, _)| match &self.quant[b] {
+                Some(q) => q.payload_bytes(),
+                None => f32_block,
+            })
+            .sum()
+    }
+
+    /// Tokens currently resident across slot lanes.
+    pub fn resident_tokens(&self) -> usize {
+        self.pos.iter().sum()
     }
 
     /// Release `slot` for reuse by a new sequence: refcounts of its
@@ -355,10 +666,57 @@ impl KvCache {
         self.refcount[b] -= 1;
         if self.refcount[b] == 0 {
             debug_assert!(self.registered[b].is_none());
+            self.recycle_storage(b);
             self.free.push(b);
         } else if self.refcount[b] == 1 && self.registered[b].is_some() {
             // Now held only by the index — reclaimable on demand.
             self.evictable_count += 1;
+        }
+    }
+
+    /// Drop block `b`'s storage when it leaves use: a quantized payload
+    /// is freed, an f32 region returns to the region free list. With
+    /// quantization off regions stay identity-mapped forever (zero
+    /// behavioural delta from the pre-§12 cache).
+    fn recycle_storage(&mut self, b: usize) {
+        if self.kv_bits.is_none() {
+            debug_assert!(self.quant[b].is_none());
+            return;
+        }
+        if let Some(q) = self.quant[b].take() {
+            self.quantized_count -= 1;
+            self.quant_payload_bytes -= q.payload_bytes();
+        }
+        if self.region[b] != NO_REGION {
+            self.region_free.push(self.region[b]);
+            self.region[b] = NO_REGION;
+        }
+    }
+
+    /// Hand out an f32 arena region, growing the per-layer arenas by
+    /// one block stride at the high-water mark.
+    fn alloc_region(&mut self) -> usize {
+        if let Some(r) = self.region_free.pop() {
+            return r;
+        }
+        let r = self.regions;
+        self.regions += 1;
+        let stride = self.stride();
+        for l in &mut self.k {
+            l.resize((r + 1) * stride, 0.0);
+        }
+        for l in &mut self.v {
+            l.resize((r + 1) * stride, 0.0);
+        }
+        r
+    }
+
+    /// Give block `b` writable f32 storage if it has none.
+    fn ensure_region(&mut self, b: usize) {
+        debug_assert!(self.quant[b].is_none());
+        if self.region[b] == NO_REGION {
+            let r = self.alloc_region();
+            self.region[b] = r;
         }
     }
 
@@ -487,6 +845,7 @@ impl KvCache {
         self.registered_count -= 1;
         self.evictable_count -= 1;
         self.refcount[b] = 0;
+        self.recycle_storage(b);
         self.blocks_evicted += 1;
         trace::instant(Cat::Kv, "evict", b as u64, self.blocks_evicted as i64, 0);
         self.deregister_descendants(b);
@@ -517,6 +876,7 @@ impl KvCache {
                 // Only an orphan actually gets recycled; a block still
                 // referenced by slot tables merely stops being
                 // shareable and must not inflate the eviction counter.
+                self.recycle_storage(c);
                 self.free.push(c);
                 self.blocks_evicted += 1;
             }
@@ -555,6 +915,16 @@ impl KvCache {
                 }
                 None => break,
             }
+        }
+        // Quantized blocks are immutable (DESIGN.md §12): a fully
+        // registered prompt would rewrite its final token inside the
+        // shared tail block, so under quantization the tail match is
+        // dropped and that block recomputed in f32 — reuse stays
+        // block-aligned and no write ever lands in an `Icq` block.
+        if self.kv_bits.is_some() && matched > 0 && matched * bt >= prompt.len() {
+            let b = self.tables[slot].pop().unwrap();
+            self.release(b);
+            matched -= 1;
         }
         let reuse = (matched * bt).min(prompt.len() - 1);
         self.pos[slot] = reuse;
@@ -617,29 +987,69 @@ impl KvCache {
                         format!("copy-on-write fork of slot {} block {}", slot, b)
                     })?;
                 }
+                // A quantized block in the write range must come back
+                // to f32 before the layer stores touch it. The aligned
+                // shared-prefix rule keeps writes out of `Icq` blocks
+                // on every production path, so this is a safety net for
+                // exotic callers (and the debug fork hook).
+                let phys = self.tables[slot][b];
+                if self.quant[phys].is_some() {
+                    self.dequantize_block(phys);
+                }
             } else {
                 let nb = self
                     .alloc_block(slot)
                     .with_context(|| format!("allocating KV block for slot {}", slot))?;
+                self.ensure_region(nb);
                 self.tables[slot].push(nb);
             }
         }
         Ok(())
     }
 
+    /// Decode block `phys` back into freshly allocated f32 storage and
+    /// drop its payload (state `Icq` → `F32`). The block re-quantizes
+    /// at the next forward epilogue once it is complete again.
+    fn dequantize_block(&mut self, phys: usize) {
+        let q = self.quant[phys].take().expect("dequantize of an f32 block");
+        self.quantized_count -= 1;
+        self.quant_payload_bytes -= q.payload_bytes();
+        let r = self.alloc_region();
+        self.region[phys] = r;
+        let stride = self.stride();
+        let (heads, bt, hd) = (self.n_heads, self.block_tokens, self.head_dim);
+        for layer in 0..self.k.len() {
+            let dk = &mut self.k[layer][r * stride..][..stride];
+            dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, dk);
+            let dv = &mut self.v[layer][r * stride..][..stride];
+            dequantize_plane(&q.v[layer], heads, bt, hd, q.bits, dv);
+        }
+        trace::instant(Cat::Kv, "dequant_write", phys as u64, q.bits as i64, 0);
+    }
+
     /// Copy-on-write: give `slot` a private copy of logical block
     /// `logical` (all layers, both tensors) and drop its reference to
-    /// the shared original.
+    /// the shared original. A quantized original deep-clones its
+    /// **codes** — no float plane is materialized, and mutating the
+    /// child can never perturb the parent's payload.
     fn fork(&mut self, slot: usize, logical: usize) -> Result<()> {
         let old = self.tables[slot][logical];
         // `old` has refcount >= 2, so eviction inside alloc can never
         // pick it.
         let nb = self.alloc_block(slot)?;
-        let stride = self.n_heads * self.block_tokens * self.head_dim;
-        for layer in 0..self.k.len() {
-            let (src, dst) = (old * stride, nb * stride);
-            self.k[layer].copy_within(src..src + stride, dst);
-            self.v[layer].copy_within(src..src + stride, dst);
+        if let Some(q) = &self.quant[old] {
+            let clone = q.clone();
+            self.quant_payload_bytes += clone.payload_bytes();
+            self.quantized_count += 1;
+            self.quant[nb] = Some(clone);
+        } else {
+            self.ensure_region(nb);
+            let stride = self.stride();
+            let (src, dst) = (self.region[old] * stride, self.region[nb] * stride);
+            for layer in 0..self.k.len() {
+                self.k[layer].copy_within(src..src + stride, dst);
+                self.v[layer].copy_within(src..src + stride, dst);
+            }
         }
         // Via release: the original may be a registered block dropping
         // to registry-only (it becomes evictable; it cannot hit zero —
@@ -654,7 +1064,9 @@ impl KvCache {
     #[inline]
     fn idx(&self, slot: usize, pos: usize) -> usize {
         let phys = self.tables[slot][pos / self.block_tokens];
-        (phys * self.n_heads * self.block_tokens + pos % self.block_tokens) * self.head_dim
+        let r = self.region[phys];
+        debug_assert!(r != NO_REGION, "f32 access to a quantized block");
+        (r * self.n_heads * self.block_tokens + pos % self.block_tokens) * self.head_dim
     }
 
     /// Append `seq` new positions from per-token projection outputs
@@ -689,23 +1101,189 @@ impl KvCache {
         }
     }
 
+    /// Arena offset of `(slot, head, pos)` within one block stride plus
+    /// which base arena serves it: the block's own f32 region, or its
+    /// staged dequant-scratch slot (which uses the same `[H, bt, hd]`
+    /// layout). Quantized blocks must have been staged by
+    /// [`stage_dequant`](KvCache::stage_dequant) this read epoch.
+    #[inline]
+    fn read_at(&self, slot: usize, head: usize, pos: usize) -> (bool, usize) {
+        let phys = self.tables[slot][pos / self.block_tokens];
+        let off = (head * self.block_tokens + pos % self.block_tokens) * self.head_dim;
+        let r = self.region[phys];
+        if r != NO_REGION {
+            (false, r * self.stride() + off)
+        } else {
+            debug_assert!(
+                self.scratch_tag[phys] == self.scratch_gen,
+                "read of an unstaged quantized block"
+            );
+            (true, self.scratch_slot_of[phys] * self.stride() + off)
+        }
+    }
+
     #[inline]
     fn k_at(&self, layer: usize, slot: usize, head: usize, pos: usize) -> &[f32] {
-        let at = self.idx(slot, pos) + head * self.block_tokens * self.head_dim;
-        &self.k[layer][at..at + self.head_dim]
+        let (scratch, at) = self.read_at(slot, head, pos);
+        if scratch {
+            &self.scratch_k[at..at + self.head_dim]
+        } else {
+            &self.k[layer][at..at + self.head_dim]
+        }
     }
 
     #[inline]
     fn v_at(&self, layer: usize, slot: usize, head: usize, pos: usize) -> &[f32] {
-        let at = self.idx(slot, pos) + head * self.block_tokens * self.head_dim;
-        &self.v[layer][at..at + self.head_dim]
+        let (scratch, at) = self.read_at(slot, head, pos);
+        if scratch {
+            &self.scratch_v[at..at + self.head_dim]
+        } else {
+            &self.v[layer][at..at + self.head_dim]
+        }
     }
 
-    /// Host bytes held by this cache (both tensors, all layers).
+    /// Start a fresh dequant-scratch epoch: staged entries from the
+    /// previous layer (whose planes differ) become stale in O(1).
+    fn begin_read_epoch(&mut self) {
+        self.scratch_gen += 1;
+        self.scratch_len = 0;
+    }
+
+    /// Stage dequantized f32 copies of every quantized block `slot`
+    /// reads in the current layer (positions `0..span`). Blocks already
+    /// staged this epoch — prefix blocks shared with an earlier lane of
+    /// the same forward — count as scratch hits. The arenas grow to the
+    /// forward's working set once and are reused, so steady-state
+    /// decode allocates nothing.
+    fn stage_dequant(&mut self, layer: usize, slot: usize, span: usize) {
+        if self.kv_bits.is_none() {
+            return;
+        }
+        let bt = self.block_tokens;
+        let blocks = span.div_ceil(bt).min(self.tables[slot].len());
+        let stride = self.stride();
+        let (heads, hd) = (self.n_heads, self.head_dim);
+        for lb in 0..blocks {
+            let phys = self.tables[slot][lb];
+            if self.quant[phys].is_none() {
+                continue;
+            }
+            if self.scratch_tag[phys] == self.scratch_gen {
+                self.dequant_scratch_hits += 1;
+                continue;
+            }
+            let si = self.scratch_len;
+            self.scratch_len += 1;
+            if self.scratch_k.len() < self.scratch_len * stride {
+                self.scratch_k.resize(self.scratch_len * stride, 0.0);
+                self.scratch_v.resize(self.scratch_len * stride, 0.0);
+            }
+            let q = self.quant[phys].as_ref().unwrap();
+            let dk = &mut self.scratch_k[si * stride..][..stride];
+            dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, dk);
+            let dv = &mut self.scratch_v[si * stride..][..stride];
+            dequantize_plane(&q.v[layer], heads, bt, hd, q.bits, dv);
+            self.scratch_tag[phys] = self.scratch_gen;
+            self.scratch_slot_of[phys] = si;
+        }
+    }
+
+    /// Quantize every complete (fully written) block of `slot` that is
+    /// still f32 — called at the end of each forward, so only the hot
+    /// tail block stays f32 (DESIGN.md §12). Quantization reads the
+    /// block's floats, builds the per-head-channel payload, and
+    /// releases the f32 region back to the arena.
+    fn quantize_complete(&mut self, slot: usize) {
+        let Some(bits) = self.kv_bits else { return };
+        let bt = self.block_tokens;
+        let full = self.pos[slot] / bt;
+        let stride = self.stride();
+        let (heads, hd) = (self.n_heads, self.head_dim);
+        for lb in 0..full {
+            let phys = self.tables[slot][lb];
+            if self.quant[phys].is_some() {
+                continue;
+            }
+            let r = self.region[phys];
+            debug_assert!(r != NO_REGION);
+            let mut kq = Vec::with_capacity(self.k.len());
+            let mut vq = Vec::with_capacity(self.v.len());
+            for layer in 0..self.k.len() {
+                let sk = &self.k[layer][r * stride..][..stride];
+                kq.push(quantize_plane(sk, heads, bt, hd, bits));
+                let sv = &self.v[layer][r * stride..][..stride];
+                vq.push(quantize_plane(sv, heads, bt, hd, bits));
+            }
+            let q = Box::new(QuantBlock { bits, k: kq, v: vq });
+            let payload = q.payload_bytes();
+            self.quant[phys] = Some(q);
+            self.region_free.push(r);
+            self.region[phys] = NO_REGION;
+            self.quantized_count += 1;
+            self.quant_payload_bytes += payload;
+            self.blocks_quantized += 1;
+            trace::instant(
+                Cat::Kv,
+                "quantize_block",
+                phys as u64,
+                payload as i64,
+                (2 * self.k.len() * stride * 4) as i64,
+            );
+        }
+    }
+
+    /// Host bytes held by this cache: the f32 arena (both tensors, all
+    /// layers) plus every quantized payload. With quantization off this
+    /// is exactly the pre-§12 fully provisioned footprint.
     pub fn memory_bytes(&self) -> usize {
         (self.k.iter().map(|l| l.len()).sum::<usize>()
             + self.v.iter().map(|l| l.len()).sum::<usize>())
             * 4
+            + self.quant_payload_bytes
+    }
+
+    /// Whether `slot`'s logical block `logical` is in the `Icq` state.
+    #[doc(hidden)]
+    pub fn debug_block_is_quantized(&self, slot: usize, logical: usize) -> bool {
+        self.quant[self.tables[slot][logical]].is_some()
+    }
+
+    /// Read one position's K and V rows (all heads concatenated),
+    /// dequantizing through the scratch path when the block is
+    /// quantized — the test harness's window into block contents.
+    #[doc(hidden)]
+    pub fn debug_read(&mut self, layer: usize, slot: usize, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        self.begin_read_epoch();
+        self.stage_dequant(layer, slot, pos + 1);
+        let hd = self.head_dim;
+        let mut k = Vec::with_capacity(self.n_heads * hd);
+        let mut v = Vec::with_capacity(self.n_heads * hd);
+        for head in 0..self.n_heads {
+            k.extend_from_slice(self.k_at(layer, slot, head, pos));
+            v.extend_from_slice(self.v_at(layer, slot, head, pos));
+        }
+        (k, v)
+    }
+
+    /// Copy-on-write fork `slot`'s logical block `logical` regardless
+    /// of sharing state — lets tests exercise the quantized-fork path
+    /// directly.
+    #[doc(hidden)]
+    pub fn debug_fork_block(&mut self, slot: usize, logical: usize) -> Result<()> {
+        self.fork(slot, logical)
+    }
+
+    /// Flip every code byte of `slot`'s logical block `logical`
+    /// (quantized payload only) — used to prove forks are deep.
+    #[doc(hidden)]
+    pub fn debug_corrupt_quant(&mut self, slot: usize, logical: usize) {
+        let phys = self.tables[slot][logical];
+        let q = self.quant[phys].as_mut().expect("corrupt target is not quantized");
+        for plane in q.k.iter_mut().chain(q.v.iter_mut()) {
+            for b in &mut plane.codes {
+                *b ^= 0xFF;
+            }
+        }
     }
 
     /// Exhaustively check the allocator/refcount/registry invariants —
@@ -763,6 +1341,73 @@ impl KvCache {
         assert_eq!(in_use + self.free.len(), self.total_blocks, "blocks leaked");
         assert_eq!(self.reserved_total, self.reserved.iter().sum::<usize>());
         assert!(self.reserved_total <= self.free.len(), "reservations exceed free blocks");
+
+        // Quantized-block state machine + byte accounting (DESIGN.md §12).
+        let mut qcount = 0usize;
+        let mut payload = 0usize;
+        let mut region_seen = vec![false; self.regions];
+        for b in 0..self.total_blocks {
+            let has_r = self.region[b] != NO_REGION;
+            let has_q = self.quant[b].is_some();
+            if self.refcount[b] > 0 {
+                assert!(
+                    has_r ^ has_q,
+                    "block {} must be exactly one of F32/Icq (region={} quant={})",
+                    b,
+                    has_r,
+                    has_q
+                );
+            } else {
+                assert!(!has_q, "free block {} still holds a quantized payload", b);
+                if self.kv_bits.is_some() {
+                    assert!(!has_r, "free block {} still holds an f32 region", b);
+                }
+            }
+            if has_r {
+                let r = self.region[b];
+                assert!(r < self.regions, "block {} region {} out of range", b, r);
+                assert!(!region_seen[r], "region {} mapped twice", r);
+                region_seen[r] = true;
+            }
+            if let Some(q) = &self.quant[b] {
+                assert_eq!(
+                    Some(q.bits),
+                    self.kv_bits,
+                    "block {} quantized at {} bits under kv_bits {:?}",
+                    b,
+                    q.bits,
+                    self.kv_bits
+                );
+                qcount += 1;
+                payload += q.payload_bytes();
+            }
+        }
+        for &r in &self.region_free {
+            assert!(!region_seen[r], "region {} both mapped and free", r);
+            region_seen[r] = true;
+        }
+        assert!(region_seen.iter().all(|&s| s), "arena region leaked");
+        assert_eq!(self.quantized_count, qcount, "quantized_count out of sync");
+        assert_eq!(self.quant_payload_bytes, payload, "quantized byte accounting out of sync");
+        let f32_block = 2 * self.k.len() * self.stride() * 4;
+        assert_eq!(
+            self.resident_kv_bytes(),
+            payload + f32_block * (in_use - qcount),
+            "resident byte accounting out of sync"
+        );
+        if self.kv_bits.is_some() {
+            // Hot-tail rule: a partially filled tail block is always f32.
+            for (slot, table) in self.tables.iter().enumerate() {
+                let pos = self.pos[slot];
+                if pos % bt != 0 && pos / bt < table.len() {
+                    assert!(
+                        self.quant[table[pos / bt]].is_none(),
+                        "slot {} partial tail block is quantized",
+                        slot
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -1135,6 +1780,14 @@ impl NativeModel {
                 }
             }
             kv.store(layer, slot_ids, &starts, seq, &k, &v);
+            // Stage dequantized copies of every quantized block the
+            // attention reads below will touch (no-op with kv_bits
+            // off). Shared prefix blocks are staged once per layer and
+            // hit from every lane.
+            kv.begin_read_epoch();
+            for (i, &slot) in slot_ids.iter().enumerate() {
+                kv.stage_dequant(layer, slot, starts[i] + seq);
+            }
 
             let mut attn = Matrix::zeros(bs, d);
             let mut scores = vec![0.0f32; max_span];
@@ -1176,6 +1829,12 @@ impl NativeModel {
         }
         for (i, &s) in slot_ids.iter().enumerate() {
             kv.pos[s] = starts[i] + seq;
+        }
+        // Every block this forward completed leaves the hot tail:
+        // quantize it now (no-op with kv_bits off), so registration and
+        // the next forward's reads see the canonical `Icq` payload.
+        for &s in slot_ids {
+            kv.quantize_complete(s);
         }
 
         // Final norm + lm_head logits, last position per sequence only.
@@ -1511,6 +2170,7 @@ mod tests {
                     block_tokens: bt,
                     total_blocks: None,
                     prefix_sharing: sharing,
+                    kv_bits: None,
                 };
                 let got = stream_with_layout(&m, layout, &prompt, 6);
                 assert_eq!(
@@ -1530,7 +2190,12 @@ mod tests {
         let (m, _) = tiny_native(2);
         // 3 full blocks + a partial tail at block_tokens = 4.
         let prompt: Vec<i32> = (0..14).map(|i| (i * 7 + 1) % 256).collect();
-        let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: None,
+            prefix_sharing: true,
+            kv_bits: None,
+        };
         let reference = stream_with_layout(
             &m,
             KvLayout::contiguous(&m.config),
@@ -1568,7 +2233,12 @@ mod tests {
     fn full_prompt_reuse_forks_on_write() {
         let (m, _) = tiny_native(1);
         let prompt: Vec<i32> = (0..12).map(|i| (i * 5 + 2) % 256).collect(); // 3 × bt=4
-        let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: None,
+            prefix_sharing: true,
+            kv_bits: None,
+        };
         let reference =
             stream_with_layout(&m, KvLayout::contiguous(&m.config), &prompt, 4);
 
@@ -1597,7 +2267,12 @@ mod tests {
     #[test]
     fn overcommitted_pool_evicts_then_errors_cleanly() {
         let (m, _) = tiny_native(1);
-        let layout = KvLayout { block_tokens: 4, total_blocks: Some(4), prefix_sharing: true };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: Some(4),
+            prefix_sharing: true,
+            kv_bits: None,
+        };
         let mut kv = KvCache::with_layout(&m.config, 2, layout);
         // Fill the registry via a retired 8-token prompt (2 blocks).
         let _ = m.prefill_slot(&mut kv, 0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
@@ -1631,7 +2306,12 @@ mod tests {
     #[test]
     fn reservation_guarantees_decode_headroom() {
         let (m, _) = tiny_native(1);
-        let layout = KvLayout { block_tokens: 4, total_blocks: Some(4), prefix_sharing: false };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: Some(4),
+            prefix_sharing: false,
+            kv_bits: None,
+        };
         let mut kv = KvCache::with_layout(&m.config, 2, layout);
         let mut last = m.prefill_slot(&mut kv, 0, &[1, 2, 3, 4, 5, 6]).unwrap();
         // 6 tokens in 2 blocks: slack 2, 2 free blocks → 10 allocatable.
@@ -1662,7 +2342,12 @@ mod tests {
     #[test]
     fn reserve_evicts_registry_blocks_for_headroom() {
         let (m, _) = tiny_native(1);
-        let layout = KvLayout { block_tokens: 4, total_blocks: Some(4), prefix_sharing: true };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: Some(4),
+            prefix_sharing: true,
+            kv_bits: None,
+        };
         let mut kv = KvCache::with_layout(&m.config, 2, layout);
         // Retired 8-token prompt: free list 2, registry 2 (evictable).
         let _ = m.prefill_slot(&mut kv, 0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
@@ -1690,7 +2375,12 @@ mod tests {
     #[test]
     fn prefix_registry_survives_retirement() {
         let (m, _) = tiny_native(1);
-        let layout = KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true };
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: None,
+            prefix_sharing: true,
+            kv_bits: None,
+        };
         let mut kv = KvCache::with_layout(&m.config, 1, layout);
         let system: Vec<i32> = (0..8).map(|i| 64 + i).collect();
         for round in 0..3 {
@@ -1703,5 +2393,145 @@ mod tests {
         // Rounds 2 and 3 each reuse the 2 system-prompt blocks.
         assert_eq!(kv.stats().prefix_hit_blocks, 4);
         assert_eq!(kv.stats().prefix_hit_tokens, 16);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_every_width() {
+        for bits in 1..=8u32 {
+            let n = 37; // odd count so codes straddle byte boundaries
+            let mask = (1u32 << bits) - 1;
+            let vals: Vec<u32> = (0..n as u32).map(|i| (i * 2654435761) & mask).collect();
+            let mut buf = vec![0u8; (n * bits as usize).div_ceil(8)];
+            for (i, &v) in vals.iter().enumerate() {
+                pack_code(&mut buf, i, bits, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(unpack_code(&buf, i, bits), v, "bits={} i={}", bits, i);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_plane_roundtrip_honors_channel_error_bound() {
+        // Per channel the inlier grid spans at most the channel's full
+        // range, so round-to-nearest error is bounded by half a step of
+        // the *full* range; outliers reconstruct exactly.
+        let (heads, bt, hd) = (2, 16, 4);
+        let mut rng = crate::util::prng::Rng::new(0xC0DE);
+        for bits in [4u32, 8] {
+            let src: Vec<f32> = (0..heads * bt * hd)
+                .map(|_| (rng.below(2000) as f32 - 1000.0) / 100.0)
+                .collect();
+            let qp = quantize_plane(&src, heads, bt, hd, bits);
+            let mut dst = vec![0.0f32; src.len()];
+            dequantize_plane(&qp, heads, bt, hd, bits, &mut dst);
+            for h in 0..heads {
+                for d in 0..hd {
+                    let ch: Vec<f32> =
+                        (0..bt).map(|t| src[h * bt * hd + t * hd + d]).collect();
+                    let (lo, hi) = crate::quant::min_max(&ch);
+                    let bound = (hi - lo) / (2.0 * ((1u32 << bits) - 1) as f32) + 1e-5;
+                    for t in 0..bt {
+                        let i = h * bt * hd + t * hd + d;
+                        assert!(
+                            (src[i] - dst[i]).abs() <= bound,
+                            "bits={} ch=({},{}) t={}: |{} - {}| > {}",
+                            bits, h, d, t, src[i], dst[i], bound
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_plane_keeps_single_outlier_exact() {
+        // A constant channel with one spike is the range-halving rule's
+        // best case: the spike goes to the index (exact), the inliers
+        // collapse to a degenerate grid (also exact).
+        let (heads, bt, hd) = (1, 8, 2);
+        let mut src = vec![1.0f32; heads * bt * hd];
+        src[3 * hd] = 50.0; // channel (0,0), token 3
+        let qp = quantize_plane(&src, heads, bt, hd, 4);
+        assert_eq!(qp.outlier_vals, vec![50.0]);
+        let mut dst = vec![0.0f32; src.len()];
+        dequantize_plane(&qp, heads, bt, hd, 4, &mut dst);
+        assert_eq!(src, dst, "spike + constant inliers reconstruct exactly");
+    }
+
+    #[test]
+    fn quantize_plane_is_content_deterministic() {
+        // The invariance contract (DESIGN.md §12): payloads depend only
+        // on the block's float values, never on allocation history.
+        let (heads, bt, hd) = (2, 16, 4);
+        let mut rng = crate::util::prng::Rng::new(0x5EED);
+        let src: Vec<f32> =
+            (0..heads * bt * hd).map(|_| rng.below(1000) as f32 / 33.0).collect();
+        let a = quantize_plane(&src, heads, bt, hd, 4);
+        let b = quantize_plane(&src, heads, bt, hd, 4);
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.ranges, b.ranges);
+        assert_eq!(a.outlier_vals, b.outlier_vals);
+        assert_eq!(a.outliers, b.outliers);
+    }
+
+    /// With kv_bits on, a stream must be bit-identical to itself across
+    /// pool widths and block sizes (the schedule-invariance contract),
+    /// and with kv_bits off, bit-identical to the pre-§12 f32 cache.
+    #[test]
+    fn quantized_stream_is_self_consistent_and_off_matches_f32() {
+        let (m1, _) = tiny_native(1);
+        let (m4, _) = tiny_native(4);
+        let prompt: Vec<i32> = (0..10).map(|i| 40 + i).collect();
+        let f32_layout =
+            KvLayout { block_tokens: 4, total_blocks: None, prefix_sharing: true, kv_bits: None };
+        let q_layout = KvLayout { kv_bits: Some(8), ..f32_layout };
+        let base = stream_with_layout(&m1, f32_layout, &prompt, 6);
+        let off = stream_with_layout(&m4, f32_layout, &prompt, 6);
+        assert_eq!(base, off, "kv off is pool-width invariant");
+        let q1 = stream_with_layout(&m1, q_layout, &prompt, 6);
+        let q4 = stream_with_layout(&m4, q_layout, &prompt, 6);
+        assert_eq!(q1, q4, "quantized stream is pool-width invariant");
+    }
+
+    /// Decode across a quantized block boundary: once a block fills it
+    /// leaves the hot tail and later reads go through dequant scratch.
+    #[test]
+    fn blocks_quantize_behind_the_hot_tail() {
+        let (m, _) = tiny_native(1);
+        let layout = KvLayout {
+            block_tokens: 4,
+            total_blocks: None,
+            prefix_sharing: false,
+            kv_bits: Some(4),
+        };
+        let mut kv = KvCache::with_layout(&m.config, 1, layout);
+        let mut last = m.prefill_slot(&mut kv, 0, &[7, 7, 7, 7, 8, 8]).unwrap();
+        kv.debug_validate();
+        // Prefill covered 6 positions: block 0 full (quantized), block 1
+        // is the hot tail.
+        assert!(kv.debug_block_is_quantized(0, 0));
+        assert!(!kv.debug_block_is_quantized(0, 1));
+        let s = kv.stats();
+        assert_eq!(s.quantized_blocks, 1);
+        assert_eq!(s.blocks_quantized, 1);
+        // K+V, both layers, one block of bt×d_model f32 values each.
+        let f32_block = 2 * m.config.n_layers * kv.block_tokens() * m.config.d_model * 4;
+        assert!(
+            s.kv_resident_bytes < 2 * f32_block,
+            "1 quantized + 1 f32 block must undercut 2 f32 blocks ({} vs {})",
+            s.kv_resident_bytes,
+            2 * f32_block
+        );
+        assert_eq!(s.resident_tokens, 6);
+        for _ in 0..4 {
+            last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+            kv.debug_validate();
+        }
+        // pos = 10: blocks 0 and 1 quantized, block 2 is the tail.
+        assert!(kv.debug_block_is_quantized(0, 1));
+        assert!(!kv.debug_block_is_quantized(0, 2));
+        assert_eq!(kv.stats().blocks_quantized, 2);
+        let _ = last;
     }
 }

@@ -17,9 +17,14 @@
 //!    driven straight against `NativeModel` + paged `KvCache`, asserting
 //!    bit-identical streams vs the contiguous-equivalent layout and
 //!    validating every allocator/refcount invariant after every op.
+//!    Runs the full `kv_bits ∈ {off, 8, 4}` matrix (ISSUE 7): `off`
+//!    must match the contiguous reference exactly (pre-quantization
+//!    behavior), quantized cells must match a same-layout solo
+//!    reference exactly (schedule invariance, DESIGN.md §12).
 //! 3. **Native server differential** — full `Server` runs over the
-//!    paged `NativeBackend` under both schedulers with shared prompt
-//!    prefixes, asserting identical outputs.
+//!    paged `NativeBackend` under both schedulers, asserting identical
+//!    outputs — with shared prompt prefixes at `kv_bits=off`, and at
+//!    8/4-bit quantized KV with sharing off.
 //!
 //! `ci.sh` runs this binary under a seed × pool-worker matrix and gates
 //! on the total completed-case count printed by each test.
@@ -236,6 +241,27 @@ fn reference_stream(m: &NativeModel, prompt: &[i32], steps: usize) -> Vec<i32> {
     out
 }
 
+/// One sequence's reference stream: alone, under the **same** paged
+/// layout as the interleaved run. With `kv_bits` on this is the
+/// schedule-invariance contract (DESIGN.md §12): quantization is
+/// content-deterministic and triggers at fixed per-lane positions, so a
+/// lane's stream must be bit-identical however it was interleaved.
+fn solo_stream(m: &NativeModel, layout: KvLayout, prompt: &[i32], steps: usize) -> Vec<i32> {
+    let mut kv = KvCache::with_layout(&m.config, 1, layout);
+    let mut last = m.prefill_slot(&mut kv, 0, prompt).unwrap();
+    let mut out = vec![last];
+    for _ in 0..steps {
+        last = m.decode_slots(&mut kv, &[last], &[0]).unwrap()[0];
+        out.push(last);
+    }
+    out
+}
+
+/// The `kv_bits` cells of the fuzz matrix (ISSUE 7): off must stay
+/// bit-identical to the contiguous reference; quantized cells assert
+/// exact schedule invariance against a same-layout solo reference.
+const KV_MODES: [Option<u32>; 3] = [None, Some(8), Some(4)];
+
 #[derive(Debug, Clone)]
 struct PagedCase {
     block_tokens: usize,
@@ -255,8 +281,16 @@ struct PagedCase {
 }
 
 /// Layer 2: random paged layouts and admit/decode/retire interleavings
-/// against the model, checked token-for-token against the contiguous
-/// reference and invariant-validated after every operation.
+/// against the model, checked token-for-token against a reference and
+/// invariant-validated after every operation, across the `kv_bits`
+/// matrix. `kv_bits=off` cells compare against the **contiguous**
+/// reference (bit-identical — the pre-quantization contract, verbatim).
+/// Quantized cells compare against a same-layout **solo** reference:
+/// exact equality, because quantization is content-deterministic and
+/// per-lane (sharing is forced off — with it on, whether a lane's
+/// prefill reads a quantized registry block or its own fresh f32 blocks
+/// depends on admission history; that composition is pinned down
+/// deterministically in `tests/kv_quant.rs` instead).
 #[test]
 fn fuzz_paged_interleavings_bit_identical_across_pool_widths() {
     let workers = pool_worker_matrix();
@@ -264,147 +298,154 @@ fn fuzz_paged_interleavings_bit_identical_across_pool_widths() {
     for &w in &workers {
         let stored = tiny_stored(0x7157);
         let m = NativeModel::from_stored(&stored, w).unwrap();
-        const CASES: usize = 10;
-        total += CASES;
-        check(
-            &format!("paged-interleavings-w{}", w),
-            Config::from_env(CASES),
-            |rng, size| {
-                let block_tokens = *[1usize, 2, 3, 4, 5, 8, 16]
-                    .get(rng.below(7) as usize)
-                    .unwrap();
-                let cap = 2 + rng.below(3) as usize;
-                // Half the cases run an overcommitted pool so eviction,
-                // descendant deregistration and CoW-under-pressure are
-                // fuzzed, not just unit-tested (prompts + decodes stay
-                // under 32 tokens, so the sizing above always leaves a
-                // block allocatable by evicting registry-only blocks).
-                let total_blocks = if rng.bool(0.5) {
-                    Some(cap * (32usize.div_ceil(block_tokens) + 1))
-                } else {
-                    None
-                };
-                PagedCase {
-                    block_tokens,
-                    sharing: rng.bool(0.7),
-                    cap,
-                    total_blocks,
-                    prefix_len: rng.below(13) as usize,
-                    requests: (0..(2 + (size * 4.0) as usize))
-                        .map(|_| (1 + rng.below(6) as usize, 1 + rng.below(6) as usize))
-                        .collect(),
-                    seed: rng.next_u64(),
-                }
-            },
-            |case| {
-                let layout = KvLayout {
-                    block_tokens: case.block_tokens,
-                    total_blocks: case.total_blocks,
-                    prefix_sharing: case.sharing,
-                };
-                let mut rng = Rng::new(case.seed);
-                let prefix: Vec<i32> =
-                    (0..case.prefix_len).map(|_| rng.below(256) as i32).collect();
-                let prompts: Vec<Vec<i32>> = case
-                    .requests
-                    .iter()
-                    .map(|&(tail, _)| {
-                        let mut p = prefix.clone();
-                        p.extend((0..tail).map(|_| rng.below(256) as i32));
-                        p
-                    })
-                    .collect();
-                let refs: Vec<Vec<i32>> = prompts
-                    .iter()
-                    .zip(&case.requests)
-                    .map(|(p, &(_, steps))| reference_stream(&m, p, steps))
-                    .collect();
-
-                // Random interleaving: admit into free slots, decode the
-                // active subset, retire finished sequences.
-                let mut kv = KvCache::with_layout(&m.config, case.cap, layout);
-                let mut slot_of: Vec<Option<usize>> = vec![None; prompts.len()];
-                let mut emitted: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
-                let mut last: Vec<i32> = vec![0; prompts.len()];
-                let mut next_req = 0usize;
-                let mut guard = 0usize;
-                while emitted.iter().zip(&refs).any(|(e, r)| e.len() < r.len()) {
-                    guard += 1;
-                    if guard > 10_000 {
-                        return Err("interleaving failed to make progress".into());
+        for &kv_bits in &KV_MODES {
+            const CASES: usize = 10;
+            total += CASES;
+            check(
+                &format!("paged-interleavings-w{}-kv{:?}", w, kv_bits),
+                Config::from_env(CASES),
+                |rng, size| {
+                    let block_tokens = *[1usize, 2, 3, 4, 5, 8, 16]
+                        .get(rng.below(7) as usize)
+                        .unwrap();
+                    let cap = 2 + rng.below(3) as usize;
+                    // Half the cases run an overcommitted pool so eviction,
+                    // descendant deregistration and CoW-under-pressure are
+                    // fuzzed, not just unit-tested (prompts + decodes stay
+                    // under 32 tokens, so the sizing above always leaves a
+                    // block allocatable by evicting registry-only blocks).
+                    let total_blocks = if rng.bool(0.5) {
+                        Some(cap * (32usize.div_ceil(block_tokens) + 1))
+                    } else {
+                        None
+                    };
+                    PagedCase {
+                        block_tokens,
+                        sharing: kv_bits.is_none() && rng.bool(0.7),
+                        cap,
+                        total_blocks,
+                        prefix_len: rng.below(13) as usize,
+                        requests: (0..(2 + (size * 4.0) as usize))
+                            .map(|_| (1 + rng.below(6) as usize, 1 + rng.below(6) as usize))
+                            .collect(),
+                        seed: rng.next_u64(),
                     }
-                    // Maybe admit (always admit if nothing is active).
-                    let active: Vec<usize> =
-                        (0..prompts.len()).filter(|&i| slot_of[i].is_some()).collect();
-                    let free_slot = (0..case.cap)
-                        .find(|s| !slot_of.iter().any(|&x| x == Some(*s)));
-                    if next_req < prompts.len()
-                        && free_slot.is_some()
-                        && (active.is_empty() || rng.bool(0.5))
-                    {
-                        let slot = free_slot.unwrap();
-                        let first = m
-                            .prefill_slot(&mut kv, slot, &prompts[next_req])
-                            .map_err(|e| format!("prefill: {:#}", e))?;
-                        kv.debug_validate();
-                        if first != refs[next_req][0] {
-                            return Err(format!(
-                                "request {} first token {} != reference {}",
-                                next_req, first, refs[next_req][0]
-                            ));
-                        }
-                        emitted[next_req].push(first);
-                        last[next_req] = first;
-                        slot_of[next_req] = Some(slot);
-                        next_req += 1;
-                        continue;
-                    }
-                    // Decode a random non-empty subset of active lanes.
-                    let mut lanes: Vec<usize> = active
+                },
+                |case| {
+                    let layout = KvLayout {
+                        block_tokens: case.block_tokens,
+                        total_blocks: case.total_blocks,
+                        prefix_sharing: case.sharing,
+                        kv_bits,
+                    };
+                    let mut rng = Rng::new(case.seed);
+                    let prefix: Vec<i32> =
+                        (0..case.prefix_len).map(|_| rng.below(256) as i32).collect();
+                    let prompts: Vec<Vec<i32>> = case
+                        .requests
                         .iter()
-                        .copied()
-                        .filter(|_| rng.bool(0.8))
+                        .map(|&(tail, _)| {
+                            let mut p = prefix.clone();
+                            p.extend((0..tail).map(|_| rng.below(256) as i32));
+                            p
+                        })
                         .collect();
-                    if lanes.is_empty() {
-                        lanes = active.clone();
-                    }
-                    if lanes.is_empty() {
-                        continue;
-                    }
-                    lanes.sort_by_key(|&i| slot_of[i].unwrap());
-                    let slots: Vec<usize> = lanes.iter().map(|&i| slot_of[i].unwrap()).collect();
-                    let feed: Vec<i32> = lanes.iter().map(|&i| last[i]).collect();
-                    let next = m
-                        .decode_slots(&mut kv, &feed, &slots)
-                        .map_err(|e| format!("decode: {:#}", e))?;
-                    kv.debug_validate();
-                    for (j, &i) in lanes.iter().enumerate() {
-                        last[i] = next[j];
-                        emitted[i].push(next[j]);
-                        let want = &refs[i];
-                        let at = emitted[i].len() - 1;
-                        if emitted[i][at] != want[at] {
-                            return Err(format!(
-                                "request {} diverged at token {}: {} != {}",
-                                i, at, emitted[i][at], want[at]
-                            ));
+                    let refs: Vec<Vec<i32>> = prompts
+                        .iter()
+                        .zip(&case.requests)
+                        .map(|(p, &(_, steps))| match kv_bits {
+                            None => reference_stream(&m, p, steps),
+                            Some(_) => solo_stream(&m, layout, p, steps),
+                        })
+                        .collect();
+
+                    // Random interleaving: admit into free slots, decode the
+                    // active subset, retire finished sequences.
+                    let mut kv = KvCache::with_layout(&m.config, case.cap, layout);
+                    let mut slot_of: Vec<Option<usize>> = vec![None; prompts.len()];
+                    let mut emitted: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+                    let mut last: Vec<i32> = vec![0; prompts.len()];
+                    let mut next_req = 0usize;
+                    let mut guard = 0usize;
+                    while emitted.iter().zip(&refs).any(|(e, r)| e.len() < r.len()) {
+                        guard += 1;
+                        if guard > 10_000 {
+                            return Err("interleaving failed to make progress".into());
                         }
-                        if emitted[i].len() == want.len() {
-                            kv.free_slot(slot_of[i].take().unwrap());
+                        // Maybe admit (always admit if nothing is active).
+                        let active: Vec<usize> =
+                            (0..prompts.len()).filter(|&i| slot_of[i].is_some()).collect();
+                        let free_slot = (0..case.cap)
+                            .find(|s| !slot_of.iter().any(|&x| x == Some(*s)));
+                        if next_req < prompts.len()
+                            && free_slot.is_some()
+                            && (active.is_empty() || rng.bool(0.5))
+                        {
+                            let slot = free_slot.unwrap();
+                            let first = m
+                                .prefill_slot(&mut kv, slot, &prompts[next_req])
+                                .map_err(|e| format!("prefill: {:#}", e))?;
                             kv.debug_validate();
+                            if first != refs[next_req][0] {
+                                return Err(format!(
+                                    "request {} first token {} != reference {}",
+                                    next_req, first, refs[next_req][0]
+                                ));
+                            }
+                            emitted[next_req].push(first);
+                            last[next_req] = first;
+                            slot_of[next_req] = Some(slot);
+                            next_req += 1;
+                            continue;
+                        }
+                        // Decode a random non-empty subset of active lanes.
+                        let mut lanes: Vec<usize> = active
+                            .iter()
+                            .copied()
+                            .filter(|_| rng.bool(0.8))
+                            .collect();
+                        if lanes.is_empty() {
+                            lanes = active.clone();
+                        }
+                        if lanes.is_empty() {
+                            continue;
+                        }
+                        lanes.sort_by_key(|&i| slot_of[i].unwrap());
+                        let slots: Vec<usize> =
+                            lanes.iter().map(|&i| slot_of[i].unwrap()).collect();
+                        let feed: Vec<i32> = lanes.iter().map(|&i| last[i]).collect();
+                        let next = m
+                            .decode_slots(&mut kv, &feed, &slots)
+                            .map_err(|e| format!("decode: {:#}", e))?;
+                        kv.debug_validate();
+                        for (j, &i) in lanes.iter().enumerate() {
+                            last[i] = next[j];
+                            emitted[i].push(next[j]);
+                            let want = &refs[i];
+                            let at = emitted[i].len() - 1;
+                            if emitted[i][at] != want[at] {
+                                return Err(format!(
+                                    "request {} diverged at token {}: {} != {}",
+                                    i, at, emitted[i][at], want[at]
+                                ));
+                            }
+                            if emitted[i].len() == want.len() {
+                                kv.free_slot(slot_of[i].take().unwrap());
+                                kv.debug_validate();
+                            }
                         }
                     }
-                }
-                for (i, (e, r)) in emitted.iter().zip(&refs).enumerate() {
-                    icquant::prop_assert!(
-                        e == r,
-                        "request {} stream mismatch under paging",
-                        i
-                    );
-                }
-                Ok(())
-            },
-        );
+                    for (i, (e, r)) in emitted.iter().zip(&refs).enumerate() {
+                        icquant::prop_assert!(
+                            e == r,
+                            "request {} stream mismatch under paging",
+                            i
+                        );
+                    }
+                    Ok(())
+                },
+            );
+        }
     }
     println!(
         "scheduler_fuzz: completed {} randomized cases (paged-interleavings, workers {:?})",
@@ -413,75 +454,84 @@ fn fuzz_paged_interleavings_bit_identical_across_pool_widths() {
 }
 
 /// Layer 3: the whole server (continuous vs run-to-completion) over the
-/// paged native backend with shared prompt prefixes.
+/// paged native backend, across the `kv_bits` matrix. `off` cells keep
+/// shared prompt prefixes (the pre-quantization differential,
+/// verbatim); quantized cells run with sharing off, where per-lane
+/// quantization is schedule-deterministic, so the two schedulers must
+/// still produce **identical** outputs (with sharing on, whether a
+/// lane's prefill hits a quantized registry block depends on admission
+/// batching, which legitimately differs between the schedulers).
 #[test]
 fn fuzz_native_server_scheduler_differential() {
     let workers = pool_worker_matrix();
     let mut total = 0usize;
     for &w in &workers {
-        const CASES: usize = 3;
-        total += CASES;
-        check(
-            &format!("native-server-differential-w{}", w),
-            Config::from_env(CASES),
-            |rng, _| {
-                let block_tokens = *[2usize, 4, 16].get(rng.below(3) as usize).unwrap();
-                let n = 3 + rng.below(4) as usize;
-                let prefix = rng.below(10) as usize;
-                let seed = rng.next_u64();
-                (block_tokens, n, prefix, seed)
-            },
-            |&(block_tokens, n, prefix_len, seed)| {
-                let mut run = |scheduler: SchedulerKind| -> Vec<Vec<i32>> {
-                    let stored = tiny_stored(0x7157);
-                    let layout = KvLayout {
-                        block_tokens,
-                        total_blocks: None,
-                        prefix_sharing: true,
+        for &kv_bits in &KV_MODES {
+            const CASES: usize = 3;
+            total += CASES;
+            check(
+                &format!("native-server-differential-w{}-kv{:?}", w, kv_bits),
+                Config::from_env(CASES),
+                |rng, _| {
+                    let block_tokens = *[2usize, 4, 16].get(rng.below(3) as usize).unwrap();
+                    let n = 3 + rng.below(4) as usize;
+                    let prefix = rng.below(10) as usize;
+                    let seed = rng.next_u64();
+                    (block_tokens, n, prefix, seed)
+                },
+                |&(block_tokens, n, prefix_len, seed)| {
+                    let mut run = |scheduler: SchedulerKind| -> Vec<Vec<i32>> {
+                        let stored = tiny_stored(0x7157);
+                        let layout = KvLayout {
+                            block_tokens,
+                            total_blocks: None,
+                            prefix_sharing: kv_bits.is_none(),
+                            kv_bits,
+                        };
+                        let backend = NativeBackend::from_stored(&stored, w)
+                            .unwrap()
+                            .with_kv_layout(layout);
+                        let cfg = ServeConfig {
+                            max_batch: 3,
+                            max_wait: Duration::from_millis(1),
+                            max_new_tokens: 6,
+                            buckets: vec![1, 2, 3],
+                            prefill_len: 16,
+                            pad_id: b' ' as i32,
+                            scheduler,
+                        };
+                        let server = Server::start(cfg, move || Ok(backend));
+                        let mut rng = Rng::new(seed);
+                        let prefix: Vec<i32> =
+                            (0..prefix_len).map(|_| rng.below(256) as i32).collect();
+                        let mut rxs = Vec::new();
+                        for _ in 0..n {
+                            let mut p = prefix.clone();
+                            p.extend((0..1 + rng.below(5) as usize).map(|_| rng.below(256) as i32));
+                            let want = 1 + rng.below(5) as usize;
+                            rxs.push(server.submit(p, want).unwrap().1);
+                        }
+                        let out = rxs
+                            .into_iter()
+                            .map(|rx| {
+                                let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                                assert!(r.timing.error.is_none(), "{:?}", r.timing.error);
+                                r.tokens
+                            })
+                            .collect();
+                        server.shutdown();
+                        out
                     };
-                    let backend = NativeBackend::from_stored(&stored, w)
-                        .unwrap()
-                        .with_kv_layout(layout);
-                    let cfg = ServeConfig {
-                        max_batch: 3,
-                        max_wait: Duration::from_millis(1),
-                        max_new_tokens: 6,
-                        buckets: vec![1, 2, 3],
-                        prefill_len: 16,
-                        pad_id: b' ' as i32,
-                        scheduler,
-                    };
-                    let server = Server::start(cfg, move || Ok(backend));
-                    let mut rng = Rng::new(seed);
-                    let prefix: Vec<i32> =
-                        (0..prefix_len).map(|_| rng.below(256) as i32).collect();
-                    let mut rxs = Vec::new();
-                    for _ in 0..n {
-                        let mut p = prefix.clone();
-                        p.extend((0..1 + rng.below(5) as usize).map(|_| rng.below(256) as i32));
-                        let want = 1 + rng.below(5) as usize;
-                        rxs.push(server.submit(p, want).unwrap().1);
-                    }
-                    let out = rxs
-                        .into_iter()
-                        .map(|rx| {
-                            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
-                            assert!(r.timing.error.is_none(), "{:?}", r.timing.error);
-                            r.tokens
-                        })
-                        .collect();
-                    server.shutdown();
-                    out
-                };
-                let cont = run(SchedulerKind::Continuous);
-                let wave = run(SchedulerKind::RunToCompletion);
-                icquant::prop_assert!(
-                    cont == wave,
-                    "paged native outputs diverged between schedulers"
-                );
-                Ok(())
-            },
-        );
+                    let cont = run(SchedulerKind::Continuous);
+                    let wave = run(SchedulerKind::RunToCompletion);
+                    icquant::prop_assert!(
+                        cont == wave,
+                        "paged native outputs diverged between schedulers"
+                    );
+                    Ok(())
+                },
+            );
+        }
     }
     println!(
         "scheduler_fuzz: completed {} randomized cases (native-server-differential, workers {:?})",
