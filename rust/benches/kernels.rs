@@ -45,7 +45,15 @@ static PEAK: AtomicUsize = AtomicUsize::new(0);
 
 struct CountingAlloc;
 
+// SAFETY: pure pass-through to `System` plus two counters — allocation
+// correctness (layout handling, null on failure) is `System`'s.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same contract as `System.alloc`; the counter updates never
+    // touch the returned memory.
+    // ORDERING: relaxed — the counters are a statistic; `measure_peak`
+    // runs the measured closure on the calling thread, so its own
+    // allocations are sequenced, and cross-thread noise is measurement
+    // jitter, not a correctness input.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let p = System.alloc(layout);
         if !p.is_null() {
@@ -55,6 +63,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
         p
     }
 
+    // SAFETY: same contract as `System.dealloc`.
+    // ORDERING: relaxed — see `alloc`.
     unsafe fn dealloc(&self, p: *mut u8, layout: Layout) {
         System.dealloc(p, layout);
         LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
@@ -65,6 +75,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static ALLOC: CountingAlloc = CountingAlloc;
 
 /// Live heap bytes the closure adds at its peak, above its baseline.
+/// ORDERING: relaxed — single-threaded measurement protocol: the
+/// closure's allocations happen on this thread between the two loads.
 fn measure_peak<F: FnOnce()>(f: F) -> usize {
     let base = LIVE.load(Ordering::Relaxed);
     PEAK.store(base, Ordering::Relaxed);

@@ -1,0 +1,529 @@
+//! The lint checkers (DESIGN.md §13). Each checker pushes
+//! [`Diagnostic`]s; an empty vector after all checkers means the tree is
+//! lint-clean. Per-file checkers take one [`FileModel`]; tree-level
+//! checkers (bench keys, trace-name registry) take extra context from the
+//! driver in `mod.rs`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::model::{FileModel, UnsafeKind};
+use super::Diagnostic;
+
+fn diag(f: &FileModel, line: usize, check: &'static str, message: String) -> Diagnostic {
+    Diagnostic { file: f.rel.clone(), line, check, message }
+}
+
+// ---------------------------------------------------------------------------
+// Checker 1: SAFETY — every unsafe block/impl/trait carries `// SAFETY:`,
+// every `unsafe fn` declaration a `# Safety` doc section.
+// ---------------------------------------------------------------------------
+
+pub fn safety(f: &FileModel, out: &mut Vec<Diagnostic>) {
+    for site in &f.unsafe_sites {
+        let (ok, what, want) = match site.kind {
+            UnsafeKind::Block | UnsafeKind::Impl | UnsafeKind::Trait => {
+                let ok = f.comment(site.line).contains("SAFETY:")
+                    || f.comment_run_above(site.line, &|_| false).contains("SAFETY:");
+                let what = match site.kind {
+                    UnsafeKind::Block => "unsafe block",
+                    UnsafeKind::Impl => "unsafe impl",
+                    _ => "unsafe trait",
+                };
+                (ok, what, "a `// SAFETY:` comment")
+            }
+            UnsafeKind::Fn => {
+                let doc = f.comment_run_above(site.line, &|_| false);
+                let ok = doc.contains("# Safety") || doc.contains("SAFETY:");
+                (ok, "unsafe fn", "a `# Safety` doc section")
+            }
+        };
+        if !ok {
+            out.push(diag(f, site.line, "safety", format!("{what} without {want}")));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker 2: ORDERING — every Relaxed/SeqCst use in non-test code carries
+// an `// ORDERING:` justification at the site, on the cluster's shared
+// comment, or in the enclosing fn's doc. Acquire/Release/AcqRel encode
+// their intent in the name and are exempt.
+// ---------------------------------------------------------------------------
+
+pub fn ordering(f: &FileModel, out: &mut Vec<Diagnostic>) {
+    if f.is_test_file {
+        return;
+    }
+    let is_site = |c: &str| c.contains("Ordering::Relaxed") || c.contains("Ordering::SeqCst");
+    for l in 1..=f.lines() {
+        if f.in_test(l) {
+            continue;
+        }
+        let code = f.code(l);
+        if !is_site(code) {
+            continue;
+        }
+        if code.trim_start().starts_with("use ") {
+            out.push(diag(
+                f,
+                l,
+                "ordering",
+                "import the `Ordering` enum, not its variants — each call site \
+                 must name and justify its ordering"
+                    .to_string(),
+            ));
+            continue;
+        }
+        let justified = f.comment(l).contains("ORDERING:")
+            || f.comment_run_above(l, &is_site).contains("ORDERING:")
+            || f
+                .enclosing_fn(l)
+                .map(|fi| f.fn_doc(fi).contains("ORDERING:"))
+                .unwrap_or(false);
+        if !justified {
+            out.push(diag(
+                f,
+                l,
+                "ordering",
+                "`Ordering::Relaxed`/`SeqCst` without an `// ORDERING:` justification \
+                 (site comment, cluster comment, or enclosing fn doc)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker 3: hot-path — fns tagged `// lint: hot-path` must not allocate
+// or take locks. The ban list is substring-based over comment-stripped,
+// string-blanked code, so `"format!"` inside a string cannot trip it.
+// ---------------------------------------------------------------------------
+
+/// A tag is a plain comment line that *starts with* this text — prose
+/// mentions inside doc comments (like this one) never count.
+pub const HOT_PATH_TAG: &str = "// lint: hot-path";
+
+fn is_tag_line(comment: &str) -> bool {
+    comment.trim_start().starts_with(HOT_PATH_TAG)
+}
+
+const HOT_PATH_BANNED: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "format!",
+    ".to_string(",
+    ".to_vec(",
+    ".to_owned(",
+    ".clone(",
+    ".collect(",
+    ".push(",
+    ".push_str(",
+    ".extend(",
+    ".insert(",
+    ".resize(",
+    ".reserve(",
+    "Mutex::new",
+    "RwLock::new",
+    ".lock(",
+    ".wait(",
+    ".join(",
+];
+
+pub fn hot_path(f: &FileModel, out: &mut Vec<Diagnostic>) {
+    if f.is_test_file {
+        return;
+    }
+    // Every comment line carrying the tag must end up attached to a fn.
+    let mut dangling: BTreeSet<usize> = (1..=f.lines())
+        .filter(|&l| is_tag_line(f.comment(l)))
+        .collect();
+    for fi in &f.fns {
+        if !f.fn_doc(fi).lines().any(is_tag_line) {
+            continue;
+        }
+        // Consume the tag line(s) in this fn's doc run.
+        let mut l = fi.line.wrapping_sub(1);
+        while l >= 1 {
+            let code = f.code(l).trim();
+            if code.is_empty() && !f.comment(l).is_empty() {
+                dangling.remove(&l);
+            } else if !code.starts_with("#[") {
+                break;
+            }
+            l -= 1;
+        }
+        let Some((open, close)) = fi.body else {
+            out.push(diag(
+                f,
+                fi.line,
+                "hot-path",
+                format!("fn `{}` is tagged hot-path but has no body to check", fi.name),
+            ));
+            continue;
+        };
+        for l in open..=close {
+            let code = f.code(l);
+            for pat in HOT_PATH_BANNED {
+                if code.contains(pat) {
+                    out.push(diag(
+                        f,
+                        l,
+                        "hot-path",
+                        format!(
+                            "`{pat}` inside hot-path fn `{}` — tagged paths must not \
+                             allocate or take locks",
+                            fi.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for l in dangling {
+        out.push(diag(
+            f,
+            l,
+            "hot-path",
+            "`// lint: hot-path` tag is not attached to a fn declaration".to_string(),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker 4: panic policy — `.unwrap()` / `.expect(` forbidden in
+// coordinator/, kernels/, trace/ non-test code unless justified with
+// `// PANIC:`. Lock-poisoning propagation (`.lock().unwrap()` and
+// `cv.wait(g).unwrap()`) is idiomatic and exempt.
+// ---------------------------------------------------------------------------
+
+pub fn panic_policy(f: &FileModel, out: &mut Vec<Diagnostic>) {
+    let scoped = ["rust/src/coordinator/", "rust/src/kernels/", "rust/src/trace/"]
+        .iter()
+        .any(|p| f.rel.starts_with(p));
+    if !scoped || f.is_test_file {
+        return;
+    }
+    let is_site = |c: &str| c.contains(".unwrap()") || c.contains(".expect(");
+    for l in 1..=f.lines() {
+        if f.in_test(l) {
+            continue;
+        }
+        let code = f.code(l);
+        let mut sites = Vec::new();
+        for pat in [".unwrap()", ".expect("] {
+            let mut start = 0;
+            while let Some(p) = code[start..].find(pat) {
+                let abs = start + p;
+                let exempt = pat == ".unwrap()" && is_poison_propagation(&code[..abs]);
+                if !exempt {
+                    sites.push(pat);
+                }
+                start = abs + pat.len();
+            }
+        }
+        if sites.is_empty() {
+            continue;
+        }
+        let justified = f.comment(l).contains("PANIC:")
+            || f.comment_run_above(l, &is_site).contains("PANIC:");
+        if !justified {
+            out.push(diag(
+                f,
+                l,
+                "panic",
+                format!(
+                    "`{}` in {} without a `// PANIC:` justification",
+                    sites[0],
+                    f.rel.rsplit('/').nth(1).unwrap_or("scoped code")
+                ),
+            ));
+        }
+    }
+}
+
+/// True when the expression ending at this point is `.lock()` or
+/// `cv.wait(guard)` — unwrapping those propagates lock poisoning, which
+/// is the crate-wide idiom and needs no per-site note.
+fn is_poison_propagation(prefix: &str) -> bool {
+    if prefix.ends_with(".lock()") {
+        return true;
+    }
+    if let Some(p) = prefix.rfind(".wait(") {
+        let inner = &prefix[p + ".wait(".len()..];
+        if let Some(arg) = inner.strip_suffix(')') {
+            return !arg.is_empty()
+                && arg.chars().all(|c| c.is_alphanumeric() || c == '_');
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Checker 5a: design-doc section references must resolve to a real
+// `## §N` header (the needle itself is spelled only in strings here, so
+// the comment-only scan cannot trip over this file).
+// ---------------------------------------------------------------------------
+
+/// Section numbers declared by `## §N` headers in DESIGN.md.
+pub fn design_sections(design: &str) -> BTreeSet<u32> {
+    let mut out = BTreeSet::new();
+    for line in design.lines() {
+        if let Some(rest) = line.trim_start().strip_prefix("## §") {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(n) = digits.parse() {
+                out.insert(n);
+            }
+        }
+    }
+    out
+}
+
+pub fn design_refs(f: &FileModel, sections: &BTreeSet<u32>, out: &mut Vec<Diagnostic>) {
+    for l in 1..=f.lines() {
+        // Comments only: references live in rustdoc prose, and scanning
+        // string literals would flag this checker's own search pattern.
+        for text in [f.comment(l)] {
+            let mut rest = text;
+            while let Some(p) = rest.find("DESIGN.md §") {
+                rest = &rest[p + "DESIGN.md §".len()..];
+                let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                match digits.parse::<u32>() {
+                    Ok(n) if sections.contains(&n) => {}
+                    Ok(n) => out.push(diag(
+                        f,
+                        l,
+                        "design-ref",
+                        format!("`DESIGN.md §{n}` does not resolve to a `## §{n}` section"),
+                    )),
+                    Err(_) => out.push(diag(
+                        f,
+                        l,
+                        "design-ref",
+                        "`DESIGN.md §` reference without a section number".to_string(),
+                    )),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker 5b: every BENCH key ci.sh greps must be emitted by a bench
+// source, so the gate can never silently grep for a key nobody writes.
+// ---------------------------------------------------------------------------
+
+pub fn bench_keys(
+    ci_rel: &str,
+    ci_text: &str,
+    benches: &[&FileModel],
+    out: &mut Vec<Diagnostic>,
+) {
+    // Join backslash-continued lines first (the key lists wrap), keeping
+    // the logical line anchored at its first physical line.
+    let mut logical: Vec<(usize, String)> = Vec::new();
+    for (li, raw) in ci_text.lines().enumerate() {
+        match logical.last_mut() {
+            Some((_, prev)) if prev.ends_with('\\') => {
+                prev.pop();
+                prev.push(' ');
+                prev.push_str(raw.trim_start());
+            }
+            _ => logical.push((li + 1, raw.to_string())),
+        }
+    }
+    for (li, line) in &logical {
+        let li = *li;
+        let Some(rest) = line.trim_start().strip_prefix("for key in ") else {
+            continue;
+        };
+        let list = rest.split(';').next().unwrap_or("");
+        for key in list.split_whitespace() {
+            let needle = format!("\"{key}\"");
+            let emitted = benches
+                .iter()
+                .any(|b| b.stripped.code_str.iter().any(|l| l.contains(&needle)));
+            if !emitted {
+                out.push(Diagnostic {
+                    file: ci_rel.to_string(),
+                    line: li,
+                    check: "bench-keys",
+                    message: format!(
+                        "ci.sh greps for BENCH key \"{key}\" but no bench source emits it"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker 6: trace event names — unique string literals drawn from the
+// `trace::names` registry; every registered name is recorded somewhere.
+// ---------------------------------------------------------------------------
+
+/// Parse `pub const NAME: &str = "value";` lines out of
+/// `rust/src/trace/names.rs`. Returns name -> declaration line and
+/// reports duplicate values.
+pub fn trace_registry(
+    names: &FileModel,
+    out: &mut Vec<Diagnostic>,
+) -> BTreeMap<String, usize> {
+    let mut reg = BTreeMap::new();
+    for l in 1..=names.lines() {
+        let t = names.stripped.code_str[l - 1].trim_start();
+        if !(t.starts_with("pub const ") && t.contains(": &str = \"")) {
+            continue;
+        }
+        let Some(v) = t.split('"').nth(1).filter(|v| !v.is_empty()) else {
+            continue;
+        };
+        if let Some(prev) = reg.insert(v.to_string(), l) {
+            out.push(diag(
+                names,
+                l,
+                "trace-names",
+                format!("duplicate trace event name \"{v}\" (also registered on line {prev})"),
+            ));
+        }
+    }
+    if reg.is_empty() {
+        out.push(diag(
+            names,
+            1,
+            "trace-names",
+            "trace name registry declares no `pub const NAME: &str = \"…\";` entries"
+                .to_string(),
+        ));
+    }
+    reg
+}
+
+pub fn trace_names(
+    f: &FileModel,
+    registry: &BTreeMap<String, usize>,
+    used: &mut BTreeSet<String>,
+    out: &mut Vec<Diagnostic>,
+) {
+    if f.is_test_file || !f.rel.starts_with("rust/src/") || f.rel.ends_with("trace/names.rs") {
+        return;
+    }
+    // Call sites are detected on the string-*blanked* view, so the
+    // pattern list below (string literals in this very file) can never
+    // match itself; the event name is then read from the char-aligned
+    // string-preserved view.
+    for l in 1..=f.lines() {
+        if f.in_test(l) {
+            continue;
+        }
+        let line = &f.stripped.code[l - 1];
+        for pat in ["trace::instant(", "trace::span_args(", "trace::span("] {
+            let mut start = 0;
+            while let Some(p) = line[start..].find(pat) {
+                let abs = start + p;
+                match second_arg_literal(f, l, abs + pat.len()) {
+                    Some(name) => {
+                        if !registry.contains_key(&name) {
+                            out.push(diag(
+                                f,
+                                l,
+                                "trace-names",
+                                format!(
+                                    "trace event name \"{name}\" is not registered in \
+                                     trace::names"
+                                ),
+                            ));
+                        }
+                        used.insert(name);
+                    }
+                    None => out.push(diag(
+                        f,
+                        l,
+                        "trace-names",
+                        "trace event name must be a string literal from the \
+                         trace::names registry"
+                            .to_string(),
+                    )),
+                }
+                start = abs + pat.len();
+            }
+        }
+    }
+}
+
+pub fn trace_unused(
+    names: &FileModel,
+    registry: &BTreeMap<String, usize>,
+    used: &BTreeSet<String>,
+    out: &mut Vec<Diagnostic>,
+) {
+    for (name, &line) in registry {
+        if !used.contains(name) {
+            out.push(diag(
+                names,
+                line,
+                "trace-names",
+                format!("registered trace event \"{name}\" is never recorded"),
+            ));
+        }
+    }
+}
+
+/// Read the second call argument starting after the `(` at byte `col` of
+/// line `l`; returns it when it is a plain string literal, spanning up
+/// to 8 source lines for rustfmt-wrapped calls. Structure (nesting, the
+/// argument comma, the quote delimiters) is walked on the blanked view;
+/// the literal's characters come from the char-aligned preserved view.
+fn second_arg_literal(f: &FileModel, l: usize, col: usize) -> Option<String> {
+    // `col` is a byte offset into the blanked view; convert to a char
+    // offset once — the two views are char-aligned, not byte-aligned.
+    let skip = f.stripped.code[l - 1][..col].chars().count();
+    let chars_from = |lines: &[String]| -> Vec<char> {
+        let mut out: Vec<char> = lines[l - 1].chars().skip(skip).collect();
+        for extra in l..(l + 8).min(f.lines()) {
+            out.push('\n');
+            out.extend(lines[extra].chars());
+        }
+        out
+    };
+    let code = chars_from(&f.stripped.code);
+    let kept = chars_from(&f.stripped.code_str);
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    // Skip the first argument on the blanked view.
+    loop {
+        let c = *code.get(i)?;
+        i += 1;
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => {
+                if depth == 0 {
+                    return None; // single-argument call
+                }
+                depth -= 1;
+            }
+            ',' if depth == 0 => break,
+            '"' => return None,
+            _ => {}
+        }
+    }
+    while code.get(i).is_some_and(|c| c.is_whitespace()) {
+        i += 1;
+    }
+    if *code.get(i)? != '"' {
+        return None;
+    }
+    i += 1;
+    let mut name = String::new();
+    while let Some(&c) = code.get(i) {
+        if c == '"' {
+            return Some(name);
+        }
+        name.push(*kept.get(i)?);
+        i += 1;
+    }
+    None
+}

@@ -1,0 +1,284 @@
+//! A minimal Rust surface lexer for the in-tree lint pass (DESIGN.md §13).
+//!
+//! This is deliberately *not* a parser: checkers only need to know, per
+//! line, (a) what is code, (b) what is comment text, and (c) where string
+//! literals sit so that `"enqueue"` in a trace call can be read while
+//! `".unwrap()"` inside a string cannot trip the panic checker. The lexer
+//! handles line comments, nested block comments, regular / raw / byte
+//! string literals, char literals, and the char-vs-lifetime ambiguity.
+//! Everything else (idents, punctuation) passes through untouched.
+
+/// Per-line views of one source file produced by [`strip`].
+pub struct Stripped {
+    /// Source with comments removed and string/char contents blanked to
+    /// spaces (delimiters kept). Substring checks against code tokens
+    /// (`.unwrap()`, `Ordering::Relaxed`, …) run on this view.
+    pub code: Vec<String>,
+    /// Source with comments removed but string literals intact. Literal
+    /// extraction (trace event names, BENCH keys) runs on this view.
+    pub code_str: Vec<String>,
+    /// Comment text only, markers included. Tag lookups (`SAFETY:`,
+    /// `ORDERING:`, `PANIC:`, `lint: hot-path`) run on this view.
+    pub comments: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Normal,
+    LineComment,
+    /// Nesting depth of `/* … */`.
+    BlockComment(u32),
+    Str,
+    /// Raw string terminated by `"` followed by this many `#`.
+    RawStr(u32),
+    Char,
+}
+
+/// Split `src` into the three per-line views. All three vectors have the
+/// same length (one entry per source line).
+pub fn strip(src: &str) -> Stripped {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut code_str = Vec::new();
+    let mut comments = Vec::new();
+    let mut lc = String::new();
+    let mut ls = String::new();
+    let mut lm = String::new();
+    let mut mode = Mode::Normal;
+    let mut i = 0usize;
+    let n = bytes.len();
+
+    macro_rules! flush_line {
+        () => {{
+            code.push(std::mem::take(&mut lc));
+            code_str.push(std::mem::take(&mut ls));
+            comments.push(std::mem::take(&mut lm));
+        }};
+    }
+
+    while i < n {
+        let c = bytes[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Normal;
+            }
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Normal => {
+                let next = bytes.get(i + 1).copied();
+                let prev_ident = i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_');
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    lm.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    lm.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    lc.push('"');
+                    ls.push('"');
+                    i += 1;
+                } else if !prev_ident && (c == 'r' || c == 'b') {
+                    // Raw / byte string or byte char prefixes: r" r#" br" b" b'
+                    let mut j = i;
+                    let mut raw = false;
+                    if bytes.get(j).copied() == Some('b') {
+                        j += 1;
+                    }
+                    if bytes.get(j).copied() == Some('r') {
+                        raw = true;
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while raw && bytes.get(j).copied() == Some('#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    match bytes.get(j).copied() {
+                        Some('"') if raw => {
+                            for k in i..=j {
+                                lc.push(bytes[k]);
+                                ls.push(bytes[k]);
+                            }
+                            mode = Mode::RawStr(hashes);
+                            i = j + 1;
+                        }
+                        Some('"') if c == 'b' && j == i + 1 => {
+                            lc.push('b');
+                            ls.push('b');
+                            lc.push('"');
+                            ls.push('"');
+                            mode = Mode::Str;
+                            i = j + 1;
+                        }
+                        Some('\'') if c == 'b' && j == i + 1 => {
+                            lc.push('b');
+                            ls.push('b');
+                            lc.push('\'');
+                            ls.push('\'');
+                            mode = Mode::Char;
+                            i = j + 1;
+                        }
+                        _ => {
+                            lc.push(c);
+                            ls.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: 'x' / '\n' are chars,
+                    // 'static is a lifetime (no closing quote after one
+                    // symbol).
+                    let is_char = match next {
+                        Some('\\') => true,
+                        Some(_) => bytes.get(i + 2).copied() == Some('\''),
+                        None => false,
+                    };
+                    lc.push('\'');
+                    ls.push('\'');
+                    if is_char {
+                        mode = Mode::Char;
+                    }
+                    i += 1;
+                } else {
+                    lc.push(c);
+                    ls.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                lm.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(d) => {
+                let next = bytes.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    lm.push_str("*/");
+                    mode = if d == 1 { Mode::Normal } else { Mode::BlockComment(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    lm.push_str("/*");
+                    mode = Mode::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    lm.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    lc.push(' ');
+                    ls.push(c);
+                    if let Some(e) = bytes.get(i + 1).copied() {
+                        if e != '\n' {
+                            lc.push(' ');
+                            ls.push(e);
+                            i += 1;
+                        }
+                    }
+                    i += 1;
+                } else if c == '"' {
+                    lc.push('"');
+                    ls.push('"');
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    lc.push(' ');
+                    ls.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(h) => {
+                if c == '"' {
+                    let mut k = 0u32;
+                    while (k as usize) < n - i - 1 && bytes[i + 1 + k as usize] == '#' && k < h {
+                        k += 1;
+                    }
+                    if k == h {
+                        lc.push('"');
+                        ls.push('"');
+                        for _ in 0..h {
+                            lc.push('#');
+                            ls.push('#');
+                        }
+                        mode = Mode::Normal;
+                        i += 1 + h as usize;
+                    } else {
+                        lc.push(' ');
+                        ls.push(c);
+                        i += 1;
+                    }
+                } else {
+                    lc.push(' ');
+                    ls.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == '\\' {
+                    lc.push(' ');
+                    ls.push(c);
+                    if let Some(e) = bytes.get(i + 1).copied() {
+                        if e != '\n' {
+                            lc.push(' ');
+                            ls.push(e);
+                            i += 1;
+                        }
+                    }
+                    i += 1;
+                } else if c == '\'' {
+                    lc.push('\'');
+                    ls.push('\'');
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    lc.push(' ');
+                    ls.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    flush_line!();
+    Stripped { code, code_str, comments }
+}
+
+/// One lexical token from the comment-stripped code view.
+pub struct Tok {
+    /// Identifier / keyword / number text, or a single punctuation char.
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// Tokenize the stripped code lines into identifiers and punctuation.
+/// Lifetimes (`'a`) come out as a `'` punct followed by an ident, which
+/// no checker confuses with anything meaningful.
+pub fn tokens(code: &[String]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for (li, line) in code.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if c.is_alphanumeric() || c == '_' {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok { text: chars[start..i].iter().collect(), line: li + 1 });
+            } else {
+                out.push(Tok { text: c.to_string(), line: li + 1 });
+                i += 1;
+            }
+        }
+    }
+    out
+}

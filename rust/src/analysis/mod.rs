@@ -1,0 +1,181 @@
+//! In-tree static analysis (`icquant lint`) — DESIGN.md §13.
+//!
+//! A dependency-free source-model checker: `lexer` strips comments and
+//! strings, `model` builds a per-file view (fn spans, unsafe sites, test
+//! spans, tag lookup), `checks` runs the checkers over it. The pass
+//! self-hosts: ci.sh runs `icquant lint` as a hard gate, so the real tree
+//! must stay at zero diagnostics.
+
+pub mod checks;
+pub mod lexer;
+pub mod model;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use model::FileModel;
+
+/// One checker finding, pointing at a repo-relative file:line.
+#[derive(Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub check: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.check, self.message)
+    }
+}
+
+pub struct LintReport {
+    /// Number of `.rs` files analyzed.
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn to_json(&self) -> Json {
+        let diags = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::str(d.file.clone())),
+                    ("line", Json::num(d.line as f64)),
+                    ("check", Json::str(d.check)),
+                    ("message", Json::str(d.message.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("files", Json::num(self.files as f64)),
+            ("count", Json::num(self.diagnostics.len() as f64)),
+            ("diagnostics", Json::arr(diags)),
+        ])
+    }
+}
+
+/// Directories (relative to the repo root) the walker scans for `.rs`
+/// sources. `lint_fixtures` (deliberately-bad test inputs) and build
+/// output are excluded.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+const SKIP_DIRS: &[&str] = &["lint_fixtures", "target"];
+
+/// Locate the repo root by walking up from `start` until a directory
+/// containing `rust/Cargo.toml` is found.
+pub fn find_root(start: &Path) -> Result<PathBuf> {
+    let mut p = start.to_path_buf();
+    loop {
+        if p.join("rust/Cargo.toml").is_file() {
+            return Ok(p);
+        }
+        if !p.pop() {
+            bail!(
+                "could not locate the repo root (no rust/Cargo.toml above {}); pass --root",
+                start.display()
+            );
+        }
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name) {
+                collect_rs(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every per-file checker on one source text, as if it lived at
+/// `rel`. This is the entry point fixture tests drive; `lint` uses it for
+/// every walked file.
+pub fn analyze_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let m = FileModel::build(rel, src);
+    let mut out = Vec::new();
+    checks::safety(&m, &mut out);
+    checks::ordering(&m, &mut out);
+    checks::hot_path(&m, &mut out);
+    checks::panic_policy(&m, &mut out);
+    out
+}
+
+/// Run the full pass (per-file checkers plus the tree-level DESIGN-ref,
+/// BENCH-key, and trace-name checkers) over the repo at `root`.
+pub fn lint(root: &Path) -> Result<LintReport> {
+    let mut paths = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_rs(&root.join(dir), &mut paths)?;
+    }
+    paths.sort();
+    if paths.is_empty() {
+        bail!("no .rs sources under {} — wrong --root?", root.display());
+    }
+
+    let mut models = Vec::new();
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(p).with_context(|| format!("read {}", p.display()))?;
+        models.push(FileModel::build(&rel, &src));
+    }
+
+    let mut diags = Vec::new();
+    for m in &models {
+        checks::safety(m, &mut diags);
+        checks::ordering(m, &mut diags);
+        checks::hot_path(m, &mut diags);
+        checks::panic_policy(m, &mut diags);
+    }
+
+    let design = fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+    let sections = checks::design_sections(&design);
+    for m in &models {
+        checks::design_refs(m, &sections, &mut diags);
+    }
+
+    if let Ok(ci) = fs::read_to_string(root.join("ci.sh")) {
+        let benches: Vec<&FileModel> =
+            models.iter().filter(|m| m.rel.starts_with("rust/benches/")).collect();
+        checks::bench_keys("ci.sh", &ci, &benches, &mut diags);
+    }
+
+    match models.iter().find(|m| m.rel == "rust/src/trace/names.rs") {
+        Some(names) => {
+            let registry = checks::trace_registry(names, &mut diags);
+            let mut used = BTreeSet::new();
+            for m in &models {
+                checks::trace_names(m, &registry, &mut used, &mut diags);
+            }
+            checks::trace_unused(names, &registry, &used, &mut diags);
+        }
+        None => diags.push(Diagnostic {
+            file: "rust/src/trace/names.rs".to_string(),
+            line: 1,
+            check: "trace-names",
+            message: "trace event name registry is missing".to_string(),
+        }),
+    }
+
+    diags.sort_by(|a, b| (&a.file, a.line, a.check).cmp(&(&b.file, b.line, b.check)));
+    Ok(LintReport { files: models.len(), diagnostics: diags })
+}

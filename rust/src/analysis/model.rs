@@ -1,0 +1,251 @@
+//! Per-file source model for the lint pass (DESIGN.md §13): fn spans,
+//! `unsafe` sites, `#[cfg(test)]` spans, and the justification-comment
+//! lookup that implements the tag grammar.
+
+use super::lexer::{self, Stripped, Tok};
+
+/// Classification of an `unsafe` keyword occurrence.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum UnsafeKind {
+    /// `unsafe { … }`
+    Block,
+    /// `unsafe impl Trait for T`
+    Impl,
+    /// `unsafe trait T`
+    Trait,
+    /// `unsafe fn name(…)` declaration (not a fn-pointer type)
+    Fn,
+}
+
+pub struct UnsafeSite {
+    pub line: usize,
+    pub kind: UnsafeKind,
+}
+
+pub struct FnInfo {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: usize,
+    /// Body `{ … }` open/close lines, when the fn has a body.
+    pub body: Option<(usize, usize)>,
+}
+
+pub struct FileModel {
+    /// Repo-relative path with `/` separators.
+    pub rel: String,
+    pub stripped: Stripped,
+    pub fns: Vec<FnInfo>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    /// `#[cfg(test)]` item spans (attribute line .. closing brace line).
+    pub test_spans: Vec<(usize, usize)>,
+    /// Whole-file test code (anything under a `tests/` directory).
+    pub is_test_file: bool,
+}
+
+impl FileModel {
+    pub fn build(rel: &str, src: &str) -> FileModel {
+        let stripped = lexer::strip(src);
+        let toks = lexer::tokens(&stripped.code);
+        let fns = find_fns(&toks);
+        let unsafe_sites = find_unsafe(&toks);
+        let test_spans = find_test_spans(&stripped, &toks);
+        let is_test_file =
+            rel.contains("/tests/") || rel.starts_with("tests/") || rel.ends_with("/build.rs");
+        FileModel { rel: rel.to_string(), stripped, fns, unsafe_sites, test_spans, is_test_file }
+    }
+
+    pub fn lines(&self) -> usize {
+        self.stripped.code.len()
+    }
+
+    /// Stripped code for a 1-based line ("" out of range).
+    pub fn code(&self, line: usize) -> &str {
+        self.stripped.code.get(line.wrapping_sub(1)).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Comment text for a 1-based line ("" out of range).
+    pub fn comment(&self, line: usize) -> &str {
+        self.stripped.comments.get(line.wrapping_sub(1)).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// True when `line` is test code: the whole file is a test file or the
+    /// line falls inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.is_test_file || self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// The comment run directly above `line`: pure-comment lines are
+    /// collected, attribute lines (`#[…]`) are skipped, and code lines for
+    /// which `skip` returns true are stepped over (so one comment can
+    /// cover a cluster of same-kind sites). Any other code line or a blank
+    /// line ends the run. Returns the concatenated comment text.
+    pub fn comment_run_above(&self, line: usize, skip: &dyn Fn(&str) -> bool) -> String {
+        let mut out = String::new();
+        let mut l = line.wrapping_sub(1);
+        while l >= 1 {
+            let code = self.code(l).trim();
+            let comment = self.comment(l);
+            if code.is_empty() && !comment.is_empty() {
+                out.push_str(comment);
+                out.push('\n');
+            } else if code.starts_with("#[") || (!code.is_empty() && skip(code)) {
+                // step over attributes / same-kind sites
+            } else {
+                break;
+            }
+            l -= 1;
+        }
+        out
+    }
+
+    /// The fn whose body (or signature line) contains `line`.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnInfo> {
+        // Innermost wins: scan for the tightest body span containing line.
+        let mut best: Option<&FnInfo> = None;
+        for f in &self.fns {
+            if let Some((open, close)) = f.body {
+                if f.line <= line && line <= close {
+                    let tighter = match best.and_then(|b| b.body) {
+                        Some((bo, bc)) => (close - open) < (bc - bo),
+                        None => true,
+                    };
+                    if tighter {
+                        best = Some(f);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Doc/comment run above a fn declaration (attributes skipped).
+    pub fn fn_doc(&self, f: &FnInfo) -> String {
+        self.comment_run_above(f.line, &|code: &str| {
+            // Step over `pub`, `unsafe`, `extern "C"` etc. split onto their
+            // own lines (rustfmt never does this, but cheap to tolerate).
+            matches!(code, "pub" | "unsafe" | "const" | "async")
+        })
+    }
+}
+
+/// True when the token is one of the keywords that may sit between a doc
+/// comment / attribute and the `fn` keyword.
+fn is_fn_qualifier(t: &str) -> bool {
+    matches!(t, "pub" | "const" | "async" | "unsafe" | "extern") || t.starts_with('"')
+}
+
+fn find_fns(toks: &[Tok]) -> Vec<FnInfo> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text == "fn" {
+            // `unsafe fn(..)` / `fn(..)` in type position has `(` next.
+            let name = match toks.get(i + 1) {
+                Some(t) if t.text != "(" => t.text.clone(),
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let line = toks[i].line;
+            // Find the body open brace: first `{` at paren depth 0, unless
+            // a `;` (trait method decl) shows up first.
+            let mut j = i + 1;
+            let mut paren = 0i32;
+            let mut body = None;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" | "[" => paren += 1,
+                    ")" | "]" => paren -= 1,
+                    "{" if paren == 0 => {
+                        let open = toks[j].line;
+                        let close = match_brace(toks, j);
+                        body = Some((open, close));
+                        break;
+                    }
+                    ";" if paren == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            out.push(FnInfo { name, line, body });
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Line of the `}` matching the `{` at token index `open` (last token's
+/// line when unbalanced — truncated input never panics the linter).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for t in &toks[open..] {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return t.line;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.last().map(|t| t.line).unwrap_or(1)
+}
+
+fn find_unsafe(toks: &[Tok]) -> Vec<UnsafeSite> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.text != "unsafe" {
+            continue;
+        }
+        let kind = match toks.get(i + 1).map(|t| t.text.as_str()) {
+            Some("{") => Some(UnsafeKind::Block),
+            Some("impl") => Some(UnsafeKind::Impl),
+            Some("trait") => Some(UnsafeKind::Trait),
+            Some("fn") => {
+                // `unsafe fn(` is a fn-pointer *type*, not a declaration.
+                match toks.get(i + 2).map(|t| t.text.as_str()) {
+                    Some("(") => None,
+                    _ => Some(UnsafeKind::Fn),
+                }
+            }
+            Some("extern") => {
+                // `unsafe extern "C" fn name` declaration vs `unsafe
+                // extern "C" fn(` type: look past the ABI string remnants.
+                let mut j = i + 2;
+                while toks.get(j).map(|t| is_fn_qualifier(&t.text)).unwrap_or(false) {
+                    j += 1;
+                }
+                let at = |k: usize| toks.get(k).map(|t| t.text.as_str());
+                match (at(j), at(j + 1)) {
+                    (Some("fn"), Some("(")) => None,
+                    (Some("fn"), _) => Some(UnsafeKind::Fn),
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        if let Some(kind) = kind {
+            out.push(UnsafeSite { line: t.line, kind });
+        }
+    }
+    out
+}
+
+fn find_test_spans(stripped: &Stripped, toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (li, line) in stripped.code.iter().enumerate() {
+        let l = li + 1;
+        if !line.contains("#[cfg(test)]") {
+            continue;
+        }
+        // The attributed item's body: first `{` on or after this line.
+        let open = toks.iter().position(|t| t.line >= l && t.text == "{");
+        if let Some(open) = open {
+            out.push((l, match_brace(toks, open)));
+        }
+    }
+    out
+}

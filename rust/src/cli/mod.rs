@@ -106,6 +106,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "bound" => cmd_bound(&args),
         "serve" => cmd_serve(&args),
         "trace-check" => cmd_trace_check(&args),
+        "lint" => cmd_lint(&args),
         "eval" => cmd_eval(&args),
         "zoo" => cmd_zoo(),
         "help" | "--help" | "-h" => {
@@ -153,7 +154,13 @@ fn print_help() {
     println!("                                --trace-out writes a Chrome/Perfetto");
     println!("                                trace of the run");
     println!("  trace-check <trace.json>      validate an emitted trace (schema,");
-    println!("                                balanced spans, categories)");
+    println!("                                balanced spans, categories,");
+    println!("                                registered event names)");
+    println!("  lint [--root dir] [--json]    in-tree static analysis: SAFETY/");
+    println!("                                ORDERING/PANIC justifications,");
+    println!("                                hot-path allocation bans, DESIGN");
+    println!("                                refs, BENCH keys, trace-name");
+    println!("                                registry (DESIGN.md, section 13)");
     println!("  eval [--bits n] [--ratio g]   ppl: FP vs ICQuant^SK");
     println!("  zoo                           list synthetic model families");
 }
@@ -556,7 +563,12 @@ fn cmd_trace_check(args: &Args) -> Result<()> {
         let tid = e.req("tid")?.as_i64().context("tid not an int")?;
         let ts = e.req("ts")?.as_f64().context("ts not a number")?;
         let cat = e.req("cat")?.as_str().context("cat not a string")?;
-        e.req("name")?.as_str().context("name not a string")?;
+        let name = e.req("name")?.as_str().context("name not a string")?;
+        anyhow::ensure!(
+            crate::trace::names::is_registered(name),
+            "event {}: name '{}' is not in the trace::names registry",
+            i, name
+        );
         cats.insert(cat.to_string());
         if let Some(&prev) = last_ts.get(&tid) {
             anyhow::ensure!(
@@ -592,6 +604,34 @@ fn cmd_trace_check(args: &Args) -> Result<()> {
         events.len(),
         depth.len(),
         cats
+    );
+    Ok(())
+}
+
+/// Run the in-tree static analyzer (DESIGN.md §13) and exit non-zero on
+/// any diagnostic — the ci.sh hard gate.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.flag("root") {
+        Some(r) => PathBuf::from(r),
+        None => crate::analysis::find_root(&std::env::current_dir()?)?,
+    };
+    let report = crate::analysis::lint(&root)?;
+    if args.bool_flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        for d in &report.diagnostics {
+            println!("{}", d);
+        }
+        println!(
+            "lint: {} file(s) analyzed, {} diagnostic(s)",
+            report.files,
+            report.diagnostics.len()
+        );
+    }
+    anyhow::ensure!(
+        report.diagnostics.is_empty(),
+        "lint found {} diagnostic(s)",
+        report.diagnostics.len()
     );
     Ok(())
 }

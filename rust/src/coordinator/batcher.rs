@@ -42,6 +42,7 @@ impl PendingRequest {
         if self.normalized.is_none() {
             self.normalized = Some(fit_prompt(&self.req.prompt, window, pad_id));
         }
+        // PANIC: filled two lines up when it was None.
         self.normalized.as_deref().unwrap()
     }
 }

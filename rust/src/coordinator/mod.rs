@@ -150,6 +150,7 @@ impl Server {
         // bucket pick would truncate outputs below the batch size), so
         // clamp the policy rather than panic mid-flight.
         assert!(!cfg.buckets.is_empty(), "ServeConfig.buckets must be non-empty");
+        // PANIC: non-emptiness is asserted one line up.
         cfg.max_batch = cfg.max_batch.clamp(1, *cfg.buckets.last().unwrap());
         let (tx, rx) = channel::<WorkItem>();
         let metrics = Arc::new(Metrics::default());
@@ -188,6 +189,9 @@ impl Server {
         prompt: Vec<i32>,
         max_new_tokens: usize,
     ) -> Result<(u64, Receiver<GenerateResponse>)> {
+        // ORDERING: relaxed — only uniqueness of the id matters; the
+        // request payload travels through the channel, which provides
+        // its own happens-before edge to the serving thread.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
         trace::instant(Cat::Request, "enqueue", id, prompt.len() as i64, max_new_tokens as i64);
@@ -382,6 +386,9 @@ fn slot_loop<B: Backend>(
                     break;
                 }
                 if slots[slot].is_none() {
+                    // PANIC: `to_admit` came from `admit_now`, which
+                    // never exceeds the queue length (and the force-admit
+                    // override only fires when it was already positive).
                     round.push((slot, queue.pop_front().expect("admit count within queue")));
                 }
             }
@@ -582,6 +589,7 @@ fn retire_finished<B: Backend>(
         if !done {
             continue;
         }
+        // PANIC: the `done` match two lines up proved the slot is Some.
         let seq = slots[slot].take().expect("checked above");
         let _ = backend.retire(state, slot);
         let timing = RequestTiming {
@@ -682,6 +690,7 @@ fn serve_wave<B: Backend>(
 ) {
     let n = batch.len();
     let bucket = batcher::pick_bucket(&cfg.buckets, n)
+        // PANIC: buckets non-emptiness is asserted at server construction.
         .unwrap_or_else(|| *cfg.buckets.last().unwrap());
 
     // Normalize prompts to the prefill window (left-truncate / left-pad
@@ -808,6 +817,8 @@ fn serve_wave<B: Backend>(
     let mut deliver = |seq: &mut WaveSeq,
                        first_token_at: Option<Instant>,
                        decode_elapsed_ms: f64| {
+        // PANIC: each wave sequence is delivered exactly once (retire
+        // or error), and delivery consumes the pending request.
         let p = seq.p.take().expect("delivered once");
         let timing = RequestTiming {
             queue_ms: (t_prefill - p.arrived).as_secs_f64() * 1e3,

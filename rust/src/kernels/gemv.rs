@@ -62,6 +62,7 @@ pub fn gemv(plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
 /// pooled path hands to each chunk. Hidden-public so the pool-vs-spawn
 /// bench baseline dispatches the *same* kernel body it times against
 /// (`benches/kernels.rs`); not part of the supported API.
+// lint: hot-path
 #[doc(hidden)]
 pub fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
     let cols = plane.cols;
@@ -209,19 +210,25 @@ fn gemm_chunked(
     }
     let chunk = rows_w.div_ceil(t);
     let n_bands = rows_w.div_ceil(chunk);
-    let mut bands: Vec<Vec<f32>> = vec![Vec::new(); n_bands];
-    if let Err(p) = pool.try_for_chunks_mut(&mut bands, 1, |ti, slot| {
+    // One flat scratch with a uniform per-band stride (the tail band
+    // short-writes) instead of a Vec of per-band Vecs: this path is the
+    // bucket-1 decode step, and the hot-path audit (DESIGN.md §13)
+    // flagged its n_bands+1 allocations per call — now a single buffer.
+    let stride = m * chunk;
+    let mut flat = vec![0.0f32; n_bands * stride];
+    if let Err(p) = pool.try_for_chunks_mut(&mut flat, stride, |ti, band| {
         let r0 = ti * chunk;
         let r1 = ((ti + 1) * chunk).min(rows_w);
-        slot[0] = gemm_band(plane, x, r0, r1);
+        gemm_band_into(plane, x, r0, r1, &mut band[..m * (r1 - r0)]);
     }) {
         // One panicking band must not poison the forward anonymously:
         // name the weight-row range it owned.
         panic_with_rows("fused GEMM band", "weight rows", p, chunk, rows_w);
     }
-    for (ti, band) in bands.iter().enumerate() {
+    for ti in 0..n_bands {
         let r0 = ti * chunk;
-        let bw = band.len() / m;
+        let bw = (rows_w - r0).min(chunk);
+        let band = &flat[ti * stride..][..m * bw];
         for i in 0..m {
             y.data[i * rows_w + r0..i * rows_w + r0 + bw]
                 .copy_from_slice(&band[i * bw..(i + 1) * bw]);
@@ -231,6 +238,7 @@ fn gemm_chunked(
 
 /// Fused GEMM over activation rows `i0..i0+m` of `x`, writing `y` (the
 /// matching `m × plane.rows` row-major output slice; overwritten).
+// lint: hot-path
 fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f32]) {
     debug_assert_eq!(y.len(), m * plane.rows);
     let cols = plane.cols;
@@ -266,16 +274,20 @@ fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f3
     }
 }
 
-/// Fused GEMM restricted to weight rows `r0..r1`: returns the
-/// `(m × (r1-r0))` column band of `y`, each element accumulated in
-/// column order by one chunk (the bit-identity contract holds).
-fn gemm_band(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize) -> Vec<f32> {
+/// Fused GEMM restricted to weight rows `r0..r1`, overwriting `band`
+/// (exactly `m × (r1-r0)`, row-major) with the column band of `y`, each
+/// element accumulated in column order by one chunk (the bit-identity
+/// contract holds).
+fn gemm_band_into(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize, band: &mut [f32]) {
     let cols = plane.cols;
     let width = plane.width();
     let wbits = width as usize;
     let m = x.rows;
     let bw = r1 - r0;
-    let mut band = vec![0.0f32; m * bw];
+    debug_assert_eq!(band.len(), m * bw);
+    for v in band.iter_mut() {
+        *v = 0.0;
+    }
     let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for r in r0..r1 {
@@ -300,7 +312,6 @@ fn gemm_band(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize) -> Vec<f32>
             c0 += len;
         }
     }
-    band
 }
 
 #[cfg(test)]

@@ -801,11 +801,13 @@ impl KvCache {
     fn alloc_block(&mut self, slot: usize) -> Result<usize> {
         let from_reservation = self.reserved[slot] > 0;
         let b = if from_reservation {
-            // Invariant: reserved_total <= free.len(), so this cannot
-            // miss (reservations are granted against free blocks and
-            // unreserved allocation never dips into them).
+            // PANIC: invariant — reserved_total <= free.len(), so this
+            // cannot miss (reservations are granted against free blocks
+            // and unreserved allocation never dips into them).
             self.free.pop().expect("reserved block missing from free list")
         } else if self.free.len() > self.reserved_total {
+            // PANIC: the guard one line up proved the free list holds
+            // more than the reserved floor, so it is non-empty.
             self.free.pop().unwrap()
         } else if let Some(b) = self.evict_lru() {
             b
@@ -840,6 +842,7 @@ impl KvCache {
             }
         }
         let (_, b) = best?;
+        // PANIC: `best` was selected from registered entries just above.
         let entry = self.registered[b].take().unwrap();
         self.prefix_index.remove(&entry.key);
         self.registered_count -= 1;
@@ -865,6 +868,7 @@ impl KvCache {
             .map(|(b, _)| b)
             .collect();
         for c in children {
+            // PANIC: `children` was filtered to registered entries.
             let entry = self.registered[c].take().unwrap();
             self.prefix_index.remove(&entry.key);
             self.registered_count -= 1;
@@ -922,6 +926,7 @@ impl KvCache {
         // dropped and that block recomputed in f32 — reuse stays
         // block-aligned and no write ever lands in an `Icq` block.
         if self.kv_bits.is_some() && matched > 0 && matched * bt >= prompt.len() {
+            // PANIC: `matched > 0` blocks were just mapped into the table.
             let b = self.tables[slot].pop().unwrap();
             self.release(b);
             matched -= 1;
@@ -1011,6 +1016,8 @@ impl KvCache {
     /// drop its payload (state `Icq` → `F32`). The block re-quantizes
     /// at the next forward epilogue once it is complete again.
     fn dequantize_block(&mut self, phys: usize) {
+        // PANIC: callers only pass blocks they observed in `Icq` state;
+        // dequantizing an f32 block is a cache-state bug worth a crash.
         let q = self.quant[phys].take().expect("dequantize of an f32 block");
         self.quantized_count -= 1;
         self.quant_payload_bytes -= q.payload_bytes();
@@ -1178,6 +1185,7 @@ impl KvCache {
                 self.scratch_k.resize(self.scratch_len * stride, 0.0);
                 self.scratch_v.resize(self.scratch_len * stride, 0.0);
             }
+            // PANIC: this branch is the `Icq`-state arm of the gather.
             let q = self.quant[phys].as_ref().unwrap();
             let dk = &mut self.scratch_k[si * stride..][..stride];
             dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, dk);
@@ -1278,6 +1286,8 @@ impl KvCache {
     #[doc(hidden)]
     pub fn debug_corrupt_quant(&mut self, slot: usize, logical: usize) {
         let phys = self.tables[slot][logical];
+        // PANIC: test-only corruption hook; misuse on an f32 block
+        // should fail loudly in the calling test.
         let q = self.quant[phys].as_mut().expect("corrupt target is not quantized");
         for plane in q.k.iter_mut().chain(q.v.iter_mut()) {
             for b in &mut plane.codes {

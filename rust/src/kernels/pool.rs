@@ -81,17 +81,29 @@ struct JobPtr {
     data: *const (),
     call: unsafe fn(*const (), usize),
 }
-// SAFETY: the pointee is `Sync` (shared calls are safe) and the
-// submitter keeps it alive for the whole parallel region (see above).
+// SAFETY: the raw pointer is only ever dereferenced through the paired
+// trampoline while the submitting thread blocks in `try_parallel_for`,
+// so moving a `JobPtr` to a worker never outlives the pointee.
 unsafe impl Send for JobPtr {}
+// SAFETY: `Job::new` only erases closures bounded by `F: Fn + Sync`, so
+// concurrent trampoline calls from many workers are shared `&F` calls.
 unsafe impl Sync for JobPtr {}
 
 /// Trampoline: recover the concrete closure type and call it.
+///
+/// # Safety
+/// `data` must point to a live `F` — upheld by the `JobPtr` invariant
+/// that the submitter blocks until every chunk completes, keeping the
+/// closure borrowed on its stack for the whole region.
 unsafe fn call_job<F: Fn(usize) + Sync>(data: *const (), i: usize) {
     (*(data as *const F))(i)
 }
 
 /// No-op trampoline for placeholder jobs (never claimed).
+///
+/// # Safety
+/// No preconditions: the pointer is never dereferenced. Used with a null
+/// `data` in the rebuilt shell of `try_parallel_for`.
 unsafe fn call_nothing(_: *const (), _: usize) {}
 
 /// One published parallel region.
@@ -127,6 +139,11 @@ impl Job {
     fn drain(&self) {
         let job = self.job;
         loop {
+            // ORDERING: relaxed — the counter only needs each index
+            // claimed exactly once (fetch_add atomicity); the caller's
+            // data is published to workers by the queue mutex, and chunk
+            // completion is published back by the AcqRel `pending`
+            // decrement below, so no claim carries payload ordering.
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.n {
                 return;
@@ -206,6 +223,10 @@ impl WorkerPool {
                     }
                     // Retire fully-claimed jobs from the front.
                     while let Some(j) = q.jobs.front() {
+                        // ORDERING: relaxed — a retirement heuristic
+                        // under the queue mutex; a stale (low) value only
+                        // delays popping, and a claim racing past `n` is
+                        // handled by `drain` returning early.
                         if j.next.load(Ordering::Relaxed) >= j.n {
                             q.jobs.pop_front();
                         } else {
@@ -287,6 +308,9 @@ impl WorkerPool {
     }
 
     fn finish(region: Job) -> Result<(), PoolPanic> {
+        // PANIC: `into_inner` only errs on poisoning, and the slot is
+        // written strictly under `catch_unwind` — a poisoned slot means a
+        // bug in the pool itself, which must not be papered over.
         match region.panic.into_inner().unwrap() {
             Some((task, payload)) => {
                 trace::instant(Cat::Pool, "panic", 0, task as i64, 0);
@@ -325,9 +349,13 @@ impl WorkerPool {
             return Ok(());
         }
         struct Base<T>(*mut T);
-        // SAFETY: each chunk index maps to a disjoint subslice, and each
-        // index is claimed exactly once.
+        // SAFETY: the base pointer derives from an exclusive `&mut [T]`
+        // borrow held across the whole region, and `T: Send` lets the
+        // elements themselves cross threads.
         unsafe impl<T: Send> Send for Base<T> {}
+        // SAFETY: workers sharing `&Base` never touch overlapping memory —
+        // each claimed chunk index maps to a disjoint subslice and the
+        // pool claims every index exactly once.
         unsafe impl<T: Send> Sync for Base<T> {}
         let base = Base(data.as_mut_ptr());
         self.try_parallel_for(len.div_ceil(chunk), &|i| {

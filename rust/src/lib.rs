@@ -26,6 +26,7 @@
 //!   [`coordinator`] (dynamic-batching serving stack), [`experiments`]
 //!   (one harness per paper table/figure), [`bench`] (timing harness).
 
+pub mod analysis;
 pub mod util;
 pub mod trace;
 pub mod bitstream;

@@ -46,6 +46,8 @@
 //! across all threads to stderr — failures arrive with their own
 //! context even when nobody asked for a full trace file.
 
+pub mod names;
+
 use crate::util::json::Json;
 use std::cell::RefCell;
 use std::path::Path;
@@ -163,6 +165,11 @@ impl LogHist {
         ((64 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
     }
 
+    /// Add one duration to the histogram.
+    /// ORDERING: relaxed — the three counters are statistically, not
+    /// transactionally, related; readers tolerate a count/sum torn across
+    /// a concurrent record, and no other data is published through them.
+    // lint: hot-path
     fn record(&self, us: u64) {
         self.counts[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
@@ -171,6 +178,9 @@ impl LogHist {
 
     /// Upper edge (µs) of the first bucket whose cumulative count
     /// reaches fraction `p` — a log₂-resolution percentile estimate.
+    /// ORDERING: relaxed — reads race with recorders by design; the
+    /// estimate is already log₂-coarse, so a slightly stale count is
+    /// within the reporting tolerance.
     fn percentile_us(&self, p: f64) -> u64 {
         let total = self.n.load(Ordering::Relaxed);
         if total == 0 {
@@ -187,6 +197,9 @@ impl LogHist {
         1u64 << (HIST_BUCKETS - 1)
     }
 
+    /// Snapshot the histogram as JSON.
+    /// ORDERING: relaxed — same racy-snapshot tolerance as
+    /// [`Self::percentile_us`]; export runs while recorders are live.
     fn to_json(&self) -> Json {
         let n = self.n.load(Ordering::Relaxed);
         let buckets: Vec<Json> = self
@@ -203,6 +216,10 @@ impl LogHist {
         ])
     }
 
+    /// Zero every counter.
+    /// ORDERING: relaxed — a reset racing recorders may interleave with
+    /// their increments; [`Tracer::reset`] documents that in-flight
+    /// events may survive or be lost, so no stronger fence would help.
     fn reset(&self) {
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
@@ -283,6 +300,11 @@ thread_local! {
 }
 
 /// Whether tracing is on — the hot-path gate: one relaxed atomic load.
+/// ORDERING: relaxed — the flag carries no payload of its own; a thread
+/// observing the flip late records (or skips) a few boundary events,
+/// which the trace format tolerates. Ring/budget state is published by
+/// the `generation` Acquire/Release pair, not by this flag.
+// lint: hot-path
 #[inline(always)]
 pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
@@ -290,6 +312,11 @@ pub fn enabled() -> bool {
 
 /// Append to the calling thread's ring, registering it on first use
 /// (or after a [`Tracer::reset`]). Never called while disabled.
+/// ORDERING: relaxed on `byte_budget` (a sizing hint — a ring built one
+/// enable earlier keeps its old size by documented contract) and on
+/// `next_tid` (only uniqueness matters); the `generation` Acquire load
+/// pairs with [`Tracer::reset`]'s Release bump and is what actually
+/// orders ring registration against ring clearing.
 #[inline(never)]
 fn record(cat: Cat, ph: Phase, name: &'static str, id: u64, a: i64, b: i64) {
     let sh = shared();
@@ -313,12 +340,15 @@ fn record(cat: Cat, ph: Phase, name: &'static str, id: u64, a: i64, b: i64) {
             sh.rings.lock().unwrap().push(ring.clone());
             *slot = Some((generation, ring));
         }
+        // PANIC: the `stale` branch above just filled the slot on every
+        // path that reaches here; `None` is unreachable.
         let (_, ring) = slot.as_ref().expect("registered above");
         ring.buf.lock().unwrap().push(e);
     });
 }
 
 /// Record an instant event (`ph: "i"`). Free when tracing is disabled.
+// lint: hot-path
 #[inline]
 pub fn instant(cat: Cat, name: &'static str, id: u64, a: i64, b: i64) {
     if !enabled() {
@@ -348,12 +378,14 @@ impl Drop for Span {
 }
 
 /// Open a span. Free when tracing is disabled (no timestamp, no lock).
+// lint: hot-path
 #[inline]
 pub fn span(cat: Cat, name: &'static str, id: u64) -> Span {
     span_args(cat, name, id, 0, 0)
 }
 
 /// [`span`] with the two counter arguments on the begin event.
+// lint: hot-path
 #[inline]
 pub fn span_args(cat: Cat, name: &'static str, id: u64, a: i64, b: i64) -> Span {
     let live = enabled();
@@ -364,6 +396,7 @@ pub fn span_args(cat: Cat, name: &'static str, id: u64, a: i64, b: i64) -> Span 
 }
 
 /// Record a duration into a stage histogram. Free when disabled.
+// lint: hot-path
 #[inline]
 pub fn stage_us(stage: Stage, us: u64) {
     if !enabled() {
@@ -373,6 +406,7 @@ pub fn stage_us(stage: Stage, us: u64) {
 }
 
 /// [`stage_us`] for a millisecond duration (negative clamps to 0).
+// lint: hot-path
 #[inline]
 pub fn stage_ms(stage: Stage, ms: f64) {
     if !enabled() {
@@ -385,6 +419,8 @@ pub fn stage_ms(stage: Stage, ms: f64) {
 /// request errors and pool panics so failures arrive with context.
 /// Returns the rendered dump, or `None` when tracing (or the flight
 /// recorder) is off.
+/// ORDERING: relaxed on the `FLIGHT` arm flag — it gates a diagnostic
+/// dump; the event data itself is read under the ring locks.
 pub fn flight_dump(trigger: &str) -> Option<String> {
     if !enabled() || !FLIGHT.load(Ordering::Relaxed) {
         return None;
@@ -433,6 +469,10 @@ impl Tracer {
     /// rings created from now on; existing rings keep their size — call
     /// [`Tracer::reset`] first for a clean slate). Also arms the flight
     /// recorder.
+    /// ORDERING: relaxed on all three flags — enabling publishes no
+    /// event data; a recorder seeing `ENABLED` before the new budget
+    /// builds its ring at the old size, which the sizing contract above
+    /// explicitly allows.
     pub fn enable(byte_budget_per_thread: usize) {
         shared()
             .byte_budget
@@ -442,6 +482,8 @@ impl Tracer {
     }
 
     /// Stop recording (rings keep their contents for export).
+    /// ORDERING: relaxed — a thread seeing the flip late records a few
+    /// trailing events into its ring, which export tolerates.
     pub fn disable() {
         ENABLED.store(false, Ordering::Relaxed);
     }
@@ -451,6 +493,7 @@ impl Tracer {
     }
 
     /// Arm/disarm the flight recorder independently of full tracing.
+    /// ORDERING: relaxed — a pure on/off gate for a diagnostic dump.
     pub fn set_flight_recorder(on: bool) {
         FLIGHT.store(on, Ordering::Relaxed);
     }

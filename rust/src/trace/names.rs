@@ -1,0 +1,79 @@
+//! Registry of every trace event name recorded by non-test code
+//! (DESIGN.md §13, checker 6). `icquant lint` cross-checks this file
+//! against the tree: every name a `trace::instant`/`span`/`span_args`
+//! call site passes must be registered here, values must be unique, and
+//! every registered name must still be recorded somewhere. Adding an
+//! event means adding a constant here first; renaming one means updating
+//! both ends in the same commit, which keeps trace-consuming tooling
+//! (`icquant trace-check`, the flight recorder dump) in sync with the
+//! emitters.
+
+// --- coordinator: admission, batching, delivery -------------------------
+pub const ENQUEUE: &str = "enqueue";
+pub const ERROR: &str = "error";
+pub const ADMIT: &str = "admit";
+pub const ADMIT_ROUND: &str = "admit_round";
+pub const RETIRE: &str = "retire";
+pub const BLOCK_GATE: &str = "block_gate";
+pub const FORCE_ADMIT: &str = "force_admit";
+pub const PREFILL_ROUND: &str = "prefill_round";
+pub const DECODE_STEP: &str = "decode_step";
+pub const CLAMP_POSITIONS: &str = "clamp_positions";
+pub const CLAMP_RESERVATION: &str = "clamp_reservation";
+pub const WAVE: &str = "wave";
+pub const PREFILL_WAVE: &str = "prefill_wave";
+pub const WAVE_SPLIT: &str = "wave_split";
+
+// --- coordinator: backend execution -------------------------------------
+pub const BACKEND_PREFILL: &str = "backend_prefill";
+pub const BACKEND_DECODE: &str = "backend_decode";
+
+// --- kernels: paged KV cache ---------------------------------------------
+pub const RESERVE: &str = "reserve";
+pub const EVICT: &str = "evict";
+pub const PREFIX_HIT: &str = "prefix_hit";
+pub const DEQUANT_WRITE: &str = "dequant_write";
+pub const COW_FORK: &str = "cow_fork";
+pub const QUANTIZE_BLOCK: &str = "quantize_block";
+
+// --- kernels: worker pool -------------------------------------------------
+pub const PARK: &str = "park";
+pub const BUSY: &str = "busy";
+pub const DISPATCH: &str = "dispatch";
+pub const PANIC: &str = "panic";
+
+/// Every registered event name. `icquant trace-check` uses this to reject
+/// traces that carry names the tree never emits.
+pub const ALL: &[&str] = &[
+    ENQUEUE,
+    ERROR,
+    ADMIT,
+    ADMIT_ROUND,
+    RETIRE,
+    BLOCK_GATE,
+    FORCE_ADMIT,
+    PREFILL_ROUND,
+    DECODE_STEP,
+    CLAMP_POSITIONS,
+    CLAMP_RESERVATION,
+    WAVE,
+    PREFILL_WAVE,
+    WAVE_SPLIT,
+    BACKEND_PREFILL,
+    BACKEND_DECODE,
+    RESERVE,
+    EVICT,
+    PREFIX_HIT,
+    DEQUANT_WRITE,
+    COW_FORK,
+    QUANTIZE_BLOCK,
+    PARK,
+    BUSY,
+    DISPATCH,
+    PANIC,
+];
+
+/// True when `name` is a registered trace event name.
+pub fn is_registered(name: &str) -> bool {
+    ALL.contains(&name)
+}

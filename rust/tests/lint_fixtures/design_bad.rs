@@ -1,0 +1,7 @@
+//! Positive cases for the `design-ref` checker. The fixture test runs
+//! this against a synthetic section set containing only §1 and §2.
+//!
+//! A dangling pointer: DESIGN.md §9 does not exist here. //~ expect: design-ref
+
+/// Also bad: a bare DESIGN.md § reference with no number. //~ expect: design-ref
+pub fn nothing() {}

@@ -1,0 +1,9 @@
+//! Negative cases for the `design-ref` checker, run against a synthetic
+//! section set containing §1 and §2: both references below resolve.
+//!
+//! Layout notes live in DESIGN.md §1; the pipeline is DESIGN.md §2.
+
+pub fn nothing() -> &'static str {
+    // String literals are not scanned for references:
+    "see DESIGN.md §40 for nothing"
+}

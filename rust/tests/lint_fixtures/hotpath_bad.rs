@@ -1,0 +1,16 @@
+// Positive cases for the `hot-path` checker: a tagged fn that allocates
+// and locks, plus a tag that is attached to nothing.
+
+/// Sums the input, but allocates scratch on the way.
+// lint: hot-path
+pub fn hot_sum(xs: &[f32]) -> f32 {
+    let mut scratch = Vec::new(); //~ expect: hot-path
+    scratch.push(0.0f32); //~ expect: hot-path
+    let label = format!("n={}", xs.len()); //~ expect: hot-path
+    let _ = label;
+    xs.iter().sum::<f32>() + scratch[0]
+}
+
+// lint: hot-path //~ expect: hot-path
+
+pub struct NotAFn;

@@ -1,0 +1,25 @@
+// Negative cases for the `hot-path` checker: a tagged fn that stays on
+// the stack, and an untagged fn that may allocate freely.
+
+/// Dot product over two slices; stack-only.
+// lint: hot-path
+#[inline]
+pub fn hot_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Untagged helpers are outside the checker's scope.
+pub fn cold_collect(n: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(n);
+    v.resize(n, 0.0);
+    v
+}
+
+pub fn strings_do_not_count() -> &'static str {
+    // The banned spellings below live in a string literal.
+    "Vec::new format! .push("
+}

@@ -1,0 +1,6 @@
+// Synthetic trace-name registry for the fixture tests: one entry that
+// the trace_bad/trace_ok fixtures record, one duplicate, one unused.
+
+pub const DEMO: &str = "registered_demo";
+pub const UNUSED: &str = "never_recorded"; //~ expect: trace-names
+pub const DUP: &str = "registered_demo"; //~ expect: trace-names

@@ -1,0 +1,15 @@
+// Positive cases for the `ordering` checker: Relaxed/SeqCst uses with no
+// justification anywhere the checker looks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering::SeqCst; //~ expect: ordering
+
+static N: AtomicUsize = AtomicUsize::new(0);
+
+pub fn bump() -> usize {
+    N.fetch_add(1, Ordering::Relaxed) //~ expect: ordering
+}
+
+pub fn strict() -> usize {
+    N.load(Ordering::SeqCst) //~ expect: ordering
+}

@@ -1,0 +1,47 @@
+// Negative cases for the `ordering` checker: every use below is justified
+// (site comment, cluster comment, or enclosing fn doc) or exempt.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static N: AtomicUsize = AtomicUsize::new(0);
+static M: AtomicUsize = AtomicUsize::new(0);
+
+pub fn site_comment() -> usize {
+    // ORDERING: relaxed — standalone fixture counter, no payload published.
+    N.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn trailing_comment() -> usize {
+    N.load(Ordering::Relaxed) // ORDERING: relaxed — monotonic read, staleness fine.
+}
+
+pub fn cluster() {
+    // ORDERING: relaxed — independent statistics counters; one comment
+    // covers the whole adjacent cluster of sites.
+    N.store(0, Ordering::Relaxed);
+    M.store(0, Ordering::Relaxed);
+}
+
+/// Reset both counters.
+///
+/// ORDERING: relaxed throughout — fn-level justification covers the body.
+pub fn fn_doc_level() {
+    N.store(0, Ordering::Relaxed);
+    M.store(0, Ordering::Relaxed);
+}
+
+pub fn named_orderings() -> usize {
+    // Acquire/Release/AcqRel encode intent in the name and are exempt.
+    N.load(Ordering::Acquire) + M.swap(0, Ordering::AcqRel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_code_is_exempt() {
+        N.store(0, Ordering::Relaxed);
+        assert_eq!(N.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,16 @@
+// Positive cases for the `panic` checker. Fixture tests analyze this
+// file as if it lived under rust/src/coordinator/, where the policy
+// applies.
+
+pub fn first(xs: &[i32]) -> i32 {
+    *xs.first().unwrap() //~ expect: panic
+}
+
+pub fn parsed(s: &str) -> i32 {
+    s.parse().expect("fixture: not a number") //~ expect: panic
+}
+
+pub fn not_poison_propagation(cell: std::sync::Mutex<i32>) -> i32 {
+    // `into_inner()` consumes the mutex; this is not the lock idiom.
+    cell.into_inner().unwrap() //~ expect: panic
+}

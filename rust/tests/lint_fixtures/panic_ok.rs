@@ -1,0 +1,38 @@
+// Negative cases for the `panic` checker, analyzed as if under
+// rust/src/coordinator/: the lock-poisoning idiom, a justified unwrap,
+// and test code are all quiet.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Gate {
+    mx: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    /// Lock-poisoning propagation is idiomatic and exempt.
+    pub fn wait_open(&self) {
+        let mut open = self.mx.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+pub fn justified(xs: &[i32]) -> i32 {
+    // PANIC: callers guarantee non-empty input by construction.
+    *xs.first().unwrap()
+}
+
+pub fn trailing(xs: &[i32]) -> i32 {
+    *xs.last().unwrap() // PANIC: length checked by the caller.
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v = [1i32];
+        assert_eq!(*v.first().unwrap(), 1);
+    }
+}

@@ -1,0 +1,22 @@
+// Positive cases for the `safety` checker: every site below is missing
+// its justification and must produce exactly one diagnostic.
+//
+// NOTE: this directory is excluded from the real `icquant lint` walk and
+// is never compiled; files are parsed by the analyzer only.
+
+static mut COUNTER: usize = 0;
+
+pub fn bump() -> usize {
+    unsafe { //~ expect: safety
+        COUNTER += 1;
+        COUNTER
+    }
+}
+
+struct Wrap(*const u8);
+
+unsafe impl Send for Wrap {} //~ expect: safety
+
+pub unsafe fn peek(p: *const u8) -> u8 { //~ expect: safety
+    *p
+}

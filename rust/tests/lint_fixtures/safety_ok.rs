@@ -1,0 +1,39 @@
+// Negative cases for the `safety` checker: every site below carries the
+// justification the checker wants, or is not an unsafe site at all.
+
+static mut COUNTER: usize = 0;
+
+pub fn bump() -> usize {
+    // SAFETY: single-threaded fixture; no aliased access to COUNTER.
+    unsafe {
+        COUNTER += 1;
+        COUNTER
+    }
+}
+
+struct Wrap(*const u8);
+
+// SAFETY: the pointer is only dereferenced on the owning thread.
+unsafe impl Send for Wrap {}
+
+/// Read one byte through a raw pointer.
+///
+/// # Safety
+/// `p` must be valid for reads of one byte.
+pub unsafe fn peek(p: *const u8) -> u8 {
+    *p
+}
+
+// SAFETY: justification above attributes also counts.
+#[allow(dead_code)]
+unsafe fn attributed() {}
+
+/// A fn-pointer *type* is not an unsafe declaration.
+pub struct Table {
+    pub call: unsafe fn(*const u8) -> u8,
+}
+
+pub fn not_code() -> &'static str {
+    // The word below lives in a string literal, not in code.
+    "unsafe { ignored }"
+}

@@ -1,0 +1,10 @@
+// Positive cases for the `trace-names` checker. The fixture test runs
+// this against a synthetic registry containing only "registered_demo",
+// under a rust/src/ relative path.
+
+pub fn record_things(id: u64) {
+    crate::trace::instant(Cat::Sched, "registered_demo", id, 0, 0);
+    crate::trace::instant(Cat::Sched, "unregistered_demo", id, 0, 0); //~ expect: trace-names
+    let name = "dynamic";
+    let _s = crate::trace::span(Cat::Sched, name, id); //~ expect: trace-names
+}

@@ -1,0 +1,18 @@
+// Negative cases for the `trace-names` checker: a registered literal
+// name, a call in test code, and the pattern spelled inside a string.
+
+pub fn record_things(id: u64) {
+    crate::trace::instant(Cat::Sched, "registered_demo", id, 0, 0);
+}
+
+pub fn pattern_in_string() -> &'static str {
+    "trace::instant(Cat::Sched, \"unregistered_demo\", 0, 0, 0);"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_sites_are_exempt() {
+        crate::trace::instant(Cat::Sched, "test_only_name", 1, 0, 0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Self-hosting gate for `icquant lint` (DESIGN.md §13).
+//!
+//! Two layers:
+//!
+//! 1. `real_tree_is_lint_clean` runs the full pass over this repository
+//!    and asserts zero diagnostics — the same bar `ci.sh` enforces, so a
+//!    regression fails in `cargo test` before it fails in CI.
+//! 2. Fixture tests: each checker has a deliberately-bad and a
+//!    deliberately-clean snippet under `tests/lint_fixtures/` (a
+//!    directory the real walk skips). Expected diagnostics are marked
+//!    in-fixture with `//~ expect: <check>` trailing comments; the test
+//!    asserts the checker fires on exactly those lines and nowhere else.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use icquant::analysis::{self, checks, model::FileModel, Diagnostic};
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is rust/; the repo root is one level up.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent").to_path_buf()
+}
+
+#[test]
+fn real_tree_is_lint_clean() {
+    let report = analysis::lint(&repo_root()).expect("lint pass over the real tree");
+    assert!(report.files >= 30, "walker found only {} .rs files", report.files);
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.diagnostics.is_empty(),
+        "`icquant lint` must self-host at zero diagnostics; got {}:\n{}",
+        rendered.len(),
+        rendered.join("\n")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fixture harness
+// ---------------------------------------------------------------------------
+
+const MARKER: &str = "//~ expect: ";
+
+fn fixture(name: &str) -> String {
+    let path = repo_root().join("rust/tests/lint_fixtures").join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// Parse `//~ expect: <check>` markers into sorted (line, check) pairs.
+fn markers(src: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        if let Some(p) = line.find(MARKER) {
+            let check = line[p + MARKER.len()..]
+                .split_whitespace()
+                .next()
+                .expect("marker names a check")
+                .to_string();
+            out.push((i + 1, check));
+        }
+    }
+    out.sort();
+    out
+}
+
+fn got(diags: &[Diagnostic]) -> Vec<(usize, String)> {
+    let mut out: Vec<(usize, String)> =
+        diags.iter().map(|d| (d.line, d.check.to_string())).collect();
+    out.sort();
+    out
+}
+
+fn assert_matches_markers(name: &str, src: &str, diags: &[Diagnostic]) {
+    let rendered: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert_eq!(
+        got(diags),
+        markers(src),
+        "fixture {name}: diagnostics disagree with //~ markers; got:\n{}",
+        rendered.join("\n")
+    );
+}
+
+/// Drive the per-file checkers (safety / ordering / hot-path / panic)
+/// on a fixture, analyzed as if it lived at `rel`.
+fn check_per_file(name: &str, rel: &str) {
+    let src = fixture(name);
+    let diags = analysis::analyze_source(rel, &src);
+    assert_matches_markers(name, &src, &diags);
+}
+
+#[test]
+fn safety_checker_fires_and_stays_quiet() {
+    check_per_file("safety_bad.rs", "rust/src/lintfix/safety_bad.rs");
+    check_per_file("safety_ok.rs", "rust/src/lintfix/safety_ok.rs");
+}
+
+#[test]
+fn ordering_checker_fires_and_stays_quiet() {
+    check_per_file("ordering_bad.rs", "rust/src/lintfix/ordering_bad.rs");
+    check_per_file("ordering_ok.rs", "rust/src/lintfix/ordering_ok.rs");
+}
+
+#[test]
+fn hot_path_checker_fires_and_stays_quiet() {
+    check_per_file("hotpath_bad.rs", "rust/src/lintfix/hotpath_bad.rs");
+    check_per_file("hotpath_ok.rs", "rust/src/lintfix/hotpath_ok.rs");
+}
+
+#[test]
+fn panic_checker_fires_and_stays_quiet() {
+    // The panic policy only applies under coordinator/, kernels/, trace/.
+    check_per_file("panic_bad.rs", "rust/src/coordinator/panic_bad.rs");
+    check_per_file("panic_ok.rs", "rust/src/coordinator/panic_ok.rs");
+}
+
+#[test]
+fn panic_checker_is_scoped_to_policy_dirs() {
+    // The same bad source outside the scoped dirs produces nothing.
+    let src = fixture("panic_bad.rs");
+    let m = FileModel::build("rust/src/quant/panic_bad.rs", &src);
+    let mut diags = Vec::new();
+    checks::panic_policy(&m, &mut diags);
+    assert!(diags.is_empty(), "panic policy must not apply outside scoped dirs");
+}
+
+#[test]
+fn design_ref_checker_fires_and_stays_quiet() {
+    let sections: BTreeSet<u32> = [1u32, 2].into_iter().collect();
+    for name in ["design_bad.rs", "design_ok.rs"] {
+        let src = fixture(name);
+        let m = FileModel::build(&format!("rust/src/lintfix/{name}"), &src);
+        let mut diags = Vec::new();
+        checks::design_refs(&m, &sections, &mut diags);
+        assert_matches_markers(name, &src, &diags);
+    }
+}
+
+#[test]
+fn design_section_parser_reads_headers() {
+    let sections = checks::design_sections("## §1 A\ntext\n## §12 B\n");
+    assert_eq!(sections, [1u32, 12].into_iter().collect::<BTreeSet<u32>>());
+    // And the real DESIGN.md declares the section this pass documents.
+    let real = checks::design_sections(
+        &fs::read_to_string(repo_root().join("DESIGN.md")).expect("read DESIGN.md"),
+    );
+    assert!(real.contains(&13), "DESIGN.md must document the lint pass in §13");
+}
+
+#[test]
+fn trace_name_checker_fires_and_stays_quiet() {
+    let names_src = fixture("names_demo.rs");
+    let names = FileModel::build("rust/src/trace/names.rs", &names_src);
+    let mut registry_diags = Vec::new();
+    let registry: BTreeMap<String, usize> =
+        checks::trace_registry(&names, &mut registry_diags);
+    assert!(registry.contains_key("registered_demo"));
+
+    let mut used = BTreeSet::new();
+    for name in ["trace_bad.rs", "trace_ok.rs"] {
+        let src = fixture(name);
+        let m = FileModel::build(&format!("rust/src/lintfix/{name}"), &src);
+        let mut diags = Vec::new();
+        checks::trace_names(&m, &registry, &mut used, &mut diags);
+        assert_matches_markers(name, &src, &diags);
+    }
+
+    // Registry-level diagnostics (duplicate + never-recorded) line up with
+    // the markers in the registry fixture itself.
+    let mut unused_diags = Vec::new();
+    checks::trace_unused(&names, &registry, &used, &mut unused_diags);
+    let mut all = registry_diags;
+    all.extend(unused_diags);
+    assert_matches_markers("names_demo.rs", &names_src, &all);
+}
+
+#[test]
+fn trace_registry_consts_and_all_agree() {
+    // The lint checker parses the consts; `icquant trace-check` walks
+    // `ALL`. A const left out of `ALL` would split those two views.
+    let src = fs::read_to_string(repo_root().join("rust/src/trace/names.rs"))
+        .expect("read trace/names.rs");
+    let names = FileModel::build("rust/src/trace/names.rs", &src);
+    let mut diags = Vec::new();
+    let registry = checks::trace_registry(&names, &mut diags);
+    assert!(diags.is_empty(), "real registry has duplicates: {:?}", got(&diags));
+    assert_eq!(registry.len(), icquant::trace::names::ALL.len());
+    for name in registry.keys() {
+        assert!(icquant::trace::names::is_registered(name), "{name} missing from ALL");
+    }
+}
+
+#[test]
+fn bench_key_checker_joins_continuations() {
+    let bench_src = "fn main() { println!(\"{}\", \"present_key\"); }\n";
+    let bench = FileModel::build("rust/benches/demo.rs", bench_src);
+
+    // A key list wrapped with a backslash continuation: the missing key
+    // sits on the continued line and must still be attributed to the
+    // logical line's first physical line.
+    let ci = "for key in present_key \\\n    missing_key; do\n";
+    let mut diags = Vec::new();
+    checks::bench_keys("ci.sh", ci, &[&bench], &mut diags);
+    assert_eq!(diags.len(), 1, "exactly the missing key fires");
+    assert!(diags[0].message.contains("missing_key"), "{}", diags[0]);
+    assert_eq!(diags[0].line, 1, "diagnostic anchors at the logical line start");
+
+    let mut quiet = Vec::new();
+    checks::bench_keys("ci.sh", "for key in present_key; do\n", &[&bench], &mut quiet);
+    assert!(quiet.is_empty(), "present keys are quiet");
+}
