@@ -8,8 +8,15 @@ cd "$(dirname "$0")/rust"
 echo "=== cargo build --release ==="
 cargo build --release
 
-echo "=== cargo test -q ==="
-cargo test -q
+echo "=== cargo test -q (ICQ_SIMD=scalar: bit-identity reference tier) ==="
+# The scalar tier must reproduce the pre-SIMD kernels bit-exactly
+# (DESIGN.md §14), so the whole suite runs once pinned to it...
+ICQ_SIMD=scalar cargo test -q
+
+echo "=== cargo test -q (ICQ_SIMD=auto: detected vector tier) ==="
+# ...and once on the host's auto-detected tier, where the divergence
+# suite enforces the bounded-error contract on every vectorized loop.
+ICQ_SIMD=auto cargo test -q
 
 echo "=== icquant lint (in-tree static analysis, DESIGN.md section 13) ==="
 # Hard gate: SAFETY/ORDERING/PANIC justification coverage, hot-path
@@ -88,7 +95,8 @@ cargo bench --bench kernels
 test -f BENCH_kernels.json || { echo "FAIL: kernels bench wrote no BENCH_kernels.json" >&2; exit 1; }
 mv BENCH_kernels.json ../BENCH_kernels.json
 echo "recorded ../BENCH_kernels.json"
-for key in bytes_per_weight fused_vs_dequant_speedup plane_shrink_ratio_2bit pool_vs_spawn_speedup; do
+for key in bytes_per_weight fused_vs_dequant_speedup plane_shrink_ratio_2bit pool_vs_spawn_speedup \
+        simd_vs_scalar_speedup simd_tier int8_act_speedup; do
     grep -q "\"$key\"" ../BENCH_kernels.json \
         || { echo "FAIL: BENCH_kernels.json missing required key '$key'" >&2; exit 1; }
 done
@@ -145,6 +153,16 @@ TRACE_OUT_KV=$(mktemp -t icq_trace_kv4_XXXX.json)
     --requests 8 --batch 4 --tokens 8 --kv-bits 4 --trace-out "$TRACE_OUT_KV"
 ./target/release/icquant trace-check "$TRACE_OUT_KV"
 rm -f "$TRACE_OUT_KV"
+# SIMD-tier knobs (DESIGN.md §14): a pinned-scalar int8-activation serve
+# must complete and emit a valid trace carrying kernel_dispatch instants.
+TRACE_OUT_SIMD=$(mktemp -t icq_trace_simd_XXXX.json)
+./target/release/icquant serve --backend native --family llama3.2-1b \
+    --requests 8 --batch 4 --tokens 8 --simd scalar --act-quant int8 \
+    --trace-out "$TRACE_OUT_SIMD"
+./target/release/icquant trace-check "$TRACE_OUT_SIMD"
+grep -q '"kernel_dispatch"' "$TRACE_OUT_SIMD" \
+    || { echo "FAIL: serve trace carries no kernel_dispatch instants" >&2; exit 1; }
+rm -f "$TRACE_OUT_SIMD"
 
 echo "=== store bench → BENCH_store.json ==="
 # The bench binary writes BENCH_store.json into the working directory;

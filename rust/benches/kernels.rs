@@ -18,13 +18,21 @@
 //!   per-token overhead the pool removes.
 //! * **tokens/s**: a small native-model decode loop (every projection on
 //!   the pooled fused kernels), the serving-shaped figure of merit.
+//! * **SIMD tier vs scalar** (DESIGN.md §14): the same fused GEMV with
+//!   its inner loops dispatched on the auto-detected vector tier, plus
+//!   the int8-activation integer GEMV — recorded as
+//!   `simd_vs_scalar_speedup` / `simd_tier` / `int8_act_speedup`, with
+//!   the speedup hard-asserted ≥ 1.3× whenever a vector tier is active.
 //!
-//! Every compared pair is asserted bit-identical before timing.
+//! Every compared pair is asserted bit-identical before timing (the
+//! SIMD/int8 pairs instead satisfy the bounded-error divergence
+//! contract, property-tested in `tests/simd_divergence.rs`).
 
 use icquant::bench::{bench_throughput, black_box, BenchResult};
 use icquant::icquant::runtime::RuntimePlane;
 use icquant::icquant::{IcqConfig, IcqMatrix};
-use icquant::kernels::{available_threads, gemv, gemv_mt};
+use icquant::kernels::simd;
+use icquant::kernels::{available_threads, gemv, gemv_i8, gemv_mt, gemv_tier, Tier, TierPref};
 use icquant::quant::QuantizerKind;
 use icquant::store::{synth_model, DecodeCache, StoredModel};
 use icquant::synthzoo::FamilySpec;
@@ -447,6 +455,70 @@ fn main() {
         ("pool_vs_spawn_speedup", Json::num(pool_vs_spawn_speedup)),
     ]));
 
+    // SIMD tier vs scalar on the 2-bit plane (DESIGN.md §14): identical
+    // fused kernel, only the inner unpack/gather/accumulate dispatch
+    // differs. The divergence suite is the correctness gate; here the
+    // outputs are sanity-checked against the tier's bounded-error
+    // contract before timing.
+    let tier = simd::detect(TierPref::Auto);
+    let mut y_scalar = vec![0.0f32; ROWS];
+    let mut y_simd = vec![0.0f32; ROWS];
+    gemv(&rt, &x, &mut y_scalar);
+    gemv_tier(&rt, &x, &mut y_simd, tier);
+    for (r, (a, b)) in y_scalar.iter().zip(&y_simd).enumerate() {
+        let tol = 1e-4f32 * a.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "simd tier diverged at row {}: {} vs {} ({} tier)",
+            r,
+            a,
+            b,
+            tier.name()
+        );
+    }
+    let mut y = vec![0.0f32; ROWS];
+    let r_scalar = bench_throughput(
+        "kernels/gemv_2bit (scalar tier)",
+        300,
+        rt.memory_bytes() as u64,
+        || gemv_tier(black_box(&rt), black_box(&x), black_box(&mut y), Tier::Scalar),
+    );
+    println!("{}", r_scalar.report());
+    let r_simd = bench_throughput(
+        &format!("kernels/gemv_2bit ({} tier)", tier.name()),
+        300,
+        rt.memory_bytes() as u64,
+        || gemv_tier(black_box(&rt), black_box(&x), black_box(&mut y), tier),
+    );
+    println!("{}", r_simd.report());
+    let simd_vs_scalar_speedup = r_scalar.mean_ns / r_simd.mean_ns;
+    let r_i8 = bench_throughput(
+        &format!("kernels/gemv_i8_2bit ({} tier)", tier.name()),
+        300,
+        rt.memory_bytes() as u64,
+        || gemv_i8(black_box(&rt), black_box(&x), black_box(&mut y), tier),
+    );
+    println!("{}", r_i8.report());
+    let int8_act_speedup = r_scalar.mean_ns / r_i8.mean_ns;
+    println!(
+        "\nSIMD tier: {} | vs scalar {:.2}x | int8 activations {:.2}x",
+        tier.name(),
+        simd_vs_scalar_speedup,
+        int8_act_speedup
+    );
+    if tier != Tier::Scalar {
+        // Acceptance gate: an active vector tier must actually pay.
+        assert!(
+            simd_vs_scalar_speedup >= 1.3,
+            "active SIMD tier ({}) must be ≥1.3x over scalar, got {:.2}x",
+            tier.name(),
+            simd_vs_scalar_speedup
+        );
+    }
+    results.push(r_scalar);
+    results.push(r_simd);
+    results.push(r_i8);
+
     let tokens_per_s = native_tokens_per_s();
     println!("native decode loop: {:.1} tokens/s (tiny model, pooled kernels)", tokens_per_s);
 
@@ -461,6 +533,9 @@ fn main() {
         ("packed_vs_byte_speedup", Json::num(packed_vs_byte_speedup_2bit)),
         ("plane_shrink_ratio_2bit", Json::num(plane_shrink_ratio_2bit)),
         ("pool_vs_spawn_speedup", Json::num(pool_vs_spawn_speedup)),
+        ("simd_vs_scalar_speedup", Json::num(simd_vs_scalar_speedup)),
+        ("simd_tier", Json::str(tier.name())),
+        ("int8_act_speedup", Json::num(int8_act_speedup)),
         ("tokens_per_s_native", Json::num(tokens_per_s)),
         ("footprints", Json::arr(footprints)),
         ("thread_scaling", Json::arr(scaling)),

@@ -22,6 +22,7 @@ pub mod serve_demo;
 
 use crate::experiments;
 use crate::icquant::{packed, IcqConfig, IcqMatrix};
+use crate::kernels::simd::{self, ActQuant, TierPref};
 use crate::quant::QuantizerKind;
 use crate::store::{self, container, Registry};
 use anyhow::{bail, Context, Result};
@@ -143,6 +144,7 @@ fn print_help() {
     println!("  serve [--requests n] [--batch n] [--tokens n] [--quantized]");
     println!("        [--backend pjrt|native] [--family f] [--bits n]");
     println!("        [--threads t] [--block-size b] [--kv-bits 4|8|off]");
+    println!("        [--simd auto|scalar|avx2|neon] [--act-quant f32|int8]");
     println!("        [--trace-out f.json]");
     println!("                                batched serving demo;");
     println!("                                pjrt = AOT HLO (needs artifacts),");
@@ -151,6 +153,10 @@ fn print_help() {
     println!("                                --kv-bits quantizes filled KV blocks");
     println!("                                in place with ICQ index coding");
     println!("                                (off = full f32, the default);");
+    println!("                                --simd pins the kernel tier (default:");
+    println!("                                ICQ_SIMD, else auto-detect);");
+    println!("                                --act-quant int8 quantizes decode");
+    println!("                                activations for the integer GEMV;");
     println!("                                --trace-out writes a Chrome/Perfetto");
     println!("                                trace of the run");
     println!("  trace-check <trace.json>      validate an emitted trace (schema,");
@@ -512,6 +518,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "8" => Some(8),
         other => bail!("unknown --kv-bits '{}' (expected 4|8|off)", other),
     };
+    // SIMD kernel tier (native backend; DESIGN.md §14). The flag
+    // outranks `ICQ_SIMD`; with neither, auto-detect.
+    let simd_pref = match args.flag("simd") {
+        None => simd::env_pref(),
+        Some(s) => match TierPref::parse(s) {
+            Some(p) => p,
+            None => bail!("unknown --simd '{}' (expected auto|scalar|avx2|neon)", s),
+        },
+    };
+    let act_quant = match args.flag("act-quant").unwrap_or("f32") {
+        "f32" | "off" => ActQuant::F32,
+        "int8" => ActQuant::Int8,
+        other => bail!("unknown --act-quant '{}' (expected f32|int8)", other),
+    };
     match args.flag("backend").unwrap_or("pjrt") {
         "pjrt" => serve_demo::run(
             n_requests,
@@ -529,6 +549,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_flag("threads", 0)?, // 0 ⇒ all cores
             args.usize_flag("block-size", 0)?, // 0 ⇒ default KV block size
             kv_bits,
+            simd_pref,
+            act_quant,
             trace_out,
         ),
         other => bail!("unknown backend '{}' (expected pjrt|native)", other),

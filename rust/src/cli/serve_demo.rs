@@ -16,7 +16,8 @@ use crate::coordinator::{SchedulerKind, ServeConfig, Server};
 use crate::eval::load_corpus_tokens;
 use crate::experiments::methods::Method;
 use crate::icquant::IcqConfig;
-use crate::kernels::{KvLayout, NativeModel, DEFAULT_BLOCK_TOKENS};
+use crate::kernels::simd;
+use crate::kernels::{ActQuant, KvLayout, NativeModel, TierPref, DEFAULT_BLOCK_TOKENS};
 use crate::model::{artifacts_dir, TrainedModel};
 use crate::quant::QuantizerKind;
 use crate::store::{synth_model, DecodeCache, StoredModel};
@@ -58,6 +59,8 @@ pub fn run_native(
     threads: usize,
     block_tokens: usize,
     kv_bits: Option<u32>,
+    simd_pref: TierPref,
+    act_quant: ActQuant,
     trace_out: Option<&str>,
 ) -> Result<()> {
     let family = crate::synthzoo::family(family_name).ok_or_else(|| {
@@ -75,7 +78,10 @@ pub fn run_native(
     let stored = StoredModel::from_model(model, cache.clone(), "serve-native");
     // Built on the main thread for the footprint report; the planes it
     // decodes are shared with the worker through the cache.
-    let native = NativeModel::from_stored(&stored, threads)?;
+    let tier = simd::detect(simd_pref);
+    let native = NativeModel::from_stored(&stored, threads)?
+        .with_simd(tier)
+        .with_act_quant(act_quant);
     let threads = native.threads();
     println!(
         "native model [{}]: {} blocks, d={} | quantized in {:.2}s",
@@ -93,6 +99,11 @@ pub fn run_native(
     println!(
         "  kernel pool          : {} executors (persistent, parked between tokens) | backend: native fused GEMM (no PJRT)",
         threads
+    );
+    println!(
+        "  kernel tier          : {} SIMD dispatch, {} activations (DESIGN.md §14)",
+        tier.name(),
+        act_quant.name()
     );
     let kv_layout = KvLayout {
         block_tokens: if block_tokens == 0 { DEFAULT_BLOCK_TOKENS } else { block_tokens },
@@ -132,6 +143,7 @@ pub fn run_native(
     trace_setup(trace_out);
     let server =
         Server::start(cfg, move || Ok(NativeBackend::new(native).with_kv_layout(kv_layout)));
+    server.metrics.set_kernel_dispatch(tier.name(), act_quant.name());
 
     // Workload: synthetic printable-byte prompts (byte-level vocab)
     // behind one shared "system prompt" prefix — the scenario the paged
@@ -166,6 +178,8 @@ pub fn run_native(
         snap.batches, snap.avg_batch_size, snap.avg_bucket);
     println!("decode steps           : {} (avg {:.2} active slots)",
         snap.decode_steps, snap.avg_active_slots);
+    println!("kernel dispatch        : {} tier, {} activations",
+        snap.kernel_tier, snap.act_quant);
     println!("avg prefill latency    : {:.1} ms", snap.avg_prefill_ms);
     println!("avg time-to-1st-token  : {:.1} ms", snap.avg_ttft_ms);
     println!("avg decode per token   : {:.1} ms", snap.avg_decode_ms_per_token);

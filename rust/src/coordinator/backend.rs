@@ -21,7 +21,7 @@
 //! tests; [`SimBackend`] adds a simulated per-slot step cost so benches
 //! can compare scheduler policies on one machine.
 
-use crate::kernels::{KvCache, KvCacheStats, KvLayout, NativeModel, WorkerPool};
+use crate::kernels::{ActQuant, KvCache, KvCacheStats, KvLayout, NativeModel, Tier, WorkerPool};
 use crate::model::TrainedModel;
 use crate::trace::{self, Cat};
 use crate::runtime::{Engine, HostTensor};
@@ -441,6 +441,21 @@ impl NativeBackend {
         self
     }
 
+    /// Pin the SIMD kernel tier (DESIGN.md §14) for the model's fused
+    /// kernels and for every paged cache this backend creates.
+    pub fn with_simd(mut self, tier: Tier) -> NativeBackend {
+        self.model.set_simd(tier);
+        self
+    }
+
+    /// Select the activation-quantization mode for decode projections
+    /// (`ActQuant::Int8` routes single-token GEMVs through the integer
+    /// inner product; DESIGN.md §14).
+    pub fn with_act_quant(mut self, act: ActQuant) -> NativeBackend {
+        self.model.set_act_quant(act);
+        self
+    }
+
     /// The paged-cache layout new decode states are built with.
     pub fn kv_layout(&self) -> KvLayout {
         self.layout
@@ -484,8 +499,11 @@ impl Backend for NativeBackend {
     fn new_state(&mut self, cap: usize) -> Result<DecodeState> {
         ensure!(cap > 0, "state needs at least one slot");
         let mut state = DecodeState::empty(cap);
-        state.kv =
-            KvState::Native(KvCache::with_layout(&self.model.config, cap, self.layout));
+        let mut kv = KvCache::with_layout(&self.model.config, cap, self.layout);
+        // The cache's dequant fill must run on the same tier the model
+        // resolved (a `--simd` override outranks `ICQ_SIMD`).
+        kv.set_simd(self.model.simd_tier());
+        state.kv = KvState::Native(kv);
         Ok(state)
     }
 
@@ -607,6 +625,13 @@ impl Backend for NativeBackend {
         let slots = state.active_slots();
         ensure!(!slots.is_empty(), "decode with no active slots");
         let _sp = trace::span_args(Cat::Sched, "backend_decode", 0, slots.len() as i64, 0);
+        trace::instant(
+            Cat::Sched,
+            "kernel_dispatch",
+            0,
+            self.model.simd_tier().id() as i64,
+            (self.model.act_quant() == ActQuant::Int8) as i64,
+        );
         let mut kv = match std::mem::replace(&mut state.kv, KvState::None) {
             KvState::Native(kv) => kv,
             _ => bail!("kv state missing or not a native payload"),

@@ -122,6 +122,10 @@ struct Inner {
     /// divided by the latest total would be meaningless (even > 1).
     block_utilization_peak: f64,
     kv_total_blocks: usize,
+    /// Active kernel tier / activation-quant mode (DESIGN.md §14),
+    /// reported once by the serving entry point; `""` until set.
+    kernel_tier: &'static str,
+    act_quant: &'static str,
 }
 
 impl Default for Inner {
@@ -146,6 +150,8 @@ impl Default for Inner {
             blocks_in_use_peak: 0,
             block_utilization_peak: 0.0,
             kv_total_blocks: 0,
+            kernel_tier: "",
+            act_quant: "",
         }
     }
 }
@@ -210,6 +216,11 @@ pub struct Snapshot {
     /// Logical resident KV bytes of the latest epoch: quantized payload
     /// plus full f32 cost of unquantized blocks (gauge).
     pub kv_resident_bytes: usize,
+    /// Resolved SIMD kernel tier (`"scalar"`/`"avx2"`/`"neon"`;
+    /// DESIGN.md §14) and activation-quant mode (`"f32"`/`"int8"`)
+    /// serving the fused kernels; `""` until the entry point reports.
+    pub kernel_tier: &'static str,
+    pub act_quant: &'static str,
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
     /// Latencies observed / currently held in the reservoir.
@@ -284,6 +295,16 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Report the kernel tier and activation-quant mode the serving
+    /// backend resolved (DESIGN.md §14). Called once at startup; the
+    /// names come from [`Tier::name`](crate::kernels::Tier::name) and
+    /// [`ActQuant::name`](crate::kernels::ActQuant::name).
+    pub fn set_kernel_dispatch(&self, tier: &'static str, act_quant: &'static str) {
+        let mut m = self.inner.lock().unwrap();
+        m.kernel_tier = tier;
+        m.act_quant = act_quant;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lat = m.latencies.samples.clone();
@@ -315,6 +336,8 @@ impl Metrics {
             dequant_scratch_hits: m.kv_base.dequant_scratch_hits
                 + m.kv_last.dequant_scratch_hits,
             kv_resident_bytes: m.kv_last.kv_resident_bytes,
+            kernel_tier: m.kernel_tier,
+            act_quant: m.act_quant,
             p50_latency_ms: percentile(&lat, 0.5),
             p99_latency_ms: percentile(&lat, 0.99),
             latencies_seen: m.latencies.seen,

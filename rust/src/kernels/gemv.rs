@@ -37,10 +37,22 @@
 //! chunk, so the bit-identity contract survives pooling unchanged; a
 //! panicking chunk is re-raised with its failing row range in the
 //! message instead of poisoning the region with a bare join.
+//!
+//! SIMD tier (DESIGN.md §14): every kernel exists in the plain form
+//! above (the scalar reference — the historical entry points are
+//! unchanged and stay bit-identical) and a `*_tier` form taking a
+//! resolved [`Tier`]. The BLOCK staging loop is shared
+//! (`for_each_block`), so the tier dispatches in exactly one place;
+//! [`Tier::Scalar`] routes through the same scalar bodies as the plain
+//! entry points, and vector tiers carry the bounded-error contract
+//! enforced by `tests/simd_divergence.rs`. [`gemv_i8`]/[`gemv_i8_on`]
+//! are the opt-in int8-activation form of the GEMV
+//! (`--act-quant=int8`).
 
 use crate::bitstream::unpack_aligned_u8;
 use crate::icquant::runtime::RuntimePlane;
 use crate::kernels::pool::{self, PoolPanic, WorkerPool};
+use crate::kernels::simd::{self, Tier};
 use crate::util::tensor::Matrix;
 
 /// Codes decoded per gather block. Sized so the staged codes + levels
@@ -53,9 +65,49 @@ const BLOCK: usize = 512;
 /// Bit-identical to `plane.dequantize()` then dense matvec (same
 /// accumulation order, see module docs).
 pub fn gemv(plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
+    gemv_tier(plane, x, y, Tier::Scalar)
+}
+
+/// Tier-dispatched fused GEMV: [`gemv`] with the inner loops routed
+/// through the resolved SIMD [`Tier`]. `Tier::Scalar` is bit-identical
+/// to [`gemv`]; vector tiers are bounded by the divergence contract
+/// (DESIGN.md §14).
+pub fn gemv_tier(plane: &RuntimePlane, x: &[f32], y: &mut [f32], tier: Tier) {
     assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
     assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
-    gemv_rows(plane, x, 0, y);
+    gemv_rows_tier(plane, x, 0, y, tier);
+}
+
+/// Drive `consume(c0, levels)` over every decoded BLOCK of weight row
+/// `r` — the single staging loop all fused kernels share, and the SIMD
+/// tier's one integration point. BLOCK-aligned offsets start on byte
+/// boundaries, so each block is a pure byte-window unpack; the decoded
+/// levels are bit-identical in every tier (only downstream
+/// accumulation differs). `codes`/`levels` are caller-owned stack
+/// scratch so row loops reuse them without reallocation.
+// lint: hot-path
+#[inline(always)]
+fn for_each_block(
+    plane: &RuntimePlane,
+    r: usize,
+    tier: Tier,
+    codes: &mut [u8; BLOCK],
+    levels: &mut [f32; BLOCK],
+    mut consume: impl FnMut(usize, &[f32]),
+) {
+    let cols = plane.cols;
+    let width = plane.width();
+    let wbits = width as usize;
+    let cb = plane.codebook(r);
+    let bytes = plane.row_bytes(r);
+    let mut c0 = 0usize;
+    while c0 < cols {
+        let len = BLOCK.min(cols - c0);
+        let src = &bytes[c0 * wbits / 8..];
+        simd::unpack_gather(tier, src, width, cb, &mut codes[..len], &mut levels[..len]);
+        consume(c0, &levels[..len]);
+        c0 += len;
+    }
 }
 
 /// Fused GEMV over the row range `[row0, row0 + y.len())` — the unit the
@@ -65,33 +117,23 @@ pub fn gemv(plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
 // lint: hot-path
 #[doc(hidden)]
 pub fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
-    let cols = plane.cols;
-    let width = plane.width();
-    let wbits = width as usize;
+    gemv_rows_tier(plane, x, row0, y, Tier::Scalar)
+}
+
+/// [`gemv_rows`] with the inner loops dispatched on `tier`. The f32
+/// accumulator is carried **across** blocks ([`simd::dot_acc`]), which
+/// is what keeps the scalar tier bit-identical to the dense reference:
+/// a per-block dot-from-zero would reassociate the sum.
+// lint: hot-path
+fn gemv_rows_tier(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32], tier: Tier) {
     let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for (i, out) in y.iter_mut().enumerate() {
         let r = row0 + i;
-        let cb = plane.codebook(r);
-        let bytes = plane.row_bytes(r);
         let mut acc = 0.0f32;
-        let mut c0 = 0usize;
-        while c0 < cols {
-            let len = BLOCK.min(cols - c0);
-            // Unpack pass: BLOCK-aligned offsets start on byte
-            // boundaries, so this is a pure byte-window walk.
-            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
-            // Gather pass: LUT lookups only (codebook stays hot in L1).
-            for (l, &code) in levels[..len].iter_mut().zip(&codes[..len]) {
-                *l = cb[code as usize];
-            }
-            // Accumulate pass: sequential, single accumulator — the
-            // order [`Matrix::matmul`] uses, so bits match.
-            for (l, xv) in levels[..len].iter().zip(&x[c0..c0 + len]) {
-                acc += *l * *xv;
-            }
-            c0 += len;
-        }
+        for_each_block(plane, r, tier, &mut codes, &mut levels, |c0, lv| {
+            acc = simd::dot_acc(tier, acc, lv, &x[c0..c0 + lv.len()]);
+        });
         *out = acc;
     }
 }
@@ -100,12 +142,20 @@ pub fn gemv_rows(plane: &RuntimePlane, x: &[f32], row0: usize, y: &mut [f32]) {
 /// chunks, partitioned `threads` ways. `threads ≤ 1` (or a single-chunk
 /// split) runs inline.
 pub fn gemv_mt(plane: &RuntimePlane, x: &[f32], y: &mut [f32], threads: usize) {
-    gemv_chunked(pool::global(), plane, x, y, threads)
+    gemv_chunked(pool::global(), plane, x, y, threads, Tier::Scalar)
 }
 
 /// [`gemv_mt`] on an explicit pool, partitioned to the pool's width.
 pub fn gemv_on(pool: &WorkerPool, plane: &RuntimePlane, x: &[f32], y: &mut [f32]) {
-    gemv_chunked(pool, plane, x, y, pool.threads())
+    gemv_chunked(pool, plane, x, y, pool.threads(), Tier::Scalar)
+}
+
+/// [`gemv_on`] dispatched on `tier`. Chunking never changes the result
+/// within a tier: each output element is produced by one chunk with the
+/// tier's fixed reduction tree, so pooled output is bit-identical to
+/// [`gemv_tier`] at any worker count.
+pub fn gemv_on_tier(pool: &WorkerPool, plane: &RuntimePlane, x: &[f32], y: &mut [f32], tier: Tier) {
+    gemv_chunked(pool, plane, x, y, pool.threads(), tier)
 }
 
 fn gemv_chunked(
@@ -114,19 +164,93 @@ fn gemv_chunked(
     x: &[f32],
     y: &mut [f32],
     threads: usize,
+    tier: Tier,
 ) {
     assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
     assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
     let threads = threads.max(1).min(plane.rows.max(1));
     if threads == 1 {
-        return gemv_rows(plane, x, 0, y);
+        return gemv_rows_tier(plane, x, 0, y, tier);
     }
     let chunk = plane.rows.div_ceil(threads);
     let rows = plane.rows;
-    if let Err(p) =
-        pool.try_for_chunks_mut(y, chunk, |ti, ychunk| gemv_rows(plane, x, ti * chunk, ychunk))
-    {
+    if let Err(p) = pool.try_for_chunks_mut(y, chunk, |ti, ychunk| {
+        gemv_rows_tier(plane, x, ti * chunk, ychunk, tier)
+    }) {
         panic_with_rows("fused GEMV", "output rows", p, chunk, rows);
+    }
+}
+
+/// Fused GEMV with int8-quantized activations (`--act-quant=int8`,
+/// DESIGN.md §14): activations get one per-call absmax i8 scale, each
+/// row's codebook an absmax i8 scale, and the inner product runs in
+/// integers. Integer accumulation is exact, so the result is identical
+/// across tiers; error vs the f32 path is bounded by the two
+/// quantization steps (see `tests/simd_divergence.rs`).
+pub fn gemv_i8(plane: &RuntimePlane, x: &[f32], y: &mut [f32], tier: Tier) {
+    assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
+    assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
+    let mut xq = Vec::new();
+    let x_scale = simd::quantize_activations(x, &mut xq);
+    gemv_rows_i8(plane, &xq, x_scale, 0, y, tier);
+}
+
+/// [`gemv_i8`] on an explicit pool, row-partitioned like [`gemv_on`].
+/// Activations are quantized once, before the fan-out.
+pub fn gemv_i8_on(pool: &WorkerPool, plane: &RuntimePlane, x: &[f32], y: &mut [f32], tier: Tier) {
+    assert_eq!(x.len(), plane.cols, "x length must equal plane cols");
+    assert_eq!(y.len(), plane.rows, "y length must equal plane rows");
+    let mut xq = Vec::new();
+    let x_scale = simd::quantize_activations(x, &mut xq);
+    let threads = pool.threads().max(1).min(plane.rows.max(1));
+    if threads == 1 {
+        return gemv_rows_i8(plane, &xq, x_scale, 0, y, tier);
+    }
+    let chunk = plane.rows.div_ceil(threads);
+    let rows = plane.rows;
+    let xq = &xq;
+    if let Err(p) = pool.try_for_chunks_mut(y, chunk, |ti, ychunk| {
+        gemv_rows_i8(plane, xq, x_scale, ti * chunk, ychunk, tier)
+    }) {
+        panic_with_rows("int8 fused GEMV", "output rows", p, chunk, rows);
+    }
+}
+
+/// Int8 GEMV over the row range `[row0, row0 + y.len())`: unpack codes,
+/// gather i8 levels from the row's quantized codebook, integer inner
+/// product per block (≤ 512·127² per block keeps the i32 lanes exact),
+/// i64 accumulate across blocks, one f64 rescale at the end (an i64
+/// magnitude can exceed f32's 2²⁴ integer range).
+// lint: hot-path
+fn gemv_rows_i8(
+    plane: &RuntimePlane,
+    xq: &[i8],
+    x_scale: f32,
+    row0: usize,
+    y: &mut [f32],
+    tier: Tier,
+) {
+    let cols = plane.cols;
+    let width = plane.width();
+    let wbits = width as usize;
+    let entries = 1usize << width;
+    let mut codes = [0u8; BLOCK];
+    let mut li8 = [0i8; BLOCK];
+    let mut cb_i8 = [0i8; 256];
+    for (i, out) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let cb_scale = simd::quantize_codebook(plane.codebook(r), &mut cb_i8);
+        let bytes = plane.row_bytes(r);
+        let mut acc = 0i64;
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let len = BLOCK.min(cols - c0);
+            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
+            simd::gather_i8(tier, &codes[..len], &cb_i8, entries, &mut li8[..len]);
+            acc += simd::dot_i8(tier, &li8[..len], &xq[c0..c0 + len]) as i64;
+            c0 += len;
+        }
+        *out = (acc as f64 * cb_scale as f64 * x_scale as f64) as f32;
     }
 }
 
@@ -154,9 +278,15 @@ fn panic_with_rows(kernel: &str, what: &str, p: PoolPanic, chunk: usize, total: 
 /// column order with a single accumulator (bit-identical to the dense
 /// path).
 pub fn gemm(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
+    gemm_tier(plane, x, y, Tier::Scalar)
+}
+
+/// Tier-dispatched fused GEMM: [`gemm`] with the inner loops routed
+/// through the resolved SIMD [`Tier`] (same contract as [`gemv_tier`]).
+pub fn gemm_tier(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix, tier: Tier) {
     assert_eq!(x.cols, plane.cols, "x cols must equal plane cols");
     assert_eq!((y.rows, y.cols), (x.rows, plane.rows), "y must be (m × rows)");
-    gemm_slice(plane, x, 0, x.rows, &mut y.data);
+    gemm_slice(plane, x, 0, x.rows, &mut y.data, tier);
 }
 
 /// Multi-threaded fused GEMM on the process-global pool. `y` is
@@ -169,13 +299,19 @@ pub fn gemm(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
 /// contiguous *weight-row* bands instead, each computing a column band
 /// of `y` into a private buffer that is stitched afterwards.
 pub fn gemm_mt(plane: &RuntimePlane, x: &Matrix, y: &mut Matrix, threads: usize) {
-    gemm_chunked(pool::global(), plane, x, y, threads)
+    gemm_chunked(pool::global(), plane, x, y, threads, Tier::Scalar)
 }
 
 /// [`gemm_mt`] on an explicit pool, partitioned to the pool's width —
 /// the per-token serving entry ([`crate::kernels::NativeModel`]).
 pub fn gemm_on(pool: &WorkerPool, plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
-    gemm_chunked(pool, plane, x, y, pool.threads())
+    gemm_chunked(pool, plane, x, y, pool.threads(), Tier::Scalar)
+}
+
+/// [`gemm_on`] dispatched on `tier` — what
+/// [`crate::kernels::NativeModel`] routes every projection through.
+pub fn gemm_on_tier(pool: &WorkerPool, plane: &RuntimePlane, x: &Matrix, y: &mut Matrix, t: Tier) {
+    gemm_chunked(pool, plane, x, y, pool.threads(), t)
 }
 
 fn gemm_chunked(
@@ -184,20 +320,21 @@ fn gemm_chunked(
     x: &Matrix,
     y: &mut Matrix,
     threads: usize,
+    tier: Tier,
 ) {
     assert_eq!(x.cols, plane.cols, "x cols must equal plane cols");
     assert_eq!((y.rows, y.cols), (x.rows, plane.rows), "y must be (m × rows)");
     let threads = threads.max(1);
     let m = x.rows;
     if threads == 1 || m == 0 {
-        return gemm_slice(plane, x, 0, m, &mut y.data);
+        return gemm_slice(plane, x, 0, m, &mut y.data, tier);
     }
     let rows_w = plane.rows;
     if m >= threads {
         let chunk = m.div_ceil(threads);
         if let Err(p) = pool.try_for_chunks_mut(&mut y.data, chunk * rows_w, |ti, yslice| {
             let mc = yslice.len() / rows_w;
-            gemm_slice(plane, x, ti * chunk, mc, yslice);
+            gemm_slice(plane, x, ti * chunk, mc, yslice, tier);
         }) {
             panic_with_rows("fused GEMM", "activation rows", p, chunk, m);
         }
@@ -206,7 +343,7 @@ fn gemm_chunked(
     // Batch smaller than the executor count: band over weight rows.
     let t = threads.min(rows_w);
     if t <= 1 {
-        return gemm_slice(plane, x, 0, m, &mut y.data);
+        return gemm_slice(plane, x, 0, m, &mut y.data, tier);
     }
     let chunk = rows_w.div_ceil(t);
     let n_bands = rows_w.div_ceil(chunk);
@@ -219,7 +356,7 @@ fn gemm_chunked(
     if let Err(p) = pool.try_for_chunks_mut(&mut flat, stride, |ti, band| {
         let r0 = ti * chunk;
         let r1 = ((ti + 1) * chunk).min(rows_w);
-        gemm_band_into(plane, x, r0, r1, &mut band[..m * (r1 - r0)]);
+        gemm_band_into(plane, x, r0, r1, &mut band[..m * (r1 - r0)], tier);
     }) {
         // One panicking band must not poison the forward anonymously:
         // name the weight-row range it owned.
@@ -239,49 +376,38 @@ fn gemm_chunked(
 /// Fused GEMM over activation rows `i0..i0+m` of `x`, writing `y` (the
 /// matching `m × plane.rows` row-major output slice; overwritten).
 // lint: hot-path
-fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f32]) {
+fn gemm_slice(plane: &RuntimePlane, x: &Matrix, i0: usize, m: usize, y: &mut [f32], tier: Tier) {
     debug_assert_eq!(y.len(), m * plane.rows);
-    let cols = plane.cols;
     let rows_w = plane.rows;
-    let width = plane.width();
-    let wbits = width as usize;
     for v in y.iter_mut() {
         *v = 0.0;
     }
     let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for r in 0..rows_w {
-        let cb = plane.codebook(r);
-        let bytes = plane.row_bytes(r);
-        let mut c0 = 0usize;
-        while c0 < cols {
-            let len = BLOCK.min(cols - c0);
-            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
-            for (l, &code) in levels[..len].iter_mut().zip(&codes[..len]) {
-                *l = cb[code as usize];
-            }
+        for_each_block(plane, r, tier, &mut codes, &mut levels, |c0, lv| {
             for i in 0..m {
-                let xrow = &x.row(i0 + i)[c0..c0 + len];
+                let xrow = &x.row(i0 + i)[c0..c0 + lv.len()];
                 let cell = &mut y[i * rows_w + r];
-                let mut acc = *cell;
-                for (l, xv) in levels[..len].iter().zip(xrow) {
-                    acc += *l * *xv;
-                }
-                *cell = acc;
+                *cell = simd::dot_acc(tier, *cell, lv, xrow);
             }
-            c0 += len;
-        }
+        });
     }
 }
 
 /// Fused GEMM restricted to weight rows `r0..r1`, overwriting `band`
 /// (exactly `m × (r1-r0)`, row-major) with the column band of `y`, each
 /// element accumulated in column order by one chunk (the bit-identity
-/// contract holds).
-fn gemm_band_into(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize, band: &mut [f32]) {
-    let cols = plane.cols;
-    let width = plane.width();
-    let wbits = width as usize;
+/// contract holds per tier).
+// lint: hot-path
+fn gemm_band_into(
+    plane: &RuntimePlane,
+    x: &Matrix,
+    r0: usize,
+    r1: usize,
+    band: &mut [f32],
+    tier: Tier,
+) {
     let m = x.rows;
     let bw = r1 - r0;
     debug_assert_eq!(band.len(), m * bw);
@@ -291,26 +417,13 @@ fn gemm_band_into(plane: &RuntimePlane, x: &Matrix, r0: usize, r1: usize, band: 
     let mut codes = [0u8; BLOCK];
     let mut levels = [0.0f32; BLOCK];
     for r in r0..r1 {
-        let cb = plane.codebook(r);
-        let bytes = plane.row_bytes(r);
-        let mut c0 = 0usize;
-        while c0 < cols {
-            let len = BLOCK.min(cols - c0);
-            unpack_aligned_u8(&bytes[c0 * wbits / 8..], width, &mut codes[..len]);
-            for (l, &code) in levels[..len].iter_mut().zip(&codes[..len]) {
-                *l = cb[code as usize];
-            }
+        for_each_block(plane, r, tier, &mut codes, &mut levels, |c0, lv| {
             for i in 0..m {
-                let xrow = &x.row(i)[c0..c0 + len];
+                let xrow = &x.row(i)[c0..c0 + lv.len()];
                 let cell = &mut band[i * bw + (r - r0)];
-                let mut acc = *cell;
-                for (l, xv) in levels[..len].iter().zip(xrow) {
-                    acc += *l * *xv;
-                }
-                *cell = acc;
+                *cell = simd::dot_acc(tier, *cell, lv, xrow);
             }
-            c0 += len;
-        }
+        });
     }
 }
 

@@ -32,13 +32,24 @@
 //! tests in `tests/kernels_prop.rs`), at any pool width; `benches/
 //! kernels.rs` records the packed-vs-byte and pool-vs-spawn wins as
 //! `BENCH_kernels.json`.
+//!
+//! * [`simd`] — the runtime-dispatched SIMD tier (DESIGN.md §14): the
+//!   plain entry points above stay on the scalar bit-identity
+//!   reference, while the `*_tier` forms ([`gemv_tier`], [`gemm_tier`],
+//!   [`gemv_on_tier`], [`gemm_on_tier`]) and the int8-activation GEMV
+//!   ([`gemv_i8`], [`gemv_i8_on`]) dispatch their inner loops on a
+//!   resolved [`Tier`] under a bounded-error divergence contract
+//!   (`tests/simd_divergence.rs`).
 
 mod gemv;
 pub mod model;
 pub mod pool;
+pub mod simd;
 
 pub use gemv::{gemm, gemm_mt, gemm_on, gemv, gemv_mt, gemv_on};
+pub use gemv::{gemm_on_tier, gemm_tier, gemv_i8, gemv_i8_on, gemv_on_tier, gemv_tier};
 #[doc(hidden)]
 pub use gemv::gemv_rows;
 pub use model::{KvCache, KvCacheStats, KvLayout, NativeModel, DEFAULT_BLOCK_TOKENS};
 pub use pool::{available_threads, PoolPanic, WorkerPool};
+pub use simd::{ActQuant, Tier, TierPref};

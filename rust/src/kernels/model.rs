@@ -4,11 +4,16 @@
 //! [`NativeModel`] mirrors the Llama-mini architecture the python side
 //! AOT-compiles (`python/compile/model.py`: RMSNorm → RoPE multi-head
 //! attention → RMSNorm → SwiGLU, byte vocab), but every projection is a
-//! fused [`gemm_on`](crate::kernels::gemm_on) **straight off the
-//! bit-packed quantized [`RuntimePlane`]**, dispatched onto the model's
-//! persistent [`WorkerPool`] — no f32 weight plane ever exists and no
-//! thread is spawned at request time. Dense side tensors (embeddings,
-//! norms, `lm_head`) stay f32; they are <2 % of the weight bytes.
+//! fused [`gemm_on_tier`](crate::kernels::gemm_on_tier) **straight off
+//! the bit-packed quantized [`RuntimePlane`]**, dispatched onto the
+//! model's persistent [`WorkerPool`] on the model's resolved SIMD
+//! [`Tier`] (DESIGN.md §14) — no f32 weight plane ever exists and no
+//! thread is spawned at request time. The attention dot-products,
+//! weighted-value accumulation, and KV dequant fill route through the
+//! same tier; with [`ActQuant::Int8`] the single-token decode
+//! projections take the int8-activation GEMV instead. Dense side
+//! tensors (embeddings, norms, `lm_head`) stay f32; they are <2 % of
+//! the weight bytes.
 //!
 //! The KV cache is **paged** (DESIGN.md §10): storage is a pool of
 //! fixed-size token blocks, each slot walks a per-slot **block table**,
@@ -34,7 +39,8 @@
 use crate::coordinator::backend::argmax_rows;
 use crate::icq::RowIndexCode;
 use crate::icquant::runtime::RuntimePlane;
-use crate::kernels::{gemm_on, WorkerPool};
+use crate::kernels::simd::{self, ActQuant, Tier};
+use crate::kernels::{gemm_on_tier, gemv_i8_on, WorkerPool};
 use crate::model::ModelConfig;
 use crate::quant::rtn::fit_rtn_range;
 use crate::store::StoredModel;
@@ -321,23 +327,40 @@ fn quantize_plane(src: &[f32], n_heads: usize, bt: usize, hd: usize, bits: u32) 
 /// Decode one quantized plane back into `[H, block_tokens, hd]` f32.
 /// The grid mirrors [`fit_rtn_range`] (`level(c) = lo + c·(hi−lo)/(2ᵇ−1)`),
 /// then exact outlier values overwrite their positions.
+///
+/// The affine fill is staged through [`simd::affine_u8`] in chunks:
+/// codes decode into a stack buffer, the tier computes `lo + step·code`
+/// (the scalar tier reproduces the historical rounding exactly), and a
+/// scalar scatter places the strided `[t, d]` layout. KV code widths
+/// are ≤ 8 bits, so every code fits the u8 staging buffer.
 fn dequantize_plane(
     qp: &QuantPlane,
     n_heads: usize,
     bt: usize,
     hd: usize,
     bits: u32,
+    tier: Tier,
     dst: &mut [f32],
 ) {
     let n_ch = n_heads * hd;
     let levels = (1usize << bits) as f32;
+    let mut cbuf = [0u8; 128];
+    let mut lbuf = [0.0f32; 128];
     for ch in 0..n_ch {
         let (h, d) = (ch / hd, ch % hd);
         let (lo, hi) = (qp.ranges[2 * ch], qp.ranges[2 * ch + 1]);
         let step = if hi > lo { (hi - lo) / (levels - 1.0) } else { 0.0 };
-        for t in 0..bt {
-            let code = unpack_code(&qp.codes, ch * bt + t, bits);
-            dst[h * bt * hd + t * hd + d] = lo + step * code as f32;
+        let mut t0 = 0usize;
+        while t0 < bt {
+            let n = (bt - t0).min(128);
+            for (j, c) in cbuf[..n].iter_mut().enumerate() {
+                *c = unpack_code(&qp.codes, ch * bt + t0 + j, bits) as u8;
+            }
+            simd::affine_u8(tier, &cbuf[..n], lo, step, &mut lbuf[..n]);
+            for (j, &lv) in lbuf[..n].iter().enumerate() {
+                dst[h * bt * hd + (t0 + j) * hd + d] = lv;
+            }
+            t0 += n;
         }
     }
     for (i, p) in qp.outliers.positions().enumerate() {
@@ -427,6 +450,9 @@ pub struct KvCache {
     quant_payload_bytes: usize,
     blocks_quantized: u64,
     dequant_scratch_hits: u64,
+    /// SIMD tier for the dequant affine fill (DESIGN.md §14), resolved
+    /// once at construction from the environment.
+    tier: Tier,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
@@ -500,9 +526,17 @@ impl KvCache {
             quant_payload_bytes: 0,
             blocks_quantized: 0,
             dequant_scratch_hits: 0,
+            tier: simd::from_env(),
             k: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
             v: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
         }
+    }
+
+    /// Override the SIMD tier used by the dequant fill (the constructor
+    /// resolves `ICQ_SIMD`; servers apply an explicit `--simd` choice
+    /// here).
+    pub fn set_simd(&mut self, tier: Tier) {
+        self.tier = tier;
     }
 
     /// Number of KV lanes.
@@ -1027,9 +1061,9 @@ impl KvCache {
         let (heads, bt, hd) = (self.n_heads, self.block_tokens, self.head_dim);
         for layer in 0..self.k.len() {
             let dk = &mut self.k[layer][r * stride..][..stride];
-            dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, dk);
+            dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, self.tier, dk);
             let dv = &mut self.v[layer][r * stride..][..stride];
-            dequantize_plane(&q.v[layer], heads, bt, hd, q.bits, dv);
+            dequantize_plane(&q.v[layer], heads, bt, hd, q.bits, self.tier, dv);
         }
         trace::instant(Cat::Kv, "dequant_write", phys as u64, q.bits as i64, 0);
     }
@@ -1188,9 +1222,9 @@ impl KvCache {
             // PANIC: this branch is the `Icq`-state arm of the gather.
             let q = self.quant[phys].as_ref().unwrap();
             let dk = &mut self.scratch_k[si * stride..][..stride];
-            dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, dk);
+            dequantize_plane(&q.k[layer], heads, bt, hd, q.bits, self.tier, dk);
             let dv = &mut self.scratch_v[si * stride..][..stride];
-            dequantize_plane(&q.v[layer], heads, bt, hd, q.bits, dv);
+            dequantize_plane(&q.v[layer], heads, bt, hd, q.bits, self.tier, dv);
             self.scratch_tag[phys] = self.scratch_gen;
             self.scratch_slot_of[phys] = si;
         }
@@ -1450,6 +1484,14 @@ pub struct NativeModel {
     /// RoPE frequencies `θ^(-j/half)` for `j in 0..head_dim/2`,
     /// precomputed once (they are position-independent).
     rope_inv_freq: Vec<f32>,
+    /// SIMD kernel tier (DESIGN.md §14), resolved once at construction
+    /// (`ICQ_SIMD`, [`Tier::Scalar`] default semantics preserved) and
+    /// threaded into every projection, attention dot, and dequant fill.
+    tier: Tier,
+    /// Activation handling for single-token decode projections
+    /// (`--act-quant`): [`ActQuant::Int8`] routes the bucket-1 GEMV
+    /// through the integer inner product.
+    act_quant: ActQuant,
 }
 
 impl NativeModel {
@@ -1542,7 +1584,54 @@ impl NativeModel {
             final_norm: dense_vec("final_norm", d)?,
             blocks,
             rope_inv_freq,
+            tier: simd::from_env(),
+            act_quant: ActQuant::F32,
         })
+    }
+
+    /// Builder override for the SIMD tier (e.g. `serve --simd`); the
+    /// constructor default is [`simd::from_env`].
+    pub fn with_simd(mut self, tier: Tier) -> NativeModel {
+        self.tier = tier;
+        self
+    }
+
+    /// Builder override for activation quantization (`--act-quant`).
+    pub fn with_act_quant(mut self, act: ActQuant) -> NativeModel {
+        self.act_quant = act;
+        self
+    }
+
+    /// In-place form of [`Self::with_simd`].
+    pub fn set_simd(&mut self, tier: Tier) {
+        self.tier = tier;
+    }
+
+    /// In-place form of [`Self::with_act_quant`].
+    pub fn set_act_quant(&mut self, act: ActQuant) {
+        self.act_quant = act;
+    }
+
+    /// The resolved SIMD tier every kernel call dispatches on.
+    pub fn simd_tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// The active activation-quantization mode.
+    pub fn act_quant(&self) -> ActQuant {
+        self.act_quant
+    }
+
+    /// Route one projection through the tier: the int8 path applies
+    /// only to single-token (bucket-1 decode) calls — exactly the
+    /// GEMV inner loop the act-quant knob targets — batched calls stay
+    /// on the f32 tier path.
+    fn project(&self, plane: &RuntimePlane, x: &Matrix, y: &mut Matrix) {
+        if self.act_quant == ActQuant::Int8 && x.rows == 1 {
+            gemv_i8_on(&self.pool, plane, x.row(0), &mut y.data, self.tier);
+        } else {
+            gemm_on_tier(&self.pool, plane, x, y, self.tier);
+        }
     }
 
     /// Executor width of the kernel pool (workers + caller).
@@ -1778,9 +1867,9 @@ impl NativeModel {
             let mut q = Matrix::zeros(bs, d);
             let mut k = Matrix::zeros(bs, d);
             let mut v = Matrix::zeros(bs, d);
-            gemm_on(&self.pool, &bw.wq, &h, &mut q);
-            gemm_on(&self.pool, &bw.wk, &h, &mut k);
-            gemm_on(&self.pool, &bw.wv, &h, &mut v);
+            self.project(&bw.wq, &h, &mut q);
+            self.project(&bw.wk, &h, &mut k);
+            self.project(&bw.wv, &h, &mut v);
             for i in 0..n {
                 for t in 0..seq {
                     let row = i * seq + t;
@@ -1808,33 +1897,31 @@ impl NativeModel {
                         let span = starts[i] + t + 1; // causal: positions 0..=pos
                         let qh = &q.row(row)[head * hd..(head + 1) * hd];
                         for (p, s) in scores[..span].iter_mut().enumerate() {
-                            *s = dot(qh, kv.k_at(layer, slot, head, p)) * scale;
+                            *s = simd::dot(self.tier, qh, kv.k_at(layer, slot, head, p)) * scale;
                         }
                         softmax(&mut scores[..span]);
                         let out = &mut attn.row_mut(row)[head * hd..(head + 1) * hd];
                         for (p, &w) in scores[..span].iter().enumerate() {
-                            for (o, kvv) in out.iter_mut().zip(kv.v_at(layer, slot, head, p)) {
-                                *o += w * *kvv;
-                            }
+                            simd::axpy(self.tier, out, w, kv.v_at(layer, slot, head, p));
                         }
                     }
                 }
             }
             let mut o = Matrix::zeros(bs, d);
-            gemm_on(&self.pool, &bw.wo, &attn, &mut o);
+            self.project(&bw.wo, &attn, &mut o);
             add_assign(&mut x, &o);
 
             // --- SwiGLU MLP --------------------------------------------
             let h = rmsnormed(&x, &bw.mlp_norm);
             let mut gate = Matrix::zeros(bs, cfg.d_ff);
             let mut up = Matrix::zeros(bs, cfg.d_ff);
-            gemm_on(&self.pool, &bw.w_gate, &h, &mut gate);
-            gemm_on(&self.pool, &bw.w_up, &h, &mut up);
+            self.project(&bw.w_gate, &h, &mut gate);
+            self.project(&bw.w_up, &h, &mut up);
             for (g, u) in gate.data.iter_mut().zip(&up.data) {
                 *g = silu(*g) * *u;
             }
             let mut down = Matrix::zeros(bs, d);
-            gemm_on(&self.pool, &bw.w_down, &gate, &mut down);
+            self.project(&bw.w_down, &gate, &mut down);
             add_assign(&mut x, &down);
         }
         for (i, &s) in slot_ids.iter().enumerate() {
@@ -1855,16 +1942,11 @@ impl NativeModel {
             rmsnorm_into(xrow, &self.final_norm, &mut hrow);
             let out = &mut logits[i * cfg.vocab..(i + 1) * cfg.vocab];
             for (vi, o) in out.iter_mut().enumerate() {
-                *o = dot(self.lm_head.row(vi), &hrow);
+                *o = simd::dot(self.tier, self.lm_head.row(vi), &hrow);
             }
         }
         Ok(logits)
     }
-}
-
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
 #[inline]
@@ -2434,7 +2516,7 @@ mod tests {
                 .collect();
             let qp = quantize_plane(&src, heads, bt, hd, bits);
             let mut dst = vec![0.0f32; src.len()];
-            dequantize_plane(&qp, heads, bt, hd, bits, &mut dst);
+            dequantize_plane(&qp, heads, bt, hd, bits, Tier::Scalar, &mut dst);
             for h in 0..heads {
                 for d in 0..hd {
                     let ch: Vec<f32> =
@@ -2465,7 +2547,7 @@ mod tests {
         let qp = quantize_plane(&src, heads, bt, hd, 4);
         assert_eq!(qp.outlier_vals, vec![50.0]);
         let mut dst = vec![0.0f32; src.len()];
-        dequantize_plane(&qp, heads, bt, hd, 4, &mut dst);
+        dequantize_plane(&qp, heads, bt, hd, 4, Tier::Scalar, &mut dst);
         assert_eq!(src, dst, "spike + constant inliers reconstruct exactly");
     }
 

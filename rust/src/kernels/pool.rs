@@ -29,6 +29,14 @@
 //! the failing work range (e.g. the GEMM band's weight rows) before
 //! re-panicking, instead of poisoning the whole forward with a bare
 //! `join()` expect.
+//!
+//! SIMD tier (DESIGN.md §14): the pool is deliberately **tier-agnostic**
+//! — it schedules closures and knows nothing about vector ISAs. The
+//! kernels carry their resolved `simd::Tier` by value into each chunk
+//! closure, so a pool can serve scalar and vectorized callers
+//! interchangeably and the chunk→output determinism argument above is
+//! untouched by tier selection (within one tier; tiers differ only
+//! inside the per-dot bounded-error contract).
 
 use crate::trace::{self, Cat};
 use std::any::Any;

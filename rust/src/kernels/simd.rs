@@ -1,0 +1,1209 @@
+//! Runtime-dispatched SIMD kernel tier (DESIGN.md §14).
+//!
+//! The fused GEMV/GEMM and the KV dequant path dispatch their inner
+//! loops through this module. A [`Tier`] is resolved **once** at model
+//! construction (runtime CPU-feature detection, overridable via the
+//! `ICQ_SIMD` env var or `serve --simd`) and then threaded by value into
+//! every kernel call — the hot loops never re-detect. Three tiers:
+//!
+//! * **Scalar** — the bit-identity reference. Every scalar routine here
+//!   reproduces the exact accumulation order of the pre-tier kernels,
+//!   so `ICQ_SIMD=scalar` output is bit-identical to the historical
+//!   fused path (and to dequantize-then-matmul; see the contract in
+//!   the gemv module docs).
+//! * **Avx2** — x86_64 AVX2+FMA: vectorized block unpack (8 codes per
+//!   shuffle/shift/mask round instead of a per-code u64 shift
+//!   register), in-register codebook gather (`vpermps` for 8/16-entry
+//!   codebooks, hardware gather spill for wider), and 8-lane FMA
+//!   dot-product accumulation with a **fixed reduction tree**.
+//! * **Neon** — aarch64: `tbl`-based codebook gather and 4-lane FMA
+//!   accumulation with the same fixed-tree shape.
+//!
+//! Error contract (enforced by `tests/simd_divergence.rs`): vector
+//! tiers may reassociate the dot-product sum, so per output element
+//! `|simd − scalar| ≤ 2⁻²⁰ · Σ|lᶜ·xᶜ|` (the bound is against the sum of
+//! absolute terms — cancellation-safe). Unpack and gather are **exact**
+//! in every tier; only the accumulation order differs. The opt-in int8
+//! activation path ([`ActQuant::Int8`]) quantizes activations per call
+//! (absmax scale) and the per-row codebook to i8, runs an integer inner
+//! product (`maddubs` / `smull`+`sadalp`), and is bounded by its
+//! quantization steps; its integer accumulation is exact, so int8
+//! results are identical across tiers.
+//!
+//! Graceful degradation: [`Tier`] is a plain value, so a caller could
+//! request a tier the host cannot run. Every dispatch shim re-verifies
+//! the feature bits (cached by `std::arch` feature detection) before
+//! entering the `unsafe` intrinsic body and silently falls back to the
+//! scalar routine otherwise — an unsupported tier degrades, it never
+//! faults.
+
+use crate::bitstream::unpack_aligned_u8;
+
+/// Resolved kernel tier, threaded by value into every dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable reference; bit-identical to the pre-tier kernels.
+    Scalar,
+    /// x86_64 AVX2+FMA vector paths.
+    Avx2,
+    /// aarch64 NEON vector paths.
+    Neon,
+}
+
+impl Tier {
+    /// Stable lowercase name (reports, metrics, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+
+    /// Small integer id for trace instants (`kernel_dispatch`).
+    pub fn id(self) -> u8 {
+        match self {
+            Tier::Scalar => 0,
+            Tier::Avx2 => 1,
+            Tier::Neon => 2,
+        }
+    }
+}
+
+/// Requested tier, before feature detection ([`detect`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TierPref {
+    /// Pick the best tier the host supports.
+    #[default]
+    Auto,
+    /// Force the scalar reference tier.
+    Scalar,
+    /// Request AVX2 (falls back to scalar off-x86 or without AVX2+FMA).
+    Avx2,
+    /// Request NEON (falls back to scalar off-aarch64 or without NEON).
+    Neon,
+}
+
+impl TierPref {
+    /// Parse an `ICQ_SIMD` / `--simd` value; `None` for unknown input.
+    pub fn parse(s: &str) -> Option<TierPref> {
+        match s {
+            "auto" => Some(TierPref::Auto),
+            "scalar" => Some(TierPref::Scalar),
+            "avx2" => Some(TierPref::Avx2),
+            "neon" => Some(TierPref::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Activation handling for the GEMV inner loop (`--act-quant`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ActQuant {
+    /// Full-precision f32 activations (default).
+    #[default]
+    F32,
+    /// Per-call absmax int8 activation quantization (DESIGN.md §14).
+    Int8,
+}
+
+impl ActQuant {
+    /// Stable lowercase name (reports, metrics).
+    pub fn name(self) -> &'static str {
+        match self {
+            ActQuant::F32 => "f32",
+            ActQuant::Int8 => "int8",
+        }
+    }
+}
+
+/// Resolve a preference against the host's CPU features. An explicitly
+/// requested tier the host cannot run degrades to [`Tier::Scalar`]
+/// rather than erroring: the scalar tier is always a correct answer.
+pub fn detect(pref: TierPref) -> Tier {
+    match pref {
+        TierPref::Scalar => Tier::Scalar,
+        TierPref::Avx2 => {
+            if avx2_supported() {
+                Tier::Avx2
+            } else {
+                Tier::Scalar
+            }
+        }
+        TierPref::Neon => {
+            if neon_supported() {
+                Tier::Neon
+            } else {
+                Tier::Scalar
+            }
+        }
+        TierPref::Auto => {
+            if avx2_supported() {
+                Tier::Avx2
+            } else if neon_supported() {
+                Tier::Neon
+            } else {
+                Tier::Scalar
+            }
+        }
+    }
+}
+
+/// Read the `ICQ_SIMD` preference: unset means [`TierPref::Auto`]; an
+/// unrecognized value conservatively means [`TierPref::Scalar`] (a typo
+/// must not silently enable vector paths).
+pub fn env_pref() -> TierPref {
+    match std::env::var("ICQ_SIMD") {
+        Ok(v) => TierPref::parse(&v).unwrap_or(TierPref::Scalar),
+        Err(_) => TierPref::Auto,
+    }
+}
+
+/// [`detect`] applied to [`env_pref`] — the construction-time default.
+pub fn from_env() -> Tier {
+    detect(env_pref())
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    // The fused dot path needs FMA as well as the integer AVX2 ops;
+    // treat the tier as one unit. std caches the cpuid probe.
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_supported() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_supported() -> bool {
+    false
+}
+
+/// Load up to 8 bytes at `off` as a little-endian u64, zero-padded past
+/// the end of `src` (callers only consume bits that lie inside `src`).
+// lint: hot-path
+#[inline(always)]
+fn load_window(src: &[u8], off: usize) -> u64 {
+    let mut buf = [0u8; 8];
+    let n = 8.min(src.len().saturating_sub(off));
+    buf[..n].copy_from_slice(&src[off..off + n]);
+    u64::from_le_bytes(buf)
+}
+
+// ---------------------------------------------------------------------------
+// Dispatchers. Each takes the resolved `Tier` by value; the per-arch
+// shims re-verify feature support before entering the intrinsic body
+// and fall back to the scalar reference otherwise.
+// ---------------------------------------------------------------------------
+
+/// Unpack `levels.len()` `width`-bit codes from `src` and gather
+/// `cb[code]` into `levels`. `codes` is scratch of the same length; its
+/// contents are unspecified after non-scalar tiers (the AVX2 path fuses
+/// unpack and gather in-register and never materializes bytes).
+///
+/// Exact in every tier: the decoded levels are bit-identical across
+/// tiers, only downstream accumulation differs.
+// lint: hot-path
+#[inline]
+pub fn unpack_gather(
+    tier: Tier,
+    src: &[u8],
+    width: u32,
+    cb: &[f32],
+    codes: &mut [u8],
+    levels: &mut [f32],
+) {
+    match tier {
+        Tier::Scalar => unpack_gather_scalar(src, width, cb, codes, levels),
+        Tier::Avx2 => unpack_gather_avx2(src, width, cb, codes, levels),
+        Tier::Neon => unpack_gather_neon(src, width, cb, codes, levels),
+    }
+}
+
+/// Continue a dot product: `acc + Σ levels[c]·x[c]`, term by term for
+/// the scalar tier (the bit-identity order), fixed-tree FMA lanes for
+/// vector tiers. The accumulator is carried **across** blocks by the
+/// caller, which is what keeps the scalar tier bit-identical to the
+/// pre-tier kernels.
+// lint: hot-path
+#[inline]
+pub fn dot_acc(tier: Tier, acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+    match tier {
+        Tier::Scalar => dot_acc_scalar(acc, levels, x),
+        Tier::Avx2 => dot_acc_avx2(acc, levels, x),
+        Tier::Neon => dot_acc_neon(acc, levels, x),
+    }
+}
+
+/// Plain dot product (`dot_acc` from zero) — the attention-score shape.
+// lint: hot-path
+#[inline]
+pub fn dot(tier: Tier, a: &[f32], b: &[f32]) -> f32 {
+    dot_acc(tier, 0.0, a, b)
+}
+
+/// `out[i] += w · v[i]` — the attention weighted-value accumulation.
+// lint: hot-path
+#[inline]
+pub fn axpy(tier: Tier, out: &mut [f32], w: f32, v: &[f32]) {
+    match tier {
+        Tier::Scalar => axpy_scalar(out, w, v),
+        Tier::Avx2 => axpy_avx2(out, w, v),
+        Tier::Neon => axpy_neon(out, w, v),
+    }
+}
+
+/// `out[i] = lo + step · codes[i]` — the KV dequant affine fill. The
+/// scalar tier reproduces the historical `lo + step * code` rounding;
+/// vector tiers use FMA (within the 2⁻²⁰ contract).
+// lint: hot-path
+#[inline]
+pub fn affine_u8(tier: Tier, codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+    match tier {
+        Tier::Scalar => affine_u8_scalar(codes, lo, step, out),
+        Tier::Avx2 => affine_u8_avx2(codes, lo, step, out),
+        Tier::Neon => affine_u8_neon(codes, lo, step, out),
+    }
+}
+
+/// Gather `table[code]` into `out` for the int8 path. `entries` is the
+/// live codebook size; tables of ≤ 16 entries take the in-register
+/// shuffle (`pshufb` / `tbl`), wider ones the scalar loop. Exact in
+/// every tier.
+// lint: hot-path
+#[inline]
+pub fn gather_i8(tier: Tier, codes: &[u8], table: &[i8; 256], entries: usize, out: &mut [i8]) {
+    match tier {
+        Tier::Avx2 if entries <= 16 => gather_i8_avx2(codes, table, out),
+        Tier::Neon if entries <= 16 => gather_i8_neon(codes, table, out),
+        _ => gather_i8_scalar(codes, table, out),
+    }
+}
+
+/// Integer inner product `Σ levels[c]·x[c]` over i8 operands, exact in
+/// every tier (integer accumulation never reassociates lossily). The
+/// caller stages at most one gather block (≤ 512 terms) per call, so
+/// the i32 accumulator cannot overflow: `512 · 127 · 127 < 2³¹`.
+// lint: hot-path
+#[inline]
+pub fn dot_i8(tier: Tier, levels: &[i8], x: &[i8]) -> i32 {
+    match tier {
+        Tier::Scalar => dot_i8_scalar(levels, x),
+        Tier::Avx2 => dot_i8_avx2(levels, x),
+        Tier::Neon => dot_i8_neon(levels, x),
+    }
+}
+
+/// Quantize activations to i8 with a per-call absmax scale. Returns the
+/// dequantization scale (`x ≈ scale · q`); an all-zero or non-finite
+/// input yields scale 0 and an all-zero `out` (the int8 path then
+/// produces exact zeros instead of NaN). Quantized values stay in
+/// `[-127, 127]`.
+pub fn quantize_activations(x: &[f32], out: &mut Vec<i8>) -> f32 {
+    out.clear();
+    out.resize(x.len(), 0);
+    let mut absmax = 0.0f32;
+    for &v in x {
+        let a = v.abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    if absmax == 0.0 || !absmax.is_finite() {
+        return 0.0;
+    }
+    let inv = 127.0 / absmax;
+    for (q, &v) in out.iter_mut().zip(x) {
+        *q = (v * inv).round() as i8;
+    }
+    absmax / 127.0
+}
+
+/// Quantize a per-row codebook to i8 into the 256-entry staging table
+/// (the table is oversized so 16-byte vector loads stay in-bounds for
+/// any codebook width). Returns the dequantization scale; degenerate
+/// codebooks yield scale 0 and a zero table.
+pub fn quantize_codebook(cb: &[f32], out: &mut [i8; 256]) -> f32 {
+    out.fill(0);
+    let mut absmax = 0.0f32;
+    for &v in cb {
+        let a = v.abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    if absmax == 0.0 || !absmax.is_finite() {
+        return 0.0;
+    }
+    let inv = 127.0 / absmax;
+    for (o, &v) in out.iter_mut().zip(cb) {
+        *o = (v * inv).round() as i8;
+    }
+    absmax / 127.0
+}
+
+// ---------------------------------------------------------------------------
+// Scalar tier: the bit-identity reference bodies.
+// ---------------------------------------------------------------------------
+
+// lint: hot-path
+#[inline]
+fn unpack_gather_scalar(src: &[u8], width: u32, cb: &[f32], codes: &mut [u8], levels: &mut [f32]) {
+    unpack_aligned_u8(src, width, codes);
+    for (l, &code) in levels.iter_mut().zip(codes.iter()) {
+        *l = cb[code as usize];
+    }
+}
+
+// lint: hot-path
+#[inline]
+fn dot_acc_scalar(mut acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+    for (l, xv) in levels.iter().zip(x) {
+        acc += *l * *xv;
+    }
+    acc
+}
+
+// lint: hot-path
+#[inline]
+fn axpy_scalar(out: &mut [f32], w: f32, v: &[f32]) {
+    for (o, vv) in out.iter_mut().zip(v) {
+        *o += w * *vv;
+    }
+}
+
+// lint: hot-path
+#[inline]
+fn affine_u8_scalar(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        *o = lo + step * c as f32;
+    }
+}
+
+// lint: hot-path
+#[inline]
+fn gather_i8_scalar(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        *o = table[c as usize];
+    }
+}
+
+// lint: hot-path
+#[inline]
+fn dot_i8_scalar(levels: &[i8], x: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (l, xv) in levels.iter().zip(x) {
+        acc += *l as i32 * *xv as i32;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// Per-arch dispatch shims: cfg-paired so every symbol exists on every
+// target; the off-arch twin is the scalar body. The on-arch shim
+// re-verifies feature support (cheap: std caches the probe) before the
+// `unsafe` call, so a hand-constructed unsupported `Tier` degrades
+// instead of executing illegal instructions.
+// ---------------------------------------------------------------------------
+
+// lint: hot-path
+#[cfg(target_arch = "x86_64")]
+fn unpack_gather_avx2(src: &[u8], width: u32, cb: &[f32], codes: &mut [u8], levels: &mut [f32]) {
+    if !avx2_supported() || width == 0 || width > 8 {
+        return unpack_gather_scalar(src, width, cb, codes, levels);
+    }
+    // SAFETY: AVX2+FMA verified above; width ∈ 1..=8 and the plane
+    // invariant `cb.len() == 1 << width` bound every gathered index.
+    unsafe { avx2::unpack_gather(src, width, cb, levels) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "x86_64"))]
+fn unpack_gather_avx2(src: &[u8], width: u32, cb: &[f32], codes: &mut [u8], levels: &mut [f32]) {
+    unpack_gather_scalar(src, width, cb, codes, levels)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "aarch64")]
+fn unpack_gather_neon(src: &[u8], width: u32, cb: &[f32], codes: &mut [u8], levels: &mut [f32]) {
+    if !neon_supported() {
+        return unpack_gather_scalar(src, width, cb, codes, levels);
+    }
+    unpack_aligned_u8(src, width, codes);
+    // SAFETY: NEON verified above; unpacked codes are masked to `width`
+    // bits, so every index is < `cb.len() == 1 << width`.
+    unsafe { neon::gather_f32(cb, codes, levels) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "aarch64"))]
+fn unpack_gather_neon(src: &[u8], width: u32, cb: &[f32], codes: &mut [u8], levels: &mut [f32]) {
+    unpack_gather_scalar(src, width, cb, codes, levels)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "x86_64")]
+fn dot_acc_avx2(acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+    if !avx2_supported() {
+        return dot_acc_scalar(acc, levels, x);
+    }
+    // SAFETY: AVX2+FMA verified above; the body only reads within the
+    // shorter of the two slices.
+    unsafe { avx2::dot_acc(acc, levels, x) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_acc_avx2(acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+    dot_acc_scalar(acc, levels, x)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "aarch64")]
+fn dot_acc_neon(acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+    if !neon_supported() {
+        return dot_acc_scalar(acc, levels, x);
+    }
+    // SAFETY: NEON verified above; the body only reads within the
+    // shorter of the two slices.
+    unsafe { neon::dot_acc(acc, levels, x) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "aarch64"))]
+fn dot_acc_neon(acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+    dot_acc_scalar(acc, levels, x)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2(out: &mut [f32], w: f32, v: &[f32]) {
+    if !avx2_supported() {
+        return axpy_scalar(out, w, v);
+    }
+    // SAFETY: AVX2+FMA verified above; the body only touches the
+    // shorter of the two slices.
+    unsafe { avx2::axpy(out, w, v) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "x86_64"))]
+fn axpy_avx2(out: &mut [f32], w: f32, v: &[f32]) {
+    axpy_scalar(out, w, v)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon(out: &mut [f32], w: f32, v: &[f32]) {
+    if !neon_supported() {
+        return axpy_scalar(out, w, v);
+    }
+    // SAFETY: NEON verified above; the body only touches the shorter of
+    // the two slices.
+    unsafe { neon::axpy(out, w, v) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "aarch64"))]
+fn axpy_neon(out: &mut [f32], w: f32, v: &[f32]) {
+    axpy_scalar(out, w, v)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "x86_64")]
+fn affine_u8_avx2(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+    if !avx2_supported() {
+        return affine_u8_scalar(codes, lo, step, out);
+    }
+    // SAFETY: AVX2+FMA verified above; the body only touches the
+    // shorter of the two slices.
+    unsafe { avx2::affine_u8(codes, lo, step, out) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "x86_64"))]
+fn affine_u8_avx2(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+    affine_u8_scalar(codes, lo, step, out)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "aarch64")]
+fn affine_u8_neon(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+    if !neon_supported() {
+        return affine_u8_scalar(codes, lo, step, out);
+    }
+    // SAFETY: NEON verified above; the body only touches the shorter of
+    // the two slices.
+    unsafe { neon::affine_u8(codes, lo, step, out) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "aarch64"))]
+fn affine_u8_neon(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+    affine_u8_scalar(codes, lo, step, out)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "x86_64")]
+fn gather_i8_avx2(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+    if !avx2_supported() {
+        return gather_i8_scalar(codes, table, out);
+    }
+    // SAFETY: AVX2 verified above; the dispatcher only routes here for
+    // codebooks of ≤ 16 entries, so every code fits the pshufb nibble.
+    unsafe { avx2::gather_i8(codes, table, out) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "x86_64"))]
+fn gather_i8_avx2(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+    gather_i8_scalar(codes, table, out)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "aarch64")]
+fn gather_i8_neon(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+    if !neon_supported() {
+        return gather_i8_scalar(codes, table, out);
+    }
+    // SAFETY: NEON verified above; the dispatcher only routes here for
+    // codebooks of ≤ 16 entries, so every code is a valid tbl index.
+    unsafe { neon::gather_i8(codes, table, out) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "aarch64"))]
+fn gather_i8_neon(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+    gather_i8_scalar(codes, table, out)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "x86_64")]
+fn dot_i8_avx2(levels: &[i8], x: &[i8]) -> i32 {
+    if !avx2_supported() {
+        return dot_i8_scalar(levels, x);
+    }
+    // SAFETY: AVX2 verified above; the body only reads within the
+    // shorter of the two slices.
+    unsafe { avx2::dot_i8(levels, x) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_i8_avx2(levels: &[i8], x: &[i8]) -> i32 {
+    dot_i8_scalar(levels, x)
+}
+
+// lint: hot-path
+#[cfg(target_arch = "aarch64")]
+fn dot_i8_neon(levels: &[i8], x: &[i8]) -> i32 {
+    if !neon_supported() {
+        return dot_i8_scalar(levels, x);
+    }
+    // SAFETY: NEON verified above; the body only reads within the
+    // shorter of the two slices.
+    unsafe { neon::dot_i8(levels, x) }
+}
+
+// lint: hot-path
+#[cfg(not(target_arch = "aarch64"))]
+fn dot_i8_neon(levels: &[i8], x: &[i8]) -> i32 {
+    dot_i8_scalar(levels, x)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA bodies (x86_64 only). Every fn is `unsafe` + target_feature;
+// the dispatch shims above are the only callers and verify support
+// first.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::load_window;
+    use std::arch::x86_64::*;
+
+    /// Fused unpack + codebook gather: decode `levels.len()` codes of
+    /// `width` bits from `src` straight into f32 levels, 8 per round.
+    ///
+    /// Per round, the 8-code bit window (`width` bytes) is broadcast to
+    /// every 64-bit element of a ymm; a per-width `pshufb` control then
+    /// places, for lane k, the 4 bytes starting at byte `(k·width)>>3`
+    /// of the window into that lane; `srlv` shifts by `(k·width)&7` and
+    /// an and-mask isolates the code. Byte indexes past the 8-byte
+    /// window read the broadcast copy (wrong bytes), but those bytes
+    /// only reach dword bits ≥ 8 + width after the shift, which the
+    /// ≤ 8-bit mask discards — only bytes `base` and `base+1` carry
+    /// live bits, and those always index inside the window.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2+FMA. Requires `width ∈ 1..=8`,
+    /// `cb.len() == 1 << width`, and `src` to hold every code bit
+    /// (`ceil(levels.len()·width/8)` bytes).
+    // lint: hot-path
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn unpack_gather(src: &[u8], width: u32, cb: &[f32], levels: &mut [f32]) {
+        let n = levels.len();
+        let w = width as usize;
+        let mut shuf = [0u8; 32];
+        let mut shifts = [0i32; 8];
+        for k in 0..8 {
+            let bit = k * w;
+            let base = (bit >> 3) as u8;
+            let half = k >> 2;
+            let lane = k & 3;
+            for b in 0..4u8 {
+                shuf[half * 16 + lane * 4 + b as usize] = base + b;
+            }
+            shifts[k] = (bit & 7) as i32;
+        }
+        let shuf_v = _mm256_loadu_si256(shuf.as_ptr().cast());
+        let shift_v = _mm256_loadu_si256(shifts.as_ptr().cast());
+        let mask_v = _mm256_set1_epi32(((1u32 << width) - 1) as i32);
+        let groups = n / 8;
+        for g in 0..groups {
+            let win = load_window(src, g * w);
+            let wv = _mm256_set1_epi64x(win as i64);
+            let dwords = _mm256_shuffle_epi8(wv, shuf_v);
+            let codes_v = _mm256_and_si256(_mm256_srlv_epi32(dwords, shift_v), mask_v);
+            let lv = gather8(cb, codes_v, width);
+            _mm256_storeu_ps(levels.as_mut_ptr().add(g * 8), lv);
+        }
+        for i in groups * 8..n {
+            let bit = i * w;
+            let win = load_window(src, bit >> 3);
+            let code = (win >> (bit & 7)) & ((1u64 << width) - 1);
+            levels[i] = cb[code as usize];
+        }
+    }
+
+    /// Gather the 8 codebook entries selected by the i32 lanes of
+    /// `codes`. 8-entry codebooks (width 3) use one `vpermps`
+    /// in-register shuffle; 16-entry (width 4) two `vpermps` (it only
+    /// reads index bits [2:0]) blended on bit 3; anything else spills
+    /// to the hardware gather, which reads only the indexed entries.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2; every lane of `codes` must be
+    /// `< cb.len()`, and `cb.len() == 1 << width`.
+    // lint: hot-path
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather8(cb: &[f32], codes: __m256i, width: u32) -> __m256 {
+        if width == 3 {
+            let table = _mm256_loadu_ps(cb.as_ptr());
+            _mm256_permutevar8x32_ps(table, codes)
+        } else if width == 4 {
+            let t0 = _mm256_loadu_ps(cb.as_ptr());
+            let t1 = _mm256_loadu_ps(cb.as_ptr().add(8));
+            let lo = _mm256_permutevar8x32_ps(t0, codes);
+            let hi = _mm256_permutevar8x32_ps(t1, codes);
+            let sel = _mm256_castsi256_ps(_mm256_cmpgt_epi32(codes, _mm256_set1_epi32(7)));
+            _mm256_blendv_ps(lo, hi, sel)
+        } else {
+            _mm256_i32gather_ps::<4>(cb.as_ptr(), codes)
+        }
+    }
+
+    /// Dot-product continuation over two 8-lane FMA accumulators with a
+    /// fixed reduction tree (DESIGN.md §14): `s0+s1` → fold the two
+    /// 128-bit halves → pairwise horizontal fold — the tree shape never
+    /// depends on pool width, so pooled and single-threaded runs of the
+    /// same tier are bit-identical.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2+FMA. Reads only within the shorter of
+    /// the two slices.
+    // lint: hot-path
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_acc(acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+        let n = levels.len().min(x.len());
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let l0 = _mm256_loadu_ps(levels.as_ptr().add(i));
+            let x0 = _mm256_loadu_ps(x.as_ptr().add(i));
+            s0 = _mm256_fmadd_ps(l0, x0, s0);
+            let l1 = _mm256_loadu_ps(levels.as_ptr().add(i + 8));
+            let x1 = _mm256_loadu_ps(x.as_ptr().add(i + 8));
+            s1 = _mm256_fmadd_ps(l1, x1, s1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let l0 = _mm256_loadu_ps(levels.as_ptr().add(i));
+            let x0 = _mm256_loadu_ps(x.as_ptr().add(i));
+            s0 = _mm256_fmadd_ps(l0, x0, s0);
+            i += 8;
+        }
+        let s = _mm256_add_ps(s0, s1);
+        let q = _mm_add_ps(_mm256_castps256_ps128(s), _mm256_extractf128_ps::<1>(s));
+        let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let sum = _mm_cvtss_f32(_mm_add_ss(d, _mm_shuffle_ps::<1>(d, d)));
+        let mut total = acc + sum;
+        while i < n {
+            total += levels[i] * x[i];
+            i += 1;
+        }
+        total
+    }
+
+    /// `out[i] += w · v[i]` over 8 FMA lanes; the scalar tail uses
+    /// `mul_add` so every element sees exactly one fused rounding.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2+FMA. Touches only the shorter of the two
+    /// slices.
+    // lint: hot-path
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(out: &mut [f32], w: f32, v: &[f32]) {
+        let n = out.len().min(v.len());
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(wv, vv, o));
+            i += 8;
+        }
+        while i < n {
+            out[i] = w.mul_add(v[i], out[i]);
+            i += 1;
+        }
+    }
+
+    /// `out[i] = lo + step · codes[i]`: widen 8 u8 codes to f32 lanes,
+    /// one FMA per lane; `mul_add` tail for the same single rounding.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2+FMA. Touches only the shorter of the two
+    /// slices.
+    // lint: hot-path
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn affine_u8(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+        let n = codes.len().min(out.len());
+        let lov = _mm256_set1_ps(lo);
+        let stepv = _mm256_set1_ps(step);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let c8 = _mm_loadl_epi64(codes.as_ptr().add(i).cast());
+            let f = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(c8));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(stepv, f, lov));
+            i += 8;
+        }
+        while i < n {
+            out[i] = step.mul_add(codes[i] as f32, lo);
+            i += 1;
+        }
+    }
+
+    /// i8 codebook lookup via `pshufb`: the first 16 table entries are
+    /// broadcast to both ymm halves and 32 codes resolve per round.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2 and that every code is < 16 (the shuffle
+    /// control's high bit must stay clear).
+    // lint: hot-path
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_i8(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+        let n = codes.len().min(out.len());
+        let t = _mm256_broadcastsi128_si256(_mm_loadu_si128(table.as_ptr().cast()));
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let c = _mm256_loadu_si256(codes.as_ptr().add(i).cast());
+            _mm256_storeu_si256(out.as_mut_ptr().add(i).cast(), _mm256_shuffle_epi8(t, c));
+            i += 32;
+        }
+        while i < n {
+            out[i] = table[codes[i] as usize];
+            i += 1;
+        }
+    }
+
+    /// Integer inner product, 32 i8 pairs per round. `maddubs` needs an
+    /// unsigned operand, so the sign of `levels` is moved onto `x`
+    /// (`|l| · sign(x, l)` preserves each product, and `sign` zeroing
+    /// where `l == 0` matches the true zero product). Pair sums stay
+    /// ≤ 2·127·127 = 32258 < i16::MAX, so `maddubs` never saturates;
+    /// `madd` widens to i32 exactly.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify AVX2 and keep both operands in `[-127, 127]`
+    /// (the quantizers in this module guarantee that). Reads only
+    /// within the shorter of the two slices.
+    // lint: hot-path
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(levels: &[i8], x: &[i8]) -> i32 {
+        let n = levels.len().min(x.len());
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let lv = _mm256_loadu_si256(levels.as_ptr().add(i).cast());
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i).cast());
+            let labs = _mm256_abs_epi8(lv);
+            let xsgn = _mm256_sign_epi8(xv, lv);
+            let pairs = _mm256_maddubs_epi16(labs, xsgn);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(pairs, ones));
+            i += 32;
+        }
+        let q = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+        let q = _mm_add_epi32(q, _mm_shuffle_epi32::<0x4E>(q));
+        let q = _mm_add_epi32(q, _mm_shuffle_epi32::<0xB1>(q));
+        let mut total = _mm_cvtsi128_si32(q);
+        while i < n {
+            total += levels[i] as i32 * x[i] as i32;
+            i += 1;
+        }
+        total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON bodies (aarch64 only). Deliberately simpler than the AVX2 tier:
+// unpack stays scalar and only the gather/accumulate loops vectorize.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Codebook gather via `tbl`: 8-entry codebooks use a 2-register
+    /// table, 16-entry a 4-register table, 4 f32 lookups per round
+    /// (byte indexes `4c..4c+4` select the code's f32 entry). Other
+    /// sizes fall back to the scalar loop.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify NEON; every code must be `< cb.len()`.
+    // lint: hot-path
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gather_f32(cb: &[f32], codes: &[u8], levels: &mut [f32]) {
+        let n = codes.len().min(levels.len());
+        let bytes = cb.as_ptr().cast::<u8>();
+        let mut i = 0usize;
+        if cb.len() == 8 {
+            let t = uint8x16x2_t(vld1q_u8(bytes), vld1q_u8(bytes.add(16)));
+            while i + 4 <= n {
+                let idx = byte_index4(codes, i);
+                let g = vqtbl2q_u8(t, vld1q_u8(idx.as_ptr()));
+                vst1q_f32(levels.as_mut_ptr().add(i), vreinterpretq_f32_u8(g));
+                i += 4;
+            }
+        } else if cb.len() == 16 {
+            let t = uint8x16x4_t(
+                vld1q_u8(bytes),
+                vld1q_u8(bytes.add(16)),
+                vld1q_u8(bytes.add(32)),
+                vld1q_u8(bytes.add(48)),
+            );
+            while i + 4 <= n {
+                let idx = byte_index4(codes, i);
+                let g = vqtbl4q_u8(t, vld1q_u8(idx.as_ptr()));
+                vst1q_f32(levels.as_mut_ptr().add(i), vreinterpretq_f32_u8(g));
+                i += 4;
+            }
+        }
+        while i < n {
+            levels[i] = cb[codes[i] as usize];
+            i += 1;
+        }
+    }
+
+    /// Expand 4 codes at `codes[i..i+4]` into the 16 byte indexes of
+    /// their f32 table entries. Codes must be < 16 so `4c+3 ≤ 63`.
+    // lint: hot-path
+    #[inline]
+    fn byte_index4(codes: &[u8], i: usize) -> [u8; 16] {
+        let mut idx = [0u8; 16];
+        for j in 0..4 {
+            let b = codes[i + j] * 4;
+            idx[4 * j] = b;
+            idx[4 * j + 1] = b + 1;
+            idx[4 * j + 2] = b + 2;
+            idx[4 * j + 3] = b + 3;
+        }
+        idx
+    }
+
+    /// Dot-product continuation over two 4-lane FMA accumulators with a
+    /// fixed reduction tree (`vaddvq` of `s0+s1`), mirroring the AVX2
+    /// tier's determinism contract.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify NEON. Reads only within the shorter slice.
+    // lint: hot-path
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_acc(acc: f32, levels: &[f32], x: &[f32]) -> f32 {
+        let n = levels.len().min(x.len());
+        let mut s0 = vdupq_n_f32(0.0);
+        let mut s1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let l0 = vld1q_f32(levels.as_ptr().add(i));
+            let x0 = vld1q_f32(x.as_ptr().add(i));
+            s0 = vfmaq_f32(s0, l0, x0);
+            let l1 = vld1q_f32(levels.as_ptr().add(i + 4));
+            let x1 = vld1q_f32(x.as_ptr().add(i + 4));
+            s1 = vfmaq_f32(s1, l1, x1);
+            i += 8;
+        }
+        while i + 4 <= n {
+            let l0 = vld1q_f32(levels.as_ptr().add(i));
+            let x0 = vld1q_f32(x.as_ptr().add(i));
+            s0 = vfmaq_f32(s0, l0, x0);
+            i += 4;
+        }
+        let mut total = acc + vaddvq_f32(vaddq_f32(s0, s1));
+        while i < n {
+            total += levels[i] * x[i];
+            i += 1;
+        }
+        total
+    }
+
+    /// `out[i] += w · v[i]` over 4 FMA lanes; `mul_add` tail.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify NEON. Touches only the shorter slice.
+    // lint: hot-path
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(out: &mut [f32], w: f32, v: &[f32]) {
+        let n = out.len().min(v.len());
+        let wv = vdupq_n_f32(w);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let o = vld1q_f32(out.as_ptr().add(i));
+            let vv = vld1q_f32(v.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vfmaq_f32(o, wv, vv));
+            i += 4;
+        }
+        while i < n {
+            out[i] = w.mul_add(v[i], out[i]);
+            i += 1;
+        }
+    }
+
+    /// `out[i] = lo + step · codes[i]` via u8→f32 widening and FMA.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify NEON. Touches only the shorter slice.
+    // lint: hot-path
+    #[target_feature(enable = "neon")]
+    pub unsafe fn affine_u8(codes: &[u8], lo: f32, step: f32, out: &mut [f32]) {
+        let n = codes.len().min(out.len());
+        let lov = vdupq_n_f32(lo);
+        let stepv = vdupq_n_f32(step);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let c16 = vmovl_u8(vld1_u8(codes.as_ptr().add(i)));
+            let f0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(c16)));
+            let f1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(c16)));
+            vst1q_f32(out.as_mut_ptr().add(i), vfmaq_f32(lov, stepv, f0));
+            vst1q_f32(out.as_mut_ptr().add(i + 4), vfmaq_f32(lov, stepv, f1));
+            i += 8;
+        }
+        while i < n {
+            out[i] = step.mul_add(codes[i] as f32, lo);
+            i += 1;
+        }
+    }
+
+    /// i8 codebook lookup via `tbl`, 16 codes per round.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify NEON and that every code is < 16.
+    // lint: hot-path
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gather_i8(codes: &[u8], table: &[i8; 256], out: &mut [i8]) {
+        let n = codes.len().min(out.len());
+        let t = vld1q_s8(table.as_ptr());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let c = vld1q_u8(codes.as_ptr().add(i));
+            vst1q_s8(out.as_mut_ptr().add(i), vqtbl1q_s8(t, c));
+            i += 16;
+        }
+        while i < n {
+            out[i] = table[codes[i] as usize];
+            i += 1;
+        }
+    }
+
+    /// Integer inner product: 16 i8 pairs per round via `smull` +
+    /// pairwise-accumulate into i32 lanes — exact, no saturation.
+    ///
+    /// # Safety
+    ///
+    /// Caller must verify NEON. Reads only within the shorter slice.
+    // lint: hot-path
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8(levels: &[i8], x: &[i8]) -> i32 {
+        let n = levels.len().min(x.len());
+        let mut s = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let lv = vld1q_s8(levels.as_ptr().add(i));
+            let xv = vld1q_s8(x.as_ptr().add(i));
+            s = vpadalq_s16(s, vmull_s8(vget_low_s8(lv), vget_low_s8(xv)));
+            s = vpadalq_s16(s, vmull_s8(vget_high_s8(lv), vget_high_s8(xv)));
+            i += 16;
+        }
+        let mut total = vaddvq_s32(s);
+        while i < n {
+            total += levels[i] as i32 * x[i] as i32;
+            i += 1;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_pref_parse_round_trips() {
+        assert_eq!(TierPref::parse("auto"), Some(TierPref::Auto));
+        assert_eq!(TierPref::parse("scalar"), Some(TierPref::Scalar));
+        assert_eq!(TierPref::parse("avx2"), Some(TierPref::Avx2));
+        assert_eq!(TierPref::parse("neon"), Some(TierPref::Neon));
+        assert_eq!(TierPref::parse("bogus"), None);
+        assert_eq!(TierPref::parse(""), None);
+        assert_eq!(TierPref::parse("AVX2"), None);
+    }
+
+    #[test]
+    fn unsupported_pref_degrades_to_scalar() {
+        // At most one vector arch can be live on any host, so at least
+        // one of the explicit vector preferences must degrade.
+        let a = detect(TierPref::Avx2);
+        let n = detect(TierPref::Neon);
+        assert!(a == Tier::Scalar || n == Tier::Scalar, "a={:?} n={:?}", a, n);
+        assert_eq!(detect(TierPref::Scalar), Tier::Scalar);
+        // Auto resolves to whatever an explicit supported pref gives.
+        let auto = detect(TierPref::Auto);
+        assert!(auto == a || auto == n || auto == Tier::Scalar);
+    }
+
+    #[test]
+    fn tier_names_and_ids_are_stable() {
+        assert_eq!(Tier::Scalar.name(), "scalar");
+        assert_eq!(Tier::Avx2.name(), "avx2");
+        assert_eq!(Tier::Neon.name(), "neon");
+        assert_eq!(Tier::Scalar.id(), 0);
+        assert_eq!(Tier::Avx2.id(), 1);
+        assert_eq!(Tier::Neon.id(), 2);
+        assert_eq!(ActQuant::F32.name(), "f32");
+        assert_eq!(ActQuant::Int8.name(), "int8");
+    }
+
+    #[test]
+    fn scalar_dot_acc_matches_open_coded_loop() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.31).sin()).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.17).cos()).collect();
+        let mut want = 1.5f32;
+        for (x, y) in a.iter().zip(&b) {
+            want += *x * *y;
+        }
+        let got = dot_acc(Tier::Scalar, 1.5, &a, &b);
+        assert_eq!(got.to_bits(), want.to_bits());
+        // `dot` is dot_acc from zero.
+        let mut w0 = 0.0f32;
+        for (x, y) in a.iter().zip(&b) {
+            w0 += *x * *y;
+        }
+        assert_eq!(dot(Tier::Scalar, &a, &b).to_bits(), w0.to_bits());
+    }
+
+    #[test]
+    fn scalar_affine_and_axpy_match_reference() {
+        let codes: Vec<u8> = (0..23).map(|i| (i * 7 % 16) as u8).collect();
+        let mut out = vec![0.0f32; 23];
+        affine_u8(Tier::Scalar, &codes, -1.25, 0.375, &mut out);
+        for (o, &c) in out.iter().zip(&codes) {
+            let want = -1.25 + 0.375 * c as f32;
+            assert_eq!(o.to_bits(), want.to_bits());
+        }
+        let v: Vec<f32> = (0..23).map(|i| (i as f32 * 0.21).sin()).collect();
+        let mut acc = vec![0.5f32; 23];
+        let mut want = acc.clone();
+        axpy(Tier::Scalar, &mut acc, 0.8, &v);
+        for (o, vv) in want.iter_mut().zip(&v) {
+            *o += 0.8 * *vv;
+        }
+        for (a, b) in acc.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantize_activations_degenerate_inputs() {
+        let mut q = Vec::new();
+        assert_eq!(quantize_activations(&[0.0, 0.0, 0.0], &mut q), 0.0);
+        assert_eq!(q, vec![0i8; 3]);
+        assert_eq!(quantize_activations(&[1.0, f32::NAN], &mut q), 0.0);
+        assert_eq!(q, vec![0i8; 2]);
+        assert_eq!(quantize_activations(&[f32::INFINITY], &mut q), 0.0);
+        // Normal case: absmax maps to ±127 exactly.
+        let s = quantize_activations(&[-2.0, 1.0, 2.0], &mut q);
+        assert!(s > 0.0);
+        assert_eq!(q, vec![-127i8, 64, 127]);
+    }
+
+    #[test]
+    fn quantize_codebook_fills_staging_table() {
+        let cb = [-1.0f32, -0.5, 0.5, 1.0];
+        let mut t = [0i8; 256];
+        let s = quantize_codebook(&cb, &mut t);
+        assert!(s > 0.0);
+        assert_eq!(&t[..4], &[-127i8, -64, 64, 127]);
+        assert!(t[4..].iter().all(|&v| v == 0));
+        let empty: [f32; 0] = [];
+        assert_eq!(quantize_codebook(&empty, &mut t), 0.0);
+    }
+
+    #[test]
+    fn int8_ops_exact_across_tiers() {
+        // Integer gather + dot must agree exactly between scalar and
+        // whatever vector tier this host offers.
+        let tier = detect(TierPref::Auto);
+        let mut table = [0i8; 256];
+        for (i, t) in table.iter_mut().take(16).enumerate() {
+            *t = (i as i8) * 5 - 40;
+        }
+        let codes: Vec<u8> = (0..67).map(|i| (i * 11 % 16) as u8).collect();
+        let xs: Vec<i8> = (0..67).map(|i| ((i * 13 % 255) as i32 - 127) as i8).collect();
+        let mut ls = vec![0i8; 67];
+        let mut lv = vec![0i8; 67];
+        gather_i8(Tier::Scalar, &codes, &table, 16, &mut ls);
+        gather_i8(tier, &codes, &table, 16, &mut lv);
+        assert_eq!(ls, lv);
+        assert_eq!(dot_i8(Tier::Scalar, &ls, &xs), dot_i8(tier, &lv, &xs));
+    }
+
+    #[test]
+    fn load_window_zero_pads_past_end() {
+        let src = [0xABu8, 0xCD, 0xEF];
+        assert_eq!(load_window(&src, 0), 0x00EF_CDAB);
+        assert_eq!(load_window(&src, 2), 0xEF);
+        assert_eq!(load_window(&src, 3), 0);
+    }
+}

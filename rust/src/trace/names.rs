@@ -27,6 +27,10 @@ pub const WAVE_SPLIT: &str = "wave_split";
 // --- coordinator: backend execution -------------------------------------
 pub const BACKEND_PREFILL: &str = "backend_prefill";
 pub const BACKEND_DECODE: &str = "backend_decode";
+/// Which SIMD tier / act-quant mode served a decode step (DESIGN.md
+/// §14): `a` = tier id (0 scalar, 1 avx2, 2 neon), `b` = 1 when int8
+/// activation quantization is active.
+pub const KERNEL_DISPATCH: &str = "kernel_dispatch";
 
 // --- kernels: paged KV cache ---------------------------------------------
 pub const RESERVE: &str = "reserve";
@@ -61,6 +65,7 @@ pub const ALL: &[&str] = &[
     WAVE_SPLIT,
     BACKEND_PREFILL,
     BACKEND_DECODE,
+    KERNEL_DISPATCH,
     RESERVE,
     EVICT,
     PREFIX_HIT,

@@ -21,7 +21,7 @@ use icquant::coordinator::backend::{argmax_rows, NativeBackend};
 use icquant::coordinator::batcher::{clamp_pad_id, fit_prompt};
 use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
 use icquant::icquant::IcqConfig;
-use icquant::kernels::{KvCache, KvLayout, NativeModel};
+use icquant::kernels::{KvCache, KvLayout, NativeModel, Tier};
 use icquant::model::ModelConfig;
 use icquant::quant::QuantizerKind;
 use icquant::store::{container, synth_model, DecodeCache, Registry, StoredModel};
@@ -304,7 +304,10 @@ fn e2e_native_paged_serve_matches_dequantized_reference() {
         let stored = stored_via_registry(&dir, bits);
         let reference = RefModel::build(&stored);
         for &w in &workers {
-            let native = NativeModel::from_stored(&stored, w).unwrap();
+            // Pin the scalar tier: this property is exact bit-identity
+            // against the dequantized reference, which only the scalar
+            // tier guarantees (DESIGN.md §14).
+            let native = NativeModel::from_stored(&stored, w).unwrap().with_simd(Tier::Scalar);
             check(
                 &format!("e2e-pipeline-b{}-w{}", bits, w),
                 Config::from_env(4),
@@ -354,7 +357,8 @@ fn e2e_server_streams_match_dequantized_reference() {
     let reference = RefModel::build(&stored);
     let workers = pool_worker_matrix();
     let w = *workers.last().unwrap();
-    let native = NativeModel::from_stored(&stored, w).unwrap();
+    // Scalar tier: the served streams are compared token-exactly.
+    let native = NativeModel::from_stored(&stored, w).unwrap().with_simd(Tier::Scalar);
     let vocab = native.config.vocab;
 
     let cfg = ServeConfig {
@@ -422,7 +426,9 @@ fn e2e_quantized_kv_decode_passes_greedy_divergence_gate() {
     let stored = stored_via_registry(&dir, 4);
     let reference = RefModel::build(&stored);
     let w = *pool_worker_matrix().last().unwrap();
-    let native = NativeModel::from_stored(&stored, w).unwrap();
+    // Scalar tier: the agreement thresholds below were pinned against
+    // the scalar kernels; KV caches created in the loop are pinned too.
+    let native = NativeModel::from_stored(&stored, w).unwrap().with_simd(Tier::Scalar);
     let mut rng = icquant::util::prng::Rng::new(0xD1F7);
     let prompts: Vec<Vec<i32>> = (0..8)
         .map(|i| (0..(10 + 2 * i)).map(|_| rng.below(256) as i32).collect())
@@ -441,6 +447,7 @@ fn e2e_quantized_kv_decode_passes_greedy_divergence_gate() {
         for (pi, prompt) in prompts.iter().enumerate() {
             let want = reference.continuation(prompt, STEPS);
             let mut kv = KvCache::with_layout(&native.config, 1, layout);
+            kv.set_simd(Tier::Scalar);
             let mut got = vec![native.prefill_slot(&mut kv, 0, prompt).unwrap()];
             for step in 0..STEPS {
                 let forced = want[step];

@@ -1,0 +1,274 @@
+//! Divergence gate for the SIMD kernel tier (DESIGN.md §14), mirroring
+//! how the kv-quant tier is gated by `tests/kv_quant.rs`:
+//!
+//! * `Tier::Scalar` is **bit-identical** to the reference kernels — the
+//!   tier-dispatched entry points with the scalar tier must reproduce
+//!   [`gemv`]/[`gemm`] exactly, at every bit width and block-boundary
+//!   shape.
+//! * Vector tiers (AVX2/NEON) satisfy the bounded-error contract: per
+//!   output element, `|simd − scalar| ≤ 2⁻²⁰ · Σ_c |l_c · x_c|` — the
+//!   bound scales with the sum of *absolute* products, so cancellation
+//!   in the true dot cannot make it vacuous or flaky.
+//! * Pooled dispatch never adds divergence: `gemv_on_tier` is
+//!   bit-identical to `gemv_tier` at any worker count, per tier.
+//! * Selecting an unsupported tier degrades gracefully to scalar, and
+//!   `ICQ_SIMD` parsing is conservative (unknown values pin scalar).
+//! * The int8 activation path is bounded by its quantization step:
+//!   `Σ_c (|l_c|·εx + |x_c|·εl) + n·εl·εx` with `εl = cb_scale/2`,
+//!   `εx = x_scale/2` — and its integer accumulation makes the result
+//!   tier-invariant bit-exactly.
+
+use icquant::icquant::{IcqConfig, IcqMatrix};
+use icquant::kernels::simd;
+use icquant::kernels::{
+    gemm, gemm_tier, gemv, gemv_i8, gemv_on_tier, gemv_tier, Tier, TierPref, WorkerPool,
+};
+use icquant::quant::QuantizerKind;
+use icquant::synthzoo;
+use icquant::util::tensor::Matrix;
+
+const BLOCK: usize = 512; // kernels' gather block size
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+fn plane(rows: usize, cols: usize, bits: u32, seed: u64) -> IcqMatrix {
+    let w = synthzoo::demo_matrix(rows, cols, seed);
+    let cfg = IcqConfig {
+        bits,
+        outlier_ratio: 0.05,
+        gap_bits: 6,
+        quantizer: QuantizerKind::Rtn,
+    };
+    IcqMatrix::quantize(&w, None, &cfg).unwrap()
+}
+
+fn activations(cols: usize) -> Vec<f32> {
+    (0..cols).map(|i| (i as f32 * 0.37).sin()).collect()
+}
+
+/// The scalar tier must be bit-identical to the untiered reference
+/// kernels — all bit widths, cols at BLOCK−1/BLOCK/BLOCK+1 plus an odd
+/// non-boundary shape.
+#[test]
+fn scalar_tier_is_bit_identical_to_reference() {
+    for &cols in &[BLOCK - 1, BLOCK, BLOCK + 1, 777] {
+        for bits in [2u32, 3, 4, 5] {
+            let q = plane(9, cols, bits, 0x51D0 + bits as u64);
+            let rt = q.to_runtime();
+            let x = activations(cols);
+            let mut want = vec![0.0f32; 9];
+            gemv(&rt, &x, &mut want);
+            let mut got = vec![0.0f32; 9];
+            gemv_tier(&rt, &x, &mut got, Tier::Scalar);
+            assert_eq!(bits_of(&got), bits_of(&want), "gemv bits={} cols={}", bits, cols);
+
+            let xm = Matrix::from_vec(
+                3,
+                cols,
+                (0..3 * cols).map(|i| (i as f32 * 0.17).cos()).collect(),
+            );
+            let mut wantm = Matrix::zeros(3, 9);
+            gemm(&rt, &xm, &mut wantm);
+            let mut gotm = Matrix::zeros(3, 9);
+            gemm_tier(&rt, &xm, &mut gotm, Tier::Scalar);
+            assert_eq!(
+                bits_of(&gotm.data),
+                bits_of(&wantm.data),
+                "gemm bits={} cols={}",
+                bits,
+                cols
+            );
+        }
+    }
+}
+
+/// Bounded-error contract for the host's vector tier: per output row,
+/// the tier may diverge from scalar by at most 2⁻²⁰ of the sum of
+/// absolute per-term products. On hosts without a vector tier the
+/// detected tier is scalar and the test degenerates to bit-identity.
+#[test]
+fn vector_tier_respects_bounded_error_contract() {
+    let tier = simd::detect(TierPref::Auto);
+    for &cols in &[BLOCK - 1, BLOCK, BLOCK + 1, 777] {
+        for bits in [2u32, 3, 4, 5] {
+            let q = plane(9, cols, bits, 0xD1F0 + bits as u64);
+            let rt = q.to_runtime();
+            let dense = rt.dequantize();
+            let x = activations(cols);
+            let mut y_scalar = vec![0.0f32; 9];
+            gemv_tier(&rt, &x, &mut y_scalar, Tier::Scalar);
+            let mut y_simd = vec![0.0f32; 9];
+            gemv_tier(&rt, &x, &mut y_simd, tier);
+            for r in 0..9 {
+                let abs_sum: f32 =
+                    dense.row(r).iter().zip(&x).map(|(l, xv)| (l * xv).abs()).sum();
+                let bound = abs_sum / (1u32 << 20) as f32 + 1e-12;
+                let diff = (y_simd[r] - y_scalar[r]).abs();
+                assert!(
+                    diff <= bound,
+                    "{} tier row {} diverged by {} (bound {}; bits={} cols={})",
+                    tier.name(),
+                    r,
+                    diff,
+                    bound,
+                    bits,
+                    cols
+                );
+            }
+        }
+    }
+}
+
+/// Pooled dispatch must not change results **within** a tier: each
+/// output row is one chunk with the tier's fixed reduction tree, so any
+/// worker count reproduces the single-threaded tiered output exactly.
+#[test]
+fn pooled_dispatch_is_bit_identical_within_tier() {
+    let tier = simd::detect(TierPref::Auto);
+    for t in [Tier::Scalar, tier] {
+        let q = plane(29, 700, 2, 0x9002);
+        let rt = q.to_runtime();
+        let x = activations(700);
+        let mut want = vec![0.0f32; 29];
+        gemv_tier(&rt, &x, &mut want, t);
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let mut y = vec![0.0f32; 29];
+            gemv_on_tier(&pool, &rt, &x, &mut y, t);
+            assert_eq!(
+                bits_of(&y),
+                bits_of(&want),
+                "{} tier, {} workers",
+                t.name(),
+                workers
+            );
+        }
+    }
+}
+
+/// Forcing a tier the host cannot run must degrade to scalar, never
+/// trap: `detect` re-checks CPU features for explicit preferences.
+#[test]
+fn unsupported_tier_selection_degrades_gracefully() {
+    #[cfg(target_arch = "x86_64")]
+    assert_eq!(simd::detect(TierPref::Neon), Tier::Scalar);
+    #[cfg(not(target_arch = "x86_64"))]
+    assert_eq!(simd::detect(TierPref::Avx2), Tier::Scalar);
+    // Whatever auto-detection picked must be runnable: a GEMV on the
+    // detected tier completes and stays within the divergence bound
+    // (checked above); here it just must not crash on a tiny shape.
+    let q = plane(1, 1, 2, 0x0601);
+    let rt = q.to_runtime();
+    let mut y = vec![0.0f32; 1];
+    gemv_tier(&rt, &[0.5f32], &mut y, simd::detect(TierPref::Auto));
+}
+
+/// `ICQ_SIMD` parsing: exact names map to preferences, unknown values
+/// conservatively pin scalar, unset means auto. The sole env-mutating
+/// test in this binary (no other test here reads the variable), and it
+/// restores the prior value for the surrounding CI run.
+#[test]
+fn icq_simd_env_parsing_is_conservative() {
+    assert_eq!(TierPref::parse("auto"), Some(TierPref::Auto));
+    assert_eq!(TierPref::parse("scalar"), Some(TierPref::Scalar));
+    assert_eq!(TierPref::parse("avx2"), Some(TierPref::Avx2));
+    assert_eq!(TierPref::parse("neon"), Some(TierPref::Neon));
+    assert_eq!(TierPref::parse("AVX2"), None);
+    assert_eq!(TierPref::parse(""), None);
+
+    let prior = std::env::var("ICQ_SIMD").ok();
+    std::env::set_var("ICQ_SIMD", "scalar");
+    assert_eq!(simd::env_pref(), TierPref::Scalar);
+    std::env::set_var("ICQ_SIMD", "definitely-not-a-tier");
+    assert_eq!(simd::env_pref(), TierPref::Scalar);
+    std::env::remove_var("ICQ_SIMD");
+    assert_eq!(simd::env_pref(), TierPref::Auto);
+    match prior {
+        Some(v) => std::env::set_var("ICQ_SIMD", v),
+        None => std::env::remove_var("ICQ_SIMD"),
+    }
+}
+
+/// int8 activation path: bounded by the quantization steps of both
+/// sides, and — because the inner product accumulates in exact integer
+/// arithmetic — bit-identical across tiers.
+#[test]
+fn int8_activation_path_is_bounded_and_tier_invariant() {
+    let tier = simd::detect(TierPref::Auto);
+    for &cols in &[BLOCK - 1, BLOCK + 1, 777] {
+        for bits in [2u32, 3, 4, 5] {
+            let q = plane(9, cols, bits, 0x18A0 + bits as u64);
+            let rt = q.to_runtime();
+            let dense = rt.dequantize();
+            let x = activations(cols);
+            let mut y_ref = vec![0.0f32; 9];
+            gemv(&rt, &x, &mut y_ref);
+            let mut y_i8 = vec![0.0f32; 9];
+            gemv_i8(&rt, &x, &mut y_i8, tier);
+
+            // Recompute the kernel's own scales to build the bound.
+            let mut xq = Vec::new();
+            let x_scale = simd::quantize_activations(&x, &mut xq);
+            let ex = x_scale * 0.5;
+            for r in 0..9 {
+                let mut staging = [0i8; 256];
+                let cb_scale = simd::quantize_codebook(rt.codebook(r), &mut staging);
+                let el = cb_scale * 0.5;
+                let bound: f32 = dense
+                    .row(r)
+                    .iter()
+                    .zip(&x)
+                    .map(|(l, xv)| l.abs() * ex + xv.abs() * el + el * ex)
+                    .sum();
+                let bound = bound * 1.01 + 1e-6;
+                let diff = (y_i8[r] - y_ref[r]).abs();
+                assert!(
+                    diff <= bound,
+                    "int8 row {} off by {} (bound {}; bits={} cols={})",
+                    r,
+                    diff,
+                    bound,
+                    bits,
+                    cols
+                );
+            }
+
+            let mut y_scalar_i8 = vec![0.0f32; 9];
+            gemv_i8(&rt, &x, &mut y_scalar_i8, Tier::Scalar);
+            assert_eq!(
+                bits_of(&y_i8),
+                bits_of(&y_scalar_i8),
+                "int8 must be tier-invariant (bits={} cols={})",
+                bits,
+                cols
+            );
+        }
+    }
+}
+
+/// The scalar dispatch helpers the model routes attention through are
+/// exactly the open-coded loops they replaced.
+#[test]
+fn scalar_helpers_match_open_coded_loops() {
+    let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.3).sin()).collect();
+    let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).cos()).collect();
+    let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    assert_eq!(simd::dot(Tier::Scalar, &a, &b).to_bits(), want.to_bits());
+
+    let mut out = vec![0.25f32; 37];
+    let mut want_out = out.clone();
+    simd::axpy(Tier::Scalar, &mut out, 0.6, &b);
+    for (o, v) in want_out.iter_mut().zip(&b) {
+        *o += 0.6 * *v;
+    }
+    assert_eq!(bits_of(&out), bits_of(&want_out));
+
+    let codes: Vec<u8> = (0..37).map(|i| (i * 7 % 256) as u8).collect();
+    let mut levels = vec![0.0f32; 37];
+    simd::affine_u8(Tier::Scalar, &codes, -1.25, 0.01, &mut levels);
+    for (l, &c) in levels.iter().zip(&codes) {
+        assert_eq!(l.to_bits(), (-1.25f32 + 0.01 * c as f32).to_bits());
+    }
+}
