@@ -51,6 +51,14 @@ for seed in 1 2; do
 done
 rm -rf "$FUZZ_LOG_DIR"
 
+echo "=== streaming delivery tier (ICQ_FUZZ_STREAMING=1, ICQ_SIMD=scalar) ==="
+# Run the scheduler suite once with every fuzz submission routed through
+# submit_streaming on the scalar kernel tier (DESIGN.md §15): the
+# per-token channel must reproduce the whole-mode outputs bit-exactly,
+# and the dedicated streaming property tests run in the same pass.
+ICQ_FUZZ_STREAMING=1 ICQ_SIMD=scalar \
+    cargo test -q --test scheduler_fuzz --test streaming
+
 echo "=== cargo fmt --check ==="
 cargo fmt --check
 
@@ -133,6 +141,25 @@ echo "recorded ../BENCH_serving.json"
 for key in throughput_speedup short_p50_speedup trace_overhead_pct trace_disabled_ns_per_call; do
     grep -q "\"$key\"" ../BENCH_serving.json \
         || { echo "FAIL: BENCH_serving.json missing required key '$key'" >&2; exit 1; }
+done
+
+echo "=== workloads bench → BENCH_workloads.json ==="
+# Trace-replay workload zoo (DESIGN.md §15): chat with shared system
+# prompts, long-document summarization, bursty multi-tenant arrivals,
+# adversarial over-long prompts, mid-stream disconnects, and a
+# mixed-priority overload. Hard gates inside the bench: the overload
+# scenario must show high-priority p99 TTFT strictly below low
+# priority, disconnect clients must be cancelled, and sheds must be
+# accounted; the recorded JSON must carry the required keys.
+cargo bench --bench workloads
+test -f BENCH_workloads.json \
+    || { echo "FAIL: workloads bench wrote no BENCH_workloads.json" >&2; exit 1; }
+mv BENCH_workloads.json ../BENCH_workloads.json
+echo "recorded ../BENCH_workloads.json"
+for key in p50_ttft_ms_high p99_ttft_ms_high p50_ttft_ms_low p99_ttft_ms_low \
+        shed_requests cancelled_requests; do
+    grep -q "\"$key\"" ../BENCH_workloads.json \
+        || { echo "FAIL: BENCH_workloads.json missing required key '$key'" >&2; exit 1; }
 done
 
 echo "=== serve_demo trace → trace-check ==="

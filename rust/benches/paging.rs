@@ -94,6 +94,7 @@ fn run_workload(stored: &StoredModel, layout: KvLayout, prompts: &[Vec<i32>]) ->
         prefill_len: PREFILL_LEN,
         pad_id: b' ' as i32,
         scheduler: SchedulerKind::Continuous,
+        ..ServeConfig::default()
     };
     let server =
         Server::start(cfg, move || Ok(NativeBackend::new(native).with_kv_layout(layout)));

@@ -62,6 +62,7 @@ fn run_mixed_workload(scheduler: SchedulerKind) -> WorkloadReport {
         prefill_len: 16,
         pad_id: b' ' as i32,
         scheduler,
+        ..ServeConfig::default()
     };
     let server = Server::start(cfg, || {
         Ok(SimBackend::new(SIM_PREFILL, SIM_STEP_PER_SLOT))

@@ -1,0 +1,327 @@
+//! Workload-zoo trace-replay bench (ISSUE 10), recorded as
+//! `BENCH_workloads.json` (ci.sh gates on its keys).
+//!
+//! Replays mixed serving scenarios through the real `Server` over
+//! [`SimBackend`] (deterministic streams + a simulated per-slot step
+//! cost) and records per-class latency distributions:
+//!
+//! * **chat** — many short requests sharing one system prompt.
+//! * **summarize** — few long-document requests (over-long prompts the
+//!   prefill window left-truncates) with long generations.
+//! * **burst** — everything arrives at once; admission order and queue
+//!   depth dominate.
+//! * **adversarial** — over-long prompts asking for more tokens than
+//!   the server allows; the clamps must serve them, not error.
+//! * **disconnect** — streaming clients that vanish mid-stream; their
+//!   sequences must cancel and count, not decode to target for nobody.
+//! * **overload** — mixed-priority pressure on two slots with a
+//!   per-class queue bound: high priority must jump the queue (the
+//!   acceptance gate asserts high-priority p99 TTFT strictly below
+//!   low-priority) and overflow must shed.
+
+use icquant::coordinator::backend::SimBackend;
+use icquant::coordinator::{
+    Class, SchedulerKind, ServeConfig, Server, SubmitOpts, TokenEvent,
+};
+use icquant::util::json::Json;
+use std::time::{Duration, Instant};
+
+const PREFILL: Duration = Duration::from_micros(300);
+const STEP: Duration = Duration::from_micros(400);
+
+fn pct(mut xs: Vec<f64>, q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[((xs.len() as f64 - 1.0) * q).round() as usize]
+}
+
+fn base_cfg(slots: usize) -> ServeConfig {
+    ServeConfig {
+        max_batch: slots,
+        max_wait: Duration::from_millis(1),
+        max_new_tokens: 64,
+        buckets: vec![1, 2, 4, 8],
+        prefill_len: 16,
+        pad_id: 0,
+        scheduler: SchedulerKind::Continuous,
+        ..ServeConfig::default()
+    }
+}
+
+struct Req {
+    prompt: Vec<i32>,
+    want: usize,
+    class: Class,
+    tenant: u64,
+    stagger: Duration,
+}
+
+impl Req {
+    fn plain(prompt: Vec<i32>, want: usize) -> Req {
+        Req { prompt, want, class: Class::default(), tenant: 0, stagger: Duration::ZERO }
+    }
+}
+
+#[derive(Default)]
+struct Outcome {
+    ttft_ms: Vec<f64>,
+    itl_ms: Vec<f64>,
+    tokens: usize,
+    wall_s: f64,
+    failed: usize,
+}
+
+impl Outcome {
+    fn absorb(&mut self, resp: icquant::coordinator::GenerateResponse) {
+        match resp.timing.error {
+            Some(_) => self.failed += 1,
+            None => {
+                self.ttft_ms.push(resp.timing.ttft_ms);
+                // Mean inter-token gap per request; the per-class
+                // distribution below is across requests.
+                self.itl_ms.push(resp.timing.decode_ms / resp.tokens.len().max(1) as f64);
+                self.tokens += resp.tokens.len();
+            }
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("requests_ok", Json::num(self.ttft_ms.len() as f64)),
+            ("requests_failed", Json::num(self.failed as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("p50_ttft_ms", Json::num(pct(self.ttft_ms.clone(), 0.50))),
+            ("p99_ttft_ms", Json::num(pct(self.ttft_ms.clone(), 0.99))),
+            ("p50_itl_ms", Json::num(pct(self.itl_ms.clone(), 0.50))),
+            ("p99_itl_ms", Json::num(pct(self.itl_ms.clone(), 0.99))),
+        ])
+    }
+}
+
+/// Replay one scenario: submit in order (with optional stagger), then
+/// collect every response.
+fn replay(name: &str, cfg: ServeConfig, reqs: Vec<Req>) -> Outcome {
+    let server = Server::start(cfg, || Ok(SimBackend::new(PREFILL, STEP)));
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for r in reqs {
+        if r.stagger > Duration::ZERO {
+            std::thread::sleep(r.stagger);
+        }
+        let opts = SubmitOpts { max_new_tokens: r.want, class: r.class, tenant: r.tenant };
+        rxs.push(server.submit_with(r.prompt, opts).unwrap().1);
+    }
+    let mut out = Outcome::default();
+    for rx in rxs {
+        out.absorb(rx.recv_timeout(Duration::from_secs(60)).expect("response"));
+    }
+    out.wall_s = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    println!(
+        "{:<12} {:>3} ok {:>2} failed  {:>6} tok  p50 ttft {:>7.2} ms  p99 ttft {:>7.2} ms",
+        name,
+        out.ttft_ms.len(),
+        out.failed,
+        out.tokens,
+        pct(out.ttft_ms.clone(), 0.50),
+        pct(out.ttft_ms.clone(), 0.99),
+    );
+    out
+}
+
+fn chat() -> Outcome {
+    // A shared 12-token system prompt with short unique tails, arriving
+    // on a light stagger — the steady-state interactive mix.
+    let system: Vec<i32> = (0..12).map(|i| 64 + i).collect();
+    let reqs = (0..12)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend([100 + i, 101 + i, 102 + i]);
+            Req { stagger: Duration::from_micros(500), ..Req::plain(p, 8) }
+        })
+        .collect();
+    replay("chat", base_cfg(4), reqs)
+}
+
+fn summarize() -> Outcome {
+    // Long documents (left-truncated to the prefill window) with long
+    // generations: few requests, deep decode.
+    let reqs = (0..4)
+        .map(|i| Req::plain((0..64).map(|j| (i * 64 + j) % 256).collect(), 24))
+        .collect();
+    replay("summarize", base_cfg(2), reqs)
+}
+
+fn burst() -> Outcome {
+    // Everything at once, across four tenants.
+    let reqs = (0..16)
+        .map(|i| Req { tenant: (i % 4) as u64, ..Req::plain(vec![i; 6], 4) })
+        .collect();
+    replay("burst", base_cfg(4), reqs)
+}
+
+fn adversarial() -> Outcome {
+    // Prompts far beyond the prefill window asking for far more tokens
+    // than allowed: the window truncates, max_new_tokens clamps, and
+    // every request must still be served.
+    let reqs = (0..3)
+        .map(|i| Req::plain((0..512).map(|j| (i + j) % 256).collect(), 400))
+        .collect();
+    let out = replay("adversarial", base_cfg(2), reqs);
+    assert_eq!(out.failed, 0, "adversarial prompts must clamp, not fail");
+    out
+}
+
+/// Streaming clients that drop their receiver mid-stream: the server
+/// must cancel their sequences (counted in `Metrics.cancelled`) while
+/// patient clients on the same slots are served to completion.
+fn disconnects() -> u64 {
+    let server = Server::start(base_cfg(2), || Ok(SimBackend::new(PREFILL, STEP)));
+    let opts = SubmitOpts { max_new_tokens: 48, ..SubmitOpts::default() };
+    let mut dropped = Vec::new();
+    let mut patient = Vec::new();
+    for i in 0..6 {
+        let (_, rx) = server.submit_streaming(vec![i; 4], opts).unwrap();
+        if i < 4 {
+            dropped.push(rx);
+        } else {
+            patient.push(rx);
+        }
+    }
+    // Each impatient client reads two tokens, then vanishes.
+    for rx in dropped {
+        for _ in 0..2 {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("stream event") {
+                TokenEvent::Token(_) => {}
+                other => panic!("expected a token, got {:?}", other),
+            }
+        }
+        drop(rx);
+    }
+    for rx in patient {
+        let mut tokens = 0usize;
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("stream event") {
+                TokenEvent::Token(_) => tokens += 1,
+                TokenEvent::Done(_) => break,
+                TokenEvent::Failed(e) => panic!("patient stream failed: {}", e),
+            }
+        }
+        assert_eq!(tokens, 48, "patient client must be served to target");
+    }
+    let metrics = server.metrics.clone();
+    server.shutdown();
+    let cancelled = metrics.snapshot().cancelled;
+    println!("{:<12} {} mid-stream disconnects cancelled", "disconnect", cancelled);
+    assert!(cancelled >= 4, "disconnected streams were not cancelled: {}", cancelled);
+    cancelled
+}
+
+struct Overload {
+    low: Outcome,
+    high: Outcome,
+    shed: u64,
+}
+
+/// Mixed-priority pressure: two slots, a low-priority flood behind a
+/// per-class queue bound, then a high-priority burst that must jump
+/// the queue.
+fn overload() -> Overload {
+    let mut cfg = base_cfg(2);
+    cfg.qos.max_queue_per_class = 6;
+    let server = Server::start(cfg, || Ok(SimBackend::new(PREFILL, STEP)));
+    let low_opts = SubmitOpts { max_new_tokens: 16, ..SubmitOpts::default() };
+    let high_opts = SubmitOpts {
+        max_new_tokens: 8,
+        class: Class { priority: 5, deadline: None },
+        ..SubmitOpts::default()
+    };
+    let mut low_rxs = Vec::new();
+    for i in 0..12 {
+        low_rxs.push(server.submit_with(vec![i; 4], low_opts).unwrap().1);
+    }
+    // The flood is queued (and partially shed) before the burst lands.
+    std::thread::sleep(Duration::from_millis(5));
+    let mut high_rxs = Vec::new();
+    for i in 0..6 {
+        high_rxs.push(server.submit_with(vec![100 + i; 4], high_opts).unwrap().1);
+    }
+    let mut low = Outcome::default();
+    for rx in low_rxs {
+        low.absorb(rx.recv_timeout(Duration::from_secs(60)).expect("low response"));
+    }
+    let mut high = Outcome::default();
+    for rx in high_rxs {
+        high.absorb(rx.recv_timeout(Duration::from_secs(60)).expect("high response"));
+    }
+    let metrics = server.metrics.clone();
+    server.shutdown();
+    let shed = metrics.snapshot().shed;
+    assert_eq!(low.failed as u64, shed, "low-class failures must all be sheds");
+    assert_eq!(high.failed, 0, "high class must never shed in this scenario");
+    assert!(shed > 0, "the low-priority flood must overflow its queue bound");
+    println!(
+        "{:<12} high p99 ttft {:>7.2} ms  low p99 ttft {:>7.2} ms  {} shed",
+        "overload",
+        pct(high.ttft_ms.clone(), 0.99),
+        pct(low.ttft_ms.clone(), 0.99),
+        shed
+    );
+    Overload { low, high, shed }
+}
+
+fn main() {
+    println!(
+        "workload zoo: sim prefill {}µs, step {}µs/slot\n",
+        PREFILL.as_micros(),
+        STEP.as_micros()
+    );
+    let chat = chat();
+    let summarize = summarize();
+    let burst = burst();
+    let adversarial = adversarial();
+    let cancelled = disconnects();
+    let ov = overload();
+
+    let p50_high = pct(ov.high.ttft_ms.clone(), 0.50);
+    let p99_high = pct(ov.high.ttft_ms.clone(), 0.99);
+    let p50_low = pct(ov.low.ttft_ms.clone(), 0.50);
+    let p99_low = pct(ov.low.ttft_ms.clone(), 0.99);
+    // The acceptance gate: priority admission must be visible in the
+    // tail — a high-priority request under overload never waits behind
+    // the whole low-priority queue.
+    assert!(
+        p99_high < p99_low,
+        "high-priority p99 TTFT must beat low-priority under overload: {:.2} vs {:.2} ms",
+        p99_high,
+        p99_low
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("workloads")),
+        (
+            "sim",
+            Json::obj(vec![
+                ("prefill_us", Json::num(PREFILL.as_micros() as f64)),
+                ("step_per_slot_us", Json::num(STEP.as_micros() as f64)),
+            ]),
+        ),
+        ("chat", chat.json()),
+        ("summarize", summarize.json()),
+        ("burst", burst.json()),
+        ("adversarial", adversarial.json()),
+        ("overload_low", ov.low.json()),
+        ("overload_high", ov.high.json()),
+        ("p50_ttft_ms_high", Json::num(p50_high)),
+        ("p99_ttft_ms_high", Json::num(p99_high)),
+        ("p50_ttft_ms_low", Json::num(p50_low)),
+        ("p99_ttft_ms_low", Json::num(p99_low)),
+        ("shed_requests", Json::num(ov.shed as f64)),
+        ("cancelled_requests", Json::num(cancelled as f64)),
+    ]);
+    std::fs::write("BENCH_workloads.json", json.to_string()).unwrap();
+    println!("\nwrote BENCH_workloads.json");
+}

@@ -12,7 +12,7 @@
 //!   whole request (DESIGN.md §8).
 
 use crate::coordinator::backend::{NativeBackend, PjrtBackend};
-use crate::coordinator::{SchedulerKind, ServeConfig, Server};
+use crate::coordinator::{SchedulerKind, ServeConfig, Server, SubmitOpts, TokenEvent};
 use crate::eval::load_corpus_tokens;
 use crate::experiments::methods::Method;
 use crate::icquant::IcqConfig;
@@ -139,6 +139,7 @@ pub fn run_native(
         // space token is the natural pad here.
         pad_id: b' ' as i32,
         scheduler: SchedulerKind::Continuous,
+        ..ServeConfig::default()
     };
     trace_setup(trace_out);
     let server =
@@ -147,22 +148,45 @@ pub fn run_native(
 
     // Workload: synthetic printable-byte prompts (byte-level vocab)
     // behind one shared "system prompt" prefix — the scenario the paged
-    // cache's prefix reuse targets (DESIGN.md §10).
+    // cache's prefix reuse targets (DESIGN.md §10). Even requests use
+    // the whole-response API; odd ones ride the per-token streaming
+    // channel (DESIGN.md §15) so the demo exercises both front ends.
     let mut rng = Rng::new(0x5E2E);
     let system: Vec<i32> = (0..16).map(|_| 32 + (rng.below(95)) as i32).collect();
     let t0 = Instant::now();
-    let mut rxs = Vec::new();
-    for _ in 0..n_requests {
+    let mut whole_rxs = Vec::new();
+    let mut stream_rxs = Vec::new();
+    for i in 0..n_requests {
         let mut prompt = system.clone();
         prompt.extend((0..8).map(|_| 32 + (rng.below(95)) as i32));
-        let (_, rx) = server.submit(prompt, max_tokens)?;
-        rxs.push(rx);
+        if i % 2 == 0 {
+            let (_, rx) = server.submit(prompt, max_tokens)?;
+            whole_rxs.push(rx);
+        } else {
+            let opts = SubmitOpts { max_new_tokens: max_tokens, ..SubmitOpts::default() };
+            let (_, rx) = server.submit_streaming(prompt, opts)?;
+            stream_rxs.push(rx);
+        }
     }
     let mut total_tokens = 0usize;
-    for rx in rxs {
+    let mut streamed_tokens = 0usize;
+    let streamed_requests = stream_rxs.len();
+    for rx in whole_rxs {
         let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
         anyhow::ensure!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
         total_tokens += resp.tokens.len();
+    }
+    for rx in stream_rxs {
+        loop {
+            match rx.recv_timeout(Duration::from_secs(600)).expect("stream event") {
+                TokenEvent::Token(_) => {
+                    total_tokens += 1;
+                    streamed_tokens += 1;
+                }
+                TokenEvent::Done(_) => break,
+                TokenEvent::Failed(e) => anyhow::bail!("stream failed: {}", e),
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -171,6 +195,10 @@ pub fn run_native(
     println!("\n=== native serving report ===");
     println!("requests               : {}", snap.requests);
     println!("errors                 : {}", snap.errors);
+    println!("shed / cancelled       : {} / {} (QoS admission, DESIGN.md §15)",
+        snap.shed, snap.cancelled);
+    println!("streamed               : {} requests, {} tokens over per-token channels",
+        streamed_requests, streamed_tokens);
     println!("generated tokens       : {}", total_tokens);
     println!("wall time              : {:.2} s", wall);
     println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);
@@ -251,6 +279,7 @@ pub fn run(
         // The compiled buckets force wave scheduling either way; being
         // explicit keeps the report's batch lines honest.
         scheduler: SchedulerKind::RunToCompletion,
+        ..ServeConfig::default()
     };
     println!("starting server: {} | max_batch={} max_wait=15ms", storage_note, max_batch);
 
@@ -285,6 +314,7 @@ pub fn run(
     println!("\n=== serving report ===");
     println!("requests               : {}", snap.requests);
     println!("errors                 : {}", snap.errors);
+    println!("shed / cancelled       : {} / {}", snap.shed, snap.cancelled);
     println!("generated tokens       : {}", total_tokens);
     println!("wall time              : {:.2} s", wall);
     println!("throughput             : {:.1} tokens/s", total_tokens as f64 / wall);

@@ -149,6 +149,12 @@ pub trait Backend {
     /// Release `slot` for reuse. The default masks the lane and resets
     /// its position, which suits stateless mocks; model backends also
     /// free their cache lane.
+    ///
+    /// Cancellation rides on this same path (DESIGN.md §15): when a
+    /// streaming client disconnects mid-decode, the scheduler retires
+    /// the slot immediately, so implementations must tolerate being
+    /// called on a sequence that has not reached its target length and
+    /// must release every resource (KV blocks, reservations) it holds.
     fn retire(&mut self, state: &mut DecodeState, slot: usize) -> Result<()> {
         ensure!(slot < state.cap, "retire: slot {} out of range", slot);
         state.active[slot] = false;

@@ -1,22 +1,119 @@
 //! Pure scheduling policy + prompt normalization — the logic the
 //! property tests pin down independently of any backend.
 //!
-//! Two policies live here, one per scheduler mode (DESIGN.md §9):
+//! Three policies live here (DESIGN.md §9, §15):
 //!
 //! * [`BatchPolicy`] — size-or-deadline flush for the *wave* path
 //!   (bucket-compiled backends admit whole batches at a time).
 //! * [`AdmissionPolicy`] — work-conserving slot admission for the
 //!   *continuous* path: a freed KV slot is refilled from the queue
 //!   immediately, with no artificial wait.
+//! * [`QosQueue`] — the priority/deadline/fairness admission queue both
+//!   scheduler loops pull from: priority-ordered, deadline-shedding,
+//!   round-robin across tenants at equal priority.
+//!
+//! [`Delivery`] is the response side: one buffered `GenerateResponse`
+//! (the pre-streaming contract) or a per-token [`TokenEvent`] stream.
 
-use super::{GenerateRequest, GenerateResponse};
+use super::metrics::RequestTiming;
+use super::{GenerateRequest, GenerateResponse, TokenEvent};
+use std::collections::HashMap;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
-/// A queued request with its response channel and arrival time.
+/// QoS class a request carries into admission (DESIGN.md §15).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Class {
+    /// Admission priority: higher values are admitted first. Requests
+    /// of equal priority are served in arrival order, round-robin
+    /// across tenants.
+    pub priority: u8,
+    /// Absolute shed deadline: a request still queued (not admitted)
+    /// when it passes is failed instead of served late.
+    pub deadline: Option<Instant>,
+}
+
+/// Load-shedding and fairness bounds (DESIGN.md §15). The defaults are
+/// effectively unbounded — QoS is opt-in per server.
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    /// Queued-but-unadmitted requests allowed per priority class; a
+    /// submission beyond the bound is shed with an explicit failure
+    /// rather than queued indefinitely.
+    pub max_queue_per_class: usize,
+    /// In-flight sequences (KV slots / wave lanes) one tenant may hold.
+    pub max_slots_per_tenant: usize,
+}
+
+impl Default for QosConfig {
+    fn default() -> QosConfig {
+        QosConfig { max_queue_per_class: usize::MAX, max_slots_per_tenant: usize::MAX }
+    }
+}
+
+/// The client is gone: its receiver was dropped before delivery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Disconnected;
+
+/// How a request's results travel back to the client (DESIGN.md §15).
+pub enum Delivery {
+    /// Buffered: one [`GenerateResponse`] when the request retires.
+    Whole(Sender<GenerateResponse>),
+    /// Streaming: a [`TokenEvent::Token`] per decoded token the moment
+    /// the step retires, then `Done` (or `Failed`).
+    Stream(Sender<TokenEvent>),
+}
+
+impl Delivery {
+    /// Push one decoded token. Whole-mode responses are buffered by the
+    /// scheduler, so only stream mode can observe a disconnect here;
+    /// an `Err` means the client dropped its receiver and the sequence
+    /// should be cancelled (§15 cancel semantics).
+    pub fn send_token(&self, tok: i32) -> Result<(), Disconnected> {
+        match self {
+            Delivery::Whole(_) => Ok(()),
+            Delivery::Stream(tx) => tx.send(TokenEvent::Token(tok)).map_err(|_| Disconnected),
+        }
+    }
+
+    /// Terminal success: the whole response, or the stream's `Done`
+    /// marker. `Err` means the client disconnected before delivery.
+    pub fn finish(
+        &self,
+        id: u64,
+        tokens: Vec<i32>,
+        timing: RequestTiming,
+    ) -> Result<(), Disconnected> {
+        match self {
+            Delivery::Whole(tx) => {
+                tx.send(GenerateResponse { id, tokens, timing }).map_err(|_| Disconnected)
+            }
+            Delivery::Stream(tx) => tx.send(TokenEvent::Done(timing)).map_err(|_| Disconnected),
+        }
+    }
+
+    /// Terminal failure (error or shed). A disconnected client is
+    /// ignored — it no longer cares.
+    pub fn fail(&self, id: u64, msg: String) {
+        match self {
+            Delivery::Whole(tx) => {
+                let _ = tx.send(GenerateResponse {
+                    id,
+                    tokens: vec![],
+                    timing: RequestTiming::failed(msg),
+                });
+            }
+            Delivery::Stream(tx) => {
+                let _ = tx.send(TokenEvent::Failed(msg));
+            }
+        }
+    }
+}
+
+/// A queued request with its delivery channel and arrival time.
 pub struct PendingRequest {
     pub req: GenerateRequest,
-    pub tx: Sender<GenerateResponse>,
+    pub tx: Delivery,
     pub arrived: Instant,
     /// Prompt normalized to the prefill window, computed lazily and
     /// exactly once — the block-admission gate re-examines queued
@@ -27,11 +124,7 @@ pub struct PendingRequest {
 }
 
 impl PendingRequest {
-    pub fn new(
-        req: GenerateRequest,
-        tx: Sender<GenerateResponse>,
-        arrived: Instant,
-    ) -> PendingRequest {
+    pub fn new(req: GenerateRequest, tx: Delivery, arrived: Instant) -> PendingRequest {
         PendingRequest { req, tx, arrived, normalized: None }
     }
 
@@ -82,6 +175,120 @@ impl AdmissionPolicy {
     /// How many requests to admit given current occupancy and queue depth.
     pub fn admit_now(&self, occupied: usize, queued: usize) -> usize {
         self.slots.saturating_sub(occupied).min(queued)
+    }
+}
+
+/// The priority/deadline/fairness admission queue (DESIGN.md §15).
+///
+/// Items are kept priority-descending, FIFO within a priority class, so
+/// with all-default classes the queue degenerates to plain FIFO and both
+/// scheduler loops behave exactly as before QoS existed. Selection
+/// ([`QosQueue::select`]) skips tenants at their in-flight cap and
+/// rotates round-robin across tenants at the chosen priority.
+#[derive(Default)]
+pub struct QosQueue {
+    items: Vec<PendingRequest>,
+    /// Tenant served by the most recent `select`, for round-robin
+    /// rotation at equal priority.
+    rr_last: Option<u64>,
+}
+
+impl QosQueue {
+    pub fn new() -> QosQueue {
+        QosQueue { items: Vec::new(), rr_last: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Enqueue in priority order. Returns the request back (`Err`) when
+    /// its priority class already holds `max_per_class` queued entries —
+    /// the caller sheds it with an explicit failure.
+    pub fn push(&mut self, p: PendingRequest, max_per_class: usize) -> Result<(), PendingRequest> {
+        let prio = p.req.class.priority;
+        let depth = self.items.iter().filter(|q| q.req.class.priority == prio).count();
+        if depth >= max_per_class {
+            return Err(p);
+        }
+        // Insert before the first strictly-lower priority: descending
+        // order, arrival order within a class.
+        let at = self
+            .items
+            .iter()
+            .position(|q| q.req.class.priority < prio)
+            .unwrap_or(self.items.len());
+        self.items.insert(at, p);
+        Ok(())
+    }
+
+    /// Remove every queued request whose shed deadline has passed. The
+    /// caller fails them; admitted sequences are never shed.
+    pub fn drain_expired(&mut self, now: Instant) -> Vec<PendingRequest> {
+        let mut expired = Vec::new();
+        let mut i = 0;
+        while i < self.items.len() {
+            if self.items[i].req.class.deadline.is_some_and(|d| d <= now) {
+                expired.push(self.items.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        expired
+    }
+
+    /// Pick the next request to admit: the highest-priority class with
+    /// an admissible item (tenants already holding `max_per_tenant`
+    /// in-flight sequences are skipped so a greedy tenant cannot starve
+    /// the rest), rotating round-robin across that class's admissible
+    /// tenants starting after the last tenant served. Returns an index
+    /// into the queue — the caller may inspect it (block-need probe)
+    /// before committing with [`QosQueue::remove`].
+    pub fn select(
+        &mut self,
+        in_flight: &HashMap<u64, usize>,
+        max_per_tenant: usize,
+    ) -> Option<usize> {
+        let admissible = |p: &PendingRequest| {
+            in_flight.get(&p.req.tenant).copied().unwrap_or(0) < max_per_tenant
+        };
+        let first = self.items.iter().position(admissible)?;
+        let prio = self.items[first].req.class.priority;
+        // First queued item per admissible tenant within the chosen
+        // class, in arrival order.
+        let mut heads: Vec<(u64, usize)> = Vec::new();
+        for (i, p) in self.items.iter().enumerate().skip(first) {
+            if p.req.class.priority != prio {
+                break;
+            }
+            if admissible(p) && heads.iter().all(|&(t, _)| t != p.req.tenant) {
+                heads.push((p.req.tenant, i));
+            }
+        }
+        // Rotate: continue strictly after the tenant served last time.
+        let pick = match self.rr_last.and_then(|t| heads.iter().position(|&(h, _)| h == t)) {
+            Some(at) => heads[(at + 1) % heads.len()],
+            None => heads[0],
+        };
+        self.rr_last = Some(pick.0);
+        Some(pick.1)
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut PendingRequest {
+        &mut self.items[i]
+    }
+
+    pub fn remove(&mut self, i: usize) -> PendingRequest {
+        self.items.remove(i)
+    }
+
+    /// Empty the queue (shutdown drain); the caller fails every entry.
+    pub fn drain_all(&mut self) -> Vec<PendingRequest> {
+        std::mem::take(&mut self.items)
     }
 }
 
@@ -207,6 +414,92 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    fn pend(id: u64, priority: u8, tenant: u64, deadline: Option<Instant>) -> PendingRequest {
+        let (tx, rx) = std::sync::mpsc::channel();
+        // Queue-policy tests never deliver; the dropped receiver is fine.
+        drop(rx);
+        PendingRequest::new(
+            GenerateRequest {
+                id,
+                prompt: vec![1],
+                max_new_tokens: 4,
+                class: Class { priority, deadline },
+                tenant,
+            },
+            Delivery::Whole(tx),
+            Instant::now(),
+        )
+    }
+
+    fn drain_ids(q: &mut QosQueue, in_flight: &HashMap<u64, usize>, cap: usize) -> Vec<u64> {
+        let mut ids = Vec::new();
+        while let Some(i) = q.select(in_flight, cap) {
+            ids.push(q.remove(i).req.id);
+        }
+        ids
+    }
+
+    #[test]
+    fn qos_queue_orders_by_priority_then_arrival() {
+        let mut q = QosQueue::new();
+        for (id, prio) in [(1, 0), (2, 2), (3, 1), (4, 2), (5, 0)] {
+            q.push(pend(id, prio, 0, None), usize::MAX).unwrap();
+        }
+        let ids = drain_ids(&mut q, &HashMap::new(), usize::MAX);
+        assert_eq!(ids, vec![2, 4, 3, 1, 5]);
+    }
+
+    #[test]
+    fn qos_queue_sheds_on_class_depth() {
+        let mut q = QosQueue::new();
+        assert!(q.push(pend(1, 1, 0, None), 2).is_ok());
+        assert!(q.push(pend(2, 1, 0, None), 2).is_ok());
+        // Third entry in the same class bounces back to the caller...
+        let rejected = q.push(pend(3, 1, 0, None), 2).unwrap_err();
+        assert_eq!(rejected.req.id, 3);
+        // ...but another class still has headroom.
+        assert!(q.push(pend(4, 0, 0, None), 2).is_ok());
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn qos_queue_drains_expired_deadlines() {
+        let now = Instant::now();
+        let mut q = QosQueue::new();
+        q.push(pend(1, 0, 0, Some(now - Duration::from_millis(1))), usize::MAX).unwrap();
+        q.push(pend(2, 0, 0, Some(now + Duration::from_secs(60))), usize::MAX).unwrap();
+        q.push(pend(3, 0, 0, None), usize::MAX).unwrap();
+        let expired: Vec<u64> = q.drain_expired(now).into_iter().map(|p| p.req.id).collect();
+        assert_eq!(expired, vec![1]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn qos_queue_skips_tenants_at_cap() {
+        let mut q = QosQueue::new();
+        q.push(pend(1, 1, 7, None), usize::MAX).unwrap(); // high prio, capped tenant
+        q.push(pend(2, 0, 8, None), usize::MAX).unwrap(); // low prio, free tenant
+        let in_flight = HashMap::from([(7u64, 2usize)]);
+        // Tenant 7 is at its cap, so the lower-priority tenant runs
+        // instead of head-of-line blocking behind it.
+        let i = q.select(&in_flight, 2).unwrap();
+        assert_eq!(q.remove(i).req.id, 2);
+        // With nothing admissible, select yields none.
+        assert!(q.select(&in_flight, 2).is_none());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn qos_queue_round_robins_tenants_at_equal_priority() {
+        let mut q = QosQueue::new();
+        // Tenant A submits a burst before tenant B's requests arrive.
+        for (id, tenant) in [(1, 10), (2, 10), (3, 10), (4, 20), (5, 20)] {
+            q.push(pend(id, 0, tenant, None), usize::MAX).unwrap();
+        }
+        let ids = drain_ids(&mut q, &HashMap::new(), usize::MAX);
+        assert_eq!(ids, vec![1, 4, 2, 5, 3]);
     }
 
     #[test]

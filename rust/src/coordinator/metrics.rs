@@ -91,6 +91,8 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 struct Inner {
     requests: u64,
     errors: u64,
+    cancelled: u64,
+    shed: u64,
     batches: u64,
     batch_size_sum: u64,
     bucket_sum: u64,
@@ -133,6 +135,8 @@ impl Default for Inner {
         Inner {
             requests: 0,
             errors: 0,
+            cancelled: 0,
+            shed: 0,
             batches: 0,
             batch_size_sum: 0,
             bucket_sum: 0,
@@ -171,6 +175,15 @@ pub struct Snapshot {
     pub requests: u64,
     /// Requests that failed (prefill/decode error, exhausted KV pool).
     pub errors: u64,
+    /// Sequences cancelled because the client dropped its receiver
+    /// mid-stream — their slots retired early and their KV blocks
+    /// returned to the pool (DESIGN.md §15).
+    pub cancelled: u64,
+    /// Requests load-shed before admission: expired deadline or a full
+    /// per-class queue (DESIGN.md §15). Counted separately from
+    /// `errors` — shedding is the admission policy working, not the
+    /// serving stack failing.
+    pub shed: u64,
     /// Admission rounds (continuous) or waves (batch path).
     pub batches: u64,
     pub avg_batch_size: f64,
@@ -295,6 +308,19 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Count one client-disconnect cancellation (DESIGN.md §15). The
+    /// sequence's partial timings are discarded — nobody received the
+    /// response, so feeding them to the latency aggregates would skew
+    /// p50/p99 with lifecycles no client observed end-to-end.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// Count one load-shed request (deadline or queue-depth bound).
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
     /// Report the kernel tier and activation-quant mode the serving
     /// backend resolved (DESIGN.md §14). Called once at startup; the
     /// names come from [`Tier::name`](crate::kernels::Tier::name) and
@@ -312,6 +338,8 @@ impl Metrics {
         Snapshot {
             requests: m.requests,
             errors: m.errors,
+            cancelled: m.cancelled,
+            shed: m.shed,
             batches: m.batches,
             avg_batch_size: m.batch_size_sum as f64 / m.batches.max(1) as f64,
             avg_bucket: m.bucket_sum as f64 / m.batches.max(1) as f64,
@@ -511,6 +539,24 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_latency_ms, 0.0);
+        assert_eq!(s.latency_samples, 0);
+        assert_eq!(s.cancelled, 0);
+        assert_eq!(s.shed, 0);
+    }
+
+    #[test]
+    fn cancelled_and_shed_count_separately_from_errors() {
+        let m = Metrics::default();
+        m.record_cancelled();
+        m.record_cancelled();
+        m.record_shed();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.errors, 1);
+        // Neither lifecycle feeds the success aggregates.
+        assert_eq!(s.requests, 0);
         assert_eq!(s.latency_samples, 0);
     }
 

@@ -687,6 +687,9 @@ impl KvCache {
     /// blocks drop (exclusive blocks return to the free list — blocks
     /// still held by the prefix registry or a sharing slot survive),
     /// its reservation returns to the pool, and its position resets.
+    /// This is also the disconnect-cancel path (DESIGN.md §15): it must
+    /// fully release a partially-decoded lane so an abandoned stream
+    /// frees its blocks before the sequence would have finished.
     pub fn free_slot(&mut self, slot: usize) {
         for b in std::mem::take(&mut self.tables[slot]) {
             self.release(b);

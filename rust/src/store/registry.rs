@@ -370,6 +370,16 @@ impl Registry {
                 removed.push(path);
             }
         }
+        // A leftover `manifest.json.tmp` means a `write_manifest` died
+        // between write and rename. Manifest writes only happen under
+        // the registry lock — which gc holds right now — so any temp
+        // present here is definitionally crash debris, no age gate.
+        let manifest_tmp = self.manifest_path().with_extension("json.tmp");
+        if manifest_tmp.is_file() {
+            std::fs::remove_file(&manifest_tmp)
+                .with_context(|| format!("remove {}", manifest_tmp.display()))?;
+            removed.push(manifest_tmp);
+        }
         // Root-level `.put-*.icqz.tmp` files from crashed `put_model`
         // calls. `container::save` there runs *before* the lock is
         // taken, so a fresh temp may belong to an in-flight put — only
@@ -500,6 +510,33 @@ mod tests {
         assert!(!orphan.exists());
         assert!(fresh_tmp.exists());
         assert!(reg.object_path(&rec.hash).exists());
+    }
+
+    #[test]
+    fn gc_sweeps_crashed_put_debris() {
+        let root = fresh_root("gc_debris");
+        let reg = Registry::open(&root).unwrap();
+        let src = root.join("src.icqz");
+        demo_container(&src, 1);
+        let rec = reg.put_file("demo", &src).unwrap();
+        // A crashed object copy: `put_file` writes `<hash>.icqz.tmp`
+        // then renames; dying in between strands the temp forever.
+        let obj_tmp = root.join("objects").join(format!("{}.icqz.tmp", "a".repeat(32)));
+        std::fs::write(&obj_tmp, b"half-copied object").unwrap();
+        // A crashed manifest commit: `write_manifest` dying between
+        // write and rename strands `manifest.json.tmp` at the root.
+        let manifest_tmp = root.join("manifest.json.tmp");
+        std::fs::write(&manifest_tmp, b"{\"artifacts\": []}").unwrap();
+        let removed = reg.gc().unwrap();
+        assert!(removed.contains(&obj_tmp), "gc left {:?} (removed {:?})", obj_tmp, removed);
+        assert!(removed.contains(&manifest_tmp), "gc left manifest.json.tmp: {:?}", removed);
+        assert_eq!(removed.len(), 2);
+        assert!(!obj_tmp.exists());
+        assert!(!manifest_tmp.exists());
+        // The live object and its manifest record are untouched.
+        assert!(reg.object_path(&rec.hash).exists());
+        assert_eq!(reg.list().unwrap().len(), 1);
+        assert!(reg.resolve("demo").is_ok());
     }
 
     #[test]

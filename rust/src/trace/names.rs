@@ -23,6 +23,15 @@ pub const CLAMP_RESERVATION: &str = "clamp_reservation";
 pub const WAVE: &str = "wave";
 pub const PREFILL_WAVE: &str = "prefill_wave";
 pub const WAVE_SPLIT: &str = "wave_split";
+/// A streaming client dropped its receiver: the sequence was cancelled
+/// and its KV blocks returned (DESIGN.md §15). `a` = tokens decoded at
+/// cancellation, `b` = the target it would have run to.
+pub const CANCEL: &str = "cancel";
+/// A request was load-shed before admission (expired deadline or full
+/// per-class queue); `a` = its priority class.
+pub const SHED: &str = "shed";
+/// Shutdown drain: `a` = queued-but-unserved requests failed explicitly.
+pub const DRAIN: &str = "drain";
 
 // --- coordinator: backend execution -------------------------------------
 pub const BACKEND_PREFILL: &str = "backend_prefill";
@@ -63,6 +72,9 @@ pub const ALL: &[&str] = &[
     WAVE,
     PREFILL_WAVE,
     WAVE_SPLIT,
+    CANCEL,
+    SHED,
+    DRAIN,
     BACKEND_PREFILL,
     BACKEND_DECODE,
     KERNEL_DISPATCH,

@@ -369,6 +369,7 @@ fn e2e_server_streams_match_dequantized_reference() {
         prefill_len: 12,
         pad_id: b' ' as i32,
         scheduler: SchedulerKind::Continuous,
+        ..ServeConfig::default()
     };
     let prefill_len = cfg.prefill_len;
     let pad = clamp_pad_id(cfg.pad_id, Some(vocab));

@@ -30,7 +30,7 @@
 //! on the total completed-case count printed by each test.
 
 use icquant::coordinator::backend::{Backend, DecodeState, MockBackend, NativeBackend};
-use icquant::coordinator::{SchedulerKind, ServeConfig, Server};
+use icquant::coordinator::{SchedulerKind, ServeConfig, Server, SubmitOpts, TokenEvent};
 use icquant::icquant::IcqConfig;
 use icquant::kernels::{KvCache, KvLayout, NativeModel};
 use icquant::quant::QuantizerKind;
@@ -89,6 +89,14 @@ struct FuzzWorkload {
     requests: Vec<FuzzRequest>,
 }
 
+/// Whole-mode or streaming receiver — `ICQ_FUZZ_STREAMING=1` runs the
+/// whole fuzz over the per-token stream API, so the scheduler
+/// equivalence property also pins the §15 streaming order.
+enum FuzzRx {
+    Whole(std::sync::mpsc::Receiver<icquant::coordinator::GenerateResponse>),
+    Stream(std::sync::mpsc::Receiver<TokenEvent>),
+}
+
 fn run_workload(w: &FuzzWorkload, scheduler: SchedulerKind) -> Vec<(u64, Vec<i32>)> {
     let cfg = ServeConfig {
         max_batch: w.cap,
@@ -98,10 +106,12 @@ fn run_workload(w: &FuzzWorkload, scheduler: SchedulerKind) -> Vec<(u64, Vec<i32
         prefill_len: w.prefill_len,
         pad_id: b' ' as i32,
         scheduler,
+        ..ServeConfig::default()
     };
     // `usize::MAX` makes the bound a no-op — one backend type for both
     // the bounded and unbounded arms of the fuzz.
     let max_pos = w.max_pos.unwrap_or(usize::MAX);
+    let streaming = std::env::var("ICQ_FUZZ_STREAMING").is_ok_and(|v| v == "1");
     let server = Server::start(cfg, move || {
         Ok(BoundedMock { inner: MockBackend::new(), max_pos })
     });
@@ -110,16 +120,35 @@ fn run_workload(w: &FuzzWorkload, scheduler: SchedulerKind) -> Vec<(u64, Vec<i32
         if r.jitter_us > 0 {
             std::thread::sleep(Duration::from_micros(r.jitter_us));
         }
-        let (id, rx) = server.submit(r.prompt.clone(), r.want).unwrap();
-        rxs.push((id, rx));
+        if streaming {
+            let opts = SubmitOpts { max_new_tokens: r.want, ..SubmitOpts::default() };
+            let (id, rx) = server.submit_streaming(r.prompt.clone(), opts).unwrap();
+            rxs.push((id, FuzzRx::Stream(rx)));
+        } else {
+            let (id, rx) = server.submit(r.prompt.clone(), r.want).unwrap();
+            rxs.push((id, FuzzRx::Whole(rx)));
+        }
     }
     let out: Vec<(u64, Vec<i32>)> = rxs
         .into_iter()
-        .map(|(id, rx)| {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
-            assert!(resp.timing.error.is_none(), "request failed: {:?}", resp.timing.error);
-            assert_eq!(resp.id, id);
-            (id, resp.tokens)
+        .map(|(id, rx)| match rx {
+            FuzzRx::Whole(rx) => {
+                let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+                assert!(resp.timing.error.is_none(), "request failed: {:?}", resp.timing.error);
+                assert_eq!(resp.id, id);
+                (id, resp.tokens)
+            }
+            FuzzRx::Stream(rx) => {
+                let mut tokens = Vec::new();
+                loop {
+                    match rx.recv_timeout(Duration::from_secs(30)).expect("stream event") {
+                        TokenEvent::Token(t) => tokens.push(t),
+                        TokenEvent::Done(_) => break,
+                        TokenEvent::Failed(e) => panic!("request failed: {}", e),
+                    }
+                }
+                (id, tokens)
+            }
         })
         .collect();
     let snap = server.metrics.snapshot();
@@ -499,6 +528,7 @@ fn fuzz_native_server_scheduler_differential() {
                             prefill_len: 16,
                             pad_id: b' ' as i32,
                             scheduler,
+                            ..ServeConfig::default()
                         };
                         let server = Server::start(cfg, move || Ok(backend));
                         let mut rng = Rng::new(seed);
